@@ -1,0 +1,69 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts for the rust runtime.
+
+Run as ``python -m compile.aot [--out-dir ../artifacts] [--only k1,k2]``
+(this is what ``make artifacts`` does). Python executes ONLY here, at
+build time; the rust binary consumes the text artifacts through PJRT.
+
+Interchange is HLO text, not a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 (the version the
+rust `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. Lowered with ``return_tuple=True`` so the rust side
+always unwraps a tuple.
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str) -> str:
+    fn, lengths = model.MODELS[name]
+    specs = [jax.ShapeDtypeStruct((n,), jnp.float32) for n in lengths]
+
+    def as_tuple(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return to_hlo_text(jax.jit(as_tuple).lower(*specs))
+
+
+def artifact_name(kernel: str) -> str:
+    return kernel.replace("-", "_") + ".hlo.txt"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", type=pathlib.Path)
+    ap.add_argument("--only", default=None, help="comma-separated kernels")
+    args = ap.parse_args(argv)
+
+    names = list(model.MODELS) if args.only is None else args.only.split(",")
+    args.out_dir.mkdir(parents=True, exist_ok=True)
+    for name in names:
+        if name not in model.MODELS:
+            print(f"unknown kernel {name}", file=sys.stderr)
+            return 1
+        text = lower_model(name)
+        path = args.out_dir / artifact_name(name)
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels.
+
+The paper's intra-tile tasks (fully unrolled, output-stationary — Listing
+7) map to Pallas tile kernels: `BlockSpec` expresses the HBM<->VMEM tile
+schedule Prometheus expresses with inter-tile loops + load/read FIFO
+helpers; the grid pipeline provides the ping-pong double buffering of
+paper section 3.5 for free. Kernels run `interpret=True` — the CPU PJRT
+plugin cannot execute Mosaic custom-calls; see DESIGN.md section 3 for
+the TPU adaptation notes and estimated MXU/VMEM figures.
+"""
+
+from .matmul import matmul_tiled
+from .vecops import madd_tiled, mv_tiled
+
+__all__ = ["matmul_tiled", "madd_tiled", "mv_tiled"]

@@ -1,0 +1,78 @@
+"""Output-stationary tiled matmul — the Pallas counterpart of the paper's
+fused MM task (Listing 6/7).
+
+Prometheus's generated structure maps onto Pallas as:
+
+* inter-tile loops ``i0, j0``      -> the first two grid axes,
+* pipelined reduction loop ``k0``  -> the third (innermost) grid axis,
+* the fully unrolled intra task    -> the VMEM tile ``x_tile @ y_tile``,
+* output-stationary accumulation   -> a VMEM scratch accumulator written
+  back on the last ``k0`` step (exactly the E/F/G tiles of Listing 6),
+* composite padding (section 3.2)  -> explicit zero-padding to the tile
+  grid before the call, sliced off afterwards.
+
+TPU adaptation (DESIGN.md section 8): 64x64 f32 output tiles with 64-wide
+K slabs keep the working set at ~48 KiB of VMEM (three tiles, double
+buffered by the grid pipeline) and feed the MXU with lane-aligned
+operands. ``interpret=True`` everywhere — correctness is checked on CPU
+against ``ref.py``; real-TPU lowering would emit a Mosaic custom-call the
+CPU plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i0, j0, k0) grid step: accumulate x_tile @ y_tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():  # S0/S2/S4 of Listing 4: zero the output tile on-chip
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():  # store_E/sent_E of Listing 6: emit the finished tile
+        o_ref[...] = acc_ref[...]
+
+
+def _pad_to(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Composite padding (paper section 3.2): zero-extend to tile bounds."""
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul_tiled(x, y, *, tm: int = 64, tn: int = 64, tk: int = 64):
+    """``x @ y`` for arbitrary (static) shapes via the tiled kernel.
+
+    Shapes need not divide the tile sizes — inputs are zero-padded to the
+    tile grid (the wasted partial-tile work the paper's padding analysis
+    accounts for) and the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    gm, gn, gk = -(-m // tm), -(-n // tn), -(-k // tk)
+    xp = _pad_to(x, gm * tm, gk * tk)
+    yp = _pad_to(y, gk * tk, gn * tn)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * tm, gn * tn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]

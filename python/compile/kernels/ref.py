@@ -1,0 +1,20 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the build-time ground truth: every kernel in this package must
+match its `ref_*` counterpart to float32 tolerance across the shape/tile
+sweep in python/tests/test_kernels.py (including non-divisible shapes,
+which exercise the padding path)."""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def ref_madd(a, b):
+    return a + b
+
+
+def ref_mv(a, x):
+    return a @ x

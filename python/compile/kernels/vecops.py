@@ -1,0 +1,79 @@
+"""Pallas kernels for the memory-bound tasks: tiled matrix add (the
+n-madd family) and tiled matrix-vector product (atax/bicg/mvt/gesummv).
+
+These mirror the paper's memory-bound fused tasks: no reduction tiling is
+needed for madd (pure streaming, the FIFO `load/read` path dominates);
+mv accumulates row-block partials over K slabs exactly like the
+output-stationary MM tile, with a (TM,) accumulator."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _madd_kernel(a_ref, b_ref, o_ref):
+    """One (i0, j0) tile step: elementwise add in VMEM."""
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def madd_tiled(a, b, *, tm: int = 64, tn: int = 64):
+    """``a + b`` over 2-D tiles (zero-padded to the tile grid)."""
+    m, n = a.shape
+    assert a.shape == b.shape
+    gm, gn = -(-m // tm), -(-n // tn)
+    pad = lambda x: jnp.pad(x, ((0, gm * tm - m), (0, gn * tn - n)))
+    out = pl.pallas_call(
+        _madd_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * tm, gn * tn), jnp.float32),
+        interpret=True,
+    )(pad(a), pad(b))
+    return out[:m, :n]
+
+
+def _mv_kernel(a_ref, x_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i0, k0) step: row-block partial dot, output-stationary."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # (TM, TK) @ (TK,) -> (TM,) accumulated in VMEM
+    acc_ref[...] += a_ref[...] @ x_ref[...]
+
+    @pl.when(pl.program_id(1) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk"))
+def mv_tiled(a, x, *, tm: int = 64, tk: int = 64):
+    """``a @ x`` for a 2-D `a` and 1-D `x` via row-block tiles."""
+    m, k = a.shape
+    (k2,) = x.shape
+    assert k == k2
+    gm, gk = -(-m // tm), -(-k // tk)
+    ap = jnp.pad(a, ((0, gm * tm - m), (0, gk * tk - k)))
+    xp = jnp.pad(x, (0, gk * tk - k))
+    out = pl.pallas_call(
+        functools.partial(_mv_kernel, n_k=gk),
+        grid=(gm, gk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((tk,), lambda i, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda i, kk: (i,)),
+        out_shape=jax.ShapeDtypeStruct((gm * tm,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tm,), jnp.float32)],
+        interpret=True,
+    )(ap, xp)
+    return out[:m]

@@ -1,0 +1,161 @@
+"""Layer-2: PolyBench kernels as JAX functions over *flat* float32 inputs.
+
+Every model takes flat 1-D inputs (so the rust runtime can feed plain
+`Literal::vec1` buffers without shape plumbing), reshapes internally, and
+routes its compute hot-spots through the Layer-1 Pallas kernels. The
+deterministic input generator `inputs_for` matches
+`rust/src/ir/oracle.rs::input_array` bit-for-bit.
+
+Sizes are PolyBench 4.2.1 medium — identical to `rust/src/ir/polybench.rs`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import madd_tiled, matmul_tiled, mv_tiled
+
+# PolyBench medium sizes (must match rust/src/ir/polybench.rs)
+SIZES = {
+    "gemm": dict(ni=200, nj=220, nk=240),
+    "2mm": dict(ni=180, nj=190, nk=210, nl=220),
+    "3mm": dict(ni=180, nj=190, nk=200, nl=210, nm=220),
+    "atax": dict(m=390, n=410),
+    "bicg": dict(m=390, n=410),
+    "mvt": dict(n=400),
+    "gesummv": dict(n=250),
+    "madd": dict(n=400),
+    "2-madd": dict(n=400),
+    "3-madd": dict(n=400),
+}
+
+
+def input_element(ordinal: int, n: np.ndarray) -> np.ndarray:
+    """The shared deterministic input formula (see rust oracle)."""
+    v = (n * 16807 + ordinal * 2671 + 13) % 1000
+    return v.astype(np.float32) / np.float32(1000.0) - np.float32(0.5)
+
+
+def input_array(ordinal: int, length: int) -> np.ndarray:
+    return input_element(ordinal, np.arange(length, dtype=np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# models (flat in, tuple-of-flat out)
+# ---------------------------------------------------------------------------
+
+def gemm(c_flat, a_flat, b_flat):
+    s = SIZES["gemm"]
+    c = c_flat.reshape(s["ni"], s["nj"])
+    a = a_flat.reshape(s["ni"], s["nk"])
+    b = b_flat.reshape(s["nk"], s["nj"])
+    return (jnp.float32(1.2) * c + jnp.float32(1.5) * matmul_tiled(a, b)).ravel()
+
+
+def two_mm(a_flat, b_flat, c_flat, d_flat):
+    s = SIZES["2mm"]
+    a = a_flat.reshape(s["ni"], s["nk"])
+    b = b_flat.reshape(s["nk"], s["nj"])
+    c = c_flat.reshape(s["nj"], s["nl"])
+    d = d_flat.reshape(s["ni"], s["nl"])
+    tmp = jnp.float32(1.5) * matmul_tiled(a, b)
+    return (jnp.float32(1.2) * d + matmul_tiled(tmp, c)).ravel()
+
+
+def three_mm(a_flat, b_flat, c_flat, d_flat):
+    s = SIZES["3mm"]
+    a = a_flat.reshape(s["ni"], s["nk"])
+    b = b_flat.reshape(s["nk"], s["nj"])
+    c = c_flat.reshape(s["nj"], s["nm"])
+    d = d_flat.reshape(s["nm"], s["nl"])
+    e = matmul_tiled(a, b)
+    f = matmul_tiled(c, d)
+    return matmul_tiled(e, f).ravel()
+
+
+def atax(a_flat, x_flat):
+    s = SIZES["atax"]
+    a = a_flat.reshape(s["m"], s["n"])
+    tmp = mv_tiled(a, x_flat)
+    return mv_tiled(a.T, tmp).ravel()
+
+
+def bicg(a_flat, r_flat, p_flat):
+    s = SIZES["bicg"]
+    a = a_flat.reshape(s["m"], s["n"])
+    sv = mv_tiled(a.T, r_flat)
+    q = mv_tiled(a, p_flat)
+    return sv.ravel(), q.ravel()
+
+
+def mvt(a_flat, x1_flat, x2_flat, y1_flat, y2_flat):
+    s = SIZES["mvt"]
+    a = a_flat.reshape(s["n"], s["n"])
+    x1 = x1_flat + mv_tiled(a, y1_flat)
+    x2 = x2_flat + mv_tiled(a.T, y2_flat)
+    return x1.ravel(), x2.ravel()
+
+
+def gesummv(a_flat, b_flat, x_flat):
+    s = SIZES["gesummv"]
+    a = a_flat.reshape(s["n"], s["n"])
+    b = b_flat.reshape(s["n"], s["n"])
+    tmp = mv_tiled(a, x_flat)
+    y = mv_tiled(b, x_flat)
+    return (jnp.float32(1.5) * tmp + jnp.float32(1.2) * y).ravel()
+
+
+def madd(a_flat, b_flat):
+    n = SIZES["madd"]["n"]
+    return madd_tiled(a_flat.reshape(n, n), b_flat.reshape(n, n)).ravel()
+
+
+def two_madd(a_flat, b_flat, c_flat):
+    n = SIZES["2-madd"]["n"]
+    t = madd_tiled(a_flat.reshape(n, n), b_flat.reshape(n, n))
+    return madd_tiled(t, c_flat.reshape(n, n)).ravel()
+
+
+def three_madd(a_flat, b_flat, c_flat, d_flat):
+    n = SIZES["3-madd"]["n"]
+    t1 = madd_tiled(a_flat.reshape(n, n), b_flat.reshape(n, n))
+    t2 = madd_tiled(c_flat.reshape(n, n), d_flat.reshape(n, n))
+    return madd_tiled(t1, t2).ravel()
+
+
+# ---------------------------------------------------------------------------
+# registry: name -> (fn, input lengths) — must agree with
+# rust/src/runtime/executor.rs::KernelSpec::known()
+# ---------------------------------------------------------------------------
+
+def _s(name):
+    return SIZES[name]
+
+
+MODELS = {
+    "gemm": (gemm, [_s("gemm")["ni"] * _s("gemm")["nj"],
+                    _s("gemm")["ni"] * _s("gemm")["nk"],
+                    _s("gemm")["nk"] * _s("gemm")["nj"]]),
+    "2mm": (two_mm, [_s("2mm")["ni"] * _s("2mm")["nk"],
+                     _s("2mm")["nk"] * _s("2mm")["nj"],
+                     _s("2mm")["nj"] * _s("2mm")["nl"],
+                     _s("2mm")["ni"] * _s("2mm")["nl"]]),
+    "3mm": (three_mm, [_s("3mm")["ni"] * _s("3mm")["nk"],
+                       _s("3mm")["nk"] * _s("3mm")["nj"],
+                       _s("3mm")["nj"] * _s("3mm")["nm"],
+                       _s("3mm")["nm"] * _s("3mm")["nl"]]),
+    "atax": (atax, [_s("atax")["m"] * _s("atax")["n"], _s("atax")["n"]]),
+    "bicg": (bicg, [_s("bicg")["m"] * _s("bicg")["n"], _s("bicg")["m"],
+                    _s("bicg")["n"]]),
+    "mvt": (mvt, [_s("mvt")["n"] ** 2] + [_s("mvt")["n"]] * 4),
+    "gesummv": (gesummv, [_s("gesummv")["n"] ** 2, _s("gesummv")["n"] ** 2,
+                          _s("gesummv")["n"]]),
+    "madd": (madd, [_s("madd")["n"] ** 2] * 2),
+    "2-madd": (two_madd, [_s("2-madd")["n"] ** 2] * 3),
+    "3-madd": (three_madd, [_s("3-madd")["n"] ** 2] * 4),
+}
+
+
+def inputs_for(name):
+    """Deterministic inputs for a model, ordinal = parameter position."""
+    _, lengths = MODELS[name]
+    return [input_array(i, ln) for i, ln in enumerate(lengths)]

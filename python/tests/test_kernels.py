@@ -1,0 +1,119 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-divisible ones that exercise the
+padding path) and tile sizes — the CORE correctness signal for the
+compute layer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import madd_tiled, matmul_tiled, mv_tiled
+from compile.kernels.ref import ref_madd, ref_matmul, ref_mv
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.uniform(-1, 1, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape smoke tests
+# ---------------------------------------------------------------------------
+
+def test_matmul_square():
+    rng = np.random.default_rng(0)
+    x, y = _arr(rng, 64, 64), _arr(rng, 64, 64)
+    np.testing.assert_allclose(matmul_tiled(x, y), ref_matmul(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_polybench_3mm_shapes():
+    # the exact E = A x B of Listing 4: 180x200 @ 200x190 — none of the
+    # dims divide the 64 tiles (the composite-padding path).
+    rng = np.random.default_rng(1)
+    a, b = _arr(rng, 180, 200), _arr(rng, 200, 190)
+    np.testing.assert_allclose(matmul_tiled(a, b), ref_matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_small_tiles():
+    rng = np.random.default_rng(2)
+    a, b = _arr(rng, 30, 50), _arr(rng, 50, 20)
+    got = matmul_tiled(a, b, tm=8, tn=8, tk=16)
+    np.testing.assert_allclose(got, ref_matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_madd_exact():
+    rng = np.random.default_rng(3)
+    a, b = _arr(rng, 100, 130), _arr(rng, 100, 130)
+    # addition is exact elementwise — no tolerance needed
+    np.testing.assert_array_equal(madd_tiled(a, b), ref_madd(a, b))
+
+
+def test_mv_polybench_shape():
+    rng = np.random.default_rng(4)
+    a, x = _arr(rng, 390, 410), _arr(rng, 410)
+    np.testing.assert_allclose(mv_tiled(a, x), ref_mv(a, x), rtol=1e-4, atol=1e-4)
+
+
+def test_mv_transposed_view():
+    rng = np.random.default_rng(5)
+    a, x = _arr(rng, 128, 64), _arr(rng, 128)
+    np.testing.assert_allclose(mv_tiled(a.T, x), ref_mv(a.T, x), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(96, dtype=jnp.float32)
+    rng = np.random.default_rng(6)
+    m = _arr(rng, 96, 40)
+    np.testing.assert_allclose(matmul_tiled(eye, m), m, rtol=1e-6)
+
+
+def test_matmul_zero():
+    z = jnp.zeros((33, 17), jnp.float32)
+    rng = np.random.default_rng(7)
+    m = _arr(rng, 17, 29)
+    assert float(jnp.abs(matmul_tiled(z, m)).max()) == 0.0
+
+
+def test_contraction_mismatch_raises():
+    rng = np.random.default_rng(8)
+    with pytest.raises(AssertionError):
+        matmul_tiled(_arr(rng, 8, 9), _arr(rng, 10, 8))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=96)
+tiles = st.sampled_from([8, 16, 32, 64])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, tm=tiles, tn=tiles, tk=tiles, seed=st.integers(0, 2**16))
+def test_matmul_shape_tile_sweep(m, k, n, tm, tn, tk, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, m, k), _arr(rng, k, n)
+    got = matmul_tiled(x, y, tm=tm, tn=tn, tk=tk)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, ref_matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, n=dims, tm=tiles, tn=tiles, seed=st.integers(0, 2**16))
+def test_madd_shape_tile_sweep(m, n, tm, tn, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, m, n), _arr(rng, m, n)
+    got = madd_tiled(a, b, tm=tm, tn=tn)
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(got, ref_madd(a, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, tm=tiles, tk=tiles, seed=st.integers(0, 2**16))
+def test_mv_shape_tile_sweep(m, k, tm, tk, seed):
+    rng = np.random.default_rng(seed)
+    a, x = _arr(rng, m, k), _arr(rng, k)
+    got = mv_tiled(a, x, tm=tm, tk=tk)
+    assert got.shape == (m,)
+    np.testing.assert_allclose(got, ref_mv(a, x), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,89 @@
+"""Layer-2 correctness: JAX models vs independent numpy references, on
+the same deterministic inputs the rust runtime will use."""
+
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def np_inputs(name):
+    return [np.asarray(a) for a in model.inputs_for(name)]
+
+
+def test_input_formula_spot_values():
+    # must match rust/src/ir/oracle.rs::input_element
+    a0 = model.input_array(0, 4)
+    # n=1, a=0 -> (16807+13) % 1000 = 820 -> 0.32
+    assert abs(a0[1] - np.float32(0.32)) < 1e-7
+    assert a0.dtype == np.float32
+    # different ordinals differ
+    assert not np.allclose(model.input_array(0, 8), model.input_array(1, 8))
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_model_runs_and_is_finite(name):
+    fn, lengths = model.MODELS[name]
+    ins = model.inputs_for(name)
+    assert [len(i) for i in ins] == lengths
+    out = fn(*ins)
+    outs = out if isinstance(out, tuple) else (out,)
+    for o in outs:
+        assert np.isfinite(np.asarray(o)).all(), f"{name} produced non-finite"
+
+
+def test_gemm_matches_numpy():
+    c, a, b = np_inputs("gemm")
+    s = model.SIZES["gemm"]
+    ref = 1.2 * c.reshape(s["ni"], s["nj"]) + 1.5 * (
+        a.reshape(s["ni"], s["nk"]).astype(np.float64)
+        @ b.reshape(s["nk"], s["nj"]).astype(np.float64)
+    )
+    got = np.asarray(model.gemm(*np_inputs("gemm"))).reshape(s["ni"], s["nj"])
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_3mm_matches_numpy():
+    a, b, c, d = np_inputs("3mm")
+    s = model.SIZES["3mm"]
+    e = a.reshape(s["ni"], s["nk"]).astype(np.float64) @ b.reshape(s["nk"], s["nj"]).astype(np.float64)
+    f = c.reshape(s["nj"], s["nm"]).astype(np.float64) @ d.reshape(s["nm"], s["nl"]).astype(np.float64)
+    g = e @ f
+    got = np.asarray(model.three_mm(*np_inputs("3mm"))).reshape(s["ni"], s["nl"])
+    np.testing.assert_allclose(got, g, rtol=1e-3, atol=1e-3)
+
+
+def test_bicg_matches_numpy():
+    a, r, p = np_inputs("bicg")
+    s = model.SIZES["bicg"]
+    am = a.reshape(s["m"], s["n"])
+    sv, q = model.bicg(*np_inputs("bicg"))
+    np.testing.assert_allclose(np.asarray(sv), am.T @ r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(q), am @ p, rtol=1e-4, atol=1e-4)
+
+
+def test_mvt_matches_numpy():
+    a, x1, x2, y1, y2 = np_inputs("mvt")
+    n = model.SIZES["mvt"]["n"]
+    am = a.reshape(n, n)
+    gx1, gx2 = model.mvt(*np_inputs("mvt"))
+    np.testing.assert_allclose(np.asarray(gx1), x1 + am @ y1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx2), x2 + am.T @ y2, rtol=1e-4, atol=1e-4)
+
+
+def test_three_madd_matches_numpy():
+    a, b, c, d = np_inputs("3-madd")
+    got = np.asarray(model.three_madd(*np_inputs("3-madd")))
+    np.testing.assert_allclose(got, (a + b) + (c + d), rtol=1e-6)
+
+
+def test_registry_agrees_with_rust_specs():
+    # shape table mirrored in rust/src/runtime/executor.rs — keep in sync
+    expected = {
+        "gemm": [200 * 220, 200 * 240, 240 * 220],
+        "3mm": [180 * 200, 200 * 190, 190 * 220, 220 * 210],
+        "bicg": [390 * 410, 390, 410],
+        "mvt": [400 * 400, 400, 400, 400, 400],
+    }
+    for name, lens in expected.items():
+        assert model.MODELS[name][1] == lens, name

@@ -1,0 +1,61 @@
+//! Ablation study over the unified design space: start from full
+//! Prometheus and remove one optimization at a time (dataflow
+//! concurrency, computation/communication overlap, padding, permutation,
+//! tiling), quantifying each feature's contribution — the experimental
+//! backing for the paper's "interdependent transformations" claim (§1.2).
+//!
+//! ```bash
+//! cargo bench --bench ablation_features
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::dse::config::ExecutionModel;
+use prometheus::dse::solver::{solve, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::report::{gfs, Table};
+use prometheus::sim::engine::simulate;
+
+fn variants() -> Vec<(&'static str, SolverOptions)> {
+    let full = SolverOptions::default();
+    vec![
+        ("full Prometheus", full.clone()),
+        (
+            "- dataflow (sequential tasks)",
+            SolverOptions { model: ExecutionModel::Sequential, ..full.clone() },
+        ),
+        ("- overlap (no ping-pong)", SolverOptions { overlap: false, ..full.clone() }),
+        ("- padding", SolverOptions { max_pad: 0, ..full.clone() }),
+        ("- permutation", SolverOptions { permute: false, ..full.clone() }),
+        ("- tiling (all-or-nothing)", SolverOptions { tiling: false, ..full.clone() }),
+    ]
+}
+
+fn main() {
+    let dev = Device::u55c();
+    println!("== Ablation: contribution of each optimization (GF/s, RTL) ==\n");
+    let kernels = ["gemm", "3mm", "3-madd", "bicg", "atax"];
+    let mut t = Table::new(&{
+        let mut h = vec!["Variant"];
+        h.extend(kernels);
+        h
+    });
+    for (name, opts) in variants() {
+        let mut row = vec![name.to_string()];
+        for kn in kernels {
+            let k = polybench::by_name(kn).unwrap();
+            let fg = fuse(&k);
+            let r = solve(&k, &dev, &opts);
+            let g = simulate(&k, &fg, &r.design, &dev).gflops(&k, &dev);
+            row.push(gfs(g));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nreading: dataflow matters most for multi-task kernels (3mm, 3-madd);\n\
+         overlap matters for memory-bound kernels; padding/permutation refine\n\
+         compute-bound kernels; removing tiling collapses everything with\n\
+         off-chip data."
+    );
+}

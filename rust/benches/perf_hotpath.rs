@@ -1,0 +1,90 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md
+//! §Perf): cost-model evaluation, simulator throughput, and whole-solver
+//! latency. Hand-rolled timing harness (criterion is not vendored in
+//! this environment): N warmup + M measured iterations, median reported.
+//!
+//! ```bash
+//! cargo bench --bench perf_hotpath
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::dse::cost::{graph_latency, task_latency};
+use prometheus::dse::solver::{solve, SolverOptions};
+use prometheus::dse::space::TaskGeometry;
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::sim::engine::simulate;
+use std::time::Instant;
+
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    let mut sink = 0u64;
+    for _ in 0..iters / 5 + 1 {
+        sink = sink.wrapping_add(f());
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        sink = sink.wrapping_add(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() as f64 * 0.95) as usize];
+    println!("{name:<46} median {med:>10.2} µs   p95 {p95:>10.2} µs   (sink {sink})");
+}
+
+fn main() {
+    let dev = Device::u55c();
+    println!("== perf_hotpath: solver/simulator/cost microbenchmarks ==\n");
+
+    // 1. cost-model single evaluation (the solver's inner loop)
+    {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &SolverOptions::default());
+        let cfgs = r.design.tasks.clone();
+        bench("cost::task_latency (3mm FT0)", 20_000, || {
+            let geo = TaskGeometry::new(&k, &fg, &cfgs[0]);
+            task_latency(&geo, &dev, true)
+        });
+        let design = r.design.clone();
+        bench("cost::graph_latency (3mm, 3 tasks)", 5_000, || {
+            graph_latency(&k, &fg, &design, &dev).total
+        });
+        bench("sim::simulate (3mm dataflow)", 2_000, || {
+            simulate(&k, &fg, &design, &dev).cycles
+        });
+    }
+
+    // 2. whole-solver latency per kernel (the Table 10 quantity)
+    for name in ["gemm", "3mm", "bicg"] {
+        let k = polybench::by_name(name).unwrap();
+        bench(&format!("solver::solve ({name})"), 5, || {
+            solve(&k, &dev, &SolverOptions::default()).latency.total
+        });
+    }
+
+    // 3. simulator scaling: steps/second on a fine-tiled design
+    {
+        let k = polybench::madd();
+        let fg = fuse(&k);
+        let r = solve(
+            &k,
+            &dev,
+            &SolverOptions { max_unroll: 16, max_factor_per_loop: 4, ..SolverOptions::default() },
+        );
+        let sim = simulate(&k, &fg, &r.design, &dev);
+        let t0 = Instant::now();
+        let reps = 200;
+        for _ in 0..reps {
+            std::hint::black_box(simulate(&k, &fg, &r.design, &dev));
+        }
+        let el = t0.elapsed().as_secs_f64();
+        println!(
+            "\nsimulator throughput: {:.2e} tile-steps/s ({} steps/run)",
+            sim.steps as f64 * reps as f64 / el,
+            sim.steps
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Regenerates **Table 10**: time for the NLP solver to find a solution,
+//! Sisyphus vs Prometheus, across the 11 Table-6 kernels.
+//!
+//! Prometheus times are measured directly. Sisyphus times use the §6.4
+//! methodology: its shared-buffer formulation couples all statements'
+//! permutations and tilings into one joint problem, so we measure the
+//! evaluation rate and project it over the joint space, capping at the
+//! timeout (the paper used 14,400 s; we scale to 60 s to keep the bench
+//! fast — the 3mm blow-up is 7+ orders of magnitude, far beyond any cap).
+//!
+//! ```bash
+//! cargo bench --bench table10_solver_time
+//! ```
+
+use prometheus::baselines::sisyphus;
+use prometheus::dse::solver::{solve, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::report::{gmean, mean, Table};
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+fn main() {
+    let dev = Device::u55c();
+    println!(
+        "== Table 10: NLP solve time (s) — Sisyphus (joint space, timeout {}s) vs Prometheus ==\n",
+        TIMEOUT.as_secs()
+    );
+    let mut t = Table::new(&["Benchmark", "Sisyphus (s)", "Prometheus (s)", "Sis. joint space"]);
+    let (mut sis_all, mut prom_all) = (Vec::new(), Vec::new());
+    for k in polybench::table6_kernels() {
+        let (sis_s, timed_out) = sisyphus::probe_solver_time(&k, &dev, TIMEOUT);
+        let t0 = std::time::Instant::now();
+        let _ = solve(&k, &dev, &SolverOptions::default());
+        let prom_s = t0.elapsed().as_secs_f64();
+        sis_all.push(sis_s);
+        prom_all.push(prom_s);
+        t.row(vec![
+            k.name.clone(),
+            if timed_out { format!("{sis_s:.2} (TIMEOUT)") } else { format!("{sis_s:.2}") },
+            format!("{prom_s:.2}"),
+            format!("{:.2e}", sisyphus::joint_space_size(&k, &dev)),
+        ]);
+    }
+    t.row(vec![
+        "Average".into(),
+        format!("{:.2}", mean(&sis_all)),
+        format!("{:.2}", mean(&prom_all)),
+        String::new(),
+    ]);
+    t.row(vec![
+        "Geo Mean".into(),
+        format!("{:.2}", gmean(&sis_all)),
+        format!("{:.2}", gmean(&prom_all)),
+        String::new(),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "\nshape check (paper Table 10): 3mm times out for Sisyphus while Prometheus solves\n\
+         in seconds; all other kernels are seconds-scale for both."
+    );
+}

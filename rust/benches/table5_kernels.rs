@@ -1,0 +1,45 @@
+//! Regenerates **Table 5**: benchmark kernels with computational/memory
+//! complexity, data-reuse order and inter-task communication volume —
+//! all *computed* from the IR and the fused task graph, not hand-written.
+//!
+//! ```bash
+//! cargo bench --bench table5_kernels
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::analysis::reuse;
+use prometheus::ir::polybench;
+use prometheus::report::Table;
+
+/// Paper's Comm.-Between-Tasks column, in N-parametrized form, for the
+/// shape check (N = the relevant PolyBench dimension).
+fn paper_comm(name: &str) -> &'static str {
+    match name {
+        "bicg" | "madd" | "mvt" => "0",
+        "atax" => "N",
+        "gesummv" => "2N",
+        "2-madd" | "2mm" | "gemm" | "syr2k" | "syrk" | "trmm" => "N^2",
+        "3-madd" | "gemver" | "3mm" | "symm" => "2N^2",
+        _ => "?",
+    }
+}
+
+fn main() {
+    println!("== Table 5: benchmark kernel characteristics ==\n");
+    let mut t = Table::new(&[
+        "Benchmark", "Description", "Ops", "Mem", "Reuse", "Comm. between tasks", "(paper)",
+    ]);
+    for k in polybench::all_kernels() {
+        let fg = fuse(&k);
+        t.row(vec![
+            k.name.clone(),
+            k.description.clone(),
+            reuse::ops_complexity(&k),
+            reuse::mem_complexity(&k),
+            reuse::reuse_order(&k).as_str().into(),
+            fg.inter_task_elems(&k).to_string(),
+            paper_comm(&k.name).into(),
+        ]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,70 @@
+//! Regenerates **Table 6**: RTL-simulation throughput of the 11-kernel
+//! PolyBench subset across all six frameworks, with the paper's PI
+//! (performance improvement) average and geometric-mean rows.
+//!
+//! ```bash
+//! cargo bench --bench table6_rtl_comparison
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::baselines::{streamhls, Framework};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::report::{gfs, gmean, mean, ratio, Table};
+use prometheus::sim::engine::simulate;
+
+fn main() {
+    let dev = Device::u55c();
+    let kernels = polybench::table6_kernels();
+    let frameworks = [
+        Framework::Prometheus,
+        Framework::Sisyphus,
+        Framework::ScaleHls,
+        Framework::Allo,
+        Framework::AutoDse,
+        Framework::StreamHls,
+    ];
+
+    println!("== Table 6: RTL throughput comparison (GF/s) ==\n");
+    let mut t = Table::new(&[
+        "Kernel", "Ours", "Sisyphus", "ScaleHLS", "Allo", "AutoDSE", "Stream-HLS",
+    ]);
+    // per-framework PI samples (ours / theirs)
+    let mut pi: Vec<Vec<f64>> = vec![Vec::new(); frameworks.len()];
+    for k in &kernels {
+        let fg = fuse(k);
+        let mut cells = vec![k.name.clone()];
+        let mut ours = 0.0f64;
+        for (fi, fw) in frameworks.iter().enumerate() {
+            if !fw.supports_triangular() && streamhls::unsupported(k) {
+                cells.push("N/A".into());
+                continue;
+            }
+            let r = fw.optimize(k, &dev);
+            let sim = simulate(k, &fg, &r.design, &dev);
+            let g = sim.gflops(k, &dev);
+            if fi == 0 {
+                ours = g;
+            } else if g > 0.0 {
+                pi[fi].push(ours / g);
+            }
+            cells.push(gfs(g));
+        }
+        t.row(cells);
+    }
+    // PI rows
+    let mut avg_row = vec!["PI (Avg)".to_string(), "1.00x".to_string()];
+    let mut gm_row = vec!["PI (gmean)".to_string(), "1.00x".to_string()];
+    for fi in 1..frameworks.len() {
+        avg_row.push(ratio(mean(&pi[fi])));
+        gm_row.push(ratio(gmean(&pi[fi])));
+    }
+    t.row(avg_row);
+    t.row(gm_row);
+    print!("{}", t.render());
+    println!(
+        "\npaper PI(gmean): Sisyphus 2.03x, ScaleHLS 48.03x, Allo 4.92x, AutoDSE 25.82x, Stream-HLS 2.71x\n\
+         shape check: Prometheus ≥ every framework on every kernel; ScaleHLS collapses on\n\
+         triangular kernels; Stream-HLS N/A there."
+    );
+}

@@ -1,0 +1,59 @@
+//! Regenerates **Table 7**: Sisyphus vs Prometheus on throughput AND
+//! resource utilization (BRAM/DSP/FF/LUT as % of the U55C) for the
+//! madd-family + MM kernels + gemver/mvt.
+//!
+//! ```bash
+//! cargo bench --bench table7_sisyphus_vs_prometheus
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::baselines::Framework;
+use prometheus::dse::constraints::total_usage;
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::report::{gfs, Table};
+use prometheus::sim::engine::simulate;
+
+const KERNELS: &[&str] = &["madd", "2-madd", "3-madd", "2mm", "3mm", "gemm", "gemver", "mvt"];
+
+fn main() {
+    let dev = Device::u55c();
+    let total = dev.total();
+    println!("== Table 7: Sisyphus vs Prometheus — throughput and resources ==\n");
+    let mut t = Table::new(&[
+        "Kernel",
+        "Sis GF/s", "Sis BRAM%", "Sis DSP%", "Sis FF%", "Sis LUT%",
+        "Prom GF/s", "Prom BRAM%", "Prom DSP%", "Prom FF%", "Prom LUT%",
+    ]);
+    let pct = |x: f64, cap: u64| format!("{:.0}", 100.0 * x / cap as f64);
+    let mut speedups = Vec::new();
+    for name in KERNELS {
+        let k = polybench::by_name(name).unwrap();
+        let fg = fuse(&k);
+        let mut cells = vec![k.name.clone()];
+        let mut gf = [0.0f64; 2];
+        for (i, fw) in [Framework::Sisyphus, Framework::Prometheus].iter().enumerate() {
+            let r = fw.optimize(&k, &dev);
+            let sim = simulate(&k, &fg, &r.design, &dev);
+            gf[i] = sim.gflops(&k, &dev);
+            let u = total_usage(&k, &fg, &r.design, &dev);
+            cells.push(gfs(gf[i]));
+            cells.push(pct(u.bram18, total.bram18));
+            cells.push(pct(u.dsp, total.dsp));
+            cells.push(pct(u.ff, total.ff));
+            cells.push(pct(u.lut, total.lut));
+        }
+        speedups.push(gf[1] / gf[0].max(1e-9));
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nPrometheus/Sisyphus speedups: {:?}",
+        speedups.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>()
+    );
+    println!(
+        "shape check (paper): Prometheus wins everywhere; the 3-madd gain is the largest of\n\
+         the madd family (independent-task concurrency); BRAM is higher for Prometheus\n\
+         (double buffering), other resources generally lower or comparable."
+    );
+}

@@ -1,0 +1,97 @@
+//! Regenerates **Table 8**: on-board evaluation — Sisyphus (1 SLR),
+//! AutoDSE (1 SLR), Ours (1 SLR), Ours (3 SLR) on 2mm/3mm/atax/bicg,
+//! reporting execution time, GF/s, resources and achieved frequency
+//! through the board model, with the §5.7 regeneration loop standing in
+//! for the paper's manual constraint tightening (60% → 55%; AutoDSE 3mm
+//! needed 15%).
+//!
+//! ```bash
+//! cargo bench --bench table8_onboard
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::baselines::{autodse, sisyphus};
+use prometheus::coordinator::flow::quick_solver;
+use prometheus::coordinator::regen::regenerate_until_feasible;
+use prometheus::dse::constraints::total_usage;
+use prometheus::dse::solver::SolverOptions;
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::report::Table;
+use prometheus::sim::board::board_eval;
+
+const KERNELS: &[&str] = &["2mm", "3mm", "atax", "bicg"];
+
+fn main() {
+    let dev = Device::u55c();
+    println!("== Table 8: on-board evaluation (board model) ==\n");
+    let mut t = Table::new(&[
+        "Config", "Kernel", "T (ms)", "GF/s", "DSP", "BRAM", "L(K)", "FF(K)", "F (MHz)", "bitstream",
+    ]);
+
+    // baselines: solve for 60% of one SLR, evaluate, regenerate if needed
+    for (label, which) in [("1 SLR Sisyphus", 0usize), ("1 SLR AutoDSE", 1)] {
+        for name in KERNELS {
+            let k = polybench::by_name(name).unwrap();
+            let fg = fuse(&k);
+            let mut frac = 0.60;
+            loop {
+                let r = match which {
+                    0 => sisyphus::optimize_onboard(&k, &dev, frac),
+                    _ => autodse::optimize_onboard(&k, &dev, frac),
+                };
+                let budget = dev.slr.scaled(frac);
+                let b = board_eval(&k, &fg, &r.design, &dev, &budget);
+                if b.bitstream_ok || frac <= 0.15 {
+                    let u = total_usage(&k, &fg, &r.design, &dev);
+                    t.row(vec![
+                        label.into(),
+                        k.name.clone(),
+                        format!("{:.3}", b.time_ms),
+                        format!("{:.2}", b.gflops),
+                        format!("{:.0}", u.dsp),
+                        format!("{:.0}", u.bram18 / 2.0), // report as BRAM36
+                        format!("{:.0}", u.lut / 1e3),
+                        format!("{:.0}", u.ff / 1e3),
+                        format!("{:.0}", b.fmhz),
+                        if b.bitstream_ok { format!("OK@{:.0}%", frac * 100.0) } else { "FAIL".into() },
+                    ]);
+                    break;
+                }
+                frac -= 0.05;
+            }
+        }
+    }
+
+    // ours: 1 SLR and 3 SLR with the automated regeneration loop
+    let base = SolverOptions { ..quick_solver() };
+    for (label, slrs) in [("1 SLR Ours", 1usize), ("3 SLR Ours", 3)] {
+        for name in KERNELS {
+            let k = polybench::by_name(name).unwrap();
+            let fg = fuse(&k);
+            let out = regenerate_until_feasible(&k, &dev, &base, slrs, 0.60, 0.05, 0.15);
+            let u = total_usage(&k, &fg, &out.result.design, &dev);
+            t.row(vec![
+                label.into(),
+                k.name.clone(),
+                format!("{:.3}", out.board.time_ms),
+                format!("{:.2}", out.board.gflops),
+                format!("{:.0}", u.dsp),
+                format!("{:.0}", u.bram18 / 2.0),
+                format!("{:.0}", u.lut / 1e3),
+                format!("{:.0}", u.ff / 1e3),
+                format!("{:.0}", out.board.fmhz),
+                format!(
+                    "OK@{:.0}%",
+                    out.attempts.last().copied().unwrap_or(0.6) * 100.0
+                ),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "\nshape check (paper Table 8): Ours-1SLR beats Sisyphus and AutoDSE on every kernel;\n\
+         Ours-3SLR improves 2mm/3mm substantially (more resources) but atax/bicg only\n\
+         marginally (memory-bound); multi-SLR designs close timing below 220 MHz."
+    );
+}

@@ -1,0 +1,76 @@
+//! Regenerates **Table 9**: the parameters the NLP found for the 1-SLR
+//! on-board designs of 2mm/3mm/atax/bicg — statement fusion, loop order
+//! and data-tile sizes.
+//!
+//! ```bash
+//! cargo bench --bench table9_nlp_params
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::dse::space::TaskGeometry;
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::report::Table;
+
+const KERNELS: &[&str] = &["2mm", "3mm", "atax", "bicg"];
+
+fn main() {
+    let dev = Device::u55c();
+    println!("== Table 9: fusion, loop order and data-tile sizes found by the NLP (1 SLR) ==\n");
+    let mut t = Table::new(&["Kernel", "Fused statements", "Loop order", "Data tile sizes"]);
+    for name in KERNELS {
+        let k = polybench::by_name(name).unwrap();
+        let fg = fuse(&k);
+        let r = solve(
+            &k,
+            &dev,
+            &SolverOptions {
+                scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 },
+                ..SolverOptions::default()
+            },
+        );
+        let fused: Vec<String> = fg
+            .tasks
+            .iter()
+            .map(|ft| {
+                format!(
+                    "FT{}: {}",
+                    ft.id,
+                    ft.stmts.iter().map(|s| format!("S{s}")).collect::<Vec<_>>().join(",")
+                )
+            })
+            .collect();
+        let mut orders = Vec::new();
+        let mut tiles = Vec::new();
+        for tc in &r.design.tasks {
+            let geo = TaskGeometry::new(&k, &fg, tc);
+            let rep = geo.rep_stmt();
+            let names: Vec<&str> =
+                tc.perm.iter().map(|&p| rep.loops[p].name.as_str()).collect();
+            orders.push(format!("FT{}: {}", tc.task, names.join(",")));
+            for a in geo.arrays() {
+                let plan = tc
+                    .plans
+                    .get(&a)
+                    .copied()
+                    .unwrap_or_else(|| geo.default_plan(&a, geo.levels() - 1));
+                let dims = geo.tile_dims(&a, plan.define_level.min(geo.levels() - 1));
+                let dims_s: Vec<String> = dims.iter().map(u64::to_string).collect();
+                tiles.push(format!("{a}(FT{}): {}", tc.task, dims_s.join("x")));
+            }
+        }
+        t.row(vec![
+            k.name.clone(),
+            fused.join("  "),
+            orders.join("  "),
+            tiles.join(", "),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nshape check (paper Table 9): atax/bicg fuse into (tmp|s)-then-(y|q) task pairs\n\
+         with permuted orders between the two; MM kernels keep k innermost and pick\n\
+         per-task tile sizes; arrays consumed by two tasks get distinct tile sizes."
+    );
+}

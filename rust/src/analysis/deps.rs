@@ -1,0 +1,135 @@
+//! Statement-level dependence analysis.
+//!
+//! After maximal distribution every statement is its own loop nest, so the
+//! dependences that matter for task construction are *array-level*: S_b
+//! depends on S_a if S_a writes an array S_b reads (flow), writes an array
+//! S_b writes (output), or reads an array S_b writes (anti). Program order
+//! orients every edge (a < b). This is exactly the information PoCC's
+//! dependence graph provides at task granularity for these kernels.
+
+use crate::ir::Kernel;
+
+/// Dependence kind, classic Bernstein classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DepKind {
+    /// Read-after-write: the consumer needs the producer's data — this is
+    /// the kind that becomes a FIFO edge in the dataflow design.
+    Flow,
+    /// Write-after-write (e.g. init statement then update).
+    Output,
+    /// Write-after-read.
+    Anti,
+}
+
+/// One dependence edge between statements `src` → `dst` (program order,
+/// `src.id < dst.id`) carried by `array`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DepEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub array: String,
+    pub kind: DepKind,
+}
+
+/// Compute all statement-level dependences of `k`, in program order.
+pub fn dependences(k: &Kernel) -> Vec<DepEdge> {
+    let mut edges = Vec::new();
+    for (bi, sb) in k.statements.iter().enumerate() {
+        for sa in &k.statements[..bi] {
+            // flow: sa writes, sb reads
+            if sb.reads.iter().any(|r| r.array == sa.write.array) {
+                edges.push(DepEdge {
+                    src: sa.id,
+                    dst: sb.id,
+                    array: sa.write.array.clone(),
+                    kind: DepKind::Flow,
+                });
+            }
+            // output: both write the same array
+            if sa.write.array == sb.write.array {
+                edges.push(DepEdge {
+                    src: sa.id,
+                    dst: sb.id,
+                    array: sa.write.array.clone(),
+                    kind: DepKind::Output,
+                });
+            }
+            // anti: sa reads what sb writes
+            if sa.reads.iter().any(|r| r.array == sb.write.array) && sa.write.array != sb.write.array
+            {
+                edges.push(DepEdge {
+                    src: sa.id,
+                    dst: sb.id,
+                    array: sb.write.array.clone(),
+                    kind: DepKind::Anti,
+                });
+            }
+        }
+    }
+    edges
+}
+
+/// True if the two statements can be freely reordered / run concurrently
+/// (no dependence of any kind between them).
+pub fn independent(k: &Kernel, a: usize, b: usize) -> bool {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    !dependences(k).iter().any(|e| e.src == lo && e.dst == hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn three_mm_flow_structure() {
+        let k = polybench::three_mm();
+        let deps = dependences(&k);
+        let flow: Vec<_> = deps.iter().filter(|e| e.kind == DepKind::Flow).collect();
+        // S1 reads E written by S0 (init), S5 reads E (S0,S1) and F (S2,S3),
+        // S5 reads G written by S4.
+        assert!(flow.iter().any(|e| e.src == 1 && e.dst == 5 && e.array == "E"));
+        assert!(flow.iter().any(|e| e.src == 3 && e.dst == 5 && e.array == "F"));
+        assert!(flow.iter().any(|e| e.src == 0 && e.dst == 1 && e.array == "E"));
+        // The two head multiplies are independent.
+        assert!(independent(&k, 1, 3));
+        assert!(independent(&k, 0, 2));
+        assert!(!independent(&k, 1, 5));
+    }
+
+    #[test]
+    fn two_madd_chain() {
+        let k = polybench::two_madd();
+        let deps = dependences(&k);
+        assert!(deps
+            .iter()
+            .any(|e| e.src == 0 && e.dst == 1 && e.kind == DepKind::Flow && e.array == "T"));
+        assert!(!independent(&k, 0, 1));
+    }
+
+    #[test]
+    fn three_madd_heads_independent() {
+        let k = polybench::three_madd();
+        assert!(independent(&k, 0, 1));
+        assert!(!independent(&k, 0, 2));
+        assert!(!independent(&k, 1, 2));
+    }
+
+    #[test]
+    fn output_dep_between_init_and_update() {
+        let k = polybench::gemm();
+        let deps = dependences(&k);
+        assert!(deps
+            .iter()
+            .any(|e| e.src == 0 && e.dst == 1 && e.kind == DepKind::Output && e.array == "C"));
+    }
+
+    #[test]
+    fn edges_respect_program_order() {
+        for k in polybench::all_kernels() {
+            for e in dependences(&k) {
+                assert!(e.src < e.dst, "{}: {:?}", k.name, e);
+            }
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! Output-stationary task fusion (paper §3.1): statements writing the same
+//! array merge into one fused task, so every output tile is produced —
+//! loaded, computed, stored or sent — exactly once.
+
+use super::taskgraph::TaskGraph;
+use crate::ir::access::Index;
+use crate::ir::{Kernel, StmtKind};
+use std::collections::BTreeSet;
+
+/// Configuration-independent, per-array info of a fused task, computed
+/// once at fusion time (the DSE constructs a geometry per design-point
+/// evaluation — 10^5+ per solve — so this must not be rebuilt there; see
+/// EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayInfo {
+    pub name: String,
+    /// Access function translated to representative-nest loop positions
+    /// (None = dimension not indexed by a loop iterator).
+    pub access: Vec<Option<usize>>,
+    pub writes: bool,
+    pub reads: bool,
+}
+
+/// A fused task: an ordered group of statement ids sharing one output
+/// array (e.g. `FT0 = {S0, S1}` zero-init + MAC in 3mm).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedTask {
+    pub id: usize,
+    /// Statement ids, program order. The *representative* statement (the
+    /// one whose loop nest shapes the tiling space) is the compute
+    /// statement with the deepest nest.
+    pub stmts: Vec<usize>,
+    /// The array this task produces.
+    pub output: String,
+    /// Memoized per-array info (first-touch order).
+    pub array_info: Vec<ArrayInfo>,
+}
+
+impl FusedTask {
+    /// The statement whose loop nest drives tiling/permutation choices:
+    /// deepest compute statement of the group.
+    pub fn representative(&self, k: &Kernel) -> usize {
+        *self
+            .stmts
+            .iter()
+            .max_by_key(|&&sid| {
+                let s = &k.statements[sid];
+                (s.loops.len(), s.kind == StmtKind::Compute, s.ops.total())
+            })
+            .expect("fused task is non-empty")
+    }
+}
+
+/// The fused task graph: nodes are [`FusedTask`]s, edges carry the array
+/// communicated over a FIFO between fused tasks.
+#[derive(Debug, Clone)]
+pub struct FusedGraph {
+    pub tasks: Vec<FusedTask>,
+    /// `(src_task, dst_task, array)` FIFO edges.
+    pub edges: Vec<(usize, usize, String)>,
+}
+
+impl FusedGraph {
+    pub fn task_of_stmt(&self, sid: usize) -> usize {
+        self.tasks
+            .iter()
+            .position(|t| t.stmts.contains(&sid))
+            .expect("statement belongs to a fused task")
+    }
+
+    pub fn predecessors(&self, t: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = self
+            .edges
+            .iter()
+            .filter(|(_, d, _)| *d == t)
+            .map(|(s, _, _)| *s)
+            .collect();
+        p.sort_unstable();
+        p.dedup();
+        p
+    }
+
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.tasks.len())
+            .filter(|t| !self.edges.iter().any(|(s, _, _)| s == t))
+            .collect()
+    }
+
+    /// Total elements communicated between fused tasks (Table 5, last
+    /// column): for each FIFO edge, the footprint of the carried array.
+    pub fn inter_task_elems(&self, k: &Kernel) -> u64 {
+        let mut seen = BTreeSet::new();
+        let mut total = 0;
+        for (s, d, a) in &self.edges {
+            if seen.insert((*s, *d, a.clone())) {
+                total += k.array(a).map(|arr| arr.elems()).unwrap_or(0);
+            }
+        }
+        total
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.edges.iter().all(|(s, d, _)| s < d)
+    }
+}
+
+/// Fuse statements of `k` into output-stationary tasks.
+///
+/// Legality: statements writing the same array are merged when every
+/// statement between them (in program order) that also belongs to the group
+/// chain preserves dependences — for the PolyBench zoo the groups are
+/// exactly {init, update} pairs plus single compute statements, and merging
+/// them is always legal because the init writes the same element the update
+/// accumulates into (same output-stationary tile).
+pub fn fuse(k: &Kernel) -> FusedGraph {
+    let mut tasks: Vec<FusedTask> = Vec::new();
+    for s in &k.statements {
+        if let Some(t) = tasks.iter_mut().find(|t| t.output == s.write.array) {
+            t.stmts.push(s.id);
+        } else {
+            tasks.push(FusedTask {
+                id: tasks.len(),
+                stmts: vec![s.id],
+                output: s.write.array.clone(),
+                array_info: Vec::new(),
+            });
+        }
+    }
+    for t in &mut tasks {
+        t.array_info = build_array_info(k, t);
+    }
+
+    // FIFO edges: flow deps whose endpoints ended up in different tasks.
+    let stmt_graph = TaskGraph::build(k);
+    let task_of = |sid: usize| -> usize {
+        tasks.iter().position(|t| t.stmts.contains(&sid)).unwrap()
+    };
+    let mut edges = BTreeSet::new();
+    for (s, d, a) in &stmt_graph.edges {
+        let (ts, td) = (task_of(*s), task_of(*d));
+        if ts != td {
+            edges.insert((ts, td, a.clone()));
+        }
+    }
+    let edges: Vec<(usize, usize, String)> = edges.into_iter().collect();
+
+    // Topologically renumber so producers always precede consumers (atax
+    // groups y={S0,S3} before tmp={S1,S2} in program order, but tmp feeds
+    // y — the paper's Table 9 likewise lists atax as FT0:{S1,S2},
+    // FT1:{S0,S3}). Kahn's algorithm with stable (original-id) tie-break.
+    let n = tasks.len();
+    let mut indeg = vec![0usize; n];
+    for (s, d, _) in &edges {
+        if s != d {
+            indeg[*d] += 1;
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut ready: Vec<usize> = (0..n).filter(|&t| indeg[t] == 0).collect();
+    while let Some(t) = ready.first().copied() {
+        ready.remove(0);
+        order.push(t);
+        let mut unlocked = Vec::new();
+        for (s, d, _) in &edges {
+            if *s == t {
+                indeg[*d] -= 1;
+                if indeg[*d] == 0 && !unlocked.contains(d) {
+                    unlocked.push(*d);
+                }
+            }
+        }
+        ready.extend(unlocked);
+        ready.sort_unstable();
+        ready.dedup();
+    }
+    debug_assert_eq!(order.len(), n, "fused task graph must be acyclic");
+    // order[new_id] = old_id; build the inverse map and renumber.
+    let mut new_of_old = vec![0usize; n];
+    for (new_id, &old_id) in order.iter().enumerate() {
+        new_of_old[old_id] = new_id;
+    }
+    let mut renumbered: Vec<FusedTask> = order
+        .iter()
+        .enumerate()
+        .map(|(new_id, &old_id)| FusedTask { id: new_id, ..tasks[old_id].clone() })
+        .collect();
+    renumbered.sort_by_key(|t| t.id);
+    let edges = edges
+        .into_iter()
+        .map(|(s, d, a)| (new_of_old[s], new_of_old[d], a))
+        .collect();
+    FusedGraph { tasks: renumbered, edges }
+}
+
+/// Build the per-array memo for one fused task: translate every access
+/// onto the representative nest by iterator name (Eq 4 guarantees fused
+/// statements share iterators) and record read/write membership.
+fn build_array_info(k: &Kernel, task: &FusedTask) -> Vec<ArrayInfo> {
+    let rep = task.representative(k);
+    let rep_loops = &k.statements[rep].loops;
+    let rep_pos_of = |sid: usize, pos: usize| -> Option<usize> {
+        let name = &k.statements[sid].loops[pos].name;
+        rep_loops.iter().position(|l| &l.name == name)
+    };
+    let translate = |sid: usize, acc: &crate::ir::Access| -> Vec<Option<usize>> {
+        acc.idx
+            .iter()
+            .map(|ix| match ix {
+                Index::Iter(p) => rep_pos_of(sid, *p),
+                Index::Zero => None,
+            })
+            .collect()
+    };
+    let mut infos: Vec<ArrayInfo> = Vec::new();
+    // rep statement first so its access translation wins
+    let mut stmts: Vec<usize> = vec![rep];
+    stmts.extend(task.stmts.iter().copied().filter(|&s| s != rep));
+    // first-touch order must follow program order of the task's stmts
+    for &sid in &task.stmts {
+        let s = &k.statements[sid];
+        for acc in std::iter::once(&s.write).chain(s.reads.iter()) {
+            if !infos.iter().any(|i| i.name == acc.array) {
+                // find the translation, preferring the rep statement
+                let access = stmts
+                    .iter()
+                    .find_map(|&q| {
+                        let qs = &k.statements[q];
+                        if qs.write.array == acc.array {
+                            return Some(translate(q, &qs.write));
+                        }
+                        qs.reads
+                            .iter()
+                            .find(|r| r.array == acc.array)
+                            .map(|r| translate(q, r))
+                    })
+                    .unwrap_or_default();
+                infos.push(ArrayInfo {
+                    name: acc.array.clone(),
+                    access,
+                    writes: false,
+                    reads: false,
+                });
+            }
+        }
+    }
+    for &sid in &task.stmts {
+        let s = &k.statements[sid];
+        if let Some(i) = infos.iter_mut().find(|i| i.name == s.write.array) {
+            i.writes = true;
+        }
+        for r in &s.reads {
+            if let Some(i) = infos.iter_mut().find(|i| i.name == r.array) {
+                i.reads = true;
+            }
+        }
+    }
+    infos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn three_mm_fuses_to_three_tasks() {
+        // Paper Listing 6: FT0={S0,S1}, FT1={S2,S3}, FT2={S4,S5}.
+        let k = polybench::three_mm();
+        let g = fuse(&k);
+        assert_eq!(g.tasks.len(), 3);
+        assert_eq!(g.tasks[0].stmts, vec![0, 1]);
+        assert_eq!(g.tasks[1].stmts, vec![2, 3]);
+        assert_eq!(g.tasks[2].stmts, vec![4, 5]);
+        assert_eq!(g.tasks[0].output, "E");
+        assert_eq!(g.tasks[2].output, "G");
+        // FIFO edges: FT0 --E--> FT2, FT1 --F--> FT2.
+        assert!(g.edges.iter().any(|(s, d, a)| (*s, *d, a.as_str()) == (0, 2, "E")));
+        assert!(g.edges.iter().any(|(s, d, a)| (*s, *d, a.as_str()) == (1, 2, "F")));
+        assert!(g.is_acyclic());
+        assert_eq!(g.sinks(), vec![2]);
+    }
+
+    #[test]
+    fn representative_is_deepest_compute() {
+        let k = polybench::three_mm();
+        let g = fuse(&k);
+        assert_eq!(g.tasks[0].representative(&k), 1);
+        assert_eq!(g.tasks[1].representative(&k), 3);
+        assert_eq!(g.tasks[2].representative(&k), 5);
+    }
+
+    #[test]
+    fn table5_comm_column() {
+        // Paper Table 5: inter-task comm — 3mm: 2N² (E and F), atax: N
+        // (tmp), bicg: 0, gesummv: 2N (tmp, y), 2-madd: N², 3-madd: 2N².
+        let elems = |name: &str| {
+            let k = polybench::by_name(name).unwrap();
+            fuse(&k).inter_task_elems(&k)
+        };
+        assert_eq!(elems("bicg"), 0);
+        assert_eq!(elems("madd"), 0);
+        assert_eq!(elems("mvt"), 0);
+        assert_eq!(elems("atax"), 390); // tmp[M]
+        assert_eq!(elems("gesummv"), 2 * 250); // tmp + y
+        assert_eq!(elems("2-madd"), 400 * 400);
+        assert_eq!(elems("3-madd"), 2 * 400 * 400);
+        assert_eq!(elems("3mm"), 180 * 190 + 190 * 210); // E + F
+        assert_eq!(elems("2mm"), 180 * 190); // tmp
+    }
+
+    #[test]
+    fn atax_tasks_renumbered_topologically() {
+        // Paper Table 9: atax FT0 = {S1, S2} (tmp), FT1 = {S0, S3} (y).
+        let k = polybench::atax();
+        let g = fuse(&k);
+        assert_eq!(g.tasks.len(), 2);
+        assert_eq!(g.tasks[0].output, "tmp");
+        assert_eq!(g.tasks[0].stmts, vec![1, 2]);
+        assert_eq!(g.tasks[1].output, "y");
+        assert_eq!(g.tasks[1].stmts, vec![0, 3]);
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    fn mvt_tasks_stay_separate() {
+        // mvt's two statements write different arrays -> 2 concurrent tasks.
+        let k = polybench::mvt();
+        let g = fuse(&k);
+        assert_eq!(g.tasks.len(), 2);
+        assert!(g.edges.is_empty());
+    }
+
+    #[test]
+    fn every_stmt_in_exactly_one_task() {
+        for k in polybench::all_kernels() {
+            let g = fuse(&k);
+            let mut seen = vec![0; k.statements.len()];
+            for t in &g.tasks {
+                for &s in &t.stmts {
+                    seen[s] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{}", k.name);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Program analysis: dependences, task-graph construction, fusion and
+//! reuse classification (paper §3.1, Fig 3, Table 5's last two columns).
+
+pub mod deps;
+pub mod fusion;
+pub mod reuse;
+pub mod taskgraph;
+
+pub use deps::{DepEdge, DepKind};
+pub use fusion::{fuse, FusedTask, FusedGraph};
+pub use taskgraph::TaskGraph;

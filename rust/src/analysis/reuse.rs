@@ -1,0 +1,82 @@
+//! Reuse / boundedness classification (Table 5's `Reuse` column) and the
+//! complexity strings reported alongside.
+
+use crate::ir::Kernel;
+
+/// Asymptotic reuse order of a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseOrder {
+    /// O(1): each input element used a constant number of times —
+    /// memory-bound.
+    Constant,
+    /// O(N): each element reused ~N times — compute-bound with careful
+    /// on-chip bufferization.
+    Linear,
+}
+
+impl ReuseOrder {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReuseOrder::Constant => "O(1)",
+            ReuseOrder::Linear => "O(N)",
+        }
+    }
+}
+
+/// Classify by arithmetic intensity: kernels whose FLOP/byte grows with N
+/// land far above the O(1) band (intensity ≈ ops/footprint; the threshold
+/// of 4 FLOP/byte cleanly separates the gemm family (≥25) from the
+/// madd/mvt family (≤0.5) at medium sizes).
+pub fn reuse_order(k: &Kernel) -> ReuseOrder {
+    if k.arithmetic_intensity() > 4.0 {
+        ReuseOrder::Linear
+    } else {
+        ReuseOrder::Constant
+    }
+}
+
+/// `O(N^2)` / `O(N^3)` ops-complexity string from the deepest compute nest.
+pub fn ops_complexity(k: &Kernel) -> String {
+    let depth = k
+        .statements
+        .iter()
+        .map(|s| s.loops.len())
+        .max()
+        .unwrap_or(0);
+    format!("O(N^{depth})")
+}
+
+/// Memory complexity string: rank of the largest array.
+pub fn mem_complexity(k: &Kernel) -> String {
+    let rank = k.arrays.iter().map(|a| a.dims.len()).max().unwrap_or(0);
+    format!("O(N^{rank})")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn table5_reuse_column() {
+        // Exactly the paper's classification.
+        let linear = ["2mm", "gemm", "syr2k", "syrk", "trmm", "3mm", "symm"];
+        let constant =
+            ["bicg", "madd", "mvt", "atax", "gesummv", "2-madd", "3-madd", "gemver"];
+        for n in linear {
+            let k = polybench::by_name(n).unwrap();
+            assert_eq!(reuse_order(&k), ReuseOrder::Linear, "{n}");
+        }
+        for n in constant {
+            let k = polybench::by_name(n).unwrap();
+            assert_eq!(reuse_order(&k), ReuseOrder::Constant, "{n}");
+        }
+    }
+
+    #[test]
+    fn complexity_strings() {
+        assert_eq!(ops_complexity(&polybench::gemm()), "O(N^3)");
+        assert_eq!(ops_complexity(&polybench::madd()), "O(N^2)");
+        assert_eq!(mem_complexity(&polybench::gemm()), "O(N^2)");
+    }
+}

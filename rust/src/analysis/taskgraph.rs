@@ -1,0 +1,131 @@
+//! The task-flow graph (paper Fig 3): one node per distributed statement,
+//! flow edges only (FIFO candidates), acyclic by construction since edges
+//! follow program order.
+
+use super::deps::{dependences, DepKind};
+use crate::ir::Kernel;
+use std::collections::BTreeSet;
+
+/// Task graph over statement ids.
+#[derive(Debug, Clone)]
+pub struct TaskGraph {
+    pub n: usize,
+    /// Flow edges `(src, dst, array)`, deduplicated.
+    pub edges: Vec<(usize, usize, String)>,
+}
+
+impl TaskGraph {
+    pub fn build(k: &Kernel) -> Self {
+        let mut set = BTreeSet::new();
+        for e in dependences(k) {
+            if e.kind == DepKind::Flow {
+                set.insert((e.src, e.dst, e.array));
+            }
+        }
+        TaskGraph { n: k.statements.len(), edges: set.into_iter().collect() }
+    }
+
+    pub fn predecessors(&self, t: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = self
+            .edges
+            .iter()
+            .filter(|(_, d, _)| *d == t)
+            .map(|(s, _, _)| *s)
+            .collect();
+        p.sort_unstable();
+        p.dedup();
+        p
+    }
+
+    pub fn successors(&self, t: usize) -> Vec<usize> {
+        let mut s: Vec<usize> = self
+            .edges
+            .iter()
+            .filter(|(src, _, _)| *src == t)
+            .map(|(_, d, _)| *d)
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+
+    /// Sink tasks (no successors) — the `S` of Eq 13.
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.n).filter(|t| self.successors(*t).is_empty()).collect()
+    }
+
+    /// Source tasks (no predecessors).
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.n).filter(|t| self.predecessors(*t).is_empty()).collect()
+    }
+
+    /// Topological order. The graph is acyclic by construction (edges go
+    /// forward in program order), so plain id order is already topological;
+    /// this method exists to make the invariant executable for tests.
+    pub fn topo_order(&self) -> Vec<usize> {
+        let order: Vec<usize> = (0..self.n).collect();
+        debug_assert!(self.edges.iter().all(|(s, d, _)| s < d));
+        order
+    }
+
+    /// Length (in nodes) of the longest dependence chain — the depth bound
+    /// for concurrent execution.
+    pub fn critical_path_len(&self) -> usize {
+        let mut depth = vec![1usize; self.n];
+        for t in 0..self.n {
+            for p in self.predecessors(t) {
+                depth[t] = depth[t].max(depth[p] + 1);
+            }
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+
+    /// Whether the graph is acyclic (always true by construction; checked
+    /// in the property harness).
+    pub fn is_acyclic(&self) -> bool {
+        self.edges.iter().all(|(s, d, _)| s < d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn three_mm_graph_shape() {
+        // Fig 3 of the paper: 6 tasks, E flows S0,S1 -> S5; F flows S2,S3 -> S5.
+        let k = polybench::three_mm();
+        let g = TaskGraph::build(&k);
+        assert_eq!(g.n, 6);
+        assert!(g.is_acyclic());
+        assert_eq!(g.sinks(), vec![5]);
+        assert!(g.sources().contains(&0));
+        assert!(g.sources().contains(&2));
+        // S5 consumes from both multiply chains.
+        let p5 = g.predecessors(5);
+        assert!(p5.contains(&1) && p5.contains(&3) && p5.contains(&4));
+    }
+
+    #[test]
+    fn critical_path() {
+        let k = polybench::three_madd();
+        let g = TaskGraph::build(&k);
+        // two independent adds then the final add = depth 2
+        assert_eq!(g.critical_path_len(), 2);
+
+        let k2 = polybench::two_madd();
+        let g2 = TaskGraph::build(&k2);
+        assert_eq!(g2.critical_path_len(), 2);
+    }
+
+    #[test]
+    fn all_kernels_acyclic_topo() {
+        for k in polybench::all_kernels() {
+            let g = TaskGraph::build(&k);
+            assert!(g.is_acyclic(), "{}", k.name);
+            assert_eq!(g.topo_order().len(), g.n);
+            assert!(!g.sinks().is_empty(), "{}", k.name);
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Allo [15] — a composable programming model whose artifact kernels use
+//! fixed, hand-written schedules (no DSE; the paper uses the PLDI'24
+//! artifact designs directly). The published schedules follow one
+//! pattern: keep the original structure, place the reduction loop
+//! outermost-pipelined or innermost-pipelined, fully unroll a
+//! non-reduction loop, stream between kernels via dataflow. Without
+//! tiling the on-chip working set limits how much of a 2-D array can be
+//! buffered, so matrices fall back to row-granular streaming.
+
+use crate::dse::config::ExecutionModel;
+use crate::dse::solver::{solve, SolverOptions, SolverResult};
+use crate::hw::Device;
+use crate::ir::Kernel;
+
+/// No data packing in the artifact kernels (Table 1).
+fn unpacked_device(dev: &Device) -> Device {
+    Device { max_bus_bits: 64, ..dev.clone() }
+}
+
+/// Solver restrictions implementing Allo's fixed-schedule space: no
+/// tiling (a loop is either fully unrolled or left rolled — exactly the
+/// `s.unroll(...)` schedules of the artifact), permutation allowed
+/// (schedules choose loop order), dataflow across kernels.
+pub fn options() -> SolverOptions {
+    SolverOptions {
+        model: ExecutionModel::Dataflow,
+        overlap: false,
+        max_pad: 0,
+        permute: true,
+        tiling: false, // all-or-nothing unroll, the artifact style
+        max_unroll: 1024,
+        ..SolverOptions::default()
+    }
+}
+
+/// Optimize `k` under Allo's restrictions (RTL scenario).
+pub fn optimize(k: &Kernel, dev: &Device) -> SolverResult {
+    solve(k, &unpacked_device(dev), &options())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn all_or_nothing_unroll() {
+        let dev = Device::u55c();
+        let k = polybench::bicg();
+        let r = optimize(&k, &dev);
+        let fg = crate::analysis::fusion::fuse(&k);
+        for tc in &r.design.tasks {
+            let rep = fg.tasks[tc.task].representative(&k);
+            for (p, l) in k.statements[rep].loops.iter().enumerate() {
+                assert!(
+                    tc.intra[p] == 1 || tc.intra[p] == l.trip,
+                    "partial tile {} of {} leaked into Allo",
+                    tc.intra[p],
+                    l.trip
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn competitive_on_memory_bound_weak_on_compute_bound() {
+        // Paper: bicg 14.17 (close to Prometheus 15.41), gemm 37.5 (far
+        // from 419).
+        let dev = Device::u55c();
+        let ours_opts = SolverOptions::default();
+        let bicg = polybench::bicg();
+        let gemm = polybench::gemm();
+        let allo_bicg = optimize(&bicg, &dev);
+        let ours_bicg = solve(&bicg, &dev, &ours_opts);
+        let allo_gemm = optimize(&gemm, &dev);
+        let ours_gemm = solve(&gemm, &dev, &ours_opts);
+        let gap_bicg = ours_bicg.gflops / allo_bicg.gflops.max(1e-9);
+        let gap_gemm = ours_gemm.gflops / allo_gemm.gflops.max(1e-9);
+        assert!(gap_gemm > gap_bicg, "gemm gap {gap_gemm} !> bicg gap {gap_bicg}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Baseline framework strategies (paper §6.2–6.3).
+//!
+//! Each baseline is re-implemented as a *restriction* of the unified
+//! design space, scored by the same cost model and simulator, so the
+//! comparison isolates exactly what the paper compares: the optimization
+//! strategy. Table 1 is the specification of each restriction:
+//!
+//! | framework   | tiling | permute | dataflow | overlap | packing | padding |
+//! |-------------|--------|---------|----------|---------|---------|---------|
+//! | AutoDSE     |   ✗    |    ✗    |    ✗     |    ✗    |    ✓    |    ✗    |
+//! | Sisyphus    |   ✓    |    ✓    |    ✗     |    ✗    |    ✓    |    ✗    |
+//! | Stream-HLS  | limit  |    ✓    |    ✓     |    ✗    |    ✗    |    ✗    |
+//! | ScaleHLS    | limit  |  limit  |    ✗     |    ✗    |    ✗    |    ✗    |
+//! | Allo        |   ✗    |    ✓    |    ✓     |    ✗    |    ✗    |    ✗    |
+
+pub mod allo;
+pub mod autodse;
+pub mod scalehls;
+pub mod sisyphus;
+pub mod streamhls;
+
+use crate::dse::solver::SolverResult;
+use crate::hw::Device;
+use crate::ir::Kernel;
+
+/// The frameworks compared in Tables 3/6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    Prometheus,
+    Sisyphus,
+    StreamHls,
+    ScaleHls,
+    Allo,
+    AutoDse,
+}
+
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Prometheus => "Prometheus",
+            Framework::Sisyphus => "Sisyphus",
+            Framework::StreamHls => "Stream-HLS",
+            Framework::ScaleHls => "ScaleHLS",
+            Framework::Allo => "Allo",
+            Framework::AutoDse => "AutoDSE",
+        }
+    }
+
+    /// All frameworks in Table 6 column order.
+    pub fn all() -> [Framework; 6] {
+        [
+            Framework::Prometheus,
+            Framework::Sisyphus,
+            Framework::ScaleHls,
+            Framework::Allo,
+            Framework::AutoDse,
+            Framework::StreamHls,
+        ]
+    }
+
+    /// Whether the framework handles kernels with non-constant (triangular)
+    /// trip counts — Stream-HLS does not (Table 6's N/A rows).
+    pub fn supports_triangular(self) -> bool {
+        !matches!(self, Framework::StreamHls)
+    }
+
+    /// Run the framework's strategy on `k` for the RTL scenario.
+    pub fn optimize(self, k: &Kernel, dev: &Device) -> SolverResult {
+        match self {
+            Framework::Prometheus => {
+                crate::dse::solver::solve(k, dev, &crate::dse::solver::SolverOptions::default())
+            }
+            Framework::Sisyphus => sisyphus::optimize(k, dev),
+            Framework::StreamHls => streamhls::optimize(k, dev),
+            Framework::ScaleHls => scalehls::optimize(k, dev),
+            Framework::Allo => allo::optimize(k, dev),
+            Framework::AutoDse => autodse::optimize(k, dev),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn framework_inventory() {
+        assert_eq!(Framework::all().len(), 6);
+        assert!(!Framework::StreamHls.supports_triangular());
+        assert!(Framework::Sisyphus.supports_triangular());
+    }
+
+    #[test]
+    fn prometheus_wins_on_3mm() {
+        // Table 3's headline: Prometheus > Sisyphus > Stream-HLS >> rest.
+        let k = polybench::three_mm();
+        let dev = Device::u55c();
+        let ours = Framework::Prometheus.optimize(&k, &dev);
+        let sis = Framework::Sisyphus.optimize(&k, &dev);
+        let auto = Framework::AutoDse.optimize(&k, &dev);
+        assert!(ours.gflops > sis.gflops, "{} !> {}", ours.gflops, sis.gflops);
+        assert!(sis.gflops > auto.gflops, "{} !> {}", sis.gflops, auto.gflops);
+    }
+}

@@ -1,0 +1,79 @@
+//! Stream-HLS [9] — automatic dataflow generation with good loop-order
+//! selection for streaming, but (Table 1 / §2.3): assumes data on-chip —
+//! the paper's evaluation adds the off-chip transfers back without data
+//! packing — no computation/communication overlap, no padding, and
+//! multi-FIFO intra-task parallelism that does not generalize to off-chip
+//! banks. It cannot handle non-constant (triangular) trip counts at all
+//! (Table 6's N/A rows: symm, syr2k, syrk, trmm).
+
+use crate::dse::config::ExecutionModel;
+use crate::dse::solver::{solve, SolverOptions, SolverResult};
+use crate::hw::Device;
+use crate::ir::Kernel;
+
+/// Kernels with triangular nests Stream-HLS rejects.
+pub fn unsupported(k: &Kernel) -> bool {
+    matches!(k.name.as_str(), "symm" | "syr2k" | "syrk" | "trmm")
+}
+
+/// Stream-HLS's effective device: off-chip access without packing is
+/// limited to one 64-bit beat per cycle per stream.
+fn unpacked_device(dev: &Device) -> Device {
+    Device { max_bus_bits: 64, ..dev.clone() }
+}
+
+/// Solver restrictions implementing Stream-HLS's space.
+pub fn options() -> SolverOptions {
+    SolverOptions {
+        model: ExecutionModel::Dataflow, // its core strength
+        overlap: false,                  // no ping-pong double buffering
+        max_pad: 0,
+        permute: true, // picks streaming-friendly loop orders
+        tiling: true,  // "Limit": multi-FIFO parallelism ≈ modest tiling
+        max_factor_per_loop: 64,
+        max_unroll: 2048,
+        ..SolverOptions::default()
+    }
+}
+
+/// Optimize `k` under Stream-HLS's restrictions (RTL scenario).
+/// Returns `None` for kernels it cannot compile.
+pub fn try_optimize(k: &Kernel, dev: &Device) -> Option<SolverResult> {
+    if unsupported(k) {
+        return None;
+    }
+    Some(solve(k, &unpacked_device(dev), &options()))
+}
+
+/// Panicking variant for kernels known to be supported.
+pub fn optimize(k: &Kernel, dev: &Device) -> SolverResult {
+    try_optimize(k, dev)
+        .unwrap_or_else(|| panic!("Stream-HLS cannot handle {} (non-constant bounds)", k.name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn triangular_kernels_rejected() {
+        let dev = Device::u55c();
+        for name in ["symm", "syr2k", "syrk", "trmm"] {
+            assert!(try_optimize(&polybench::by_name(name).unwrap(), &dev).is_none());
+        }
+        assert!(try_optimize(&polybench::gemm(), &dev).is_some());
+    }
+
+    #[test]
+    fn dataflow_but_no_packing() {
+        let dev = Device::u55c();
+        let k = polybench::three_mm();
+        let sh = optimize(&k, &dev);
+        let ours = solve(&k, &dev, &SolverOptions::default());
+        // Stream-HLS is competitive on compute-bound kernels (paper:
+        // 174 vs 368 GF/s) but strictly below Prometheus.
+        assert!(sh.gflops < ours.gflops);
+        assert!(sh.gflops > ours.gflops / 20.0, "sh {} vs ours {}", sh.gflops, ours.gflops);
+    }
+}

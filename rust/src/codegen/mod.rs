@@ -1,0 +1,12 @@
+//! Code generation (paper §5): HLS-C++ (Vitis-flavoured dataflow top,
+//! load/read/write/store FIFO helpers, fully unrolled intra-tile tasks)
+//! and the OpenCL host program. The output is textual — this environment
+//! has no Vitis — but structurally mirrors Listings 6–9, serving as the
+//! executable specification the simulator runs and as golden-test
+//! material.
+
+pub mod hls;
+pub mod host;
+
+pub use hls::generate_hls;
+pub use host::generate_host;

@@ -1,0 +1,171 @@
+//! The Prometheus flow (paper Fig 2): from kernel IR to an optimized,
+//! simulated, optionally hardware-validated design.
+
+use crate::analysis::fusion::{fuse, FusedGraph};
+use crate::codegen::{generate_hls, generate_host};
+use crate::dse::config::DesignConfig;
+use crate::dse::cost::{gflops, graph_latency};
+use crate::dse::solver::{solve, Scenario, SolverOptions, SolverResult};
+use crate::hw::Device;
+use crate::ir::Kernel;
+use crate::sim::board::{board_eval, BoardReport};
+use crate::sim::engine::{simulate, SimReport};
+use anyhow::Result;
+use std::path::Path;
+use std::time::Duration;
+
+/// Options for one optimization run.
+#[derive(Debug, Clone)]
+pub struct OptimizeOptions {
+    pub scenario: Scenario,
+    pub solver: SolverOptions,
+    /// Emit HLS-C++/host sources into this directory (None = skip).
+    pub emit_dir: Option<std::path::PathBuf>,
+    /// Validate numerics through the PJRT artifact if present here.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for OptimizeOptions {
+    fn default() -> Self {
+        OptimizeOptions {
+            scenario: Scenario::Rtl,
+            solver: SolverOptions::default(),
+            emit_dir: None,
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// Everything the flow produces for one kernel.
+pub struct OptimizedKernel {
+    pub kernel: Kernel,
+    pub fused: FusedGraph,
+    pub result: SolverResult,
+    pub sim: SimReport,
+    /// Board model result for on-board scenarios.
+    pub board: Option<BoardReport>,
+    /// Max relative error of the PJRT functional validation, if run.
+    pub validation_rel_err: Option<f64>,
+    /// Simulated throughput (GF/s) at the scenario's achieved clock.
+    pub gflops: f64,
+}
+
+/// Run the full flow for `kernel_name`.
+pub fn optimize_kernel(
+    kernel_name: &str,
+    dev: &Device,
+    opts: &OptimizeOptions,
+) -> Result<OptimizedKernel> {
+    let kernel = crate::ir::polybench::by_name(kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name}"))?;
+    let fused = fuse(&kernel);
+
+    // 1. solve the design space
+    let mut solver = opts.solver.clone();
+    solver.scenario = opts.scenario;
+    let result = solve(&kernel, dev, &solver);
+    result
+        .design
+        .validate(&kernel, &fused, dev.slrs)
+        .map_err(|e| anyhow::anyhow!("solver produced invalid design: {e}"))?;
+
+    // 2. simulate (RTL-equivalent)
+    let sim = simulate(&kernel, &fused, &result.design, dev);
+
+    // 3. board model where applicable
+    let (board, gf) = match opts.scenario {
+        Scenario::Rtl => (None, sim.gflops(&kernel, dev)),
+        Scenario::OnBoard { frac, .. } => {
+            let budget = dev.slr.scaled(frac);
+            let b = board_eval(&kernel, &fused, &result.design, dev, &budget);
+            let g = b.gflops;
+            (Some(b), g)
+        }
+    };
+
+    // 4. codegen
+    if let Some(dir) = &opts.emit_dir {
+        std::fs::create_dir_all(dir)?;
+        let hls = generate_hls(&kernel, &result.design);
+        let host = generate_host(&kernel, &result.design);
+        std::fs::write(dir.join(format!("{}_kernel.cpp", kernel.name.replace('-', "_"))), hls)?;
+        std::fs::write(dir.join(format!("{}_host.cpp", kernel.name.replace('-', "_"))), host)?;
+    }
+
+    // 5. functional validation through the PJRT artifact
+    let validation_rel_err = match &opts.artifacts_dir {
+        Some(root) if artifact_exists(root, &kernel.name) => {
+            let exe = crate::runtime::Executor::load(root, &kernel.name)?;
+            Some(exe.validate()?)
+        }
+        _ => None,
+    };
+
+    Ok(OptimizedKernel {
+        kernel,
+        fused,
+        result,
+        sim,
+        board,
+        validation_rel_err,
+        gflops: gf,
+    })
+}
+
+fn artifact_exists(root: &Path, kernel: &str) -> bool {
+    crate::runtime::artifact_path(root, kernel).exists()
+}
+
+/// Convenience: analytic GF/s of an existing design (used by reports).
+pub fn design_gflops(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device) -> f64 {
+    gflops(k, graph_latency(k, fg, design, dev).total, dev)
+}
+
+/// Fast solver options for tests and examples (same space, smaller beam).
+pub fn quick_solver() -> SolverOptions {
+    SolverOptions {
+        beam: 12,
+        max_factor_per_loop: 32,
+        max_unroll: 1024,
+        timeout: Duration::from_secs(30),
+        ..SolverOptions::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_runs_rtl() {
+        let dev = Device::u55c();
+        let opts = OptimizeOptions { solver: quick_solver(), ..OptimizeOptions::default() };
+        let r = optimize_kernel("gemm", &dev, &opts).unwrap();
+        assert!(r.gflops > 10.0);
+        assert!(r.board.is_none());
+        assert!(r.validation_rel_err.is_none()); // no artifacts dir given
+    }
+
+    #[test]
+    fn flow_runs_onboard_with_codegen() {
+        let dev = Device::u55c();
+        let dir = std::env::temp_dir().join("prom_test_emit");
+        let opts = OptimizeOptions {
+            scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 },
+            solver: quick_solver(),
+            emit_dir: Some(dir.clone()),
+            artifacts_dir: None,
+        };
+        let r = optimize_kernel("bicg", &dev, &opts).unwrap();
+        let b = r.board.expect("board report");
+        assert!(b.bitstream_ok);
+        assert!(dir.join("bicg_kernel.cpp").exists());
+        assert!(dir.join("bicg_host.cpp").exists());
+    }
+
+    #[test]
+    fn unknown_kernel_errors() {
+        let dev = Device::u55c();
+        assert!(optimize_kernel("nope", &dev, &OptimizeOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The end-to-end coordinator: analyze → fuse → solve → generate →
+//! simulate → (board-model) → validate, plus the design-regeneration
+//! loop of paper §5.7.
+
+pub mod flow;
+pub mod regen;
+
+pub use flow::{optimize_kernel, OptimizeOptions, OptimizedKernel};
+pub use regen::regenerate_until_feasible;

@@ -1,0 +1,202 @@
+//! The design configuration — the NLP's decision variables (Table 2),
+//! bound to one kernel. A [`DesignConfig`] fully determines the generated
+//! HLS design, the simulator input and the analytic latency.
+
+use crate::analysis::fusion::FusedGraph;
+use crate::ir::Kernel;
+use std::collections::BTreeMap;
+
+/// How tasks execute relative to each other — the axis that separates
+/// Prometheus (dataflow, concurrent) from shared-buffer frameworks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionModel {
+    /// `#pragma HLS dataflow`: fused tasks run concurrently, FIFOs carry
+    /// intermediates, computation/communication overlap via ping-pong
+    /// buffers (Prometheus).
+    Dataflow,
+    /// Tasks run back-to-back sharing on-chip buffers; transfers may still
+    /// overlap compute within a task if `overlap` is set on the plan
+    /// (Sisyphus = no overlap, sequential).
+    Sequential,
+}
+
+/// Where an array's on-chip buffer is defined and where data is moved
+/// (paper Eqs 5–6): `define_level ≤ transfer_level`, level 0 = before any
+/// inter-tile loop, level `i ≥ 1` = under the `i`-th non-reduction
+/// inter-tile loop of the owning task (in permuted order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferPlan {
+    pub define_level: usize,
+    pub transfer_level: usize,
+    /// Selected burst width in bits (Eq 3).
+    pub bitwidth: u64,
+    /// Number of buffers: 1 = no overlap, 2 = double (read xor write),
+    /// 3 = triple (read and write).
+    pub buffers: u64,
+}
+
+impl TransferPlan {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.define_level > self.transfer_level {
+            return Err(format!(
+                "define level {} deeper than transfer level {} (Eq 6)",
+                self.define_level, self.transfer_level
+            ));
+        }
+        if !matches!(self.buffers, 1..=3) {
+            return Err(format!("buffer count {} outside 1..=3", self.buffers));
+        }
+        if !self.bitwidth.is_power_of_two() || self.bitwidth < 32 || self.bitwidth > 512 {
+            return Err(format!("bitwidth {} not a power of two in 32..=512", self.bitwidth));
+        }
+        Ok(())
+    }
+}
+
+/// Per fused task decisions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskConfig {
+    /// Fused task id this config belongs to.
+    pub task: usize,
+    /// Loop order of the representative statement's nest: a permutation of
+    /// loop positions with non-reduction loops first (inter-tile order)
+    /// and reduction loops last (pipelined directly above the intra task,
+    /// largest trip innermost — §3.4).
+    pub perm: Vec<usize>,
+    /// Padded trip count per loop position (≥ original; Eqs 1–2).
+    pub padded_trip: Vec<u64>,
+    /// Intra-tile trip count (= unroll factor contribution) per loop
+    /// position; divides `padded_trip`.
+    pub intra: Vec<u64>,
+    /// Initiation interval of the pipelined reduction inter-tile loop
+    /// (= fadd latency when a reduction exists, else 1).
+    pub ii: u64,
+    /// Transfer/definition plan per array touched by the task.
+    pub plans: BTreeMap<String, TransferPlan>,
+    /// SLR the task is mapped to (Eq 11).
+    pub slr: usize,
+}
+
+impl TaskConfig {
+    /// Unroll factor = product of intra trips (the fully unrolled
+    /// intra-tile workload, §3.3).
+    pub fn unroll_factor(&self) -> u64 {
+        self.intra.iter().product()
+    }
+
+    /// Inter-tile trip of loop position `p`.
+    pub fn inter_trip(&self, p: usize) -> u64 {
+        self.padded_trip[p] / self.intra[p]
+    }
+
+    /// Positions of the non-reduction loops in permuted (outer→inner)
+    /// order, given the representative statement's reduction mask.
+    pub fn nonred_order(&self, red_mask: &[bool]) -> Vec<usize> {
+        self.perm.iter().copied().filter(|&p| !red_mask[p]).collect()
+    }
+
+    /// Positions of reduction loops (pipelined, innermost).
+    pub fn red_order(&self, red_mask: &[bool]) -> Vec<usize> {
+        self.perm.iter().copied().filter(|&p| red_mask[p]).collect()
+    }
+}
+
+/// A complete design for one kernel.
+#[derive(Debug, Clone)]
+pub struct DesignConfig {
+    pub kernel: String,
+    pub model: ExecutionModel,
+    /// Whether load/compute/store overlap (ping-pong) is enabled.
+    pub overlap: bool,
+    pub tasks: Vec<TaskConfig>,
+}
+
+impl DesignConfig {
+    pub fn task(&self, id: usize) -> &TaskConfig {
+        &self.tasks[id]
+    }
+
+    /// Structural validation against the kernel/fused graph: permutation
+    /// is a permutation, intra divides padded trip, padded ≥ original,
+    /// plans valid, SLR ids in range.
+    pub fn validate(&self, k: &Kernel, fg: &FusedGraph, slrs: usize) -> Result<(), String> {
+        if self.tasks.len() != fg.tasks.len() {
+            return Err(format!(
+                "{} task configs for {} fused tasks",
+                self.tasks.len(),
+                fg.tasks.len()
+            ));
+        }
+        for tc in &self.tasks {
+            let rep = fg.tasks[tc.task].representative(k);
+            let nest = &k.statements[rep].loops;
+            if tc.perm.len() != nest.len() {
+                return Err(format!("task {}: perm len mismatch", tc.task));
+            }
+            let mut sorted = tc.perm.clone();
+            sorted.sort_unstable();
+            if sorted != (0..nest.len()).collect::<Vec<_>>() {
+                return Err(format!("task {}: perm {:?} is not a permutation", tc.task, tc.perm));
+            }
+            for (p, l) in nest.iter().enumerate() {
+                if tc.padded_trip[p] < l.trip {
+                    return Err(format!(
+                        "task {}: padded trip {} < original {} at loop {}",
+                        tc.task, tc.padded_trip[p], l.trip, p
+                    ));
+                }
+                if tc.padded_trip[p] % tc.intra[p] != 0 {
+                    return Err(format!(
+                        "task {}: intra {} does not divide padded {} (Eq 1)",
+                        tc.task, tc.intra[p], tc.padded_trip[p]
+                    ));
+                }
+            }
+            for (a, plan) in &tc.plans {
+                plan.validate().map_err(|e| format!("task {} array {a}: {e}", tc.task))?;
+            }
+            if tc.slr >= slrs {
+                return Err(format!("task {}: SLR {} out of range", tc.task, tc.slr));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_plan_validation() {
+        let ok = TransferPlan { define_level: 0, transfer_level: 1, bitwidth: 512, buffers: 2 };
+        assert!(ok.validate().is_ok());
+        let bad_order =
+            TransferPlan { define_level: 2, transfer_level: 1, bitwidth: 512, buffers: 2 };
+        assert!(bad_order.validate().is_err());
+        let bad_bw = TransferPlan { define_level: 0, transfer_level: 0, bitwidth: 48, buffers: 2 };
+        assert!(bad_bw.validate().is_err());
+        let bad_buf = TransferPlan { define_level: 0, transfer_level: 0, bitwidth: 64, buffers: 5 };
+        assert!(bad_buf.validate().is_err());
+    }
+
+    #[test]
+    fn task_config_arithmetic() {
+        let tc = TaskConfig {
+            task: 0,
+            perm: vec![0, 1, 2],
+            padded_trip: vec![180, 192, 204],
+            intra: vec![10, 32, 4],
+            ii: 3,
+            plans: BTreeMap::new(),
+            slr: 0,
+        };
+        assert_eq!(tc.unroll_factor(), 10 * 32 * 4);
+        assert_eq!(tc.inter_trip(0), 18);
+        assert_eq!(tc.inter_trip(1), 6);
+        assert_eq!(tc.inter_trip(2), 51);
+        let red = [false, false, true];
+        assert_eq!(tc.nonred_order(&red), vec![0, 1]);
+        assert_eq!(tc.red_order(&red), vec![2]);
+    }
+}

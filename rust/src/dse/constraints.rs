@@ -1,0 +1,204 @@
+//! Resource constraints (paper Eqs 7–11) and design resource estimation.
+
+use super::config::DesignConfig;
+use super::space::TaskGeometry;
+use crate::analysis::fusion::FusedGraph;
+use crate::hw::resources::{bram18_for, cost, ResourceVec};
+use crate::hw::{Device, SlrBudget};
+use crate::ir::{Kernel, StmtKind};
+
+/// Eq 8–9: array partitioning per array = product of the intra-tile trip
+/// counts of the loops indexing it; must not exceed `max_part`.
+pub fn partition_of(geo: &TaskGeometry, array: &str) -> u64 {
+    match geo.access_ref(array) {
+        Some(acc) => acc
+            .iter()
+            .map(|p| p.map(|p| geo.cfg.intra[p]).unwrap_or(1))
+            .product(),
+        None => 1,
+    }
+}
+
+/// Check Eq 8 for every array of every task.
+pub fn partition_ok(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device) -> bool {
+    design.tasks.iter().all(|tc| {
+        let geo = TaskGeometry::new(k, fg, tc);
+        geo.arrays()
+            .iter()
+            .all(|a| partition_of(&geo, a) <= dev.max_partition)
+    })
+}
+
+/// Resource usage of one fused task (DSP via Eq 10 with the II division,
+/// LUT/FF via per-op costs, BRAM via buffered tiles × N_a in 18 Kb
+/// blocks plus stream engines).
+pub fn task_resources(geo: &TaskGeometry, _dev: &Device) -> ResourceVec {
+    let mut r = cost::KERNEL_BASE;
+
+    // compute: every statement in the fused task contributes its unrolled
+    // op tree. II-pipelined loops let Vitis fold DSPs by ~II (Eq 10).
+    for &sid in &geo.fused.stmts {
+        let s = &geo.kernel.statements[sid];
+        // unroll factor of this statement = product of intra factors of
+        // its own loops (mapped onto the representative nest)
+        let uf: u64 = (0..s.loops.len())
+            .map(|p| geo.rep_pos_of(sid, p).map(|rp| geo.cfg.intra[rp]).unwrap_or(1))
+            .product();
+        let ii = if s.loops.iter().any(|l| l.reduction) && s.kind == StmtKind::Compute {
+            geo.cfg.ii.max(1)
+        } else {
+            1
+        };
+        let per_instance = cost::FMUL.scale(s.ops.mul as f64)
+            + cost::FADD.scale(s.ops.add as f64)
+            + cost::FDIV.scale(s.ops.div as f64)
+            + cost::PER_INSTANCE_CTRL;
+        r += per_instance.scale(uf as f64 / ii as f64);
+    }
+
+    // memory: buffers at their define level × N_a, partitioned (Eq 7)
+    for info in geo.infos() {
+        let plan = geo
+            .cfg
+            .plans
+            .get(info.name.as_str())
+            .copied()
+            .unwrap_or_else(|| geo.default_plan(&info.name, geo.levels() - 1));
+        let d = plan.define_level.min(geo.levels() - 1);
+        let bytes = geo.tile_bytes_for(info, d);
+        let parts: u64 = info
+            .access
+            .iter()
+            .map(|p| p.map(|p| geo.cfg.intra[p]).unwrap_or(1))
+            .product();
+        r.bram18 += bram18_for(bytes, parts) * plan.buffers as f64;
+        // one stream engine per off-chip or FIFO connection
+        r += cost::STREAM_ENGINE;
+    }
+    r
+}
+
+/// Per-SLR resource usage of the whole design.
+pub fn slr_usage(
+    k: &Kernel,
+    fg: &FusedGraph,
+    design: &DesignConfig,
+    dev: &Device,
+) -> Vec<ResourceVec> {
+    let mut per = vec![ResourceVec::ZERO; dev.slrs];
+    for tc in &design.tasks {
+        let geo = TaskGeometry::new(k, fg, tc);
+        per[tc.slr.min(dev.slrs - 1)] += task_resources(&geo, dev);
+    }
+    per
+}
+
+/// Total design resources.
+pub fn total_usage(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device) -> ResourceVec {
+    slr_usage(k, fg, design, dev)
+        .into_iter()
+        .fold(ResourceVec::ZERO, |a, b| a + b)
+}
+
+/// Eq 7 + Eq 10 + Eq 11 applied per SLR with budget `budget` (already
+/// scaled to the scenario's utilization cap).
+pub fn feasible(
+    k: &Kernel,
+    fg: &FusedGraph,
+    design: &DesignConfig,
+    dev: &Device,
+    budget: &SlrBudget,
+) -> bool {
+    if !partition_ok(k, fg, design, dev) {
+        return false;
+    }
+    if design.tasks.iter().any(|t| t.slr >= dev.slrs) {
+        return false;
+    }
+    slr_usage(k, fg, design, dev)
+        .iter()
+        .all(|u| u.fits(budget))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fusion::fuse;
+    use crate::dse::config::{ExecutionModel, TaskConfig};
+    use std::collections::BTreeMap;
+
+    fn cfg(task: usize, intra: Vec<u64>, padded: Vec<u64>) -> TaskConfig {
+        TaskConfig {
+            task,
+            perm: (0..intra.len()).collect(),
+            padded_trip: padded,
+            intra,
+            ii: 3,
+            plans: BTreeMap::new(),
+            slr: 0,
+        }
+    }
+
+    #[test]
+    fn listing7_partitioning() {
+        // Paper §4.1.6: array D traversed by unrolled k1 (3) and j1 (32)
+        // -> 96 partitions.
+        let k = crate::ir::polybench::three_mm();
+        let fg = fuse(&k);
+        let c = cfg(1, vec![19, 32, 3], vec![190, 224, 220]);
+        let geo = TaskGeometry::new(&k, &fg, &c);
+        assert_eq!(partition_of(&geo, "D"), 3 * 32);
+        assert_eq!(partition_of(&geo, "F"), 19 * 32);
+        assert_eq!(partition_of(&geo, "C"), 19 * 3);
+    }
+
+    #[test]
+    fn dsp_scales_with_unroll_over_ii() {
+        let k = crate::ir::polybench::gemm();
+        let fg = fuse(&k);
+        let dev = Device::u55c();
+        let small = cfg(0, vec![2, 2, 1], vec![200, 220, 240]);
+        let big = cfg(0, vec![8, 8, 1], vec![200, 220, 240]);
+        let rs = task_resources(&TaskGeometry::new(&k, &fg, &small), &dev);
+        let rb = task_resources(&TaskGeometry::new(&k, &fg, &big), &dev);
+        assert!(rb.dsp > rs.dsp * 8.0, "dsp {} vs {}", rb.dsp, rs.dsp);
+        // Eq 10 spot check: gemm S1 = 1 add + 1 mul, II=3, UF=64 ->
+        // (2+3)/3*64 ≈ 106 DSP for S1 plus S0's mul (UF 64, II 1 -> 192).
+        assert!(rb.dsp > 100.0);
+    }
+
+    #[test]
+    fn feasibility_cuts_oversized_designs() {
+        let k = crate::ir::polybench::gemm();
+        let fg = fuse(&k);
+        let dev = Device::u55c();
+        let budget = dev.slr.scaled(0.6);
+        let modest = DesignConfig {
+            kernel: k.name.clone(),
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+            tasks: vec![cfg(0, vec![4, 4, 1], vec![200, 220, 240])],
+        };
+        assert!(feasible(&k, &fg, &modest, &dev, &budget));
+        let monster = DesignConfig {
+            tasks: vec![cfg(0, vec![200, 220, 1], vec![200, 220, 240])],
+            ..modest.clone()
+        };
+        assert!(!feasible(&k, &fg, &monster, &dev, &budget));
+    }
+
+    #[test]
+    fn partition_limit_enforced() {
+        let k = crate::ir::polybench::gemm();
+        let fg = fuse(&k);
+        let dev = Device::u55c(); // max_partition = 1024
+        let d = DesignConfig {
+            kernel: k.name.clone(),
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+            // C partitions = 50*44 = 2200 > 1024
+            tasks: vec![cfg(0, vec![50, 44, 1], vec![200, 220, 240])],
+        };
+        assert!(!partition_ok(&k, &fg, &d, &dev));
+    }
+}

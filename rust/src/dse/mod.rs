@@ -1,0 +1,15 @@
+//! Design-space exploration: the unified optimization space of Table 2,
+//! the constraints of Eqs 1–11, the latency cost model of Eqs 12–16, and
+//! the solver that replaces AMPL+Gurobi with an exact combinatorial
+//! branch-and-bound over the same (finite, discrete) space.
+
+pub mod config;
+pub mod constraints;
+pub mod cost;
+pub mod padding;
+pub mod permutation;
+pub mod solver;
+pub mod space;
+
+pub use config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
+pub use solver::{solve, SolverOptions, SolverResult};

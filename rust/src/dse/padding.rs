@@ -1,0 +1,143 @@
+//! Padding machinery (paper §2.1.6, Fig 1, Listing 1, Eqs 1–2).
+//!
+//! Computation padding expands the set of legal unroll factors: a loop of
+//! trip 190 admits `UF ∈ {1,2,5,10,19,38,95,190}`, but padded to 192 it
+//! admits `{1,2,3,4,6,8,12,16,24,32,48,64,96,192}`. Communication padding
+//! aligns last-dimension tile sizes so wider power-of-two bursts divide
+//! the transfer.
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// A legal (intra-tile factor, padded trip) pair for one loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FactorChoice {
+    /// Intra-tile trip count = unroll contribution.
+    pub intra: u64,
+    /// The padded total trip this factor divides (= original when no
+    /// padding is needed).
+    pub padded: u64,
+}
+
+/// Enumerate legal intra-tile factors for a loop of original trip `trip`,
+/// padding by at most `max_pad` extra iterations (Eq 2's user bound `N`).
+/// For each candidate factor the *smallest* sufficient padding is chosen,
+/// so the wasted work term is minimal. Factors above `max_factor` are
+/// dropped (they exceed any practical unroll budget).
+pub fn legal_intra_factors(trip: u64, max_pad: u64, max_factor: u64) -> Vec<FactorChoice> {
+    let mut best: Vec<FactorChoice> = Vec::new();
+    for pad in 0..=max_pad {
+        let t = trip + pad;
+        for d in divisors(t) {
+            if d > max_factor {
+                continue;
+            }
+            match best.iter_mut().find(|c| c.intra == d) {
+                Some(c) => {
+                    if t < c.padded {
+                        c.padded = t;
+                    }
+                }
+                None => best.push(FactorChoice { intra: d, padded: t }),
+            }
+        }
+    }
+    best.sort_by_key(|c| c.intra);
+    best
+}
+
+/// Smallest padded extent `≥ n` such that `extent * elem_bits` is
+/// divisible by `burst_bits` — communication padding (Fig 1). Returns the
+/// padded extent; the caller decides whether the extra traffic is worth
+/// the wider burst.
+pub fn pad_for_burst(n: u64, elem_bits: u64, burst_bits: u64) -> u64 {
+    let elems_per_burst = burst_bits / elem_bits; // e.g. 512/32 = 16
+    if elems_per_burst == 0 {
+        return n;
+    }
+    n.div_ceil(elems_per_burst) * elems_per_burst
+}
+
+/// The widest burst (from `candidates`, descending trial) whose element
+/// count divides `extent` — Eq 3's max-b rule.
+pub fn best_bitwidth(extent: u64, elem_bits: u64, max_bits: u64) -> u64 {
+    let mut bits = max_bits;
+    while bits > elem_bits {
+        if extent % (bits / elem_bits) == 0 {
+            return bits;
+        }
+        bits /= 2;
+    }
+    elem_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(190), vec![1, 2, 5, 10, 19, 38, 95, 190]);
+    }
+
+    #[test]
+    fn listing1_unroll_space() {
+        // Paper Listing 1: trip 190 unpadded vs padded to 192.
+        let unpadded: Vec<u64> =
+            legal_intra_factors(190, 0, 190).into_iter().map(|c| c.intra).collect();
+        assert_eq!(unpadded, vec![1, 2, 5, 10, 19, 38, 95, 190]);
+
+        let padded = legal_intra_factors(190, 2, 192);
+        let factors: Vec<u64> = padded.iter().map(|c| c.intra).collect();
+        for f in [3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 192] {
+            assert!(factors.contains(&f), "factor {f} missing after padding");
+        }
+        // the factor 32 should use the minimal pad (192)
+        let c32 = padded.iter().find(|c| c.intra == 32).unwrap();
+        assert_eq!(c32.padded, 192);
+        // factors that were already legal keep zero padding
+        let c19 = padded.iter().find(|c| c.intra == 19).unwrap();
+        assert_eq!(c19.padded, 190);
+    }
+
+    #[test]
+    fn fig1_communication_padding() {
+        // Paper §2.1.6: J=190 floats — 190*32 divisible by 64 not 128; with
+        // P=2 → 192*32 divisible by 512.
+        assert_eq!(best_bitwidth(190, 32, 512), 64);
+        assert_eq!(pad_for_burst(190, 32, 512), 192);
+        assert_eq!(best_bitwidth(192, 32, 512), 512);
+    }
+
+    #[test]
+    fn max_factor_is_enforced() {
+        let f = legal_intra_factors(1024, 0, 64);
+        assert!(f.iter().all(|c| c.intra <= 64));
+    }
+
+    #[test]
+    fn minimal_padding_is_chosen() {
+        // trip=10, factor 4 needs pad to 12 even if 16 also divisible.
+        let f = legal_intra_factors(10, 8, 16);
+        let c4 = f.iter().find(|c| c.intra == 4).unwrap();
+        assert_eq!(c4.padded, 12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Loop-order enumeration (paper §3.4, Eq 4).
+//!
+//! After tiling, the intra-tile is fully unrolled so only the *inter-tile*
+//! order matters. Reduction loops sit innermost (pipelined), ranked by
+//! trip count with the largest innermost; the non-reduction inter-tile
+//! loops are freely permutable — the NLP picks among those orders.
+//! Statements fused into one task share the same permutation (Eq 4),
+//! which is guaranteed by permuting the representative nest only.
+//!
+//! Under dataflow, FIFO edges constrain orders further: producer and
+//! consumer must traverse the communicated array in a compatible order
+//! (§6.4) — enforced by [`fifo_compatible`].
+
+use crate::ir::{Kernel, Statement};
+
+/// All permutations of `items` (n ≤ 4 in practice — nests are depth ≤ 3).
+pub fn permutations(items: &[usize]) -> Vec<Vec<usize>> {
+    if items.is_empty() {
+        return vec![vec![]];
+    }
+    let mut out = Vec::new();
+    for (i, &x) in items.iter().enumerate() {
+        let mut rest = items.to_vec();
+        rest.remove(i);
+        for mut p in permutations(&rest) {
+            p.insert(0, x);
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Legal inter-tile orders for a statement: every permutation of its
+/// non-reduction loops, each followed by its reduction loops ranked with
+/// the largest trip count innermost (§3.4).
+pub fn legal_orders(s: &Statement) -> Vec<Vec<usize>> {
+    let nonred = s.parallel_loops();
+    let mut red = s.reduction_loops();
+    // largest trip innermost = ascending trip order then reversed ranks:
+    // sort ascending so the largest ends up last (innermost).
+    red.sort_by_key(|&p| s.loops[p].trip);
+    permutations(&nonred)
+        .into_iter()
+        .map(|mut p| {
+            p.extend(red.iter().copied());
+            p
+        })
+        .collect()
+}
+
+/// Whether producer order `p_ord` and consumer order `c_ord` traverse the
+/// shared array compatibly for FIFO streaming: the sequence of the
+/// array's *indexing loops* (by name) must match in relative order —
+/// data leaves the producer in exactly the order the consumer ingests it.
+pub fn fifo_compatible(
+    k: &Kernel,
+    producer: usize,
+    p_ord: &[usize],
+    consumer: usize,
+    c_ord: &[usize],
+    array: &str,
+) -> bool {
+    let sp = &k.statements[producer];
+    let sc = &k.statements[consumer];
+    // names of loops indexing `array` in traversal order, producer side
+    let order_of = |s: &Statement, ord: &[usize]| -> Vec<String> {
+        let acc = if s.write.array == array {
+            Some(&s.write)
+        } else {
+            s.reads.iter().find(|r| r.array == array)
+        };
+        let Some(acc) = acc else { return vec![] };
+        // dims in array-dimension order -> loop names; traversal order =
+        // positions sorted by their place in `ord`
+        let mut dims: Vec<(usize, usize)> = acc
+            .loop_positions()
+            .into_iter()
+            .enumerate()
+            .map(|(d, p)| (d, ord.iter().position(|&q| q == p).unwrap_or(usize::MAX)))
+            .collect();
+        dims.sort_by_key(|&(_, place)| place);
+        dims.into_iter().map(|(d, _)| format!("dim{d}")).collect()
+    };
+    let po = order_of(sp, p_ord);
+    let co = order_of(sc, c_ord);
+    po.is_empty() || co.is_empty() || po == co
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    #[test]
+    fn permutation_counts() {
+        assert_eq!(permutations(&[0]).len(), 1);
+        assert_eq!(permutations(&[0, 1]).len(), 2);
+        assert_eq!(permutations(&[0, 1, 2]).len(), 6);
+        assert_eq!(permutations(&[]).len(), 1);
+    }
+
+    #[test]
+    fn gemm_orders() {
+        // gemm S1: i,j parallel, k reduction -> 2 orders, k always last.
+        let k = polybench::gemm();
+        let orders = legal_orders(&k.statements[1]);
+        assert_eq!(orders.len(), 2);
+        for o in &orders {
+            assert_eq!(*o.last().unwrap(), 2, "reduction loop innermost");
+        }
+        assert!(orders.contains(&vec![0, 1, 2]));
+        assert!(orders.contains(&vec![1, 0, 2]));
+    }
+
+    #[test]
+    fn reduction_ranking_largest_innermost() {
+        // For a hypothetical 2-reduction nest the larger trip goes last.
+        use crate::ir::{Access, Loop, OpCounts, StmtKind};
+        let s = Statement {
+            id: 0,
+            kind: StmtKind::Compute,
+            loops: vec![
+                Loop::new("i", 10, false),
+                Loop::new("k1", 50, true),
+                Loop::new("k2", 200, true),
+            ],
+            write: Access::new("o", &[0]),
+            reads: vec![Access::new("o", &[0])],
+            ops: OpCounts::new(1, 1),
+        };
+        let orders = legal_orders(&s);
+        assert_eq!(orders.len(), 1);
+        assert_eq!(orders[0], vec![0, 1, 2]); // k2 (trip 200) innermost
+    }
+
+    #[test]
+    fn fifo_order_constraint_3mm() {
+        // E produced by S1 (write E[i][j]) and consumed by S5 (reads
+        // E[i][k]): producer traverses dims (i outer, j inner) with order
+        // i,j,k; consumer reads E dims via loops (i, k): with order
+        // i,j,k the consumer traverses dim0 outer, dim1 inner — compatible.
+        let k = polybench::three_mm();
+        assert!(fifo_compatible(&k, 1, &[0, 1, 2], 5, &[0, 1, 2], "E"));
+        // j0-outer in the consumer leaves the E dim traversal unchanged
+        // (j does not index E) — still compatible, matching Listing 6's
+        // FT2 which runs j0 outermost.
+        assert!(fifo_compatible(&k, 1, &[0, 1, 2], 5, &[1, 0, 2], "E"));
+    }
+
+    #[test]
+    fn fifo_transposed_consumer_incompatible() {
+        // Synthetic: producer writes T[i][j] row-major; a consumer reading
+        // T[j][i] with the same loop order traverses the array transposed
+        // — FIFO streaming order breaks.
+        use crate::ir::{Access, ArrayDecl, Loop, OpCounts, StmtKind};
+        let mk_stmt = |id: usize, write: Access, reads: Vec<Access>| Statement {
+            id,
+            kind: StmtKind::Compute,
+            loops: vec![Loop::new("i", 8, false), Loop::new("j", 8, false)],
+            write,
+            reads,
+            ops: OpCounts::new(1, 0),
+        };
+        let k = Kernel {
+            name: "synth".into(),
+            description: String::new(),
+            arrays: vec![
+                ArrayDecl::new("T", &[8, 8], false, false),
+                ArrayDecl::new("A", &[8, 8], true, false),
+                ArrayDecl::new("O", &[8, 8], false, true),
+            ],
+            statements: vec![
+                mk_stmt(0, Access::new("T", &[0, 1]), vec![Access::new("A", &[0, 1])]),
+                mk_stmt(1, Access::new("O", &[0, 1]), vec![Access::new("T", &[1, 0])]),
+            ],
+        };
+        assert!(!fifo_compatible(&k, 0, &[0, 1], 1, &[0, 1], "T"));
+        // flipping the consumer's loop order restores compatibility
+        assert!(fifo_compatible(&k, 0, &[0, 1], 1, &[1, 0], "T"));
+    }
+}

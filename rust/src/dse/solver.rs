@@ -1,0 +1,648 @@
+//! The design-space solver — the reproduction's substitute for
+//! AMPL + Gurobi (paper §6.1).
+//!
+//! The paper's "NLP" is a nonconvex quadratic program over *discrete*
+//! decision variables (divisor-constrained tile factors, permutation
+//! choices, transfer levels, SLR ids); Gurobi solves it by spatial
+//! branch-and-bound. We solve the same space with an explicit two-stage
+//! combinatorial branch-and-bound:
+//!
+//! 1. **per-task enumeration** — tile factors (with padding, Eqs 1–2) ×
+//!    legal permutations × transfer plans (Eqs 5–6), filtered by the
+//!    resource constraints (Eqs 7–10), reduced to a Pareto front over
+//!    (latency, DSP, BRAM);
+//! 2. **global assembly** — DFS over per-task candidates and SLR
+//!    assignments (Eq 11) minimizing the DAG latency (Eqs 12–13) under
+//!    per-region budgets, with branch-and-bound pruning.
+//!
+//! A timeout makes the solver *anytime*: it returns the incumbent with
+//! `timed_out = true`, mirroring the paper's Gurobi-timeout mode (§6.4).
+
+use super::config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
+use super::constraints::{partition_of, task_resources};
+use super::cost::{gflops, graph_latency, task_latency, GraphLatency};
+use super::padding::legal_intra_factors;
+use super::permutation::legal_orders;
+use super::space::TaskGeometry;
+use crate::analysis::fusion::{fuse, FusedGraph};
+use crate::hw::resources::ResourceVec;
+use crate::hw::{Device, SlrBudget};
+use crate::ir::Kernel;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Resource scenario the solver targets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scenario {
+    /// RTL simulation: the whole device as one region (paper §6.2 gives
+    /// every framework all U55C resources for RTL comparison).
+    Rtl,
+    /// On-board: `slrs` usable regions, each capped at `frac` utilization.
+    OnBoard { slrs: usize, frac: f64 },
+}
+
+/// Solver knobs. Baselines restrict this space to mimic each framework.
+#[derive(Debug, Clone)]
+pub struct SolverOptions {
+    pub scenario: Scenario,
+    pub model: ExecutionModel,
+    /// Computation/communication overlap (ping-pong buffering).
+    pub overlap: bool,
+    /// Allow computation padding (Eq 2 bound; 0 disables).
+    pub max_pad: u64,
+    /// Allow loop permutation.
+    pub permute: bool,
+    /// Allow data tiling (false = whole-array buffers, on-chip style).
+    pub tiling: bool,
+    /// Cap on per-loop intra factors.
+    pub max_factor_per_loop: u64,
+    /// Cap on the task unroll factor (product of intra factors).
+    pub max_unroll: u64,
+    /// Candidates kept per task after stage 1.
+    pub beam: usize,
+    /// Anytime timeout.
+    pub timeout: Duration,
+}
+
+impl Default for SolverOptions {
+    fn default() -> Self {
+        SolverOptions {
+            scenario: Scenario::Rtl,
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+            max_pad: 16,
+            permute: true,
+            tiling: true,
+            max_factor_per_loop: 128,
+            max_unroll: 4096,
+            beam: 192,
+            timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Solver output.
+#[derive(Debug, Clone)]
+pub struct SolverResult {
+    pub design: DesignConfig,
+    pub latency: GraphLatency,
+    pub gflops: f64,
+    pub solve_time: Duration,
+    /// Design points evaluated.
+    pub explored: u64,
+    pub timed_out: bool,
+}
+
+/// One per-task candidate with its standalone metrics.
+#[derive(Debug, Clone)]
+struct Candidate {
+    cfg: TaskConfig,
+    latency: u64,
+    res: ResourceVec,
+}
+
+/// Region budget for the scenario.
+pub fn region_budget(dev: &Device, scenario: Scenario) -> (usize, SlrBudget) {
+    match scenario {
+        Scenario::Rtl => (1, dev.total()),
+        Scenario::OnBoard { slrs, frac } => (slrs.min(dev.slrs), dev.slr.scaled(frac)),
+    }
+}
+
+/// Solve the design space for `k`. Returns the best feasible design found.
+pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
+    let start = Instant::now();
+    let fg = fuse(k);
+    let (regions, budget) = region_budget(dev, opts.scenario);
+    let mut explored = 0u64;
+    let mut timed_out = false;
+
+    // ---- stage 1 + 2: per-task Pareto candidates -----------------------
+    // Tasks placed in the same region share its budget; enumerate each
+    // task against a fair share (regions spread tasks, so the share is
+    // n_tasks / regions per region) — the global DFS re-checks the true
+    // summed feasibility.
+    let n_tasks = fg.tasks.len();
+    let per_region_tasks = n_tasks.div_ceil(regions).max(1);
+    let share = budget.scaled(1.0 / per_region_tasks as f64);
+    let mut per_task: Vec<Vec<Candidate>> = Vec::with_capacity(n_tasks);
+    for t in 0..n_tasks {
+        let mut cands = enumerate_task(
+            k,
+            &fg,
+            t,
+            dev,
+            opts,
+            &share,
+            start,
+            &mut explored,
+            &mut timed_out,
+        );
+        // Restart pass without padding: padded variants can flood the
+        // stage-1 beam and bury the unpadded optimum (the beam proxy uses
+        // default transfer plans). A second, padding-free enumeration is
+        // cheap and guarantees the Prometheus space dominates the
+        // Sisyphus (no-padding) subspace.
+        if opts.max_pad > 0 {
+            let nopad = SolverOptions { max_pad: 0, ..opts.clone() };
+            cands.extend(enumerate_task(
+                k,
+                &fg,
+                t,
+                dev,
+                &nopad,
+                &share,
+                start,
+                &mut explored,
+                &mut timed_out,
+            ));
+            cands = pareto(cands);
+        }
+        assert!(
+            !cands.is_empty(),
+            "no feasible candidate for task {t} of {} — budget too small",
+            k.name
+        );
+        per_task.push(cands);
+    }
+
+    // ---- stage 3: global assembly over candidates × SLRs ---------------
+    let mut best: Option<(u64, Vec<(usize, usize)>)> = None; // (latency, [(cand, slr)])
+    let mut assign: Vec<(usize, usize)> = Vec::new();
+    dfs_assign(
+        k,
+        &fg,
+        dev,
+        opts,
+        &budget,
+        regions,
+        &per_task,
+        &mut assign,
+        &mut best,
+        start,
+        &mut explored,
+        &mut timed_out,
+    );
+
+    let (_, picks) = best.expect("at least one feasible assembly");
+    let tasks: Vec<TaskConfig> = picks
+        .iter()
+        .enumerate()
+        .map(|(t, &(c, slr))| {
+            let mut cfg = per_task[t][c].cfg.clone();
+            cfg.slr = slr;
+            cfg
+        })
+        .collect();
+    let design = DesignConfig {
+        kernel: k.name.clone(),
+        model: opts.model,
+        overlap: opts.overlap,
+        tasks,
+    };
+    let latency = graph_latency(k, &fg, &design, dev);
+    let gf = gflops(k, latency.total, dev);
+    SolverResult {
+        design,
+        latency,
+        gflops: gf,
+        solve_time: start.elapsed(),
+        explored,
+        timed_out,
+    }
+}
+
+/// Enumerate tile factors × permutations × transfer plans for one fused
+/// task and reduce to a Pareto front.
+#[allow(clippy::too_many_arguments)]
+fn enumerate_task(
+    k: &Kernel,
+    fg: &FusedGraph,
+    t: usize,
+    dev: &Device,
+    opts: &SolverOptions,
+    budget: &SlrBudget,
+    start: Instant,
+    explored: &mut u64,
+    timed_out: &mut bool,
+) -> Vec<Candidate> {
+    let rep = fg.tasks[t].representative(k);
+    let rep_stmt = &k.statements[rep];
+    let nest = &rep_stmt.loops;
+    let has_red = nest.iter().any(|l| l.reduction);
+    let ii = if has_red { dev.fadd_latency } else { 1 };
+
+    // per-loop factor options
+    let per_loop: Vec<Vec<super::padding::FactorChoice>> = nest
+        .iter()
+        .map(|l| {
+            if !opts.tiling {
+                // no tiling: intra = full loop (everything on-chip,
+                // Stream-HLS/ScaleHLS style) — but cap reductions to keep
+                // partitioning legal.
+                let f = legal_intra_factors(l.trip, 0, l.trip);
+                vec![*f.last().unwrap(), f[0]]
+            } else {
+                legal_intra_factors(l.trip, opts.max_pad, opts.max_factor_per_loop)
+            }
+        })
+        .collect();
+
+    // permutations (inter-tile order); reduction loops pinned innermost
+    let orders = if opts.permute {
+        legal_orders(rep_stmt)
+    } else {
+        vec![legal_orders(rep_stmt)[0].clone()]
+    };
+
+    // ---- stage 1: factor combos scored with a default transfer plan ----
+    let mut combos: Vec<(Vec<u64>, Vec<u64>)> = Vec::new(); // (intra, padded)
+    let mut stack_intra = vec![0u64; nest.len()];
+    let mut stack_pad = vec![0u64; nest.len()];
+    enum_factors(
+        &per_loop,
+        0,
+        1,
+        opts.max_unroll,
+        &mut stack_intra,
+        &mut stack_pad,
+        &mut combos,
+    );
+
+    // Compact stage-1 scoring: (latency, unroll, combo idx, order idx).
+    // A reusable TaskConfig avoids per-point allocations; sort keys stay
+    // 24 bytes so the beam sort doesn't shuffle fat tuples.
+    let mut scored: Vec<(u64, u64, u32, u32)> = Vec::new();
+    let mut cfg = TaskConfig {
+        task: t,
+        perm: Vec::new(),
+        padded_trip: Vec::new(),
+        intra: Vec::new(),
+        ii,
+        plans: BTreeMap::new(),
+        slr: 0,
+    };
+    'outer: for (oi, ord) in orders.iter().enumerate() {
+        for (ci, (intra, padded)) in combos.iter().enumerate() {
+            if start.elapsed() > opts.timeout {
+                *timed_out = true;
+                break 'outer;
+            }
+            *explored += 1;
+            cfg.perm.clone_from(ord);
+            cfg.padded_trip.clone_from(padded);
+            cfg.intra.clone_from(intra);
+            let geo = TaskGeometry::new(k, fg, &cfg);
+            // partition constraint (Eq 8)
+            if geo
+                .array_names()
+                .any(|a| partition_of(&geo, a) > dev.max_partition)
+            {
+                continue;
+            }
+            let res = task_resources(&geo, dev);
+            if !res.fits(budget) {
+                continue;
+            }
+            let lat = task_latency(&geo, dev, opts.overlap);
+            scored.push((lat, intra.iter().product(), ci as u32, oi as u32));
+        }
+    }
+    // anytime guarantee: a tiny timeout may have cut enumeration short —
+    // always keep the trivial (untiled, unrolled-by-1) combo as a floor.
+    if scored.is_empty() {
+        let intra: Vec<u64> = vec![1; nest.len()];
+        let padded: Vec<u64> = nest.iter().map(|l| l.trip).collect();
+        combos.push((intra, padded));
+        scored.push((u64::MAX, 1, (combos.len() - 1) as u32, 0));
+    }
+    scored.sort_unstable_by_key(|(lat, ..)| *lat);
+    // Beam diversity: the stage-1 proxy (default transfer plans) can
+    // misrank high-unroll combos whose refined plans win in stage 2, so
+    // keep the top-`beam` by proxy latency PLUS the largest-unroll combos
+    // (compute-bound kernels are DSP-limited — UF/II is the steady-state
+    // throughput bound).
+    let mut kept: Vec<(u64, u64, u32, u32)> = scored.iter().take(opts.beam).copied().collect();
+    let mut by_uf = scored.clone();
+    by_uf.sort_unstable_by_key(|&(_, uf, ..)| std::cmp::Reverse(uf));
+    for cand in by_uf.into_iter().take(opts.beam / 3) {
+        if !kept.iter().any(|&(_, _, ci, oi)| ci == cand.2 && oi == cand.3) {
+            kept.push(cand);
+        }
+    }
+    let scored = kept;
+
+    // ---- stage 2: refine transfer plans for surviving combos -----------
+    let mut cands: Vec<Candidate> = Vec::new();
+    for &(_, _, ci, oi) in &scored {
+        if start.elapsed() > opts.timeout {
+            *timed_out = true;
+            break;
+        }
+        let (intra, padded) = &combos[ci as usize];
+        let ord = &orders[oi as usize];
+        let base = TaskConfig {
+            task: t,
+            perm: ord.clone(),
+            padded_trip: padded.clone(),
+            intra: intra.clone(),
+            ii,
+            plans: BTreeMap::new(),
+            slr: 0,
+        };
+        let cfg = choose_transfer_plans(k, fg, base, dev, opts, budget, explored);
+        let geo = TaskGeometry::new(k, fg, &cfg);
+        let res = task_resources(&geo, dev);
+        if !res.fits(budget) {
+            continue;
+        }
+        let lat = task_latency(&geo, dev, opts.overlap);
+        cands.push(Candidate { cfg, latency: lat, res });
+    }
+
+    // anytime guarantee, stage 2: fall back to the best stage-1 combo
+    // with its (feasible) default plans.
+    if cands.is_empty() {
+        if let Some(&(_, _, ci, oi)) = scored.first() {
+            let (intra, padded) = &combos[ci as usize];
+            let cfg = TaskConfig {
+                task: t,
+                perm: orders[oi as usize].clone(),
+                padded_trip: padded.clone(),
+                intra: intra.clone(),
+                ii,
+                plans: BTreeMap::new(),
+                slr: 0,
+            };
+            let geo = TaskGeometry::new(k, fg, &cfg);
+            let res = task_resources(&geo, dev);
+            let lat = task_latency(&geo, dev, opts.overlap);
+            cands.push(Candidate { cfg, latency: lat, res });
+        }
+    }
+
+    pareto(cands)
+}
+
+/// Cartesian enumeration of per-loop factor choices with an unroll cap.
+fn enum_factors(
+    per_loop: &[Vec<super::padding::FactorChoice>],
+    depth: usize,
+    product: u64,
+    max_unroll: u64,
+    intra: &mut Vec<u64>,
+    padded: &mut Vec<u64>,
+    out: &mut Vec<(Vec<u64>, Vec<u64>)>,
+) {
+    if depth == per_loop.len() {
+        out.push((intra.clone(), padded.clone()));
+        return;
+    }
+    for c in &per_loop[depth] {
+        if product * c.intra > max_unroll {
+            continue;
+        }
+        intra[depth] = c.intra;
+        padded[depth] = c.padded;
+        enum_factors(per_loop, depth + 1, product * c.intra, max_unroll, intra, padded, out);
+    }
+}
+
+/// Pick the (define, transfer) level and bit width per array: enumerate
+/// the diagonal plans (define = transfer at each level) plus the
+/// buffer-whole/stream-deep plan, choose per-array the one minimizing the
+/// task latency, then demote buffers greedily if BRAM overflows.
+fn choose_transfer_plans(
+    k: &Kernel,
+    fg: &FusedGraph,
+    mut cfg: TaskConfig,
+    dev: &Device,
+    opts: &SolverOptions,
+    budget: &SlrBudget,
+    explored: &mut u64,
+) -> TaskConfig {
+    let arrays = {
+        let geo = TaskGeometry::new(k, fg, &cfg);
+        geo.arrays()
+    };
+    // seed: everything at its deepest level (smallest buffers)
+    {
+        let geo = TaskGeometry::new(k, fg, &cfg);
+        let deep = geo.levels() - 1;
+        let seeded: Vec<(String, TransferPlan)> = arrays
+            .iter()
+            .map(|a| (a.clone(), geo.default_plan(a, deep)))
+            .collect();
+        for (a, p) in seeded {
+            cfg.plans.insert(a, p);
+        }
+    }
+
+    // coordinate descent, one array at a time (two sweeps converge for
+    // the plan structures in this zoo)
+    for _sweep in 0..2 {
+        for a in &arrays {
+            let levels = TaskGeometry::new(k, fg, &cfg).levels();
+            let mut options: Vec<TransferPlan> = Vec::new();
+            for l in 0..levels {
+                let geo = TaskGeometry::new(k, fg, &cfg);
+                options.push(geo.default_plan(a, l));
+                if l + 1 < levels {
+                    // reuse plan: buffer at l, stream at the deepest level
+                    let mut p = geo.default_plan(a, l);
+                    p.transfer_level = levels - 1;
+                    options.push(p);
+                }
+            }
+            let mut best_plan = cfg.plans[a];
+            let mut best_lat = u64::MAX;
+            for p in options {
+                *explored += 1;
+                cfg.plans.insert(a.clone(), p);
+                let geo = TaskGeometry::new(k, fg, &cfg);
+                let res = task_resources(&geo, dev);
+                if !res.fits(budget) {
+                    continue;
+                }
+                let lat = task_latency(&geo, dev, opts.overlap);
+                if lat < best_lat {
+                    best_lat = lat;
+                    best_plan = p;
+                }
+            }
+            cfg.plans.insert(a.clone(), best_plan);
+        }
+    }
+    cfg
+}
+
+/// Keep the Pareto front over (latency, dsp, bram18), sorted by latency.
+fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
+    cands.sort_by_key(|c| c.latency);
+    let mut front: Vec<Candidate> = Vec::new();
+    for c in cands {
+        let dominated = front.iter().any(|f| {
+            f.latency <= c.latency && f.res.dsp <= c.res.dsp && f.res.bram18 <= c.res.bram18
+        });
+        if !dominated {
+            front.push(c);
+        }
+    }
+    front.truncate(16);
+    front
+}
+
+/// DFS over per-task candidate picks and SLR ids with branch-and-bound.
+#[allow(clippy::too_many_arguments)]
+fn dfs_assign(
+    k: &Kernel,
+    fg: &FusedGraph,
+    dev: &Device,
+    opts: &SolverOptions,
+    budget: &SlrBudget,
+    regions: usize,
+    per_task: &[Vec<Candidate>],
+    assign: &mut Vec<(usize, usize)>,
+    best: &mut Option<(u64, Vec<(usize, usize)>)>,
+    start: Instant,
+    explored: &mut u64,
+    timed_out: &mut bool,
+) {
+    let t = assign.len();
+    if t == per_task.len() {
+        *explored += 1;
+        // feasibility per region
+        let mut per_region = vec![ResourceVec::ZERO; regions];
+        for (ti, &(c, slr)) in assign.iter().enumerate() {
+            per_region[slr] += per_task[ti][c].res;
+        }
+        if per_region.iter().any(|r| !r.fits(budget)) {
+            return;
+        }
+        let design = DesignConfig {
+            kernel: k.name.clone(),
+            model: opts.model,
+            overlap: opts.overlap,
+            tasks: assign
+                .iter()
+                .enumerate()
+                .map(|(ti, &(c, slr))| {
+                    let mut cfg = per_task[ti][c].cfg.clone();
+                    cfg.slr = slr;
+                    cfg
+                })
+                .collect(),
+        };
+        // Final selection is scored by the *executing* simulator, not the
+        // analytic model: the model (Eqs 12–16) guides enumeration, but
+        // picking the winner with the authoritative latency keeps
+        // heuristic-beam local optima from inverting feature ablations.
+        let lat = crate::sim::engine::simulate(k, fg, &design, dev).cycles;
+        if best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true) {
+            *best = Some((lat, assign.clone()));
+        }
+        return;
+    }
+    if start.elapsed() > opts.timeout && best.is_some() {
+        *timed_out = true;
+        return;
+    }
+    // bound: any task's standalone latency lower-bounds the total
+    for (c, cand) in per_task[t].iter().enumerate() {
+        if let Some((b, _)) = best {
+            if cand.latency >= *b {
+                continue; // this candidate alone already exceeds incumbent
+            }
+        }
+        for slr in 0..regions {
+            assign.push((c, slr));
+            dfs_assign(
+                k, fg, dev, opts, budget, regions, per_task, assign, best, start, explored,
+                timed_out,
+            );
+            assign.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::polybench;
+
+    fn quick_opts() -> SolverOptions {
+        SolverOptions {
+            beam: 12,
+            max_factor_per_loop: 32,
+            max_unroll: 1024,
+            timeout: Duration::from_secs(20),
+            ..SolverOptions::default()
+        }
+    }
+
+    #[test]
+    fn gemm_solves_and_is_valid() {
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let r = solve(&k, &dev, &quick_opts());
+        let fg = fuse(&k);
+        r.design.validate(&k, &fg, dev.slrs).unwrap();
+        assert!(r.gflops > 50.0, "gemm RTL gflops too low: {}", r.gflops);
+        assert!(r.explored > 100);
+    }
+
+    #[test]
+    fn three_madd_uses_concurrency() {
+        let k = polybench::three_madd();
+        let dev = Device::u55c();
+        let df = solve(&k, &dev, &quick_opts());
+        let seq = solve(
+            &k,
+            &dev,
+            &SolverOptions {
+                model: ExecutionModel::Sequential,
+                overlap: false,
+                ..quick_opts()
+            },
+        );
+        assert!(
+            df.latency.total < seq.latency.total,
+            "dataflow {} !< sequential {}",
+            df.latency.total,
+            seq.latency.total
+        );
+    }
+
+    #[test]
+    fn onboard_budget_shrinks_design() {
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let rtl = solve(&k, &dev, &quick_opts());
+        let board = solve(
+            &k,
+            &dev,
+            &SolverOptions {
+                scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 },
+                ..quick_opts()
+            },
+        );
+        assert!(board.gflops <= rtl.gflops * 1.05);
+        // on-board design must fit the scaled budget
+        let fg = fuse(&k);
+        let budget = dev.slr.scaled(0.6);
+        assert!(crate::dse::constraints::feasible(&k, &fg, &board.design, &dev, &budget));
+    }
+
+    #[test]
+    fn timeout_is_anytime() {
+        let k = polybench::three_mm();
+        let dev = Device::u55c();
+        let r = solve(
+            &k,
+            &dev,
+            &SolverOptions { timeout: Duration::from_millis(50), ..quick_opts() },
+        );
+        // even with a tiny timeout we get *a* design
+        assert!(r.latency.total > 0);
+    }
+}

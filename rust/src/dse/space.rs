@@ -1,0 +1,374 @@
+//! Tile geometry: the bridge between a [`TaskConfig`] and everything that
+//! consumes it (cost model, resource constraints, simulator, codegen).
+//!
+//! For a fused task, the generated loop structure is (§3.3–3.5):
+//!
+//! ```text
+//! [level-0 transfers]                       // t_{a,0}: before any loop
+//! for nonred[0] (inter)                     // level 1 transfers inside
+//!   for nonred[1] (inter)                   // level 2 transfers inside
+//!     ...
+//!     init-task (intra, fully unrolled)
+//!     for red (inter, pipelined II)
+//!       compute-task (intra, fully unrolled)
+//!     store/send of the output tile
+//! ```
+//!
+//! An array transferred at level `l` moves one *data tile* per iteration
+//! of the enclosing loops; its tile covers everything accessed deeper
+//! than `l`.
+
+use super::config::{TaskConfig, TransferPlan};
+use super::padding::best_bitwidth;
+use crate::analysis::fusion::{ArrayInfo, FusedGraph, FusedTask};
+use crate::ir::{Kernel, Statement};
+use std::collections::BTreeMap;
+
+/// Resolved geometry of one fused task under a given configuration.
+///
+/// Construction memoizes everything that is configuration-independent
+/// but repeatedly needed by the cost model and constraints (array list,
+/// translated accesses, read/write sets) — this is the solver's inner
+/// loop, see EXPERIMENTS.md §Perf.
+pub struct TaskGeometry<'a> {
+    pub kernel: &'a Kernel,
+    pub fused: &'a FusedTask,
+    pub cfg: &'a TaskConfig,
+    /// Representative statement id and its reduction mask.
+    pub rep: usize,
+    pub red_mask: Vec<bool>,
+    /// Non-reduction inter-tile loop positions, permuted (outer→inner).
+    pub nonred: Vec<usize>,
+    /// Reduction loop positions, permuted order (outer→inner).
+    pub red: Vec<usize>,
+    /// Memoized per-array info, borrowed from the fused task (built once
+    /// at fusion time — the solver constructs a geometry per evaluation).
+    cache: &'a [ArrayInfo],
+}
+
+impl<'a> TaskGeometry<'a> {
+    pub fn new(kernel: &'a Kernel, fg: &'a FusedGraph, cfg: &'a TaskConfig) -> Self {
+        let fused = &fg.tasks[cfg.task];
+        let rep = fused.representative(kernel);
+        let nest = &kernel.statements[rep].loops;
+        let red_mask: Vec<bool> = nest.iter().map(|l| l.reduction).collect();
+        let nonred = cfg.nonred_order(&red_mask);
+        let red = cfg.red_order(&red_mask);
+        TaskGeometry {
+            kernel,
+            fused,
+            cfg,
+            rep,
+            red_mask,
+            nonred,
+            red,
+            cache: &fused.array_info,
+        }
+    }
+
+    /// Representative statement.
+    pub fn rep_stmt(&self) -> &Statement {
+        &self.kernel.statements[self.rep]
+    }
+
+    /// Number of transfer levels: 0 (before loops) ..= nonred.len().
+    pub fn levels(&self) -> usize {
+        self.nonred.len() + 1
+    }
+
+    /// Map a loop position of statement `sid` onto the representative
+    /// nest by iterator name (fused statements share iterators, Eq 4).
+    pub fn rep_pos_of(&self, sid: usize, pos: usize) -> Option<usize> {
+        let name = &self.kernel.statements[sid].loops[pos].name;
+        self.rep_stmt().loops.iter().position(|l| &l.name == name)
+    }
+
+    /// The access of array `a` from any statement in this fused task,
+    /// with loop positions translated to representative positions
+    /// (memoized at construction).
+    pub fn access_of(&self, a: &str) -> Option<Vec<Option<usize>>> {
+        self.access_ref(a).map(|acc| acc.to_vec())
+    }
+
+    /// Borrowing variant of [`Self::access_of`] — no allocation.
+    pub fn access_ref(&self, a: &str) -> Option<&[Option<usize>]> {
+        self.cache
+            .iter()
+            .find(|i| i.name == a)
+            .map(|i| i.access.as_slice())
+    }
+
+    /// The full per-array memo (name, translated access, writes, reads).
+    pub fn infos(&self) -> &[ArrayInfo] {
+        self.cache
+    }
+
+    /// All arrays this fused task touches (reads ∪ writes), deduplicated
+    /// in first-touch order (memoized).
+    pub fn arrays(&self) -> Vec<String> {
+        self.cache.iter().map(|i| i.name.clone()).collect()
+    }
+
+    /// Iterate array names without allocating (perf-sensitive callers).
+    pub fn array_names(&self) -> impl Iterator<Item = &str> {
+        self.cache.iter().map(|i| i.name.as_str())
+    }
+
+    /// Whether the task writes `a` (memoized).
+    pub fn writes(&self, a: &str) -> bool {
+        self.cache.iter().any(|i| i.name == a && i.writes)
+    }
+
+    /// Whether the task reads `a` (memoized).
+    pub fn reads(&self, a: &str) -> bool {
+        self.cache.iter().any(|i| i.name == a && i.reads)
+    }
+
+    /// Depth of loop position `p` in the generated structure: place in
+    /// the permuted non-reduction order (1-based level), or
+    /// `nonred.len() + 1 + rank` for reduction loops (they sit inside all
+    /// non-reduction levels).
+    fn depth_of(&self, p: usize) -> usize {
+        if let Some(place) = self.nonred.iter().position(|&q| q == p) {
+            place + 1
+        } else {
+            let rank = self.red.iter().position(|&q| q == p).unwrap_or(0);
+            self.nonred.len() + 1 + rank
+        }
+    }
+
+    /// Extent of each dimension of array `a`'s data tile when transferred
+    /// at `level` (paper `f_{a,l}`): dimensions indexed by loops strictly
+    /// deeper than the transfer point span the full padded extent;
+    /// dimensions whose loop is at or outside the transfer point span
+    /// only the intra-tile factor. Unindexed dims span fully.
+    pub fn tile_dims(&self, a: &str, level: usize) -> Vec<u64> {
+        let Some(acc) = self.access_ref(a) else {
+            return vec![];
+        };
+        let decl = self.kernel.array(a).expect("declared array");
+        acc.iter()
+            .enumerate()
+            .map(|(d, rep_pos)| match rep_pos {
+                Some(p) => {
+                    if self.depth_of(*p) > level {
+                        // loop iterates inside the transfer point: tile
+                        // spans the whole (padded) extent of this dim
+                        self.cfg.padded_trip[*p]
+                    } else {
+                        self.cfg.intra[*p]
+                    }
+                }
+                None => decl.dims[d],
+            })
+            .collect()
+    }
+
+    /// Bytes of one data tile of `a` at `level`.
+    pub fn tile_bytes(&self, a: &str, level: usize) -> u64 {
+        let dims = self.tile_dims(a, level);
+        if dims.is_empty() {
+            return 0;
+        }
+        let elems: u64 = dims.iter().product();
+        elems * self.kernel.array(a).map(|d| d.dtype.bytes()).unwrap_or(4)
+    }
+
+    /// Tile dims computed from a memoized [`ArrayInfo`] — the
+    /// allocation-free fast path used by the cost model and constraints.
+    pub fn tile_dims_for(&self, info: &ArrayInfo, level: usize) -> Vec<u64> {
+        let decl = self.kernel.array(&info.name).expect("declared array");
+        info.access
+            .iter()
+            .enumerate()
+            .map(|(d, rep_pos)| match rep_pos {
+                Some(p) => {
+                    if self.depth_of(*p) > level {
+                        self.cfg.padded_trip[*p]
+                    } else {
+                        self.cfg.intra[*p]
+                    }
+                }
+                None => decl.dims[d],
+            })
+            .collect()
+    }
+
+    /// Tile bytes from a memoized [`ArrayInfo`] (no name lookups).
+    pub fn tile_bytes_for(&self, info: &ArrayInfo, level: usize) -> u64 {
+        if info.access.is_empty() {
+            return 0;
+        }
+        let decl = self.kernel.array(&info.name).expect("declared array");
+        let elems: u64 = info
+            .access
+            .iter()
+            .enumerate()
+            .map(|(d, rep_pos)| match rep_pos {
+                Some(p) => {
+                    if self.depth_of(*p) > level {
+                        self.cfg.padded_trip[*p]
+                    } else {
+                        self.cfg.intra[*p]
+                    }
+                }
+                None => decl.dims[d],
+            })
+            .product();
+        elems * decl.dtype.bytes()
+    }
+
+    /// How many times a transfer at `level` executes = product of inter
+    /// trips of the enclosing non-reduction loops (levels 1..=level).
+    pub fn transfer_count(&self, level: usize) -> u64 {
+        self.nonred
+            .iter()
+            .take(level)
+            .map(|&p| self.cfg.inter_trip(p))
+            .product()
+    }
+
+    /// Natural bit width for `a` transferred at `level` (Eq 3): widest
+    /// power-of-two burst whose element count divides the tile's last
+    /// dimension.
+    pub fn natural_bitwidth(&self, a: &str, level: usize) -> u64 {
+        let dims = self.tile_dims(a, level);
+        let Some(&last) = dims.last() else { return 32 };
+        let elem_bits = self.kernel.array(a).map(|d| d.dtype.bits()).unwrap_or(32);
+        best_bitwidth(last, elem_bits, 512)
+    }
+
+    /// Build the default transfer plan for `a`: define and transfer at
+    /// `level`, buffers = 2 (read xor write) or 3 (both), natural width.
+    pub fn default_plan(&self, a: &str, level: usize) -> TransferPlan {
+        let rw = self.writes(a) && self.reads(a);
+        TransferPlan {
+            define_level: level,
+            transfer_level: level,
+            bitwidth: self.natural_bitwidth(a, level),
+            buffers: if rw { 3 } else { 2 },
+        }
+    }
+
+    /// Intra-tile instances of the representative statement = unroll
+    /// factor; instances including padding waste.
+    pub fn padded_instances(&self) -> u64 {
+        self.cfg.padded_trip.iter().product()
+    }
+}
+
+/// Map of array → (tile_bytes, per-level transfer cycles) used by both
+/// the cost model and the solver's transfer-plan selection.
+pub fn plan_footprints(
+    geo: &TaskGeometry,
+) -> BTreeMap<String, Vec<u64>> {
+    let mut out = BTreeMap::new();
+    for a in geo.arrays() {
+        let per_level: Vec<u64> =
+            (0..geo.levels()).map(|l| geo.tile_bytes(&a, l)).collect();
+        out.insert(a, per_level);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fusion::fuse;
+    use crate::ir::polybench;
+    use std::collections::BTreeMap;
+
+    /// Build the paper's Listing-6 FT0 config for 3mm: loops (i,j,k),
+    /// padded (180,192,204), intra (10,32,4), B at level 0, A at level 1,
+    /// E defined+stored at level 2.
+    fn ft0_cfg() -> TaskConfig {
+        let mut plans = BTreeMap::new();
+        plans.insert(
+            "B".into(),
+            TransferPlan { define_level: 0, transfer_level: 0, bitwidth: 512, buffers: 2 },
+        );
+        plans.insert(
+            "A".into(),
+            TransferPlan { define_level: 1, transfer_level: 1, bitwidth: 512, buffers: 2 },
+        );
+        plans.insert(
+            "E".into(),
+            TransferPlan { define_level: 2, transfer_level: 2, bitwidth: 512, buffers: 3 },
+        );
+        TaskConfig {
+            task: 0,
+            perm: vec![0, 1, 2],
+            padded_trip: vec![180, 192, 204],
+            intra: vec![10, 32, 4],
+            ii: 3,
+            plans,
+            slr: 0,
+        }
+    }
+
+    #[test]
+    fn listing6_ft0_tiles() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cfg = ft0_cfg();
+        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        assert_eq!(geo.rep, 1);
+        assert_eq!(geo.nonred, vec![0, 1]);
+        assert_eq!(geo.red, vec![2]);
+        // B[k][j] at level 0: full padded extents = 204 x 192 (Listing 6 l.2)
+        assert_eq!(geo.tile_dims("B", 0), vec![204, 192]);
+        // A[i][k] at level 1 (under i0): intra_i x padded_k = 10 x 204 (l.4)
+        assert_eq!(geo.tile_dims("A", 1), vec![10, 204]);
+        // E[i][j] at level 2 (under j0): 10 x 32 (l.6)
+        assert_eq!(geo.tile_dims("E", 2), vec![10, 32]);
+        // transfer counts: level 0 once; level 1 per i0 (18); level 2 per
+        // i0*j0 (18*6)
+        assert_eq!(geo.transfer_count(0), 1);
+        assert_eq!(geo.transfer_count(1), 18);
+        assert_eq!(geo.transfer_count(2), 108);
+    }
+
+    #[test]
+    fn natural_bitwidths() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cfg = ft0_cfg();
+        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        // B tile last dim 192 = 16*12 -> full 512-bit
+        assert_eq!(geo.natural_bitwidth("B", 0), 512);
+        // A tile last dim 204 = 4*51 -> 4 floats = 128 bits
+        assert_eq!(geo.natural_bitwidth("A", 1), 128);
+        // E tile last dim 32 -> 512
+        assert_eq!(geo.natural_bitwidth("E", 2), 512);
+    }
+
+    #[test]
+    fn init_stmt_access_translates() {
+        // E is written by S0 (init, loops i,j) and S1; access must resolve
+        // through the representative nest.
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cfg = ft0_cfg();
+        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        let acc = geo.access_of("E").unwrap();
+        assert_eq!(acc, vec![Some(0), Some(1)]);
+        assert!(geo.writes("E"));
+        assert!(geo.reads("A"));
+        assert!(!geo.writes("A"));
+    }
+
+    #[test]
+    fn permuted_depths() {
+        // With perm (j,i,k) the level-1 loop is j: a tile of A[i][k] at
+        // level 1 spans full i and k (i is deeper).
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let mut cfg = ft0_cfg();
+        cfg.perm = vec![1, 0, 2];
+        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        assert_eq!(geo.nonred, vec![1, 0]);
+        assert_eq!(geo.tile_dims("A", 1), vec![180, 204]);
+        // E under level 2 (now i0 inner): intra_i x intra_j
+        assert_eq!(geo.tile_dims("E", 2), vec![10, 32]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Device descriptions. Numbers from the Alveo U55C datasheet (XCU55C,
+//! Virtex UltraScale+ VU47P) and the paper's evaluation settings.
+
+use super::resources::ResourceVec;
+
+/// Per-SLR resource budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlrBudget {
+    pub dsp: u64,
+    /// BRAM18 blocks.
+    pub bram18: u64,
+    pub lut: u64,
+    pub ff: u64,
+    pub uram: u64,
+}
+
+impl SlrBudget {
+    pub fn as_vec(&self) -> ResourceVec {
+        ResourceVec {
+            dsp: self.dsp as f64,
+            bram18: self.bram18 as f64,
+            lut: self.lut as f64,
+            ff: self.ff as f64,
+        }
+    }
+
+    /// Scale the budget by a utilization cap (the paper uses 60%, 55% and
+    /// 15% scenarios on board).
+    pub fn scaled(&self, frac: f64) -> SlrBudget {
+        SlrBudget {
+            dsp: (self.dsp as f64 * frac) as u64,
+            bram18: (self.bram18 as f64 * frac) as u64,
+            lut: (self.lut as f64 * frac) as u64,
+            ff: (self.ff as f64 * frac) as u64,
+            uram: (self.uram as f64 * frac) as u64,
+        }
+    }
+}
+
+/// An FPGA device model.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    pub slrs: usize,
+    pub slr: SlrBudget,
+    /// Target clock in MHz (paper: 220 MHz).
+    pub fmax_mhz: f64,
+    /// Maximum off-chip burst width in bits (AMD: 512).
+    pub max_bus_bits: u64,
+    /// Off-chip latency in cycles for the first beat of a burst (Vitis
+    /// flow default: 64).
+    pub ddr_latency_cycles: u64,
+    /// Number of independent off-chip memory channels (U55C HBM: 32).
+    pub mem_channels: usize,
+    /// Maximum array partitioning Vitis accepts (paper: 1024).
+    pub max_partition: u64,
+    /// Extra cycles for a FIFO crossing between SLRs.
+    pub inter_slr_latency: u64,
+    /// DSPs consumed by one f32 multiply / add (Vitis defaults used in the
+    /// paper's Eq 10 example: DSP_* = 3, DSP_+ = 2).
+    pub dsp_per_mul: u64,
+    pub dsp_per_add: u64,
+    /// f32 add latency in cycles (drives reduction II = 3 as in Listing 6).
+    pub fadd_latency: u64,
+    /// f32 mul latency in cycles.
+    pub fmul_latency: u64,
+}
+
+impl Device {
+    /// The Alveo U55C: 9024 DSP, 4032 BRAM18 (2016 BRAM36), 1304K LUT,
+    /// 2607K FF, 960 URAM, split over 3 SLRs.
+    pub fn u55c() -> Device {
+        Device {
+            name: "Alveo U55C".into(),
+            slrs: 3,
+            slr: SlrBudget {
+                dsp: 9024 / 3,
+                bram18: 4032 / 3,
+                lut: 1_304_000 / 3,
+                ff: 2_607_000 / 3,
+                uram: 960 / 3,
+            },
+            fmax_mhz: 220.0,
+            max_bus_bits: 512,
+            ddr_latency_cycles: 64,
+            mem_channels: 32,
+            max_partition: 1024,
+            inter_slr_latency: 4,
+            dsp_per_mul: 3,
+            dsp_per_add: 2,
+            fadd_latency: 3,
+            fmul_latency: 2,
+        }
+    }
+
+    /// Whole-device budget (all SLRs).
+    pub fn total(&self) -> SlrBudget {
+        SlrBudget {
+            dsp: self.slr.dsp * self.slrs as u64,
+            bram18: self.slr.bram18 * self.slrs as u64,
+            lut: self.slr.lut * self.slrs as u64,
+            ff: self.slr.ff * self.slrs as u64,
+            uram: self.slr.uram * self.slrs as u64,
+        }
+    }
+
+    /// On-chip bytes available per SLR from BRAM18 (2.25 KiB each, usable
+    /// 2 KiB data width aligned).
+    pub fn slr_bram_bytes(&self) -> u64 {
+        self.slr.bram18 * 18 * 1024 / 8
+    }
+
+    /// Bytes per cycle for a stream of width `bits`.
+    pub fn bytes_per_cycle(&self, bits: u64) -> f64 {
+        bits.min(self.max_bus_bits) as f64 / 8.0
+    }
+
+    /// Cycles to move `bytes` at bus width `bits`, burst latency included.
+    pub fn transfer_cycles(&self, bytes: u64, bits: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.ddr_latency_cycles + (bytes as f64 / self.bytes_per_cycle(bits)).ceil() as u64
+    }
+
+    /// Seconds per cycle at the target clock.
+    pub fn cycle_time_s(&self) -> f64 {
+        1.0 / (self.fmax_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u55c_budgets() {
+        let d = Device::u55c();
+        assert_eq!(d.slrs, 3);
+        assert_eq!(d.total().dsp, 9024);
+        assert_eq!(d.slr.dsp, 3008);
+        assert!(d.slr_bram_bytes() > 3_000_000); // ~3 MiB per SLR
+    }
+
+    #[test]
+    fn transfer_cycle_math() {
+        let d = Device::u55c();
+        // 216 floats at 256 bits = 8 floats/cycle = 27 beats (paper §2.1.6)
+        assert_eq!(d.transfer_cycles(216 * 4, 256), 64 + 27);
+        // without packing (32-bit) = 216 beats
+        assert_eq!(d.transfer_cycles(216 * 4, 32), 64 + 216);
+        assert_eq!(d.transfer_cycles(0, 512), 0);
+    }
+
+    #[test]
+    fn scaled_budget() {
+        let d = Device::u55c();
+        let s = d.slr.scaled(0.60);
+        assert_eq!(s.dsp, (3008f64 * 0.6) as u64);
+        assert!(s.lut < d.slr.lut);
+    }
+
+    #[test]
+    fn bus_width_clamped() {
+        let d = Device::u55c();
+        assert_eq!(d.bytes_per_cycle(1024), 64.0); // clamped to 512
+        assert_eq!(d.bytes_per_cycle(64), 8.0);
+    }
+}

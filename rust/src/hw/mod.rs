@@ -1,0 +1,11 @@
+//! FPGA device models and resource accounting.
+//!
+//! The evaluation platform is the AMD/Xilinx **Alveo U55C** (paper §6.1):
+//! 3 Super Logic Regions, HBM2, Vitis flow with a 220 MHz target clock and
+//! a default 64-cycle off-chip access latency.
+
+pub mod device;
+pub mod resources;
+
+pub use device::{Device, SlrBudget};
+pub use resources::{ResourceUsage, ResourceVec};

@@ -1,0 +1,153 @@
+//! Resource usage estimation and accounting.
+//!
+//! Coefficients follow Vitis HLS's first-order cost of f32 arithmetic on
+//! UltraScale+: a pipelined fmul = 3 DSP + ~85 LUT + ~150 FF, fadd = 2 DSP
+//! + ~200 LUT + ~300 FF; FIFOs and partitioned buffers consume BRAM18 in
+//! 18 Kb blocks. These feed Table 7 / Table 8's utilization columns.
+
+use super::device::SlrBudget;
+use std::ops::{Add, AddAssign};
+
+/// Continuous resource vector (fractions accumulate before rounding).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceVec {
+    pub dsp: f64,
+    pub bram18: f64,
+    pub lut: f64,
+    pub ff: f64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec { dsp: 0.0, bram18: 0.0, lut: 0.0, ff: 0.0 };
+
+    pub fn fits(&self, budget: &SlrBudget) -> bool {
+        self.dsp <= budget.dsp as f64
+            && self.bram18 <= budget.bram18 as f64
+            && self.lut <= budget.lut as f64
+            && self.ff <= budget.ff as f64
+    }
+
+    /// Max utilization fraction across resource classes w.r.t. `budget`.
+    pub fn utilization(&self, budget: &SlrBudget) -> f64 {
+        let fracs = [
+            self.dsp / budget.dsp as f64,
+            self.bram18 / budget.bram18 as f64,
+            self.lut / budget.lut as f64,
+            self.ff / budget.ff as f64,
+        ];
+        fracs.into_iter().fold(0.0, f64::max)
+    }
+
+    pub fn scale(&self, s: f64) -> ResourceVec {
+        ResourceVec {
+            dsp: self.dsp * s,
+            bram18: self.bram18 * s,
+            lut: self.lut * s,
+            ff: self.ff * s,
+        }
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            dsp: self.dsp + o.dsp,
+            bram18: self.bram18 + o.bram18,
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+        }
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, o: ResourceVec) {
+        *self = *self + o;
+    }
+}
+
+/// Integer summary used in reports (Table 8 shape: DSP, BRAM, LUT-K, FF-K).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResourceUsage {
+    pub dsp: u64,
+    pub bram18: u64,
+    pub lut: u64,
+    pub ff: u64,
+}
+
+impl From<ResourceVec> for ResourceUsage {
+    fn from(v: ResourceVec) -> Self {
+        ResourceUsage {
+            dsp: v.dsp.ceil() as u64,
+            bram18: v.bram18.ceil() as u64,
+            lut: v.lut.ceil() as u64,
+            ff: v.ff.ceil() as u64,
+        }
+    }
+}
+
+/// Per-operation implementation cost (f32, UltraScale+, pipelined).
+pub mod cost {
+    use super::ResourceVec;
+
+    pub const FMUL: ResourceVec = ResourceVec { dsp: 3.0, bram18: 0.0, lut: 85.0, ff: 150.0 };
+    pub const FADD: ResourceVec = ResourceVec { dsp: 2.0, bram18: 0.0, lut: 200.0, ff: 300.0 };
+    pub const FDIV: ResourceVec = ResourceVec { dsp: 0.0, bram18: 0.0, lut: 800.0, ff: 1200.0 };
+
+    /// Control/interconnect overhead per unrolled statement instance.
+    pub const PER_INSTANCE_CTRL: ResourceVec =
+        ResourceVec { dsp: 0.0, bram18: 0.0, lut: 25.0, ff: 40.0 };
+
+    /// Fixed cost of a load/store FIFO engine at 512-bit width.
+    pub const STREAM_ENGINE: ResourceVec =
+        ResourceVec { dsp: 0.0, bram18: 8.0, lut: 1800.0, ff: 2600.0 };
+
+    /// Base kernel infrastructure (AXI adapters, control).
+    pub const KERNEL_BASE: ResourceVec =
+        ResourceVec { dsp: 4.0, bram18: 16.0, lut: 12_000.0, ff: 18_000.0 };
+}
+
+/// BRAM18 blocks needed for `bytes` of buffer split over `partitions`
+/// banks: each bank rounds up to at least one 18 Kb block (2.25 KiB).
+pub fn bram18_for(bytes: u64, partitions: u64) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    let parts = partitions.max(1);
+    let per_bank = (bytes as f64 / parts as f64) / (18.0 * 1024.0 / 8.0);
+    parts as f64 * per_bank.max(1.0).ceil()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::device::Device;
+
+    #[test]
+    fn vec_arithmetic() {
+        let v = cost::FMUL + cost::FADD;
+        assert_eq!(v.dsp, 5.0);
+        let s = v.scale(10.0);
+        assert_eq!(s.dsp, 50.0);
+    }
+
+    #[test]
+    fn fits_and_utilization() {
+        let d = Device::u55c();
+        let v = ResourceVec { dsp: 1504.0, bram18: 0.0, lut: 0.0, ff: 0.0 };
+        assert!(v.fits(&d.slr));
+        assert!((v.utilization(&d.slr) - 0.5).abs() < 1e-9);
+        let big = ResourceVec { dsp: 4000.0, ..ResourceVec::ZERO };
+        assert!(!big.fits(&d.slr));
+    }
+
+    #[test]
+    fn bram_rounding() {
+        // A 1-byte buffer still takes one BRAM18 per bank.
+        assert_eq!(bram18_for(1, 1), 1.0);
+        assert_eq!(bram18_for(1, 8), 8.0);
+        // 36 KiB over 2 banks = 8 blocks per bank... (18KiB/bank / 2.25KiB)
+        assert_eq!(bram18_for(36 * 1024, 2), 16.0);
+        assert_eq!(bram18_for(0, 4), 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Array declarations and affine access functions.
+
+use std::fmt;
+
+/// Element type of an array. The paper evaluates single-precision floats
+/// exclusively; the enum exists so the packing model (bits per element,
+/// burst divisibility) is explicit rather than hard-coded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    F32,
+    F64,
+    I32,
+}
+
+impl DataType {
+    /// Width of one element in bits.
+    pub fn bits(self) -> u64 {
+        match self {
+            DataType::F32 | DataType::I32 => 32,
+            DataType::F64 => 64,
+        }
+    }
+
+    /// Width of one element in bytes.
+    pub fn bytes(self) -> u64 {
+        self.bits() / 8
+    }
+
+    /// C type spelling, used by the HLS code generator.
+    pub fn c_name(self) -> &'static str {
+        match self {
+            DataType::F32 => "float",
+            DataType::F64 => "double",
+            DataType::I32 => "int",
+        }
+    }
+}
+
+impl fmt::Display for DataType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.c_name())
+    }
+}
+
+/// A (possibly multi-dimensional) array in the kernel signature or an
+/// intermediate produced by one statement and consumed by another.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayDecl {
+    pub name: String,
+    /// Extent of each dimension, innermost last.
+    pub dims: Vec<u64>,
+    pub dtype: DataType,
+    /// Lives in off-chip memory at kernel start (kernel input).
+    pub is_input: bool,
+    /// Must be written back to off-chip memory at kernel end.
+    pub is_output: bool,
+}
+
+impl ArrayDecl {
+    pub fn new(name: &str, dims: &[u64], is_input: bool, is_output: bool) -> Self {
+        ArrayDecl {
+            name: name.to_string(),
+            dims: dims.to_vec(),
+            dtype: DataType::F32,
+            is_input,
+            is_output,
+        }
+    }
+
+    /// Total number of elements.
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().product()
+    }
+
+    /// Total footprint in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.elems() * self.dtype.bytes()
+    }
+
+    /// Purely intermediate: neither loaded from nor stored to off-chip
+    /// memory; such arrays travel between fused tasks through FIFOs.
+    pub fn is_intermediate(&self) -> bool {
+        !self.is_input && !self.is_output
+    }
+}
+
+/// One affine index expression. PolyBench accesses are single-iterator per
+/// dimension (`A[i][k]`, `B[k][j]`, transposed forms `A[j][i]`), which this
+/// captures exactly; `Zero` covers broadcast dims of rank-reduced views.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Index {
+    /// The iterator of the loop with this name (by position in the
+    /// statement's loop nest).
+    Iter(usize),
+    /// Constant zero index (unused dimension).
+    Zero,
+}
+
+/// An affine array access `array[ idx_0 ][ idx_1 ]...` appearing in a
+/// statement, tagged read or write by its position in [`super::Statement`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Access {
+    pub array: String,
+    /// One entry per array dimension; `Index::Iter(p)` refers to position
+    /// `p` in the statement's loop list (0 = outermost).
+    pub idx: Vec<Index>,
+}
+
+impl Access {
+    /// `Access::new("A", &[0, 2])` = `A[l0][l2]`.
+    pub fn new(array: &str, loop_positions: &[usize]) -> Self {
+        Access {
+            array: array.to_string(),
+            idx: loop_positions.iter().map(|&p| Index::Iter(p)).collect(),
+        }
+    }
+
+    /// Loop positions (into the owning statement's loop list) that index
+    /// this access, in dimension order.
+    pub fn loop_positions(&self) -> Vec<usize> {
+        self.idx
+            .iter()
+            .filter_map(|i| match i {
+                Index::Iter(p) => Some(*p),
+                Index::Zero => None,
+            })
+            .collect()
+    }
+
+    /// Whether loop position `p` indexes any dimension of this access.
+    pub fn uses_loop(&self, p: usize) -> bool {
+        self.idx.contains(&Index::Iter(p))
+    }
+
+    /// The loop position indexing the **last** (fastest-varying) dimension,
+    /// if it is iterator-indexed. Drives the bit-width rule (paper Eq 3).
+    pub fn last_dim_loop(&self) -> Option<usize> {
+        match self.idx.last() {
+            Some(Index::Iter(p)) => Some(*p),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_widths() {
+        assert_eq!(DataType::F32.bits(), 32);
+        assert_eq!(DataType::F64.bytes(), 8);
+        assert_eq!(DataType::F32.c_name(), "float");
+    }
+
+    #[test]
+    fn array_footprint() {
+        let a = ArrayDecl::new("A", &[180, 200], true, false);
+        assert_eq!(a.elems(), 36_000);
+        assert_eq!(a.bytes(), 144_000);
+        assert!(!a.is_intermediate());
+        let e = ArrayDecl::new("E", &[180, 190], false, false);
+        assert!(e.is_intermediate());
+    }
+
+    #[test]
+    fn access_positions() {
+        // B[k][j] in a (i,j,k) nest -> dims indexed by loops 2 and 1.
+        let b = Access::new("B", &[2, 1]);
+        assert_eq!(b.loop_positions(), vec![2, 1]);
+        assert!(b.uses_loop(1));
+        assert!(!b.uses_loop(0));
+        assert_eq!(b.last_dim_loop(), Some(1));
+    }
+}

@@ -1,0 +1,239 @@
+//! Kernels, statements and loops — the unit the whole framework operates on.
+
+use super::access::{Access, ArrayDecl};
+use std::collections::BTreeMap;
+
+/// One loop of a statement's nest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Loop {
+    /// Iterator name as it appears in the PolyBench source (`i`, `j`, `k`).
+    pub name: String,
+    /// Exact trip count (medium dataset sizes; triangular nests use the
+    /// average trip count, which is exact for total-work accounting).
+    pub trip: u64,
+    /// Whether the statement carries a reduction along this loop (the
+    /// written element does not depend on it ⇒ loop-carried accumulate).
+    pub reduction: bool,
+}
+
+impl Loop {
+    pub fn new(name: &str, trip: u64, reduction: bool) -> Self {
+        Loop { name: name.to_string(), trip, reduction }
+    }
+}
+
+/// Statement kind: zero-initialisation vs. compute/update. Init statements
+/// fuse with the update that follows them (output-stationary fusion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StmtKind {
+    /// `X[i][j] = 0` or `X[i][j] = beta * X[i][j]` style prologue.
+    Init,
+    /// The main compute statement.
+    Compute,
+}
+
+/// Floating-point operation counts of one dynamic instance of a statement.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub add: u64,
+    pub mul: u64,
+    pub div: u64,
+}
+
+impl OpCounts {
+    pub fn new(add: u64, mul: u64) -> Self {
+        OpCounts { add, mul, div: 0 }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.add + self.mul + self.div
+    }
+}
+
+/// One statement after maximal distribution: a perfect loop nest around a
+/// single assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Statement {
+    /// `S0`, `S1`, ... following the paper's naming.
+    pub id: usize,
+    pub kind: StmtKind,
+    /// Loop nest, outermost first, in the *original* program order.
+    pub loops: Vec<Loop>,
+    /// The array (and affine function) written by this statement.
+    pub write: Access,
+    /// Arrays read. For updates (`C[i][j] += ...`) the written array is
+    /// also listed here.
+    pub reads: Vec<Access>,
+    /// FLOPs per dynamic instance.
+    pub ops: OpCounts,
+}
+
+impl Statement {
+    /// Total dynamic instances of the statement.
+    pub fn instances(&self) -> u64 {
+        self.loops.iter().map(|l| l.trip).product()
+    }
+
+    /// Total FLOPs contributed by the statement.
+    pub fn flops(&self) -> u64 {
+        self.instances() * self.ops.total()
+    }
+
+    /// Positions of reduction loops.
+    pub fn reduction_loops(&self) -> Vec<usize> {
+        self.loops
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.reduction)
+            .map(|(p, _)| p)
+            .collect()
+    }
+
+    /// Positions of non-reduction (parallel) loops.
+    pub fn parallel_loops(&self) -> Vec<usize> {
+        self.loops
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.reduction)
+            .map(|(p, _)| p)
+            .collect()
+    }
+}
+
+/// A whole kernel: arrays + maximally distributed statements.
+///
+/// The constructors in [`super::polybench`] build the 15 evaluation kernels
+/// of the paper (Table 5).
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    pub arrays: Vec<ArrayDecl>,
+    pub statements: Vec<Statement>,
+    /// Human description, mirrored into Table 5 output.
+    pub description: String,
+}
+
+impl Kernel {
+    pub fn array(&self, name: &str) -> Option<&ArrayDecl> {
+        self.arrays.iter().find(|a| a.name == name)
+    }
+
+    /// Total FLOPs of the kernel — the numerator of every GF/s figure.
+    pub fn total_flops(&self) -> u64 {
+        self.statements.iter().map(|s| s.flops()).sum()
+    }
+
+    /// Total off-chip footprint (inputs + outputs) in bytes.
+    pub fn io_bytes(&self) -> u64 {
+        self.arrays
+            .iter()
+            .filter(|a| a.is_input || a.is_output)
+            .map(|a| a.bytes())
+            .sum()
+    }
+
+    /// Arithmetic intensity in FLOP/byte over the off-chip footprint:
+    /// `O(N)` reuse kernels (gemm-family) score ≫ 1, `O(1)` kernels
+    /// (madd, mvt, bicg) score ≈ constant. Used for Table 5's reuse
+    /// classification.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.total_flops() as f64 / self.io_bytes() as f64
+    }
+
+    /// The statement that writes each array, by array name.
+    pub fn writers(&self) -> BTreeMap<&str, Vec<usize>> {
+        let mut m: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for s in &self.statements {
+            m.entry(s.write.array.as_str()).or_default().push(s.id);
+        }
+        m
+    }
+
+    /// Trip count of the loop at `pos` for statement `sid`.
+    pub fn trip(&self, sid: usize, pos: usize) -> u64 {
+        self.statements[sid].loops[pos].trip
+    }
+
+    /// Validate internal consistency (every access resolves to a declared
+    /// array with matching rank, loop positions in range). Used by tests
+    /// and by the property harness over the kernel zoo.
+    pub fn validate(&self) -> Result<(), String> {
+        for s in &self.statements {
+            let mut accs: Vec<&Access> = vec![&s.write];
+            accs.extend(s.reads.iter());
+            for acc in accs {
+                let arr = self
+                    .array(&acc.array)
+                    .ok_or_else(|| format!("{}: S{} references undeclared {}", self.name, s.id, acc.array))?;
+                if arr.dims.len() != acc.idx.len() {
+                    return Err(format!(
+                        "{}: S{} access {} rank {} vs decl rank {}",
+                        self.name,
+                        s.id,
+                        acc.array,
+                        acc.idx.len(),
+                        arr.dims.len()
+                    ));
+                }
+                for p in acc.loop_positions() {
+                    if p >= s.loops.len() {
+                        return Err(format!(
+                            "{}: S{} access {} names loop {} of {}",
+                            self.name,
+                            s.id,
+                            acc.array,
+                            p,
+                            s.loops.len()
+                        ));
+                    }
+                }
+            }
+            if s.kind == StmtKind::Compute && s.ops.total() == 0 {
+                return Err(format!("{}: compute S{} has zero ops", self.name, s.id));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::polybench;
+    use super::*;
+
+    #[test]
+    fn statement_accounting() {
+        let k = polybench::gemm();
+        let s_update = k
+            .statements
+            .iter()
+            .find(|s| s.kind == StmtKind::Compute && s.ops.mul > 0 && s.loops.len() == 3)
+            .unwrap();
+        assert_eq!(s_update.instances(), 200 * 220 * 240);
+        assert_eq!(s_update.reduction_loops(), vec![2]);
+        assert_eq!(s_update.parallel_loops(), vec![0, 1]);
+    }
+
+    #[test]
+    fn gemm_flops_match_closed_form() {
+        let k = polybench::gemm();
+        // 2*NI*NJ*NK for the MACs + NI*NJ for the beta scale.
+        let expect = 2 * 200 * 220 * 240 + 200 * 220;
+        assert_eq!(k.total_flops(), expect as u64);
+    }
+
+    #[test]
+    fn all_kernels_validate() {
+        for k in polybench::all_kernels() {
+            k.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn intensity_classifies_bound() {
+        let gemm = polybench::gemm();
+        let madd = polybench::madd();
+        assert!(gemm.arithmetic_intensity() > 10.0, "gemm compute-bound");
+        assert!(madd.arithmetic_intensity() < 1.0, "madd memory-bound");
+    }
+}

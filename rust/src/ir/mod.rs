@@ -1,0 +1,15 @@
+//! Affine kernel intermediate representation.
+//!
+//! This is the PoCC/ISCC substitute for the reproduction: PolyBench kernels
+//! are static-control affine programs, so we encode them directly as loop
+//! nests with exact trip counts and affine (single-iterator) array access
+//! functions. Dependence analysis, task-graph construction and the design
+//! space all operate on this IR.
+
+pub mod access;
+pub mod kernel;
+pub mod oracle;
+pub mod polybench;
+
+pub use access::{Access, ArrayDecl, DataType};
+pub use kernel::{Kernel, Loop, OpCounts, Statement, StmtKind};

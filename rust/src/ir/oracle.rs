@@ -1,0 +1,243 @@
+//! Rust-native reference execution of the kernel zoo.
+//!
+//! The oracle serves two roles:
+//! 1. functional ground truth for the PJRT runtime path — after the JAX/
+//!    Pallas artifact for a kernel executes, [`crate::coordinator`]
+//!    compares its outputs against these implementations;
+//! 2. FLOP-count cross-check — the IR's symbolic counts must agree with
+//!    what the naive implementation actually performs.
+//!
+//! Inputs are generated deterministically (same scheme as
+//! `python/compile/model.py::inputs_for`): element `n` of array number `a`
+//! is `((n * 16807 + a * 2671 + 13) % 1000) / 1000 - 0.5`, so rust and
+//! python agree bit-for-bit on the f32 inputs without exchanging files.
+
+/// Deterministic pseudo-input, identical formula to the python side.
+pub fn input_element(array_ordinal: u64, flat_index: u64) -> f32 {
+    let v = (flat_index.wrapping_mul(16807) + array_ordinal * 2671 + 13) % 1000;
+    v as f32 / 1000.0 - 0.5
+}
+
+/// Fill a buffer for the `ordinal`-th input array of a kernel.
+pub fn input_array(ordinal: u64, len: usize) -> Vec<f32> {
+    (0..len as u64).map(|i| input_element(ordinal, i)).collect()
+}
+
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                c[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Outputs of one kernel as named flat buffers.
+pub struct OracleOut {
+    pub names: Vec<String>,
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl OracleOut {
+    fn one(name: &str, buf: Vec<f32>) -> Self {
+        OracleOut { names: vec![name.into()], bufs: vec![buf] }
+    }
+}
+
+/// Execute the reference implementation of `kernel` on the deterministic
+/// inputs. Returns the kernel's output arrays. Supported: the kernels the
+/// AOT layer lowers (gemm, 2mm, 3mm, atax, bicg, mvt, gesummv, madd,
+/// 2-madd, 3-madd).
+pub fn run(kernel: &str) -> Option<OracleOut> {
+    match kernel {
+        "gemm" => {
+            let (ni, nj, nk) = (200, 220, 240);
+            let c0 = input_array(0, ni * nj);
+            let a = input_array(1, ni * nk);
+            let b = input_array(2, nk * nj);
+            let ab = matmul(&a, &b, ni, nk, nj);
+            let out: Vec<f32> = c0
+                .iter()
+                .zip(ab.iter())
+                .map(|(c, p)| 1.2 * c + 1.5 * p)
+                .collect();
+            Some(OracleOut::one("C", out))
+        }
+        "2mm" => {
+            let (ni, nj, nk, nl) = (180, 190, 210, 220);
+            let a = input_array(0, ni * nk);
+            let b = input_array(1, nk * nj);
+            let c = input_array(2, nj * nl);
+            let d0 = input_array(3, ni * nl);
+            let tmp: Vec<f32> = matmul(&a, &b, ni, nk, nj).iter().map(|v| 1.5 * v).collect();
+            let tc = matmul(&tmp, &c, ni, nj, nl);
+            let out: Vec<f32> = d0.iter().zip(tc.iter()).map(|(d, p)| 1.2 * d + p).collect();
+            Some(OracleOut::one("D", out))
+        }
+        "3mm" => {
+            let (ni, nj, nk, nl, nm) = (180, 190, 200, 210, 220);
+            let a = input_array(0, ni * nk);
+            let b = input_array(1, nk * nj);
+            let c = input_array(2, nj * nm);
+            let d = input_array(3, nm * nl);
+            let e = matmul(&a, &b, ni, nk, nj);
+            let f = matmul(&c, &d, nj, nm, nl);
+            let g = matmul(&e, &f, ni, nj, nl);
+            Some(OracleOut::one("G", g))
+        }
+        "atax" => {
+            let (m, n) = (390, 410);
+            let a = input_array(0, m * n);
+            let x = input_array(1, n);
+            let mut tmp = vec![0f32; m];
+            for i in 0..m {
+                for j in 0..n {
+                    tmp[i] += a[i * n + j] * x[j];
+                }
+            }
+            let mut y = vec![0f32; n];
+            for i in 0..m {
+                for j in 0..n {
+                    y[j] += a[i * n + j] * tmp[i];
+                }
+            }
+            Some(OracleOut::one("y", y))
+        }
+        "bicg" => {
+            let (m, n) = (390, 410);
+            let a = input_array(0, m * n);
+            let r = input_array(1, m);
+            let p = input_array(2, n);
+            let mut s = vec![0f32; n];
+            let mut q = vec![0f32; m];
+            for i in 0..m {
+                for j in 0..n {
+                    s[j] += r[i] * a[i * n + j];
+                    q[i] += a[i * n + j] * p[j];
+                }
+            }
+            Some(OracleOut { names: vec!["s".into(), "q".into()], bufs: vec![s, q] })
+        }
+        "mvt" => {
+            let n = 400;
+            let a = input_array(0, n * n);
+            let x1_0 = input_array(1, n);
+            let x2_0 = input_array(2, n);
+            let y1 = input_array(3, n);
+            let y2 = input_array(4, n);
+            let mut x1 = x1_0.clone();
+            let mut x2 = x2_0.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    x1[i] += a[i * n + j] * y1[j];
+                    x2[i] += a[j * n + i] * y2[j];
+                }
+            }
+            Some(OracleOut { names: vec!["x1".into(), "x2".into()], bufs: vec![x1, x2] })
+        }
+        "gesummv" => {
+            let n = 250;
+            let a = input_array(0, n * n);
+            let b = input_array(1, n * n);
+            let x = input_array(2, n);
+            let mut y = vec![0f32; n];
+            for i in 0..n {
+                let mut t = 0f32;
+                let mut yy = 0f32;
+                for j in 0..n {
+                    t += a[i * n + j] * x[j];
+                    yy += b[i * n + j] * x[j];
+                }
+                y[i] = 1.5 * t + 1.2 * yy;
+            }
+            Some(OracleOut::one("y", y))
+        }
+        "madd" => {
+            let n = 400usize;
+            let a = input_array(0, n * n);
+            let b = input_array(1, n * n);
+            let c: Vec<f32> = a.iter().zip(b.iter()).map(|(x, y)| x + y).collect();
+            Some(OracleOut::one("C", c))
+        }
+        "2-madd" => {
+            let n = 400usize;
+            let a = input_array(0, n * n);
+            let b = input_array(1, n * n);
+            let c = input_array(2, n * n);
+            let d: Vec<f32> = (0..n * n).map(|i| (a[i] + b[i]) + c[i]).collect();
+            Some(OracleOut::one("D", d))
+        }
+        "3-madd" => {
+            let n = 400usize;
+            let a = input_array(0, n * n);
+            let b = input_array(1, n * n);
+            let c = input_array(2, n * n);
+            let d = input_array(3, n * n);
+            let f: Vec<f32> = (0..n * n).map(|i| (a[i] + b[i]) + (c[i] + d[i])).collect();
+            Some(OracleOut::one("F", f))
+        }
+        _ => None,
+    }
+}
+
+/// The set of kernels the functional-validation path covers.
+pub fn validated_kernels() -> &'static [&'static str] {
+    &["gemm", "2mm", "3mm", "atax", "bicg", "mvt", "gesummv", "madd", "2-madd", "3-madd"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_inputs() {
+        assert_eq!(input_element(0, 0), input_element(0, 0));
+        // formula spot-check: n=1,a=0 -> (16807+13)%1000 = 820 -> 0.32
+        assert!((input_element(0, 1) - 0.32).abs() < 1e-6);
+        // different arrays differ
+        assert_ne!(input_element(0, 5), input_element(1, 5));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        // 2x2 identity times arbitrary matrix
+        let i2 = vec![1., 0., 0., 1.];
+        let m = vec![3., 4., 5., 6.];
+        assert_eq!(matmul(&i2, &m, 2, 2, 2), m);
+    }
+
+    #[test]
+    fn all_validated_kernels_run() {
+        for k in validated_kernels() {
+            let out = run(k).unwrap_or_else(|| panic!("{k} missing"));
+            assert!(!out.bufs.is_empty());
+            for b in &out.bufs {
+                assert!(b.iter().all(|v| v.is_finite()), "{k} produced non-finite values");
+            }
+        }
+    }
+
+    #[test]
+    fn three_madd_is_sum_of_four() {
+        let out = run("3-madd").unwrap();
+        let n = 400usize;
+        let a = input_array(0, n * n);
+        let b = input_array(1, n * n);
+        let c = input_array(2, n * n);
+        let d = input_array(3, n * n);
+        let f = &out.bufs[0];
+        for idx in [0usize, 17, 999, n * n - 1] {
+            let expect = a[idx] + b[idx] + c[idx] + d[idx];
+            assert!((f[idx] - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn unknown_kernel_is_none() {
+        assert!(run("jacobi-2d").is_none());
+    }
+}

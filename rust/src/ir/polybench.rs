@@ -1,0 +1,938 @@
+//! The PolyBench/C 4.2.1 kernel zoo (medium dataset), plus the paper's
+//! n-madd kernels — every benchmark of Table 5, already maximally
+//! distributed (one statement per loop body) as §3.1 requires.
+//!
+//! Conventions:
+//! * loop lists are outermost-first and named as in PolyBench sources;
+//! * `reads` include the written array for `+=` updates;
+//! * init statements carry `StmtKind::Init` and zero ops when they only
+//!   zero a buffer, or real ops when they scale (`beta*C`).
+//! * trip counts for triangular nests (symm/syr2k/syrk/trmm) use the exact
+//!   average so total-FLOP accounting matches the real kernel.
+
+use super::access::{Access, ArrayDecl};
+use super::kernel::{Kernel, Loop, OpCounts, Statement, StmtKind};
+
+fn stmt(
+    id: usize,
+    kind: StmtKind,
+    loops: Vec<Loop>,
+    write: Access,
+    reads: Vec<Access>,
+    ops: OpCounts,
+) -> Statement {
+    Statement { id, kind, loops, write, reads, ops }
+}
+
+/// `gemm`: C = alpha*A*B + beta*C.  NI=200, NJ=220, NK=240.
+pub fn gemm() -> Kernel {
+    let (ni, nj, nk) = (200, 220, 240);
+    Kernel {
+        name: "gemm".into(),
+        description: "Matrix-multiply (C = alpha*A*B + beta*C)".into(),
+        arrays: vec![
+            ArrayDecl::new("C", &[ni, nj], true, true),
+            ArrayDecl::new("A", &[ni, nk], true, false),
+            ArrayDecl::new("B", &[nk, nj], true, false),
+        ],
+        statements: vec![
+            // S0: C[i][j] *= beta
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", ni, false), Loop::new("j", nj, false)],
+                Access::new("C", &[0, 1]),
+                vec![Access::new("C", &[0, 1])],
+                OpCounts::new(0, 1),
+            ),
+            // S1: C[i][j] += alpha * A[i][k] * B[k][j]
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", ni, false),
+                    Loop::new("j", nj, false),
+                    Loop::new("k", nk, true),
+                ],
+                Access::new("C", &[0, 1]),
+                vec![
+                    Access::new("C", &[0, 1]),
+                    Access::new("A", &[0, 2]),
+                    Access::new("B", &[2, 1]),
+                ],
+                // one mul + one add per MAC (alpha folded into A load, as
+                // the HLS codegen does)
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `2mm`: D = alpha*A*B*C + beta*D.  NI=180, NJ=190, NK=210, NL=220.
+pub fn two_mm() -> Kernel {
+    let (ni, nj, nk, nl) = (180, 190, 210, 220);
+    Kernel {
+        name: "2mm".into(),
+        description: "2 Matrix Mult. (alpha*A*B*C + beta*D)".into(),
+        arrays: vec![
+            ArrayDecl::new("tmp", &[ni, nj], false, false),
+            ArrayDecl::new("A", &[ni, nk], true, false),
+            ArrayDecl::new("B", &[nk, nj], true, false),
+            ArrayDecl::new("C", &[nj, nl], true, false),
+            ArrayDecl::new("D", &[ni, nl], true, true),
+        ],
+        statements: vec![
+            // S0: tmp[i][j] = 0
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", ni, false), Loop::new("j", nj, false)],
+                Access::new("tmp", &[0, 1]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S1: tmp[i][j] += alpha * A[i][k] * B[k][j]
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", ni, false),
+                    Loop::new("j", nj, false),
+                    Loop::new("k", nk, true),
+                ],
+                Access::new("tmp", &[0, 1]),
+                vec![
+                    Access::new("tmp", &[0, 1]),
+                    Access::new("A", &[0, 2]),
+                    Access::new("B", &[2, 1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S2: D[i][j] *= beta
+            stmt(
+                2,
+                StmtKind::Init,
+                vec![Loop::new("i", ni, false), Loop::new("j", nl, false)],
+                Access::new("D", &[0, 1]),
+                vec![Access::new("D", &[0, 1])],
+                OpCounts::new(0, 1),
+            ),
+            // S3: D[i][j] += tmp[i][k] * C[k][j]
+            stmt(
+                3,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", ni, false),
+                    Loop::new("j", nl, false),
+                    Loop::new("k", nj, true),
+                ],
+                Access::new("D", &[0, 1]),
+                vec![
+                    Access::new("D", &[0, 1]),
+                    Access::new("tmp", &[0, 2]),
+                    Access::new("C", &[2, 1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `3mm`: G = (A*B)*(C*D).  NI=180, NJ=190, NK=200, NL=210, NM=220.
+/// Listing 4 of the paper.
+pub fn three_mm() -> Kernel {
+    let (ni, nj, nk, nl, nm) = (180, 190, 200, 210, 220);
+    Kernel {
+        name: "3mm".into(),
+        description: "3 Matrix Mult. ((A*B)*(C*D))".into(),
+        arrays: vec![
+            ArrayDecl::new("E", &[ni, nj], false, false),
+            ArrayDecl::new("A", &[ni, nk], true, false),
+            ArrayDecl::new("B", &[nk, nj], true, false),
+            ArrayDecl::new("F", &[nj, nl], false, false),
+            ArrayDecl::new("C", &[nj, nm], true, false),
+            ArrayDecl::new("D", &[nm, nl], true, false),
+            ArrayDecl::new("G", &[ni, nl], true, true),
+        ],
+        statements: vec![
+            // S0: E[i][j] = 0
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", ni, false), Loop::new("j", nj, false)],
+                Access::new("E", &[0, 1]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S1: E[i][j] += A[i][k] * B[k][j]
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", ni, false),
+                    Loop::new("j", nj, false),
+                    Loop::new("k", nk, true),
+                ],
+                Access::new("E", &[0, 1]),
+                vec![
+                    Access::new("E", &[0, 1]),
+                    Access::new("A", &[0, 2]),
+                    Access::new("B", &[2, 1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S2: F[i][j] = 0
+            stmt(
+                2,
+                StmtKind::Init,
+                vec![Loop::new("i", nj, false), Loop::new("j", nl, false)],
+                Access::new("F", &[0, 1]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S3: F[i][j] += C[i][k] * D[k][j]
+            stmt(
+                3,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", nj, false),
+                    Loop::new("j", nl, false),
+                    Loop::new("k", nm, true),
+                ],
+                Access::new("F", &[0, 1]),
+                vec![
+                    Access::new("F", &[0, 1]),
+                    Access::new("C", &[0, 2]),
+                    Access::new("D", &[2, 1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S4: G[i][j] = 0
+            stmt(
+                4,
+                StmtKind::Init,
+                vec![Loop::new("i", ni, false), Loop::new("j", nl, false)],
+                Access::new("G", &[0, 1]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S5: G[i][j] += E[i][k] * F[k][j]
+            stmt(
+                5,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", ni, false),
+                    Loop::new("j", nl, false),
+                    Loop::new("k", nj, true),
+                ],
+                Access::new("G", &[0, 1]),
+                vec![
+                    Access::new("G", &[0, 1]),
+                    Access::new("E", &[0, 2]),
+                    Access::new("F", &[2, 1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `atax`: y = A^T (A x).  M=390, N=410.
+pub fn atax() -> Kernel {
+    let (m, n) = (390, 410);
+    Kernel {
+        name: "atax".into(),
+        description: "Matrix transpose and vector mult.".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[m, n], true, false),
+            ArrayDecl::new("x", &[n], true, false),
+            ArrayDecl::new("y", &[n], false, true),
+            ArrayDecl::new("tmp", &[m], false, false),
+        ],
+        statements: vec![
+            // S0: y[i] = 0   (over N)
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", n, false)],
+                Access::new("y", &[0]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S1: tmp[i] = 0  (over M)
+            stmt(
+                1,
+                StmtKind::Init,
+                vec![Loop::new("i", m, false)],
+                Access::new("tmp", &[0]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S2: tmp[i] += A[i][j] * x[j]
+            stmt(
+                2,
+                StmtKind::Compute,
+                vec![Loop::new("i", m, false), Loop::new("j", n, true)],
+                Access::new("tmp", &[0]),
+                vec![
+                    Access::new("tmp", &[0]),
+                    Access::new("A", &[0, 1]),
+                    Access::new("x", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S3: y[j] += A[i][j] * tmp[i]  — reduction over i (loop 0)
+            stmt(
+                3,
+                StmtKind::Compute,
+                vec![Loop::new("i", m, true), Loop::new("j", n, false)],
+                Access::new("y", &[1]),
+                vec![
+                    Access::new("y", &[1]),
+                    Access::new("A", &[0, 1]),
+                    Access::new("tmp", &[0]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `bicg`: s = A^T r, q = A p.  M=390 (rows, i), N=410 (cols, j).
+pub fn bicg() -> Kernel {
+    let (m, n) = (390, 410);
+    Kernel {
+        name: "bicg".into(),
+        description: "BiCG sub-kernel of BiCGStab solver".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[m, n], true, false),
+            ArrayDecl::new("r", &[m], true, false),
+            ArrayDecl::new("p", &[n], true, false),
+            ArrayDecl::new("s", &[n], false, true),
+            ArrayDecl::new("q", &[m], false, true),
+        ],
+        statements: vec![
+            // S0: s[i] = 0 over N
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", n, false)],
+                Access::new("s", &[0]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S1: q[i] = 0 over M
+            stmt(
+                1,
+                StmtKind::Init,
+                vec![Loop::new("i", m, false)],
+                Access::new("q", &[0]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S2: s[j] += r[i] * A[i][j] — reduction over i
+            stmt(
+                2,
+                StmtKind::Compute,
+                vec![Loop::new("i", m, true), Loop::new("j", n, false)],
+                Access::new("s", &[1]),
+                vec![
+                    Access::new("s", &[1]),
+                    Access::new("A", &[0, 1]),
+                    Access::new("r", &[0]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S3: q[i] += A[i][j] * p[j] — reduction over j
+            stmt(
+                3,
+                StmtKind::Compute,
+                vec![Loop::new("i", m, false), Loop::new("j", n, true)],
+                Access::new("q", &[0]),
+                vec![
+                    Access::new("q", &[0]),
+                    Access::new("A", &[0, 1]),
+                    Access::new("p", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `mvt`: x1 += A y1; x2 += A^T y2.  N=400.
+pub fn mvt() -> Kernel {
+    let n = 400;
+    Kernel {
+        name: "mvt".into(),
+        description: "Matrix Vector product and Transpose".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[n, n], true, false),
+            ArrayDecl::new("x1", &[n], true, true),
+            ArrayDecl::new("x2", &[n], true, true),
+            ArrayDecl::new("y1", &[n], true, false),
+            ArrayDecl::new("y2", &[n], true, false),
+        ],
+        statements: vec![
+            // S0: x1[i] += A[i][j] * y1[j]
+            stmt(
+                0,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, true)],
+                Access::new("x1", &[0]),
+                vec![
+                    Access::new("x1", &[0]),
+                    Access::new("A", &[0, 1]),
+                    Access::new("y1", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S1: x2[i] += A[j][i] * y2[j]
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, true)],
+                Access::new("x2", &[0]),
+                vec![
+                    Access::new("x2", &[0]),
+                    Access::new("A", &[1, 0]),
+                    Access::new("y2", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `gesummv`: y = alpha*A*x + beta*B*x.  N=250.
+pub fn gesummv() -> Kernel {
+    let n = 250;
+    Kernel {
+        name: "gesummv".into(),
+        description: "Scalar, vector and matrix mult.".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[n, n], true, false),
+            ArrayDecl::new("B", &[n, n], true, false),
+            ArrayDecl::new("x", &[n], true, false),
+            ArrayDecl::new("tmp", &[n], false, false),
+            // `y` is the B*x partial (intermediate); `y_out` the kernel
+            // output — distributing the final combine into its own task
+            // matches the paper's dataflow (2N inter-task traffic).
+            ArrayDecl::new("y", &[n], false, false),
+            ArrayDecl::new("y_out", &[n], false, true),
+        ],
+        statements: vec![
+            // S0: tmp[i] = 0
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", n, false)],
+                Access::new("tmp", &[0]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S1: y[i] = 0
+            stmt(
+                1,
+                StmtKind::Init,
+                vec![Loop::new("i", n, false)],
+                Access::new("y", &[0]),
+                vec![],
+                OpCounts::default(),
+            ),
+            // S2: tmp[i] += A[i][j] * x[j]
+            stmt(
+                2,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, true)],
+                Access::new("tmp", &[0]),
+                vec![
+                    Access::new("tmp", &[0]),
+                    Access::new("A", &[0, 1]),
+                    Access::new("x", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S3: y[i] += B[i][j] * x[j]
+            stmt(
+                3,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, true)],
+                Access::new("y", &[0]),
+                vec![
+                    Access::new("y", &[0]),
+                    Access::new("B", &[0, 1]),
+                    Access::new("x", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S4: y_out[i] = alpha*tmp[i] + beta*y[i]
+            stmt(
+                4,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false)],
+                Access::new("y_out", &[0]),
+                vec![Access::new("y", &[0]), Access::new("tmp", &[0])],
+                OpCounts::new(1, 2),
+            ),
+        ],
+    }
+}
+
+/// `gemver`: A_hat = A + u1 v1^T + u2 v2^T; x = ...; w = A_hat x.  N=400.
+pub fn gemver() -> Kernel {
+    let n = 400;
+    Kernel {
+        name: "gemver".into(),
+        description: "Vector mult. and matrix add.".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[n, n], true, false),
+            ArrayDecl::new("Ah", &[n, n], false, false),
+            ArrayDecl::new("u1", &[n], true, false),
+            ArrayDecl::new("v1", &[n], true, false),
+            ArrayDecl::new("u2", &[n], true, false),
+            ArrayDecl::new("v2", &[n], true, false),
+            ArrayDecl::new("x", &[n], true, true),
+            ArrayDecl::new("y", &[n], true, false),
+            ArrayDecl::new("z", &[n], true, false),
+            ArrayDecl::new("w", &[n], true, true),
+        ],
+        statements: vec![
+            // S0: Ah[i][j] = A[i][j] + u1[i]*v1[j] + u2[i]*v2[j]
+            stmt(
+                0,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, false)],
+                Access::new("Ah", &[0, 1]),
+                vec![
+                    Access::new("A", &[0, 1]),
+                    Access::new("u1", &[0]),
+                    Access::new("v1", &[1]),
+                    Access::new("u2", &[0]),
+                    Access::new("v2", &[1]),
+                ],
+                OpCounts::new(2, 2),
+            ),
+            // S1: x[i] += beta * Ah[j][i] * y[j]  (reduction over j)
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, true)],
+                Access::new("x", &[0]),
+                vec![
+                    Access::new("x", &[0]),
+                    Access::new("Ah", &[1, 0]),
+                    Access::new("y", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S2: x[i] += z[i]
+            stmt(
+                2,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false)],
+                Access::new("x", &[0]),
+                vec![Access::new("x", &[0]), Access::new("z", &[0])],
+                OpCounts::new(1, 0),
+            ),
+            // S3: w[i] += alpha * Ah[i][j] * x[j]
+            stmt(
+                3,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, true)],
+                Access::new("w", &[0]),
+                vec![
+                    Access::new("w", &[0]),
+                    Access::new("Ah", &[0, 1]),
+                    Access::new("x", &[1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `syrk`: C = alpha*A*A^T + beta*C (lower triangular).  M=240? PolyBench
+/// medium: M=200 (cols of A), N=240 (C is N×N). Triangular j<=i halves the
+/// work; trips use exact averages.
+pub fn syrk() -> Kernel {
+    let (n, m) = (240, 200);
+    let tri = (n + 1) / 2; // average trip of j in 0..=i
+    Kernel {
+        name: "syrk".into(),
+        description: "Symmetric rank-k update".into(),
+        arrays: vec![
+            ArrayDecl::new("C", &[n, n], true, true),
+            ArrayDecl::new("A", &[n, m], true, false),
+        ],
+        statements: vec![
+            // S0: C[i][j] *= beta (j <= i)
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", n, false), Loop::new("j", tri, false)],
+                Access::new("C", &[0, 1]),
+                vec![Access::new("C", &[0, 1])],
+                OpCounts::new(0, 1),
+            ),
+            // S1: C[i][j] += alpha * A[i][k] * A[j][k] (j <= i)
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", n, false),
+                    Loop::new("j", tri, false),
+                    Loop::new("k", m, true),
+                ],
+                Access::new("C", &[0, 1]),
+                vec![
+                    Access::new("C", &[0, 1]),
+                    Access::new("A", &[0, 2]),
+                    Access::new("A", &[1, 2]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+        ],
+    }
+}
+
+/// `syr2k`: C = alpha*(A*B^T + B*A^T) + beta*C.  N=240, M=200.
+pub fn syr2k() -> Kernel {
+    let (n, m) = (240, 200);
+    let tri = (n + 1) / 2;
+    Kernel {
+        name: "syr2k".into(),
+        description: "Symmetric rank-2k update".into(),
+        arrays: vec![
+            ArrayDecl::new("C", &[n, n], true, true),
+            ArrayDecl::new("A", &[n, m], true, false),
+            ArrayDecl::new("B", &[n, m], true, false),
+        ],
+        statements: vec![
+            stmt(
+                0,
+                StmtKind::Init,
+                vec![Loop::new("i", n, false), Loop::new("j", tri, false)],
+                Access::new("C", &[0, 1]),
+                vec![Access::new("C", &[0, 1])],
+                OpCounts::new(0, 1),
+            ),
+            // S1: C[i][j] += A[j][k]*alpha*B[i][k] + B[j][k]*alpha*A[i][k]
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", n, false),
+                    Loop::new("j", tri, false),
+                    Loop::new("k", m, true),
+                ],
+                Access::new("C", &[0, 1]),
+                vec![
+                    Access::new("C", &[0, 1]),
+                    Access::new("A", &[1, 2]),
+                    Access::new("B", &[0, 2]),
+                    Access::new("B", &[1, 2]),
+                    Access::new("A", &[0, 2]),
+                ],
+                OpCounts::new(2, 2),
+            ),
+        ],
+    }
+}
+
+/// `trmm`: B = alpha * A^T * B, A unit lower triangular.  M=200, N=240.
+pub fn trmm() -> Kernel {
+    let (m, n) = (200, 240);
+    let tri = (m + 1) / 2; // average trip of k in i+1..M
+    Kernel {
+        name: "trmm".into(),
+        description: "Triangular matrix-mult.".into(),
+        arrays: vec![
+            ArrayDecl::new("B", &[m, n], true, true),
+            ArrayDecl::new("A", &[m, m], true, false),
+        ],
+        statements: vec![
+            // S0: B[i][j] += A[k][i] * B[k][j]  (k > i, averaged)
+            stmt(
+                0,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", m, false),
+                    Loop::new("j", n, false),
+                    Loop::new("k", tri, true),
+                ],
+                Access::new("B", &[0, 1]),
+                vec![
+                    Access::new("B", &[0, 1]),
+                    Access::new("A", &[2, 0]),
+                    Access::new("B", &[2, 1]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S1: B[i][j] *= alpha
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![Loop::new("i", m, false), Loop::new("j", n, false)],
+                Access::new("B", &[0, 1]),
+                vec![Access::new("B", &[0, 1])],
+                OpCounts::new(0, 1),
+            ),
+        ],
+    }
+}
+
+/// `symm`: C = alpha*A*B + beta*C with A symmetric.  M=200, N=240.
+pub fn symm() -> Kernel {
+    let (m, n) = (200, 240);
+    let tri = (m + 1) / 2; // average trip of k in 0..i
+    Kernel {
+        name: "symm".into(),
+        description: "Symmetric matrix-mult.".into(),
+        arrays: vec![
+            ArrayDecl::new("C", &[m, n], true, true),
+            ArrayDecl::new("A", &[m, m], true, false),
+            ArrayDecl::new("B", &[m, n], true, false),
+            ArrayDecl::new("temp2", &[m, n], false, false),
+        ],
+        statements: vec![
+            // S0: temp2[i][j] = sum_k B[k][j]*A[i][k]   (k < i)
+            stmt(
+                0,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", m, false),
+                    Loop::new("j", n, false),
+                    Loop::new("k", tri, true),
+                ],
+                Access::new("temp2", &[0, 1]),
+                vec![
+                    Access::new("temp2", &[0, 1]),
+                    Access::new("B", &[2, 1]),
+                    Access::new("A", &[0, 2]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S1: C[k][j] += alpha*B[i][j]*A[i][k] scatter half (modeled as
+            // second triangular MAC stream writing C)
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![
+                    Loop::new("i", m, false),
+                    Loop::new("j", n, false),
+                    Loop::new("k", tri, true),
+                ],
+                Access::new("C", &[0, 1]),
+                vec![
+                    Access::new("C", &[0, 1]),
+                    Access::new("B", &[0, 1]),
+                    Access::new("A", &[0, 2]),
+                ],
+                OpCounts::new(1, 1),
+            ),
+            // S2: C[i][j] = beta*C[i][j] + alpha*B[i][j]*A[i][i] + alpha*temp2[i][j]
+            stmt(
+                2,
+                StmtKind::Compute,
+                vec![Loop::new("i", m, false), Loop::new("j", n, false)],
+                Access::new("C", &[0, 1]),
+                vec![
+                    Access::new("C", &[0, 1]),
+                    Access::new("B", &[0, 1]),
+                    Access::new("temp2", &[0, 1]),
+                ],
+                OpCounts::new(2, 3),
+            ),
+        ],
+    }
+}
+
+/// `madd`: C = A + B, N=400 (paper's own kernel).
+pub fn madd() -> Kernel {
+    let n = 400;
+    Kernel {
+        name: "madd".into(),
+        description: "Matrix add. (C = A + B)".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[n, n], true, false),
+            ArrayDecl::new("B", &[n, n], true, false),
+            ArrayDecl::new("C", &[n, n], false, true),
+        ],
+        statements: vec![stmt(
+            0,
+            StmtKind::Compute,
+            vec![Loop::new("i", n, false), Loop::new("j", n, false)],
+            Access::new("C", &[0, 1]),
+            vec![Access::new("A", &[0, 1]), Access::new("B", &[0, 1])],
+            OpCounts::new(1, 0),
+        )],
+    }
+}
+
+/// `2-madd`: D = (A + B) + C — the first sum feeds the second (paper §6.1).
+pub fn two_madd() -> Kernel {
+    let n = 400;
+    Kernel {
+        name: "2-madd".into(),
+        description: "2 Matrix add. (D = (A + B) + C)".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[n, n], true, false),
+            ArrayDecl::new("B", &[n, n], true, false),
+            ArrayDecl::new("C", &[n, n], true, false),
+            ArrayDecl::new("T", &[n, n], false, false),
+            ArrayDecl::new("D", &[n, n], false, true),
+        ],
+        statements: vec![
+            stmt(
+                0,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, false)],
+                Access::new("T", &[0, 1]),
+                vec![Access::new("A", &[0, 1]), Access::new("B", &[0, 1])],
+                OpCounts::new(1, 0),
+            ),
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, false)],
+                Access::new("D", &[0, 1]),
+                vec![Access::new("T", &[0, 1]), Access::new("C", &[0, 1])],
+                OpCounts::new(1, 0),
+            ),
+        ],
+    }
+}
+
+/// `3-madd`: F = (A + B) + (C + D) — two independent sums feed the final
+/// one (the kernel that shows off concurrent tasks, paper Table 7).
+pub fn three_madd() -> Kernel {
+    let n = 400;
+    Kernel {
+        name: "3-madd".into(),
+        description: "3 Matrix add. (F = (A + B) + (C + D))".into(),
+        arrays: vec![
+            ArrayDecl::new("A", &[n, n], true, false),
+            ArrayDecl::new("B", &[n, n], true, false),
+            ArrayDecl::new("C", &[n, n], true, false),
+            ArrayDecl::new("D", &[n, n], true, false),
+            ArrayDecl::new("T1", &[n, n], false, false),
+            ArrayDecl::new("T2", &[n, n], false, false),
+            ArrayDecl::new("F", &[n, n], false, true),
+        ],
+        statements: vec![
+            stmt(
+                0,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, false)],
+                Access::new("T1", &[0, 1]),
+                vec![Access::new("A", &[0, 1]), Access::new("B", &[0, 1])],
+                OpCounts::new(1, 0),
+            ),
+            stmt(
+                1,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, false)],
+                Access::new("T2", &[0, 1]),
+                vec![Access::new("C", &[0, 1]), Access::new("D", &[0, 1])],
+                OpCounts::new(1, 0),
+            ),
+            stmt(
+                2,
+                StmtKind::Compute,
+                vec![Loop::new("i", n, false), Loop::new("j", n, false)],
+                Access::new("F", &[0, 1]),
+                vec![Access::new("T1", &[0, 1]), Access::new("T2", &[0, 1])],
+                OpCounts::new(1, 0),
+            ),
+        ],
+    }
+}
+
+/// All 15 kernels of Table 5 in the paper's row order.
+pub fn all_kernels() -> Vec<Kernel> {
+    vec![
+        bicg(),
+        madd(),
+        mvt(),
+        atax(),
+        gesummv(),
+        two_madd(),
+        three_madd(),
+        gemver(),
+        two_mm(),
+        gemm(),
+        syr2k(),
+        syrk(),
+        trmm(),
+        three_mm(),
+        symm(),
+    ]
+}
+
+/// Kernel lookup by paper name.
+pub fn by_name(name: &str) -> Option<Kernel> {
+    all_kernels().into_iter().find(|k| k.name == name)
+}
+
+/// The 11-kernel subset of Table 6 (RTL comparison).
+pub fn table6_kernels() -> Vec<Kernel> {
+    ["2mm", "3mm", "atax", "bicg", "gemm", "gesummv", "mvt", "symm", "syr2k", "syrk", "trmm"]
+        .iter()
+        .map(|n| by_name(n).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_complete() {
+        assert_eq!(all_kernels().len(), 15);
+        assert_eq!(table6_kernels().len(), 11);
+        assert!(by_name("3mm").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn three_mm_matches_listing4() {
+        let k = three_mm();
+        assert_eq!(k.statements.len(), 6);
+        // E = A×B: 180×190×200 MACs
+        assert_eq!(k.statements[1].instances(), 180 * 190 * 200);
+        // F = C×D: 190×210×220 MACs
+        assert_eq!(k.statements[3].instances(), 190 * 210 * 220);
+        // G = E×F: 180×210×190 MACs
+        assert_eq!(k.statements[5].instances(), 180 * 210 * 190);
+        // E and F are intermediates, G is the only output
+        assert!(k.array("E").unwrap().is_intermediate());
+        assert!(k.array("F").unwrap().is_intermediate());
+        assert!(k.array("G").unwrap().is_output);
+    }
+
+    #[test]
+    fn mvt_transposed_access() {
+        let k = mvt();
+        // S1 reads A[j][i]: dim0 indexed by loop 1 (j), dim1 by loop 0 (i).
+        let a = &k.statements[1].reads[1];
+        assert_eq!(a.loop_positions(), vec![1, 0]);
+    }
+
+    #[test]
+    fn no_duplicate_array_names() {
+        for k in all_kernels() {
+            let mut names: Vec<_> = k.arrays.iter().map(|a| &a.name).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), k.arrays.len(), "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn every_kernel_has_an_output() {
+        for k in all_kernels() {
+            assert!(k.arrays.iter().any(|a| a.is_output), "{}", k.name);
+        }
+    }
+}

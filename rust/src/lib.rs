@@ -1,0 +1,40 @@
+//! # Prometheus — Holistic Optimization Framework for FPGA Accelerators
+//!
+//! Reproduction of Pouget, Lo, Pouchet & Cong, *Holistic Optimization
+//! Framework for FPGA Accelerators*, ACM TODAES 2025 (DOI
+//! 10.1145/3769307), built as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the Prometheus framework itself: affine
+//!   kernel IR, dependency analysis and task-graph construction, task
+//!   fusion, the holistic design space (tiling, permutation, padding,
+//!   bit-width packing, array partitioning, buffering, SLR assignment),
+//!   the NLP-style cost model and solver, HLS-C++/host code generation,
+//!   and a cycle-approximate dataflow *FPGA simulator* standing in for
+//!   Vitis RTL simulation and on-board Alveo U55C runs.
+//! * **Layer 2 (python/compile/model.py)** — PolyBench kernels written in
+//!   JAX, AOT-lowered to HLO text artifacts consumed by
+//!   [`runtime`] for functional (numerical) validation of optimized
+//!   designs.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas tile kernels
+//!   (output-stationary matmul tile, vector ops) mirroring the fully
+//!   unrolled intra-tile tasks Prometheus generates, validated against a
+//!   pure-jnp oracle.
+//!
+//! See `DESIGN.md` for the full system inventory and the paper-experiment
+//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod analysis;
+pub mod baselines;
+pub mod codegen;
+pub mod coordinator;
+pub mod dse;
+pub mod hw;
+pub mod ir;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+
+pub use coordinator::flow::{optimize_kernel, OptimizeOptions};
+pub use dse::config::DesignConfig;
+pub use ir::kernel::Kernel;

@@ -1,0 +1,199 @@
+//! `prometheus` — CLI for the Prometheus reproduction.
+//!
+//! Subcommands (hand-rolled parser; the environment has no clap):
+//!
+//! ```text
+//! prometheus list                               list kernels (Table 5 data)
+//! prometheus analyze  <kernel>                  task graph + fusion report
+//! prometheus optimize <kernel> [--onboard N --frac F] [--emit DIR]
+//! prometheus compare  <kernel>                  all 6 frameworks (Table 3 shape)
+//! prometheus codegen  <kernel> <dir>            emit HLS-C++ + host
+//! prometheus validate <kernel> [--artifacts D]  PJRT functional check
+//! prometheus validate-all [--artifacts D]       every lowered kernel
+//! ```
+
+use anyhow::{anyhow, Result};
+use prometheus::analysis::fusion::fuse;
+use prometheus::analysis::reuse;
+use prometheus::baselines::Framework;
+use prometheus::coordinator::flow::{optimize_kernel, OptimizeOptions};
+use prometheus::dse::solver::{Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::{oracle, polybench};
+use prometheus::report::{gfs, Table};
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let dev = Device::u55c();
+
+    match cmd {
+        "list" => {
+            let mut t = Table::new(&["Kernel", "Description", "Ops", "Mem", "Reuse", "FLOPs"]);
+            for k in polybench::all_kernels() {
+                t.row(vec![
+                    k.name.clone(),
+                    k.description.clone(),
+                    reuse::ops_complexity(&k),
+                    reuse::mem_complexity(&k),
+                    reuse::reuse_order(&k).as_str().into(),
+                    format!("{:.1}M", k.total_flops() as f64 / 1e6),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "analyze" => {
+            let name = args.get(1).ok_or_else(|| anyhow!("usage: analyze <kernel>"))?;
+            let k = polybench::by_name(name).ok_or_else(|| anyhow!("unknown kernel {name}"))?;
+            let fg = fuse(&k);
+            println!(
+                "kernel `{}`: {} statements, {} fused tasks",
+                k.name,
+                k.statements.len(),
+                fg.tasks.len()
+            );
+            for t in &fg.tasks {
+                println!("  FT{}: stmts {:?} -> output `{}`", t.id, t.stmts, t.output);
+            }
+            for (s, d, a) in &fg.edges {
+                println!("  FIFO FT{s} --{a}--> FT{d}");
+            }
+            println!("inter-task traffic: {} elements", fg.inter_task_elems(&k));
+        }
+        "optimize" => {
+            let name = args.get(1).ok_or_else(|| anyhow!("usage: optimize <kernel>"))?;
+            let scenario = match flag_value(&args, "--onboard") {
+                Some(n) => Scenario::OnBoard {
+                    slrs: n.parse()?,
+                    frac: flag_value(&args, "--frac")
+                        .map(|f| f.parse())
+                        .transpose()?
+                        .unwrap_or(0.6),
+                },
+                None => Scenario::Rtl,
+            };
+            let opts = OptimizeOptions {
+                scenario,
+                solver: SolverOptions::default(),
+                emit_dir: flag_value(&args, "--emit").map(PathBuf::from),
+                artifacts_dir: flag_value(&args, "--artifacts").map(PathBuf::from),
+            };
+            let r = optimize_kernel(name, &dev, &opts)?;
+            println!(
+                "kernel `{}`: {:.2} GF/s  ({} cycles, solve {:?}, {} points explored{})",
+                name,
+                r.gflops,
+                r.sim.cycles,
+                r.result.solve_time,
+                r.result.explored,
+                if r.result.timed_out { ", TIMED OUT" } else { "" }
+            );
+            for tc in &r.result.design.tasks {
+                println!(
+                    "  FT{}: perm {:?} intra {:?} padded {:?} II={} SLR{}",
+                    tc.task, tc.perm, tc.intra, tc.padded_trip, tc.ii, tc.slr
+                );
+            }
+            if let Some(b) = &r.board {
+                println!(
+                    "  board: bitstream={} fmax={:.0}MHz util={:.0}% time={:.2}ms",
+                    if b.bitstream_ok { "OK" } else { "FAIL" },
+                    b.fmhz,
+                    b.peak_utilization * 100.0,
+                    b.time_ms
+                );
+            }
+            if let Some(err) = r.validation_rel_err {
+                println!("  PJRT validation: max rel err {err:.2e}");
+            }
+        }
+        "compare" => {
+            let name = args.get(1).ok_or_else(|| anyhow!("usage: compare <kernel>"))?;
+            let k = polybench::by_name(name).ok_or_else(|| anyhow!("unknown kernel {name}"))?;
+            let mut t = Table::new(&["Framework", "GF/s", "Solve time"]);
+            for fw in Framework::all() {
+                if !fw.supports_triangular() && prometheus::baselines::streamhls::unsupported(&k)
+                {
+                    t.row(vec![fw.name().into(), "N/A".into(), "-".into()]);
+                    continue;
+                }
+                let r = fw.optimize(&k, &dev);
+                t.row(vec![fw.name().into(), gfs(r.gflops), format!("{:.2?}", r.solve_time)]);
+            }
+            print!("{}", t.render());
+        }
+        "codegen" => {
+            let name = args.get(1).ok_or_else(|| anyhow!("usage: codegen <kernel> <dir>"))?;
+            let dir = args.get(2).ok_or_else(|| anyhow!("usage: codegen <kernel> <dir>"))?;
+            let opts = OptimizeOptions {
+                emit_dir: Some(PathBuf::from(dir)),
+                ..OptimizeOptions::default()
+            };
+            optimize_kernel(name, &dev, &opts)?;
+            println!("wrote HLS-C++ and host sources to {dir}");
+        }
+        "validate" => {
+            let name = args.get(1).ok_or_else(|| anyhow!("usage: validate <kernel>"))?;
+            let root = PathBuf::from(
+                flag_value(&args, "--artifacts").unwrap_or_else(|| "artifacts".into()),
+            );
+            let exe = prometheus::runtime::Executor::load(&root, name)?;
+            let err = exe.validate()?;
+            println!("{name}: platform {} max rel err {err:.2e}", exe.platform());
+            if err > 1e-3 {
+                return Err(anyhow!("{name}: validation failed (err {err:.2e})"));
+            }
+        }
+        "validate-all" => {
+            let root = PathBuf::from(
+                flag_value(&args, "--artifacts").unwrap_or_else(|| "artifacts".into()),
+            );
+            let mut failures = 0;
+            for k in oracle::validated_kernels() {
+                if !prometheus::runtime::artifact_path(&root, k).exists() {
+                    println!("{k}: SKIP (no artifact — run `make artifacts`)");
+                    continue;
+                }
+                let exe = prometheus::runtime::Executor::load(&root, k)?;
+                let err = exe.validate()?;
+                let ok = err <= 1e-3;
+                println!("{k}: max rel err {err:.2e} {}", if ok { "OK" } else { "FAIL" });
+                if !ok {
+                    failures += 1;
+                }
+            }
+            if failures > 0 {
+                return Err(anyhow!("{failures} kernels failed validation"));
+            }
+        }
+        _ => {
+            println!(
+                "prometheus — Holistic Optimization Framework for FPGA Accelerators (reproduction)\n\
+                 \n\
+                 usage: prometheus <command>\n\
+                 \x20 list                                 kernel zoo (Table 5 data)\n\
+                 \x20 analyze  <kernel>                    task graph + fusion\n\
+                 \x20 optimize <kernel> [--onboard N --frac F] [--emit DIR] [--artifacts D]\n\
+                 \x20 compare  <kernel>                    all frameworks (Table 3/6 shape)\n\
+                 \x20 codegen  <kernel> <dir>              emit HLS-C++ + OpenCL host\n\
+                 \x20 validate <kernel> [--artifacts D]    PJRT functional check\n\
+                 \x20 validate-all [--artifacts D]         all lowered kernels"
+            );
+        }
+    }
+    Ok(())
+}

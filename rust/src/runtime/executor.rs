@@ -1,0 +1,184 @@
+//! HLO artifact loading and execution.
+//!
+//! Interchange format is HLO **text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits 64-bit instruction ids that the crate's bundled XLA
+//! (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+
+use crate::ir::oracle;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Input signature of one lowered kernel: (array ordinal, flattened
+/// length). Ordinals follow `python/compile/model.py::inputs_for` so the
+/// rust oracle and the JAX artifact see bit-identical inputs.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: &'static str,
+    /// (ordinal, elems) per input parameter, in lowering order.
+    pub inputs: Vec<(u64, usize)>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+impl KernelSpec {
+    /// Signature table for every kernel the AOT layer lowers. Must match
+    /// `python/compile/model.py` exactly.
+    pub fn known() -> Vec<KernelSpec> {
+        let spec = |name: &'static str, inputs: Vec<(u64, usize)>, outputs: usize| KernelSpec {
+            name,
+            inputs,
+            outputs,
+        };
+        vec![
+            spec("gemm", vec![(0, 200 * 220), (1, 200 * 240), (2, 240 * 220)], 1),
+            spec(
+                "2mm",
+                vec![(0, 180 * 210), (1, 210 * 190), (2, 190 * 220), (3, 180 * 220)],
+                1,
+            ),
+            spec(
+                "3mm",
+                vec![(0, 180 * 200), (1, 200 * 190), (2, 190 * 220), (3, 220 * 210)],
+                1,
+            ),
+            spec("atax", vec![(0, 390 * 410), (1, 410)], 1),
+            spec("bicg", vec![(0, 390 * 410), (1, 390), (2, 410)], 2),
+            spec("mvt", vec![(0, 400 * 400), (1, 400), (2, 400), (3, 400), (4, 400)], 2),
+            spec("gesummv", vec![(0, 250 * 250), (1, 250 * 250), (2, 250)], 1),
+            spec("madd", vec![(0, 400 * 400), (1, 400 * 400)], 1),
+            spec("2-madd", vec![(0, 400 * 400), (1, 400 * 400), (2, 400 * 400)], 1),
+            spec(
+                "3-madd",
+                vec![(0, 400 * 400), (1, 400 * 400), (2, 400 * 400), (3, 400 * 400)],
+                1,
+            ),
+        ]
+    }
+
+    pub fn for_kernel(name: &str) -> Option<KernelSpec> {
+        Self::known().into_iter().find(|s| s.name == name)
+    }
+}
+
+/// Path of a kernel's HLO artifact under `root` (python writes
+/// `artifacts/<kernel>.hlo.txt`; `-` is mapped to `_` for filenames).
+pub fn artifact_path(root: &Path, kernel: &str) -> PathBuf {
+    root.join(format!("{}.hlo.txt", kernel.replace('-', "_")))
+}
+
+/// A compiled, ready-to-run kernel executable on the PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    spec: KernelSpec,
+}
+
+impl Executor {
+    /// Load and compile the artifact for `kernel` from `artifacts_root`.
+    pub fn load(artifacts_root: &Path, kernel: &str) -> Result<Executor> {
+        let spec = KernelSpec::for_kernel(kernel)
+            .ok_or_else(|| anyhow!("no KernelSpec for {kernel}"))?;
+        let path = artifact_path(artifacts_root, kernel);
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("XLA compile")?;
+        Ok(Executor { client, exe, spec })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute on the deterministic inputs; returns one flat `Vec<f32>`
+    /// per output.
+    pub fn run(&self) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = self
+            .spec
+            .inputs
+            .iter()
+            .map(|&(ord, len)| {
+                let data = oracle::input_array(ord, len);
+                xla::Literal::vec1(&data)
+            })
+            .collect();
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let tuple = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outs.push(lit.to_vec::<f32>()?);
+        }
+        if outs.len() != self.spec.outputs {
+            return Err(anyhow!(
+                "{}: expected {} outputs, artifact returned {}",
+                self.spec.name,
+                self.spec.outputs,
+                outs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Execute and compare against the rust oracle. Returns the max
+    /// absolute relative error across all outputs.
+    pub fn validate(&self) -> Result<f64> {
+        let got = self.run()?;
+        let expect = oracle::run(self.spec.name)
+            .ok_or_else(|| anyhow!("no oracle for {}", self.spec.name))?;
+        if got.len() != expect.bufs.len() {
+            return Err(anyhow!(
+                "{}: artifact outputs {} vs oracle {}",
+                self.spec.name,
+                got.len(),
+                expect.bufs.len()
+            ));
+        }
+        let mut max_rel = 0f64;
+        for (g, e) in got.iter().zip(expect.bufs.iter()) {
+            if g.len() != e.len() {
+                return Err(anyhow!(
+                    "{}: output length {} vs oracle {}",
+                    self.spec.name,
+                    g.len(),
+                    e.len()
+                ));
+            }
+            for (a, b) in g.iter().zip(e.iter()) {
+                let denom = b.abs().max(1.0);
+                max_rel = max_rel.max(((a - b).abs() / denom) as f64);
+            }
+        }
+        Ok(max_rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_cover_validated_kernels() {
+        for k in oracle::validated_kernels() {
+            assert!(KernelSpec::for_kernel(k).is_some(), "missing spec for {k}");
+        }
+    }
+
+    #[test]
+    fn spec_shapes_match_oracle_inputs() {
+        // bicg inputs: A[M*N], r[M], p[N]
+        let s = KernelSpec::for_kernel("bicg").unwrap();
+        assert_eq!(s.inputs, vec![(0, 390 * 410), (1, 390), (2, 410)]);
+        assert_eq!(s.outputs, 2);
+    }
+
+    #[test]
+    fn artifact_paths_are_filesystem_safe() {
+        let p = artifact_path(Path::new("artifacts"), "3-madd");
+        assert_eq!(p.to_str().unwrap(), "artifacts/3_madd.hlo.txt");
+    }
+}

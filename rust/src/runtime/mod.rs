@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by the
+//! python build layer (`python/compile/aot.py`) and executes them on the
+//! PJRT CPU client — the functional half of the three-layer architecture.
+//! Python never runs here; the artifacts are self-contained HLO text.
+
+pub mod executor;
+
+pub use executor::{artifact_path, Executor, KernelSpec};

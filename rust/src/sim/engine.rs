@@ -1,0 +1,340 @@
+//! The dataflow execution engine.
+//!
+//! Because the fused-task graph is acyclic and FIFO traversal orders are
+//! compatible (checked by the DSE), the simulation reduces to an *exact*
+//! topological timing analysis over tile steps: for each fused task we
+//! materialize its inter-tile iteration space, chain load/compute/store
+//! through the ping-pong recurrences, and resolve FIFO waits against the
+//! producer's emission timestamps. This executes the same pipeline an
+//! event-heap simulator would, in O(total tile steps).
+
+use crate::analysis::fusion::FusedGraph;
+use crate::dse::config::{DesignConfig, ExecutionModel};
+use crate::dse::cost::pipelined_compute_latency;
+use crate::dse::space::TaskGeometry;
+use crate::hw::Device;
+use crate::ir::Kernel;
+
+/// Simulation output for one design.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total latency in cycles (last store of any sink task).
+    pub cycles: u64,
+    /// Per-task busy cycles (compute only) — utilization diagnostics.
+    pub compute_cycles: Vec<u64>,
+    /// Per-task stall cycles spent waiting on FIFO tokens.
+    pub fifo_stall_cycles: Vec<u64>,
+    /// Per-task cycles blocked on DDR transfers (not overlapped).
+    pub ddr_blocked_cycles: Vec<u64>,
+    /// Total tile steps executed (simulator work measure).
+    pub steps: u64,
+}
+
+impl SimReport {
+    pub fn gflops(&self, k: &Kernel, dev: &Device) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        k.total_flops() as f64 / (self.cycles as f64 * dev.cycle_time_s()) / 1e9
+    }
+}
+
+/// Per-task tile-step cost description derived from the geometry.
+struct TaskSteps {
+    /// Number of output tile steps (product of non-reduction inter trips).
+    steps: u64,
+    /// Compute cycles per step (pipelined reduction + intra).
+    compute: u64,
+    /// DDR-in cycles per step, amortized per the transfer plans.
+    ddr_in: u64,
+    /// DDR-out cycles per step (off-chip outputs only).
+    ddr_out: u64,
+    /// Cycles of level-0 preloading before the first step.
+    preload: u64,
+    /// FIFO inputs: (producer task, elems needed per step).
+    fifo_in: Vec<(usize, u64)>,
+    /// FIFO outputs: elems emitted per step (per consumer edge).
+    fifo_out_elems: u64,
+    /// Whether ping-pong overlap is active.
+    overlap: bool,
+}
+
+fn build_steps(
+    k: &Kernel,
+    fg: &FusedGraph,
+    design: &DesignConfig,
+    t: usize,
+    dev: &Device,
+) -> TaskSteps {
+    let cfg = &design.tasks[t];
+    let geo = TaskGeometry::new(k, fg, cfg);
+    let steps: u64 = geo
+        .nonred
+        .iter()
+        .map(|&p| cfg.inter_trip(p))
+        .product::<u64>()
+        .max(1);
+    let compute = pipelined_compute_latency(&geo, dev);
+
+    let levels = geo.levels();
+    let mut preload = 0u64;
+    let mut ddr_in_streams: Vec<u64> = Vec::new(); // per-array totals
+    let mut ddr_out_total = 0u64;
+    let mut fifo_in = Vec::new();
+
+    for a in geo.arrays() {
+        let decl = k.array(&a).expect("declared");
+        let plan = cfg
+            .plans
+            .get(&a)
+            .copied()
+            .unwrap_or_else(|| geo.default_plan(&a, geo.levels() - 1));
+        let d = plan.define_level.min(levels - 1);
+        let per_tile = dev.transfer_cycles(geo.tile_bytes(&a, d), plan.bitwidth);
+        let times = geo.transfer_count(d);
+
+        // FIFO input: array produced by another fused task
+        let producer = fg
+            .edges
+            .iter()
+            .find(|(_, dst, arr)| *dst == t && arr == &a)
+            .map(|(src, _, _)| *src);
+        if let Some(p) = producer {
+            let total_elems = k.array(&a).map(|x| x.elems()).unwrap_or(0);
+            fifo_in.push((p, total_elems.div_ceil(steps)));
+            continue; // FIFO tiles don't hit DDR
+        }
+
+        let inbound = decl.is_input || (geo.reads(&a) && !geo.writes(&a));
+        if inbound {
+            if d == 0 {
+                // preloads of distinct arrays stream over distinct HBM
+                // channels concurrently (U55C: 32 channels, one per
+                // array after the read-only duplication of §3.7)
+                preload = preload.max(per_tile);
+            } else {
+                ddr_in_streams.push(times * per_tile);
+            }
+        }
+        if geo.writes(&a) && decl.is_output {
+            ddr_out_total += times * per_tile;
+        }
+    }
+    // concurrent channels: per-step inbound cost is the slowest stream,
+    // as long as channels remain (beyond that, streams serialize)
+    let ddr_in_total = if ddr_in_streams.len() <= dev.mem_channels {
+        ddr_in_streams.iter().copied().max().unwrap_or(0)
+    } else {
+        ddr_in_streams.iter().sum::<u64>() / dev.mem_channels as u64
+    };
+
+    // does this task feed any FIFO?
+    let fifo_out_elems: u64 = fg
+        .edges
+        .iter()
+        .filter(|(src, _, _)| *src == t)
+        .map(|(_, _, a)| k.array(a).map(|x| x.elems()).unwrap_or(0))
+        .sum::<u64>()
+        .div_ceil(steps);
+
+    TaskSteps {
+        steps,
+        compute,
+        ddr_in: ddr_in_total / steps,
+        ddr_out: ddr_out_total / steps,
+        preload,
+        fifo_in,
+        fifo_out_elems,
+        overlap: design.overlap,
+    }
+}
+
+/// Execute the design. Returns the simulated report.
+pub fn simulate(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device) -> SimReport {
+    let n = fg.tasks.len();
+    let specs: Vec<TaskSteps> =
+        (0..n).map(|t| build_steps(k, fg, design, t, dev)).collect();
+
+    // producer emission timestamps: per task, the time at which the i-th
+    // step's outputs are emitted (filled in topological order).
+    let mut emit_times: Vec<Vec<u64>> = vec![Vec::new(); n];
+    let mut finish = vec![0u64; n];
+    let mut compute_cycles = vec![0u64; n];
+    let mut fifo_stall = vec![0u64; n];
+    let mut ddr_blocked = vec![0u64; n];
+    let mut total_steps = 0u64;
+
+    // sequential start offsets for shared-buffer designs
+    let mut seq_clock = 0u64;
+
+    for t in 0..n {
+        let spec = &specs[t];
+        let slr_pen: u64 = fg
+            .predecessors(t)
+            .iter()
+            .filter(|&&p| design.tasks[p].slr != design.tasks[t].slr)
+            .count() as u64
+            * dev.inter_slr_latency;
+
+        let start_base = match design.model {
+            ExecutionModel::Sequential => seq_clock,
+            ExecutionModel::Dataflow => slr_pen,
+        };
+
+        // cumulative FIFO availability: time when `e` elements of the
+        // producer's output have been emitted.
+        let avail = |p: usize, elems_needed: u64| -> u64 {
+            let per = specs[p].fifo_out_elems.max(1);
+            let idx = elems_needed.div_ceil(per).max(1) as usize - 1;
+            let times = &emit_times[p];
+            if times.is_empty() {
+                0
+            } else {
+                times[idx.min(times.len() - 1)]
+            }
+        };
+
+        let mut load_done_prev = 0u64;
+        let mut compute_done_prev = 0u64;
+        let mut store_done_prev = 0u64;
+        let mut emits = Vec::with_capacity(spec.steps as usize);
+        let preload_done = start_base + spec.preload;
+        if spec.preload > 0 {
+            ddr_blocked[t] += spec.preload;
+        }
+
+        // In Sequential mode tasks also lose the overlap (paper: Sisyphus
+        // has no comm/comp overlap) unless the design says otherwise.
+        for i in 0..spec.steps {
+            total_steps += 1;
+            // FIFO wait: cumulative elements needed through step i+1
+            let mut in_ready = preload_done;
+            for &(p, per_step) in &spec.fifo_in {
+                let need = per_step * (i + 1);
+                in_ready = in_ready.max(avail(p, need));
+            }
+            // load of tile i may begin once the previous tile's buffer is
+            // free (ping-pong: after compute of i-1) and data is ready
+            let load_start = if spec.overlap {
+                load_done_prev.max(compute_done_prev.saturating_sub(spec.compute)).max(in_ready)
+            } else {
+                store_done_prev.max(in_ready)
+            };
+            let load_done = load_start + spec.ddr_in;
+            let stall = in_ready.saturating_sub(load_done_prev.max(compute_done_prev));
+            fifo_stall[t] += stall;
+
+            let compute_start = load_done.max(compute_done_prev);
+            let compute_done = compute_start + spec.compute;
+            compute_cycles[t] += spec.compute;
+
+            let store_start = compute_done.max(store_done_prev);
+            let store_done = store_start + spec.ddr_out;
+            if !spec.overlap {
+                ddr_blocked[t] += spec.ddr_in + spec.ddr_out;
+            }
+
+            emits.push(store_done);
+            load_done_prev = load_done;
+            compute_done_prev = compute_done;
+            store_done_prev = store_done;
+        }
+        finish[t] = store_done_prev.max(preload_done);
+        emit_times[t] = emits;
+        if design.model == ExecutionModel::Sequential {
+            seq_clock = finish[t];
+        }
+    }
+
+    let cycles = fg
+        .sinks()
+        .into_iter()
+        .map(|s| finish[s])
+        .max()
+        .unwrap_or(0);
+    SimReport {
+        cycles,
+        compute_cycles,
+        fifo_stall_cycles: fifo_stall,
+        ddr_blocked_cycles: ddr_blocked,
+        steps: total_steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fusion::fuse;
+    use crate::dse::solver::{solve, SolverOptions};
+    use crate::dse::cost::graph_latency;
+    use crate::ir::polybench;
+    use std::time::Duration;
+
+    fn opts() -> SolverOptions {
+        SolverOptions {
+            beam: 12,
+            max_factor_per_loop: 32,
+            max_unroll: 1024,
+            timeout: Duration::from_secs(30),
+            ..SolverOptions::default()
+        }
+    }
+
+    #[test]
+    fn sim_and_model_agree_on_gemm() {
+        // The analytic model (Eqs 12–16) and the executing simulator must
+        // agree within a modest factor on a non-congested design — this is
+        // the model-fidelity check DESIGN.md §6 promises.
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let r = solve(&k, &dev, &opts());
+        let fg = fuse(&k);
+        let sim = simulate(&k, &fg, &r.design, &dev);
+        let model = graph_latency(&k, &fg, &r.design, &dev).total;
+        let ratio = sim.cycles as f64 / model as f64;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "sim {} vs model {} (ratio {ratio})",
+            sim.cycles,
+            model
+        );
+    }
+
+    #[test]
+    fn dataflow_beats_sequential_in_sim() {
+        let k = polybench::three_madd();
+        let dev = Device::u55c();
+        let fg = fuse(&k);
+        let df = solve(&k, &dev, &opts());
+        let mut seq_design = df.design.clone();
+        seq_design.model = ExecutionModel::Sequential;
+        let s_df = simulate(&k, &fg, &df.design, &dev);
+        let s_seq = simulate(&k, &fg, &seq_design, &dev);
+        assert!(s_df.cycles < s_seq.cycles);
+    }
+
+    #[test]
+    fn consumer_stalls_on_producer() {
+        // 2-madd: the second add cannot finish before the first emits.
+        let k = polybench::two_madd();
+        let dev = Device::u55c();
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &opts());
+        let sim = simulate(&k, &fg, &r.design, &dev);
+        assert!(sim.cycles > 0);
+        assert_eq!(sim.compute_cycles.len(), 2);
+    }
+
+    #[test]
+    fn sim_counts_steps() {
+        let k = polybench::madd();
+        let dev = Device::u55c();
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &opts());
+        let sim = simulate(&k, &fg, &r.design, &dev);
+        let cfg = &r.design.tasks[0];
+        let geo = crate::dse::space::TaskGeometry::new(&k, &fg, cfg);
+        let expect: u64 = geo.nonred.iter().map(|&p| cfg.inter_trip(p)).product();
+        assert_eq!(sim.steps, expect.max(1));
+    }
+}

@@ -1,0 +1,18 @@
+//! Cycle-approximate FPGA dataflow simulation — the reproduction's
+//! substitute for Vitis RTL simulation and on-board Alveo U55C execution.
+//!
+//! [`engine`] *executes* a [`crate::dse::DesignConfig`] at data-tile
+//! granularity: ping-pong-buffered loads, pipelined compute, FIFO tokens
+//! between fused tasks, DDR burst latency — the same structure the HLS
+//! code generator emits. It is the authority the analytic model (Eqs
+//! 12–16) is validated against.
+//!
+//! [`board`] layers the physical-design effects the paper measures on
+//! hardware: per-SLR utilization, congestion-driven frequency
+//! degradation, and bitstream feasibility.
+
+pub mod board;
+pub mod engine;
+
+pub use board::{board_eval, BoardReport};
+pub use engine::{simulate, SimReport};

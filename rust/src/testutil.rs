@@ -1,0 +1,90 @@
+//! In-tree property-testing support (the environment has no network
+//! access and `proptest` is not vendored): a deterministic xorshift PRNG
+//! plus a tiny `for_random` driver used by property tests across modules.
+
+/// xorshift64* — deterministic, seedable, good enough for test-case
+/// generation.
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        XorShift { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.next_u64() % (hi - lo + 1)
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[(self.next_u64() % items.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// f32 in [-0.5, 0.5).
+    pub fn f32_unit(&mut self) -> f32 {
+        (self.next_u64() % 1000) as f32 / 1000.0 - 0.5
+    }
+}
+
+/// Run `body` against `n` generated cases; panics include the case index
+/// and seed so failures reproduce exactly.
+pub fn for_random(seed: u64, n: usize, mut body: impl FnMut(&mut XorShift, usize)) {
+    for i in 0..n {
+        let mut rng = XorShift::new(seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        body(&mut rng, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_respects_bounds() {
+        let mut rng = XorShift::new(7);
+        for _ in 0..1000 {
+            let v = rng.range(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zero_seed_does_not_stick() {
+        let mut rng = XorShift::new(0);
+        assert_ne!(rng.next_u64(), 0);
+    }
+
+    #[test]
+    fn for_random_covers_n() {
+        let mut count = 0;
+        for_random(1, 25, |_, _| count += 1);
+        assert_eq!(count, 25);
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration tests over the full L3 pipeline: IR → analysis → solver →
+//! simulator → codegen, for every kernel in the zoo.
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::codegen::{generate_hls, generate_host};
+use prometheus::coordinator::flow::quick_solver;
+use prometheus::dse::cost::graph_latency;
+use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::sim::engine::simulate;
+
+#[test]
+fn every_kernel_solves_and_simulates() {
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &quick_solver());
+        r.design
+            .validate(&k, &fg, dev.slrs)
+            .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        let sim = simulate(&k, &fg, &r.design, &dev);
+        assert!(sim.cycles > 0, "{}: zero-cycle simulation", k.name);
+        let g = sim.gflops(&k, &dev);
+        assert!(g > 0.1, "{}: implausible throughput {g}", k.name);
+        assert!(g < 5000.0, "{}: beyond-roofline throughput {g}", k.name);
+    }
+}
+
+#[test]
+fn model_and_simulator_agree_within_bounds() {
+    // DESIGN.md §6 promise: the analytic model stays honest against the
+    // executing simulator on non-congested designs.
+    let dev = Device::u55c();
+    for name in ["gemm", "2mm", "3mm", "bicg", "mvt", "madd", "3-madd"] {
+        let k = polybench::by_name(name).unwrap();
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &quick_solver());
+        let sim = simulate(&k, &fg, &r.design, &dev).cycles as f64;
+        let model = graph_latency(&k, &fg, &r.design, &dev).total as f64;
+        let ratio = sim / model;
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "{name}: sim {sim} vs model {model} (x{ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn compute_bound_kernels_outperform_memory_bound() {
+    // Table 6's macro-structure: gemm-family ≫ madd/mvt-family.
+    let dev = Device::u55c();
+    let g = |n: &str| {
+        let k = polybench::by_name(n).unwrap();
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &quick_solver());
+        simulate(&k, &fg, &r.design, &dev).gflops(&k, &dev)
+    };
+    let gemm = g("gemm");
+    let mvt = g("mvt");
+    let madd = g("madd");
+    assert!(gemm > 8.0 * mvt, "gemm {gemm} vs mvt {mvt}");
+    assert!(gemm > 8.0 * madd, "gemm {gemm} vs madd {madd}");
+}
+
+#[test]
+fn onboard_designs_fit_their_budget() {
+    let dev = Device::u55c();
+    for name in ["2mm", "atax"] {
+        let k = polybench::by_name(name).unwrap();
+        let fg = fuse(&k);
+        for (slrs, frac) in [(1usize, 0.6), (3usize, 0.6)] {
+            let r = solve(
+                &k,
+                &dev,
+                &SolverOptions {
+                    scenario: Scenario::OnBoard { slrs, frac },
+                    ..quick_solver()
+                },
+            );
+            let budget = dev.slr.scaled(frac);
+            assert!(
+                prometheus::dse::constraints::feasible(&k, &fg, &r.design, &dev, &budget),
+                "{name} @ {slrs} SLR x {frac}"
+            );
+            // SLR ids within the allowed range
+            assert!(r.design.tasks.iter().all(|t| t.slr < slrs));
+        }
+    }
+}
+
+#[test]
+fn codegen_emits_for_every_kernel() {
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        let r = solve(&k, &dev, &quick_solver());
+        let hls = generate_hls(&k, &r.design);
+        let host = generate_host(&k, &r.design);
+        assert!(hls.contains("extern \"C\""), "{}", k.name);
+        assert!(hls.contains("#pragma HLS"), "{}", k.name);
+        assert!(host.contains("enqueueTask"), "{}", k.name);
+        // every off-chip array appears as an m_axi interface
+        for a in k.arrays.iter().filter(|a| a.is_input || a.is_output) {
+            assert!(
+                hls.contains(&format!("port={}", a.name)),
+                "{}: missing m_axi for {}",
+                k.name,
+                a.name
+            );
+        }
+    }
+}
+
+#[test]
+fn three_slr_beats_one_slr_on_compute_bound() {
+    // Table 8's headline: 3mm 1-SLR 51.95 -> 3-SLR 134.07 GF/s.
+    let dev = Device::u55c();
+    let k = polybench::three_mm();
+    let one = solve(
+        &k,
+        &dev,
+        &SolverOptions { scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 }, ..quick_solver() },
+    );
+    let three = solve(
+        &k,
+        &dev,
+        &SolverOptions { scenario: Scenario::OnBoard { slrs: 3, frac: 0.6 }, ..quick_solver() },
+    );
+    assert!(
+        three.gflops > one.gflops,
+        "3-SLR {} !> 1-SLR {}",
+        three.gflops,
+        one.gflops
+    );
+}

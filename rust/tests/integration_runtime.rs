@@ -1,0 +1,59 @@
+//! Runtime integration: the PJRT path against real artifacts. These
+//! tests skip (pass with a notice) when `make artifacts` has not run —
+//! cargo test must work from a clean checkout — but exercise the full
+//! load→compile→execute→validate path when artifacts exist.
+
+use prometheus::ir::oracle;
+use prometheus::runtime::{artifact_path, Executor};
+use std::path::PathBuf;
+
+fn artifacts_root() -> PathBuf {
+    // tests run from the crate root
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(kernel: &str) -> bool {
+    artifact_path(&artifacts_root(), kernel).exists()
+}
+
+#[test]
+fn validate_every_lowered_kernel() {
+    let root = artifacts_root();
+    let mut ran = 0;
+    for k in oracle::validated_kernels() {
+        if !have(k) {
+            eprintln!("skip {k}: artifact missing (run `make artifacts`)");
+            continue;
+        }
+        let exe = Executor::load(&root, k).unwrap_or_else(|e| panic!("{k}: {e:#}"));
+        let err = exe.validate().unwrap_or_else(|e| panic!("{k}: {e:#}"));
+        assert!(err <= 1e-3, "{k}: rel err {err}");
+        ran += 1;
+    }
+    eprintln!("validated {ran} kernels through PJRT");
+}
+
+#[test]
+fn executor_is_rerunnable() {
+    if !have("madd") {
+        eprintln!("skip: artifact missing");
+        return;
+    }
+    let exe = Executor::load(&artifacts_root(), "madd").unwrap();
+    let a = exe.run().unwrap();
+    let b = exe.run().unwrap();
+    assert_eq!(a.len(), 1);
+    assert_eq!(a[0], b[0], "executions must be deterministic");
+}
+
+#[test]
+fn missing_artifact_is_an_error_not_a_panic() {
+    let err = Executor::load(&PathBuf::from("/nonexistent"), "gemm");
+    assert!(err.is_err());
+}
+
+#[test]
+fn unknown_kernel_is_an_error() {
+    let err = Executor::load(&artifacts_root(), "jacobi-2d");
+    assert!(err.is_err());
+}

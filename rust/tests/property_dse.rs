@@ -1,0 +1,207 @@
+//! Property-based tests (in-tree xorshift harness — proptest is not
+//! vendored) over the DSE invariants: tiling legality, geometry
+//! consistency, cost monotonicity, fusion well-formedness and solver
+//! robustness under randomized options.
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::dse::config::{TaskConfig, TransferPlan};
+use prometheus::dse::constraints::partition_of;
+use prometheus::dse::cost::task_latency;
+use prometheus::dse::padding::{divisors, legal_intra_factors, pad_for_burst};
+use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::dse::space::TaskGeometry;
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::sim::engine::simulate;
+use prometheus::testutil::{for_random, XorShift};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+#[test]
+fn prop_divisors_divide_and_are_complete() {
+    for_random(0xD1715, 200, |rng, _| {
+        let n = rng.range(1, 5000);
+        let ds = divisors(n);
+        // every listed divisor divides
+        assert!(ds.iter().all(|d| n % d == 0));
+        // completeness: everything that divides is listed
+        for d in 1..=n.min(100) {
+            assert_eq!(n % d == 0, ds.contains(&d), "n={n} d={d}");
+        }
+        // sorted, unique, bounded by 1..=n
+        assert!(ds.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(ds.first(), Some(&1));
+        assert_eq!(ds.last(), Some(&n));
+    });
+}
+
+#[test]
+fn prop_legal_factors_divide_their_padded_trip() {
+    for_random(0xFAC7, 200, |rng, _| {
+        let trip = rng.range(2, 1024);
+        let max_pad = rng.range(0, 32);
+        let max_factor = rng.range(1, 256);
+        for c in legal_intra_factors(trip, max_pad, max_factor) {
+            assert_eq!(c.padded % c.intra, 0, "trip={trip} {c:?}");
+            assert!(c.padded >= trip);
+            assert!(c.padded <= trip + max_pad);
+            assert!(c.intra <= max_factor);
+        }
+    });
+}
+
+#[test]
+fn prop_padding_is_minimal_for_burst() {
+    for_random(0xB125, 200, |rng, _| {
+        let n = rng.range(1, 4096);
+        let burst = *rng.choose(&[64u64, 128, 256, 512]);
+        let padded = pad_for_burst(n, 32, burst);
+        let lanes = burst / 32;
+        assert_eq!(padded % lanes, 0);
+        assert!(padded >= n);
+        assert!(padded - n < lanes, "padding not minimal: {n} -> {padded}");
+    });
+}
+
+/// Random-but-legal TaskConfig for a fused task of a random zoo kernel.
+fn random_config(_rng: &mut XorShift, kernel_idx: usize) -> (prometheus::ir::Kernel, usize) {
+    let kernels = polybench::all_kernels();
+    (kernels[kernel_idx % kernels.len()].clone(), kernel_idx % kernels.len())
+}
+
+#[test]
+fn prop_tile_geometry_consistency() {
+    // For random legal configs: tile dims never exceed padded extents,
+    // deeper transfer levels never enlarge tiles, transfer counts are
+    // monotone in level.
+    for_random(0x6E0, 120, |rng, i| {
+        let (k, _) = random_config(rng, i);
+        let fg = fuse(&k);
+        let t = (rng.next_u64() as usize) % fg.tasks.len();
+        let rep = fg.tasks[t].representative(&k);
+        let nest = &k.statements[rep].loops;
+        let intra: Vec<u64> = nest
+            .iter()
+            .map(|l| {
+                let fs = legal_intra_factors(l.trip, 4, 32);
+                rng.choose(&fs).intra
+            })
+            .collect();
+        let padded: Vec<u64> = nest
+            .iter()
+            .zip(&intra)
+            .map(|(l, &f)| {
+                legal_intra_factors(l.trip, 4, 32)
+                    .into_iter()
+                    .find(|c| c.intra == f)
+                    .unwrap()
+                    .padded
+            })
+            .collect();
+        let cfg = TaskConfig {
+            task: t,
+            perm: (0..nest.len()).collect(),
+            padded_trip: padded.clone(),
+            intra,
+            ii: 3,
+            plans: BTreeMap::new(),
+            slr: 0,
+        };
+        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        for a in geo.arrays() {
+            let mut prev: Option<u64> = None;
+            for lvl in 0..geo.levels() {
+                let dims = geo.tile_dims(&a, lvl);
+                let elems: u64 = dims.iter().product();
+                // deeper levels shrink (or keep) the tile
+                if let Some(p) = prev {
+                    assert!(elems <= p, "{}: {a} grew at level {lvl}", k.name);
+                }
+                prev = Some(elems);
+                // counts are monotone the other way
+                if lvl > 0 {
+                    assert!(geo.transfer_count(lvl) >= geo.transfer_count(lvl - 1));
+                }
+            }
+            // partitioning equals the product of intra factors on indexed dims
+            let parts = partition_of(&geo, &a);
+            assert!(parts >= 1);
+        }
+    });
+}
+
+#[test]
+fn prop_latency_positive_and_buffering_never_hurts() {
+    let dev = Device::u55c();
+    for_random(0x1A7, 60, |rng, i| {
+        let (k, _) = random_config(rng, i);
+        let fg = fuse(&k);
+        let t = (rng.next_u64() as usize) % fg.tasks.len();
+        let rep = fg.tasks[t].representative(&k);
+        let nest = &k.statements[rep].loops;
+        let intra: Vec<u64> = nest
+            .iter()
+            .map(|l| rng.choose(&legal_intra_factors(l.trip, 0, 16)).intra)
+            .collect();
+        let cfg = TaskConfig {
+            task: t,
+            perm: (0..nest.len()).collect(),
+            padded_trip: nest.iter().map(|l| l.trip).collect(),
+            intra,
+            ii: 3,
+            plans: BTreeMap::new(),
+            slr: 0,
+        };
+        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        let with = task_latency(&geo, &dev, true);
+        let without = task_latency(&geo, &dev, false);
+        assert!(with > 0);
+        assert!(with <= without, "{}: overlap {} > serial {}", k.name, with, without);
+    });
+}
+
+#[test]
+fn prop_plan_validation_rejects_inverted_levels() {
+    for_random(0x9A9, 100, |rng, _| {
+        let d = rng.range(0, 3) as usize;
+        let t = rng.range(0, 3) as usize;
+        let plan = TransferPlan {
+            define_level: d,
+            transfer_level: t,
+            bitwidth: *rng.choose(&[32u64, 64, 128, 256, 512]),
+            buffers: rng.range(1, 3),
+        };
+        assert_eq!(plan.validate().is_ok(), d <= t);
+    });
+}
+
+#[test]
+fn prop_solver_feasible_under_random_budgets() {
+    let dev = Device::u55c();
+    for_random(0x5010, 10, |rng, i| {
+        let kernels = ["gemm", "bicg", "madd", "2-madd", "mvt"];
+        let k = polybench::by_name(kernels[i % kernels.len()]).unwrap();
+        let fg = fuse(&k);
+        let frac = [0.3, 0.45, 0.6, 0.8][(rng.next_u64() % 4) as usize];
+        let slrs = 1 + (rng.next_u64() % 3) as usize;
+        let opts = SolverOptions {
+            scenario: Scenario::OnBoard { slrs, frac },
+            beam: 8,
+            max_factor_per_loop: 16,
+            max_unroll: 256,
+            timeout: Duration::from_secs(20),
+            ..SolverOptions::default()
+        };
+        let r = solve(&k, &dev, &opts);
+        r.design.validate(&k, &fg, dev.slrs).unwrap();
+        let budget = dev.slr.scaled(frac);
+        assert!(
+            prometheus::dse::constraints::feasible(&k, &fg, &r.design, &dev, &budget),
+            "{} infeasible at {slrs}x{frac}",
+            k.name
+        );
+        // and it simulates
+        let sim = simulate(&k, &fg, &r.design, &dev);
+        assert!(sim.cycles > 0);
+    });
+}
