@@ -1,0 +1,100 @@
+//! Service-layer benchmark: cold vs. warm batch throughput through the
+//! QoR knowledge base, parallel fan-out scaling, and the warm-start
+//! effect on a single solve. Hand-rolled harness (criterion is not
+//! vendored in this environment), same as the other bench targets.
+//!
+//! ```bash
+//! cargo bench --bench service_batch
+//! ```
+
+use prometheus::coordinator::flow::quick_solver;
+use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::service::batch::{run_batch, BatchOptions, BatchRequest};
+use prometheus::service::QorDb;
+use std::time::Instant;
+
+fn requests() -> Vec<BatchRequest> {
+    let kernels = ["gemm", "2mm", "3mm", "bicg", "atax", "mvt", "madd", "gesummv"];
+    let scenarios = [
+        Scenario::Rtl,
+        Scenario::OnBoard { slrs: 1, frac: 0.6 },
+        Scenario::OnBoard { slrs: 3, frac: 0.6 },
+    ];
+    let mut reqs = Vec::new();
+    for k in kernels {
+        for s in scenarios {
+            reqs.push(BatchRequest::new(k, s));
+        }
+    }
+    reqs
+}
+
+fn main() {
+    let dev = Device::u55c();
+    let reqs = requests();
+    let nproc = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    println!(
+        "== service_batch: {} requests (8 kernels x 3 scenarios), {} hw threads ==\n",
+        reqs.len(),
+        nproc
+    );
+
+    // 1. serial vs parallel cold batch (fan-out scaling)
+    let serial_opts = BatchOptions { solver: quick_solver(), jobs: 1 };
+    let mut db_serial = QorDb::new();
+    let t0 = Instant::now();
+    run_batch(&reqs, &dev, &mut db_serial, &serial_opts).unwrap();
+    let serial = t0.elapsed();
+    println!(
+        "cold batch, 1 worker:   {serial:>10.2?}  ({:.2} req/s)",
+        reqs.len() as f64 / serial.as_secs_f64()
+    );
+
+    let par_opts = BatchOptions { solver: quick_solver(), jobs: nproc };
+    let mut db = QorDb::new();
+    let t1 = Instant::now();
+    let cold = run_batch(&reqs, &dev, &mut db, &par_opts).unwrap();
+    let cold_t = t1.elapsed();
+    println!(
+        "cold batch, {nproc} workers: {cold_t:>10.2?}  ({:.2} req/s, {:.2}x vs serial)",
+        reqs.len() as f64 / cold_t.as_secs_f64(),
+        serial.as_secs_f64() / cold_t.as_secs_f64()
+    );
+
+    // 2. warm batch: every request a knowledge-base hit
+    let t2 = Instant::now();
+    let warm = run_batch(&reqs, &dev, &mut db, &par_opts).unwrap();
+    let warm_t = t2.elapsed();
+    println!(
+        "warm batch (all hits):  {warm_t:>10.2?}  ({:.0} req/s, {:.0}x vs cold)\n",
+        reqs.len() as f64 / warm_t.as_secs_f64(),
+        cold_t.as_secs_f64() / warm_t.as_secs_f64()
+    );
+    println!("{}", cold.render());
+    println!("cold: {}", cold.summary());
+    println!("warm: {}", warm.summary());
+
+    // 3. warm-start effect on a fresh solve: incumbent-seeded
+    //    branch-and-bound vs cold branch-and-bound on the same kernel
+    let k = polybench::by_name("3mm").unwrap();
+    let base = quick_solver();
+    let t3 = Instant::now();
+    let cold_solve = solve(&k, &dev, &base);
+    let cold_solve_t = t3.elapsed();
+    let t4 = Instant::now();
+    let warm_solve = solve(
+        &k,
+        &dev,
+        &SolverOptions { incumbent: Some(cold_solve.design.clone()), ..base },
+    );
+    let warm_solve_t = t4.elapsed();
+    println!(
+        "\nsolver warm start (3mm): cold {cold_solve_t:.2?} ({} pts) -> warm {warm_solve_t:.2?} \
+         ({} pts), {:.2}x",
+        cold_solve.explored,
+        warm_solve.explored,
+        cold_solve_t.as_secs_f64() / warm_solve_t.as_secs_f64()
+    );
+}

@@ -63,26 +63,60 @@ pub fn optimize_kernel(
     // 1. solve the design space
     let mut solver = opts.solver.clone();
     solver.scenario = opts.scenario;
-    let result = solve(&kernel, dev, &solver);
+    let result = solve_validated(&kernel, &fused, dev, &solver)?;
+
+    finish_flow(kernel, fused, result, dev, opts)
+}
+
+/// Stage 1 of the flow: solve and structurally validate the winner.
+/// Shared by [`optimize_kernel`] and the miss path of
+/// [`optimize_kernel_cached`].
+fn solve_validated(
+    kernel: &Kernel,
+    fused: &FusedGraph,
+    dev: &Device,
+    solver: &SolverOptions,
+) -> Result<SolverResult> {
+    let result = solve(kernel, dev, solver);
     result
         .design
-        .validate(&kernel, &fused, dev.slrs)
+        .validate(kernel, fused, dev.slrs)
         .map_err(|e| anyhow::anyhow!("solver produced invalid design: {e}"))?;
+    Ok(result)
+}
 
+/// Stages 2–5 of the flow (simulate → board model → codegen → optional
+/// PJRT validation), shared by the solve path and the QoR-cache hit path
+/// so the two can never drift apart.
+fn finish_flow(
+    kernel: Kernel,
+    fused: FusedGraph,
+    result: SolverResult,
+    dev: &Device,
+    opts: &OptimizeOptions,
+) -> Result<OptimizedKernel> {
     // 2. simulate (RTL-equivalent)
     let sim = simulate(&kernel, &fused, &result.design, dev);
 
     // 3. board model where applicable
-    let (board, gf) = match opts.scenario {
-        Scenario::Rtl => (None, sim.gflops(&kernel, dev)),
-        Scenario::OnBoard { frac, .. } => {
-            let budget = dev.slr.scaled(frac);
-            let b = board_eval(&kernel, &fused, &result.design, dev, &budget);
-            let g = b.gflops;
-            (Some(b), g)
-        }
-    };
+    let (board, gf) = scenario_eval(&kernel, &fused, &result.design, dev, opts.scenario, &sim);
 
+    finish_flow_with(kernel, fused, result, sim, board, gf, opts)
+}
+
+/// Stages 4–5 with the evaluation products already computed — lets the
+/// cached flow record a solve (which needs the same sim/GF/s) without
+/// evaluating the design twice.
+#[allow(clippy::too_many_arguments)]
+fn finish_flow_with(
+    kernel: Kernel,
+    fused: FusedGraph,
+    result: SolverResult,
+    sim: SimReport,
+    board: Option<BoardReport>,
+    gf: f64,
+    opts: &OptimizeOptions,
+) -> Result<OptimizedKernel> {
     // 4. codegen
     if let Some(dir) = &opts.emit_dir {
         std::fs::create_dir_all(dir)?;
@@ -92,9 +126,13 @@ pub fn optimize_kernel(
         std::fs::write(dir.join(format!("{}_host.cpp", kernel.name.replace('-', "_"))), host)?;
     }
 
-    // 5. functional validation through the PJRT artifact
+    // 5. functional validation through the PJRT artifact (skipped when
+    //    the runtime is not compiled in — validation is optional here,
+    //    unlike the explicit `validate` CLI path)
     let validation_rel_err = match &opts.artifacts_dir {
-        Some(root) if artifact_exists(root, &kernel.name) => {
+        Some(root)
+            if crate::runtime::Executor::available() && artifact_exists(root, &kernel.name) =>
+        {
             let exe = crate::runtime::Executor::load(root, &kernel.name)?;
             Some(exe.validate()?)
         }
@@ -114,6 +152,123 @@ pub fn optimize_kernel(
 
 fn artifact_exists(root: &Path, kernel: &str) -> bool {
     crate::runtime::artifact_path(root, kernel).exists()
+}
+
+/// Scenario-consistent evaluation of a solved design: the board model
+/// (and its derated GF/s) for on-board scenarios, the simulator's GF/s
+/// at the target clock for RTL. The single source of truth for "what
+/// throughput do we report for this request" — the flow and the batch
+/// orchestrator both call it, so their numbers cannot drift apart.
+pub fn scenario_eval(
+    k: &Kernel,
+    fg: &FusedGraph,
+    design: &DesignConfig,
+    dev: &Device,
+    scenario: Scenario,
+    sim: &SimReport,
+) -> (Option<BoardReport>, f64) {
+    match scenario {
+        Scenario::Rtl => (None, sim.gflops(k, dev)),
+        Scenario::OnBoard { frac, .. } => {
+            let budget = dev.slr.scaled(frac);
+            let b = board_eval(k, fg, design, dev, &budget);
+            let g = b.gflops;
+            (Some(b), g)
+        }
+    }
+}
+
+/// How `optimize_kernel_cached` answered a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheStatus {
+    /// Exact QoR-DB hit: the solver was skipped entirely.
+    Hit,
+    /// Miss, but a related record warm-started the solver.
+    WarmMiss,
+    /// Miss with no usable incumbent.
+    ColdMiss,
+}
+
+impl CacheStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CacheStatus::Hit => "hit",
+            CacheStatus::WarmMiss => "warm miss",
+            CacheStatus::ColdMiss => "cold miss",
+        }
+    }
+}
+
+/// The flow, fronted by the QoR knowledge base (service layer).
+///
+/// On an exact key hit the solver is skipped: the cached design is
+/// re-validated, re-simulated (cheap — the simulator is the flow's
+/// authority anyway) and the rest of the flow (board model, codegen,
+/// PJRT validation) runs as usual. On a miss the solver runs —
+/// warm-started from the best related record when one exists — and the
+/// winning design is inserted into `db`. The caller owns persistence
+/// ([`crate::service::QorDb::load`] / [`crate::service::QorDb::save`]).
+pub fn optimize_kernel_cached(
+    kernel_name: &str,
+    dev: &Device,
+    opts: &OptimizeOptions,
+    db: &mut crate::service::QorDb,
+) -> Result<(OptimizedKernel, CacheStatus)> {
+    let mut solver = opts.solver.clone();
+    solver.scenario = opts.scenario;
+    solver.incumbent = None;
+    let key = crate::service::DesignKey::new(kernel_name, dev, &solver);
+    let kernel = crate::ir::polybench::by_name(kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name}"))?;
+    let fused = fuse(&kernel);
+
+    // Exact hit: rebuild the flow products around the cached design.
+    let mut stale_hit = false;
+    if let Some(rec) = db.get(&key) {
+        // A record from an incompatible (older) code or resource model
+        // (same on-disk version) is a miss, not an error: drop through
+        // to a fresh solve and evict it. Same predicate as the solver's
+        // warm-start gate.
+        if !crate::dse::solver::design_usable(&kernel, &fused, &rec.design, dev, opts.scenario) {
+            stale_hit = true;
+        } else {
+            let design = rec.design.clone();
+            let latency = graph_latency(&kernel, &fused, &design, dev);
+            let result = SolverResult {
+                gflops: gflops(&kernel, latency.total, dev),
+                design,
+                latency,
+                solve_time: std::time::Duration::ZERO,
+                explored: 0,
+                timed_out: false,
+                warm_started: false,
+            };
+            let r = finish_flow(kernel, fused, result, dev, opts)?;
+            return Ok((r, CacheStatus::Hit));
+        }
+    }
+    if stale_hit {
+        db.remove_canonical(&key.canonical());
+    }
+
+    // Miss: solve (warm-started when the KB has a related design).
+    // `warm_started` comes from the solver, the only party that knows
+    // whether the incumbent was actually usable under this scenario.
+    solver.incumbent = db
+        .incumbent_for(kernel_name, solver.model, solver.overlap)
+        .map(|rec| rec.design.clone());
+    let result = solve_validated(&kernel, &fused, dev, &solver)?;
+    let status =
+        if result.warm_started { CacheStatus::WarmMiss } else { CacheStatus::ColdMiss };
+    // Evaluate once, then record the solve *before* the fallible finish
+    // stages (codegen emit, PJRT validation): a completed solve must
+    // never be lost to an unwritable emit dir. The caller persists the
+    // db even when this function errors.
+    let sim = simulate(&kernel, &fused, &result.design, dev);
+    let (board, gf) = scenario_eval(&kernel, &fused, &result.design, dev, opts.scenario, &sim);
+    db.insert(&key, crate::service::QorRecord::from_products(&result, &sim, gf));
+    let r = finish_flow_with(kernel, fused, result, sim, board, gf, opts)?;
+    Ok((r, status))
 }
 
 /// Convenience: analytic GF/s of an existing design (used by reports).
@@ -167,5 +322,32 @@ mod tests {
     fn unknown_kernel_errors() {
         let dev = Device::u55c();
         assert!(optimize_kernel("nope", &dev, &OptimizeOptions::default()).is_err());
+    }
+
+    #[test]
+    fn cached_flow_hits_on_second_call() {
+        let dev = Device::u55c();
+        let opts = OptimizeOptions { solver: quick_solver(), ..OptimizeOptions::default() };
+        let mut db = crate::service::QorDb::new();
+        let (first, st1) = optimize_kernel_cached("madd", &dev, &opts, &mut db).unwrap();
+        assert_eq!(st1, CacheStatus::ColdMiss);
+        assert_eq!(db.len(), 1);
+        let (second, st2) = optimize_kernel_cached("madd", &dev, &opts, &mut db).unwrap();
+        assert_eq!(st2, CacheStatus::Hit);
+        // the cached answer is the same design, solved in ~zero time
+        assert_eq!(second.result.design, first.result.design);
+        assert_eq!(second.sim.cycles, first.sim.cycles);
+        assert_eq!(second.result.explored, 0);
+        // a different scenario is a different key -> a miss, not a hit
+        // (warm or cold depends on whether the RTL design fits the
+        // on-board budget; either way it must solve and land in the db)
+        let onboard = OptimizeOptions {
+            scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 },
+            solver: quick_solver(),
+            ..OptimizeOptions::default()
+        };
+        let (_, st3) = optimize_kernel_cached("madd", &dev, &onboard, &mut db).unwrap();
+        assert_ne!(st3, CacheStatus::Hit);
+        assert_eq!(db.len(), 2);
     }
 }

@@ -5,5 +5,7 @@
 pub mod flow;
 pub mod regen;
 
-pub use flow::{optimize_kernel, OptimizeOptions, OptimizedKernel};
+pub use flow::{
+    optimize_kernel, optimize_kernel_cached, CacheStatus, OptimizeOptions, OptimizedKernel,
+};
 pub use regen::regenerate_until_feasible;

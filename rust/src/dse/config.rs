@@ -102,7 +102,7 @@ impl TaskConfig {
 }
 
 /// A complete design for one kernel.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DesignConfig {
     pub kernel: String,
     pub model: ExecutionModel,
@@ -163,6 +163,112 @@ impl DesignConfig {
     }
 }
 
+// ---- serde: persistence for the QoR knowledge base ---------------------
+//
+// Manual `serde::{Serialize, Deserialize}` implementations: the vendored
+// serde (see `vendor/serde`) has no derive proc-macro, so the impls a
+// `#[derive(Serialize, Deserialize)]` would generate are written out by
+// hand. The on-disk JSON shape is versioned by the QoR-DB envelope
+// (`service::qor_db::FORMAT_VERSION`), not per type.
+mod serde_impls {
+    use super::*;
+    use serde::{Deserialize, Error, Serialize, Value};
+
+    impl Serialize for ExecutionModel {
+        fn serialize(&self) -> Value {
+            Value::Str(
+                match self {
+                    ExecutionModel::Dataflow => "dataflow",
+                    ExecutionModel::Sequential => "sequential",
+                }
+                .to_string(),
+            )
+        }
+    }
+
+    impl Deserialize for ExecutionModel {
+        fn deserialize(v: &Value) -> Result<ExecutionModel, Error> {
+            match v.as_str() {
+                Some("dataflow") => Ok(ExecutionModel::Dataflow),
+                Some("sequential") => Ok(ExecutionModel::Sequential),
+                other => Err(Error::new(format!("invalid execution model {other:?}"))),
+            }
+        }
+    }
+
+    impl Serialize for TransferPlan {
+        fn serialize(&self) -> Value {
+            Value::Obj(vec![
+                ("define_level".to_string(), self.define_level.serialize()),
+                ("transfer_level".to_string(), self.transfer_level.serialize()),
+                ("bitwidth".to_string(), self.bitwidth.serialize()),
+                ("buffers".to_string(), self.buffers.serialize()),
+            ])
+        }
+    }
+
+    impl Deserialize for TransferPlan {
+        fn deserialize(v: &Value) -> Result<TransferPlan, Error> {
+            Ok(TransferPlan {
+                define_level: usize::deserialize(v.field("define_level")?)?,
+                transfer_level: usize::deserialize(v.field("transfer_level")?)?,
+                bitwidth: u64::deserialize(v.field("bitwidth")?)?,
+                buffers: u64::deserialize(v.field("buffers")?)?,
+            })
+        }
+    }
+
+    impl Serialize for TaskConfig {
+        fn serialize(&self) -> Value {
+            Value::Obj(vec![
+                ("task".to_string(), self.task.serialize()),
+                ("perm".to_string(), self.perm.serialize()),
+                ("padded_trip".to_string(), self.padded_trip.serialize()),
+                ("intra".to_string(), self.intra.serialize()),
+                ("ii".to_string(), self.ii.serialize()),
+                ("plans".to_string(), self.plans.serialize()),
+                ("slr".to_string(), self.slr.serialize()),
+            ])
+        }
+    }
+
+    impl Deserialize for TaskConfig {
+        fn deserialize(v: &Value) -> Result<TaskConfig, Error> {
+            Ok(TaskConfig {
+                task: usize::deserialize(v.field("task")?)?,
+                perm: Vec::deserialize(v.field("perm")?)?,
+                padded_trip: Vec::deserialize(v.field("padded_trip")?)?,
+                intra: Vec::deserialize(v.field("intra")?)?,
+                ii: u64::deserialize(v.field("ii")?)?,
+                plans: BTreeMap::deserialize(v.field("plans")?)?,
+                slr: usize::deserialize(v.field("slr")?)?,
+            })
+        }
+    }
+
+    impl Serialize for DesignConfig {
+        fn serialize(&self) -> Value {
+            Value::Obj(vec![
+                ("kernel".to_string(), self.kernel.serialize()),
+                ("model".to_string(), self.model.serialize()),
+                ("overlap".to_string(), self.overlap.serialize()),
+                ("tasks".to_string(), self.tasks.serialize()),
+            ])
+        }
+    }
+
+    impl Deserialize for DesignConfig {
+        fn deserialize(v: &Value) -> Result<DesignConfig, Error> {
+            Ok(DesignConfig {
+                kernel: String::deserialize(v.field("kernel")?)?,
+                model: ExecutionModel::deserialize(v.field("model")?)?,
+                overlap: bool::deserialize(v.field("overlap")?)?,
+                tasks: Vec::deserialize(v.field("tasks")?)?,
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +304,32 @@ mod tests {
         let red = [false, false, true];
         assert_eq!(tc.nonred_order(&red), vec![0, 1]);
         assert_eq!(tc.red_order(&red), vec![2]);
+    }
+
+    #[test]
+    fn design_config_serde_round_trip() {
+        use serde::{Deserialize, Serialize};
+        let mut plans = BTreeMap::new();
+        plans.insert(
+            "A".to_string(),
+            TransferPlan { define_level: 0, transfer_level: 1, bitwidth: 512, buffers: 2 },
+        );
+        let design = DesignConfig {
+            kernel: "gemm".into(),
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+            tasks: vec![TaskConfig {
+                task: 0,
+                perm: vec![2, 0, 1],
+                padded_trip: vec![200, 220, 240],
+                intra: vec![10, 4, 8],
+                ii: 3,
+                plans,
+                slr: 1,
+            }],
+        };
+        let text = serde::json::to_string_pretty(&design.serialize());
+        let back = DesignConfig::deserialize(&serde::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, design);
     }
 }

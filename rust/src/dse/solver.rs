@@ -41,6 +41,52 @@ pub enum Scenario {
     OnBoard { slrs: usize, frac: f64 },
 }
 
+impl std::fmt::Display for Scenario {
+    /// Canonical text form, also used by the QoR-DB cache key:
+    /// `rtl` or `onboard:<slrs>:<frac>`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scenario::Rtl => write!(f, "rtl"),
+            Scenario::OnBoard { slrs, frac } => write!(f, "onboard:{slrs}:{frac}"),
+        }
+    }
+}
+
+// Manual `serde` impls (the vendored serde has no derive proc-macro):
+// part of the serde coverage for the design-space types (DesignConfig,
+// TaskConfig, TransferPlan, ExecutionModel, Scenario). Today's QoR-DB
+// records reach Scenario only through the canonical key string, but the
+// impls keep the type ready for richer record schemas; the round-trip
+// is pinned by `scenario_serde_round_trip` below.
+impl serde::Serialize for Scenario {
+    fn serialize(&self) -> serde::Value {
+        match self {
+            Scenario::Rtl => serde::Value::Obj(vec![(
+                "kind".to_string(),
+                serde::Value::Str("rtl".to_string()),
+            )]),
+            Scenario::OnBoard { slrs, frac } => serde::Value::Obj(vec![
+                ("kind".to_string(), serde::Value::Str("onboard".to_string())),
+                ("slrs".to_string(), serde::Serialize::serialize(slrs)),
+                ("frac".to_string(), serde::Serialize::serialize(frac)),
+            ]),
+        }
+    }
+}
+
+impl serde::Deserialize for Scenario {
+    fn deserialize(v: &serde::Value) -> Result<Scenario, serde::Error> {
+        match v.field("kind")?.as_str() {
+            Some("rtl") => Ok(Scenario::Rtl),
+            Some("onboard") => Ok(Scenario::OnBoard {
+                slrs: serde::Deserialize::deserialize(v.field("slrs")?)?,
+                frac: serde::Deserialize::deserialize(v.field("frac")?)?,
+            }),
+            other => Err(serde::Error::new(format!("invalid scenario kind {other:?}"))),
+        }
+    }
+}
+
 /// Solver knobs. Baselines restrict this space to mimic each framework.
 #[derive(Debug, Clone)]
 pub struct SolverOptions {
@@ -62,6 +108,13 @@ pub struct SolverOptions {
     pub beam: usize,
     /// Anytime timeout.
     pub timeout: Duration,
+    /// Warm-start incumbent (service layer: a previously-solved design
+    /// from the QoR knowledge base). When structurally valid and feasible
+    /// for this scenario it seeds the branch-and-bound bound, so the DFS
+    /// prunes against it from the first node and the solver can never
+    /// return a worse design than the incumbent. Ignored (never copied
+    /// into the result blindly) when it does not fit the scenario.
+    pub incumbent: Option<DesignConfig>,
 }
 
 impl Default for SolverOptions {
@@ -77,6 +130,7 @@ impl Default for SolverOptions {
             max_unroll: 4096,
             beam: 192,
             timeout: Duration::from_secs(120),
+            incumbent: None,
         }
     }
 }
@@ -91,6 +145,10 @@ pub struct SolverResult {
     /// Design points evaluated.
     pub explored: u64,
     pub timed_out: bool,
+    /// Whether a usable `SolverOptions::incumbent` actually seeded the
+    /// branch-and-bound bound (false when no incumbent was given *or*
+    /// the given one was rejected as structurally invalid/infeasible).
+    pub warm_started: bool,
 }
 
 /// One per-task candidate with its standalone metrics.
@@ -107,6 +165,24 @@ pub fn region_budget(dev: &Device, scenario: Scenario) -> (usize, SlrBudget) {
         Scenario::Rtl => (1, dev.total()),
         Scenario::OnBoard { slrs, frac } => (slrs.min(dev.slrs), dev.slr.scaled(frac)),
     }
+}
+
+/// Whether `design` is servable under `scenario` on the *current*
+/// resource model: structural validation, SLR ids within the scenario's
+/// regions, and per-region feasibility. The single predicate behind
+/// both the solver's warm-start incumbent gate and the QoR cache's
+/// hit/stale check — keep them from drifting by construction.
+pub fn design_usable(
+    k: &Kernel,
+    fg: &FusedGraph,
+    design: &DesignConfig,
+    dev: &Device,
+    scenario: Scenario,
+) -> bool {
+    let (regions, budget) = region_budget(dev, scenario);
+    design.validate(k, fg, dev.slrs).is_ok()
+        && design.tasks.iter().all(|t| t.slr < regions)
+        && crate::dse::constraints::feasible(k, fg, design, dev, &budget)
 }
 
 /// Solve the design space for `k`. Returns the best feasible design found.
@@ -167,7 +243,22 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
     }
 
     // ---- stage 3: global assembly over candidates × SLRs ---------------
-    let mut best: Option<(u64, Vec<(usize, usize)>)> = None; // (latency, [(cand, slr)])
+    // Warm start: a valid, feasible incumbent (e.g. a QoR-DB design from
+    // a previous run) becomes the initial bound, so the DFS prunes
+    // against it immediately and the anytime result can never be worse.
+    let mut best: Option<(u64, DesignConfig)> = None; // (simulated latency, design)
+    let mut warm_started = false;
+    if let Some(inc) = &opts.incumbent {
+        let usable = inc.kernel == k.name
+            && inc.model == opts.model
+            && inc.overlap == opts.overlap
+            && design_usable(k, &fg, inc, dev, opts.scenario);
+        if usable {
+            let lat = crate::sim::engine::simulate(k, &fg, inc, dev).cycles;
+            best = Some((lat, inc.clone()));
+            warm_started = true;
+        }
+    }
     let mut assign: Vec<(usize, usize)> = Vec::new();
     dfs_assign(
         k,
@@ -184,22 +275,7 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
         &mut timed_out,
     );
 
-    let (_, picks) = best.expect("at least one feasible assembly");
-    let tasks: Vec<TaskConfig> = picks
-        .iter()
-        .enumerate()
-        .map(|(t, &(c, slr))| {
-            let mut cfg = per_task[t][c].cfg.clone();
-            cfg.slr = slr;
-            cfg
-        })
-        .collect();
-    let design = DesignConfig {
-        kernel: k.name.clone(),
-        model: opts.model,
-        overlap: opts.overlap,
-        tasks,
-    };
+    let (_, design) = best.expect("at least one feasible assembly");
     let latency = graph_latency(k, &fg, &design, dev);
     let gf = gflops(k, latency.total, dev);
     SolverResult {
@@ -209,6 +285,7 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
         solve_time: start.elapsed(),
         explored,
         timed_out,
+        warm_started,
     }
 }
 
@@ -503,7 +580,7 @@ fn dfs_assign(
     regions: usize,
     per_task: &[Vec<Candidate>],
     assign: &mut Vec<(usize, usize)>,
-    best: &mut Option<(u64, Vec<(usize, usize)>)>,
+    best: &mut Option<(u64, DesignConfig)>,
     start: Instant,
     explored: &mut u64,
     timed_out: &mut bool,
@@ -539,7 +616,7 @@ fn dfs_assign(
         // heuristic-beam local optima from inverting feature ablations.
         let lat = crate::sim::engine::simulate(k, fg, &design, dev).cycles;
         if best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true) {
-            *best = Some((lat, assign.clone()));
+            *best = Some((lat, design));
         }
         return;
     }
@@ -631,6 +708,49 @@ mod tests {
         let fg = fuse(&k);
         let budget = dev.slr.scaled(0.6);
         assert!(crate::dse::constraints::feasible(&k, &fg, &board.design, &dev, &budget));
+    }
+
+    #[test]
+    fn scenario_serde_round_trip() {
+        use serde::{Deserialize, Serialize};
+        for s in [Scenario::Rtl, Scenario::OnBoard { slrs: 3, frac: 0.6 }] {
+            let v = s.serialize();
+            assert_eq!(Scenario::deserialize(&v).unwrap(), s);
+        }
+        assert!(Scenario::deserialize(&serde::Value::Null).is_err());
+    }
+
+    #[test]
+    fn warm_start_never_worse() {
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let fg = fuse(&k);
+        let cold = solve(&k, &dev, &quick_opts());
+        let inc_cycles = crate::sim::engine::simulate(&k, &fg, &cold.design, &dev).cycles;
+        // a much weaker search, warm-started from the cold design, may
+        // not beat the incumbent but can never fall below it
+        let warm = solve(
+            &k,
+            &dev,
+            &SolverOptions { incumbent: Some(cold.design.clone()), beam: 2, ..quick_opts() },
+        );
+        let warm_cycles = crate::sim::engine::simulate(&k, &fg, &warm.design, &dev).cycles;
+        assert!(warm_cycles <= inc_cycles, "warm {warm_cycles} > incumbent {inc_cycles}");
+        assert!(warm.warm_started, "usable incumbent must be reported as a warm start");
+    }
+
+    #[test]
+    fn mismatched_incumbent_is_ignored() {
+        let k = polybench::gemm();
+        let other = polybench::bicg();
+        let dev = Device::u55c();
+        let inc = solve(&other, &dev, &quick_opts()).design;
+        // an incumbent from another kernel must not leak into the result
+        let r = solve(&k, &dev, &SolverOptions { incumbent: Some(inc), ..quick_opts() });
+        assert_eq!(r.design.kernel, "gemm");
+        assert!(!r.warm_started, "rejected incumbent must not count as a warm start");
+        let fg = fuse(&k);
+        r.design.validate(&k, &fg, dev.slrs).unwrap();
     }
 
     #[test]

@@ -32,9 +32,11 @@ pub mod hw;
 pub mod ir;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod testutil;
 
-pub use coordinator::flow::{optimize_kernel, OptimizeOptions};
+pub use coordinator::flow::{optimize_kernel, optimize_kernel_cached, OptimizeOptions};
 pub use dse::config::DesignConfig;
 pub use ir::kernel::Kernel;
+pub use service::{run_batch, BatchOptions, BatchRequest, DesignKey, QorDb};

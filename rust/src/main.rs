@@ -5,7 +5,8 @@
 //! ```text
 //! prometheus list                               list kernels (Table 5 data)
 //! prometheus analyze  <kernel>                  task graph + fusion report
-//! prometheus optimize <kernel> [--onboard N --frac F] [--emit DIR]
+//! prometheus optimize <kernel> [--onboard N --frac F] [--emit DIR] [--db FILE]
+//! prometheus batch    [--kernels K,..] [--scenarios S,..] [--db FILE] [--jobs N]
 //! prometheus compare  <kernel>                  all 6 frameworks (Table 3 shape)
 //! prometheus codegen  <kernel> <dir>            emit HLS-C++ + host
 //! prometheus validate <kernel> [--artifacts D]  PJRT functional check
@@ -16,11 +17,15 @@ use anyhow::{anyhow, Result};
 use prometheus::analysis::fusion::fuse;
 use prometheus::analysis::reuse;
 use prometheus::baselines::Framework;
-use prometheus::coordinator::flow::{optimize_kernel, OptimizeOptions};
+use prometheus::coordinator::flow::{optimize_kernel, optimize_kernel_cached, OptimizeOptions};
 use prometheus::dse::solver::{Scenario, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::ir::{oracle, polybench};
 use prometheus::report::{gfs, Table};
+use prometheus::service::batch::{
+    parse_model, parse_scenario, run_batch, BatchOptions, BatchRequest,
+};
+use prometheus::service::QorDb;
 use std::path::PathBuf;
 
 fn main() {
@@ -92,7 +97,25 @@ fn run() -> Result<()> {
                 emit_dir: flag_value(&args, "--emit").map(PathBuf::from),
                 artifacts_dir: flag_value(&args, "--artifacts").map(PathBuf::from),
             };
-            let r = optimize_kernel(name, &dev, &opts)?;
+            let r = match flag_value(&args, "--db").map(PathBuf::from) {
+                Some(db_path) => {
+                    let mut db = QorDb::load(&db_path);
+                    // Persist the db before propagating any flow error:
+                    // a completed solve survives e.g. an unwritable
+                    // --emit dir.
+                    let outcome = optimize_kernel_cached(name, &dev, &opts, &mut db);
+                    db.save(&db_path)?;
+                    let (r, status) = outcome?;
+                    println!(
+                        "QoR DB {}: {} ({} records)",
+                        db_path.display(),
+                        status.as_str(),
+                        db.len()
+                    );
+                    r
+                }
+                None => optimize_kernel(name, &dev, &opts)?,
+            };
             println!(
                 "kernel `{}`: {:.2} GF/s  ({} cycles, solve {:?}, {} points explored{})",
                 name,
@@ -120,6 +143,75 @@ fn run() -> Result<()> {
             if let Some(err) = r.validation_rel_err {
                 println!("  PJRT validation: max rel err {err:.2e}");
             }
+        }
+        "batch" => {
+            // Request set = kernels × scenarios × models (the service
+            // layer's traffic shape). Defaults exercise the Table 6 zoo
+            // subset on the RTL scenario.
+            let kernels: Vec<String> = match flag_value(&args, "--kernels").as_deref() {
+                None => vec!["gemm".into(), "2mm".into(), "3mm".into(), "bicg".into()],
+                Some("all") => polybench::all_kernels().iter().map(|k| k.name.clone()).collect(),
+                Some(list) => list.split(',').map(str::to_string).collect(),
+            };
+            let scenarios: Vec<Scenario> = flag_value(&args, "--scenarios")
+                .unwrap_or_else(|| "rtl".into())
+                .split(',')
+                .map(parse_scenario)
+                .collect::<Result<_>>()?;
+            let models = flag_value(&args, "--models")
+                .unwrap_or_else(|| "dataflow".into())
+                .split(',')
+                .map(parse_model)
+                .collect::<Result<Vec<_>>>()?;
+            let mut requests = Vec::new();
+            for k in &kernels {
+                for &s in &scenarios {
+                    for &m in &models {
+                        let mut r = BatchRequest::new(k, s);
+                        r.model = m;
+                        requests.push(r);
+                    }
+                }
+            }
+            let quick = args.iter().any(|a| a == "--quick");
+            let mut opts = BatchOptions::default();
+            if quick {
+                opts.solver = prometheus::coordinator::flow::quick_solver();
+            }
+            if let Some(j) = flag_value(&args, "--jobs") {
+                opts.jobs = j.parse()?;
+            }
+            let db_path = flag_value(&args, "--db").map(PathBuf::from);
+            let mut db = match &db_path {
+                Some(p) => QorDb::load(p),
+                None => QorDb::new(),
+            };
+            let preloaded = db.len();
+            let result = run_batch(&requests, &dev, &mut db, &opts);
+            // Persist whatever completed before reporting success or
+            // failure: a partially-failed batch keeps its finished
+            // solves.
+            match &db_path {
+                Some(p) => {
+                    db.save(p)?;
+                    println!(
+                        "QoR DB {}: {} records ({} loaded, {} new)",
+                        p.display(),
+                        db.len(),
+                        preloaded,
+                        // saturating: evicted-then-failed stale records
+                        // can shrink the db below its loaded size
+                        db.len().saturating_sub(preloaded)
+                    );
+                }
+                None => println!(
+                    "QoR DB: in-memory only ({} records) — pass --db FILE to persist",
+                    db.len()
+                ),
+            }
+            let report = result?;
+            print!("{}", report.render());
+            println!("{}", report.summary());
         }
         "compare" => {
             let name = args.get(1).ok_or_else(|| anyhow!("usage: compare <kernel>"))?;
@@ -187,7 +279,10 @@ fn run() -> Result<()> {
                  usage: prometheus <command>\n\
                  \x20 list                                 kernel zoo (Table 5 data)\n\
                  \x20 analyze  <kernel>                    task graph + fusion\n\
-                 \x20 optimize <kernel> [--onboard N --frac F] [--emit DIR] [--artifacts D]\n\
+                 \x20 optimize <kernel> [--onboard N --frac F] [--emit DIR] [--artifacts D] [--db FILE]\n\
+                 \x20 batch [--kernels K,..|all] [--scenarios rtl,onboard:N:F,..]\n\
+                 \x20       [--models dataflow,sequential] [--db FILE] [--jobs N] [--quick]\n\
+                 \x20                                      parallel batch service + QoR knowledge base\n\
                  \x20 compare  <kernel>                    all frameworks (Table 3/6 shape)\n\
                  \x20 codegen  <kernel> <dir>              emit HLS-C++ + OpenCL host\n\
                  \x20 validate <kernel> [--artifacts D]    PJRT functional check\n\

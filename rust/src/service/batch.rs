@@ -1,0 +1,506 @@
+//! Parallel batch optimization over kernel × scenario × model request
+//! sets, backed by the QoR knowledge base.
+//!
+//! The orchestrator is the service's hot path and is built for
+//! production-shaped traffic:
+//!
+//! 1. **cache lookup** — every request is canonicalized to a
+//!    [`DesignKey`]; exact hits are answered from the [`QorDb`] without
+//!    touching the solver;
+//! 2. **deduplication** — identical in-flight requests collapse to one
+//!    solve (a batch of `N` equal requests costs one solve, not `N`);
+//! 3. **parallel fan-out** — the remaining unique misses are solved on a
+//!    scoped worker pool (hand-rolled work queue over
+//!    `std::thread::scope`; rayon is not vendored in this environment,
+//!    matching the in-tree criterion/proptest stand-ins);
+//! 4. **warm start** — each miss seeds the solver with the best related
+//!    record ([`QorDb::incumbent_for`]), so even cold-ish solves prune
+//!    against a known-good bound;
+//! 5. **aggregate QoR report** — results render as a paper-shaped table
+//!    through [`crate::report::Table`].
+
+use super::qor_db::{DesignKey, QorDb, QorRecord};
+use crate::analysis::fusion::fuse;
+use crate::dse::config::ExecutionModel;
+use crate::dse::solver::{solve, Scenario, SolverOptions};
+use crate::hw::Device;
+use crate::ir::polybench;
+use crate::report::{gfs, Table};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One optimization request.
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub kernel: String,
+    pub scenario: Scenario,
+    pub model: ExecutionModel,
+    pub overlap: bool,
+}
+
+impl BatchRequest {
+    /// A dataflow/overlap (full-Prometheus) request.
+    pub fn new(kernel: &str, scenario: Scenario) -> BatchRequest {
+        BatchRequest {
+            kernel: kernel.to_string(),
+            scenario,
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+        }
+    }
+
+    /// Solver options for this request on top of the batch-wide base.
+    pub fn solver_options(&self, base: &SolverOptions) -> SolverOptions {
+        SolverOptions {
+            scenario: self.scenario,
+            model: self.model,
+            overlap: self.overlap,
+            incumbent: None,
+            ..base.clone()
+        }
+    }
+
+    /// Canonical cache key for this request.
+    pub fn key(&self, dev: &Device, base: &SolverOptions) -> DesignKey {
+        DesignKey::new(&self.kernel, dev, &self.solver_options(base))
+    }
+}
+
+/// Parse `rtl` or `onboard:<slrs>:<frac>` (CLI scenario syntax; the
+/// inverse of `Scenario`'s `Display`).
+pub fn parse_scenario(s: &str) -> Result<Scenario> {
+    if s == "rtl" {
+        return Ok(Scenario::Rtl);
+    }
+    if let Some(rest) = s.strip_prefix("onboard:") {
+        let mut parts = rest.split(':');
+        let slrs = parts
+            .next()
+            .filter(|p| !p.is_empty())
+            .ok_or_else(|| anyhow!("onboard scenario needs `<slrs>`: `{s}`"))?
+            .parse::<usize>()
+            .map_err(|e| anyhow!("bad SLR count in `{s}`: {e}"))?;
+        let frac = match parts.next() {
+            Some(f) => f.parse::<f64>().map_err(|e| anyhow!("bad fraction in `{s}`: {e}"))?,
+            None => 0.6,
+        };
+        if parts.next().is_some() {
+            bail!("trailing fields in scenario `{s}`");
+        }
+        if slrs == 0 {
+            bail!("SLR count must be >= 1 in `{s}`");
+        }
+        if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+            bail!("utilization fraction must be in (0, 1], got `{frac}` in `{s}`");
+        }
+        return Ok(Scenario::OnBoard { slrs, frac });
+    }
+    bail!("unknown scenario `{s}` (expected `rtl` or `onboard:<slrs>:<frac>`)")
+}
+
+/// Parse `dataflow` or `sequential`.
+pub fn parse_model(s: &str) -> Result<ExecutionModel> {
+    match s {
+        "dataflow" => Ok(ExecutionModel::Dataflow),
+        "sequential" => Ok(ExecutionModel::Sequential),
+        _ => bail!("unknown execution model `{s}` (expected `dataflow` or `sequential`)"),
+    }
+}
+
+/// Batch-wide options.
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// Base solver knobs; each request overrides scenario/model/overlap.
+    pub solver: SolverOptions,
+    /// Worker threads for the fan-out (clamped to the number of unique
+    /// misses; 0 means one worker).
+    pub jobs: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions {
+            solver: SolverOptions::default(),
+            jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// How one request was answered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// Exact QoR-DB hit — no solve.
+    Cache,
+    /// Solved, warm-started from a related record.
+    WarmSolve,
+    /// Solved from scratch.
+    ColdSolve,
+    /// Collapsed onto an identical in-flight request's solve.
+    Deduped,
+}
+
+impl Source {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Source::Cache => "cache",
+            Source::WarmSolve => "warm solve",
+            Source::ColdSolve => "cold solve",
+            Source::Deduped => "deduped",
+        }
+    }
+}
+
+/// Per-request outcome.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    pub request: BatchRequest,
+    /// Canonical cache key the request mapped to.
+    pub key: String,
+    pub source: Source,
+    pub gflops: f64,
+    pub latency_cycles: u64,
+    /// Time the solve took (zero for cache/dedup answers).
+    pub solve_time: Duration,
+}
+
+/// Aggregate result of one batch run.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub outcomes: Vec<BatchOutcome>,
+    pub cache_hits: usize,
+    pub deduped: usize,
+    pub solved: usize,
+    pub elapsed: Duration,
+}
+
+impl BatchReport {
+    /// Paper-shaped aggregate table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["Kernel", "Scenario", "Model", "GF/s", "Cycles", "Source"]);
+        for o in &self.outcomes {
+            let model = match o.request.model {
+                ExecutionModel::Dataflow => "dataflow",
+                ExecutionModel::Sequential => "sequential",
+            };
+            t.row(vec![
+                o.request.kernel.clone(),
+                o.request.scenario.to_string(),
+                model.to_string(),
+                gfs(o.gflops),
+                o.latency_cycles.to_string(),
+                o.source.as_str().to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// One-line summary for logs and the CLI footer.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests: {} cache hits, {} deduped, {} solved in {:.2?}",
+            self.outcomes.len(),
+            self.cache_hits,
+            self.deduped,
+            self.solved,
+            self.elapsed,
+        )
+    }
+}
+
+/// What one worker produced for one unique miss.
+struct SolvedJob {
+    canonical: String,
+    record: QorRecord,
+    warm: bool,
+    solve_time: Duration,
+}
+
+/// Best-effort text of a worker panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "solver panicked".to_string()
+    }
+}
+
+/// Run `requests` against the knowledge base, solving misses in
+/// parallel. New results are inserted into `db` (the caller decides
+/// when/where to persist it). Request order is preserved in the report.
+pub fn run_batch(
+    requests: &[BatchRequest],
+    dev: &Device,
+    db: &mut QorDb,
+    opts: &BatchOptions,
+) -> Result<BatchReport> {
+    let t0 = Instant::now();
+
+    // Validate every kernel up front: a typo should fail the batch
+    // before any solver time is spent.
+    for r in requests {
+        if polybench::by_name(&r.kernel).is_none() {
+            bail!("unknown kernel `{}` in batch request", r.kernel);
+        }
+    }
+
+    // Canonicalize, classify hits, dedup misses. A cached record whose
+    // design no longer validates against the current kernel zoo (a
+    // stale db from an older code version, same FORMAT_VERSION) is
+    // evicted and re-solved, mirroring `optimize_kernel_cached`.
+    let canon: Vec<String> =
+        requests.iter().map(|r| r.key(dev, &opts.solver).canonical()).collect();
+    let mut sources: Vec<Source> = Vec::with_capacity(requests.len());
+    let mut job_requests: Vec<usize> = Vec::new(); // request index per unique miss
+    for (i, key) in canon.iter().enumerate() {
+        let cached_valid = db.get_canonical(key).map(|rec| {
+            let k = polybench::by_name(&requests[i].kernel).expect("validated above");
+            crate::dse::solver::design_usable(&k, &fuse(&k), &rec.design, dev, requests[i].scenario)
+        });
+        if cached_valid == Some(false) {
+            db.remove_canonical(key);
+        }
+        if cached_valid == Some(true) {
+            sources.push(Source::Cache);
+        } else if canon[..i].contains(key) {
+            sources.push(Source::Deduped);
+        } else {
+            sources.push(Source::ColdSolve); // refined to WarmSolve below
+            job_requests.push(i);
+        }
+    }
+
+    // Warm-start incumbents resolved on this thread (the db is not
+    // shared with workers).
+    let incumbents: Vec<Option<crate::dse::config::DesignConfig>> = job_requests
+        .iter()
+        .map(|&ri| {
+            let r = &requests[ri];
+            db.incumbent_for(&r.kernel, r.model, r.overlap).map(|rec| rec.design.clone())
+        })
+        .collect();
+
+    // Parallel fan-out over the unique misses. Each job runs under
+    // `catch_unwind` so one infeasible request (the solver asserts on
+    // impossibly small budgets) fails that request, not the whole
+    // batch — completed solves still reach the knowledge base.
+    let results: Vec<Mutex<Option<Result<SolvedJob, String>>>> =
+        job_requests.iter().map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let workers = opts.jobs.max(1).min(job_requests.len().max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let j = cursor.fetch_add(1, Ordering::Relaxed);
+                if j >= job_requests.len() {
+                    break;
+                }
+                let req = &requests[job_requests[j]];
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut sopts = req.solver_options(&opts.solver);
+                    sopts.incumbent = incumbents[j].clone();
+                    let k = polybench::by_name(&req.kernel).expect("validated above");
+                    let fg = fuse(&k);
+                    let r = solve(&k, dev, &sopts);
+                    // Shared record constructor (simulated cycles +
+                    // scenario-consistent GF/s): identical to what
+                    // `optimize --db` would store for this request.
+                    let record = QorRecord::from_solve(&k, &fg, &r, req.scenario, dev);
+                    SolvedJob {
+                        canonical: canon[job_requests[j]].clone(),
+                        record,
+                        warm: r.warm_started,
+                        solve_time: r.solve_time,
+                    }
+                }));
+                *results[j].lock().unwrap() = Some(outcome.map_err(|p| panic_message(&p)));
+            });
+        }
+    });
+
+    // Fold results back into the knowledge base (completed solves
+    // first, so they survive even when some requests failed), then
+    // report failures.
+    let mut solve_times: std::collections::BTreeMap<String, (Duration, bool)> =
+        std::collections::BTreeMap::new();
+    let mut failures: Vec<String> = Vec::new();
+    let mut failed_keys: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    for (slot, &ri) in results.iter().zip(&job_requests) {
+        let req = &requests[ri];
+        match slot.lock().unwrap().take() {
+            Some(Ok(job)) => {
+                solve_times.insert(job.canonical.clone(), (job.solve_time, job.warm));
+                db.insert_canonical(job.canonical, job.record);
+            }
+            Some(Err(msg)) => {
+                failed_keys.insert(canon[ri].clone());
+                failures.push(format!("{} @ {}: {msg}", req.kernel, req.scenario));
+            }
+            None => {
+                failed_keys.insert(canon[ri].clone());
+                failures.push(format!("{} @ {}: job never ran", req.kernel, req.scenario));
+            }
+        }
+    }
+    if !failures.is_empty() {
+        // Count every request that got no answer, including the ones
+        // that deduped onto a failed solve.
+        let affected = canon.iter().filter(|c| failed_keys.contains(c.as_str())).count();
+        bail!(
+            "{affected} of {} batch requests failed across {} solves \
+             (completed solves were kept in the db): {}",
+            requests.len(),
+            failures.len(),
+            failures.join("; ")
+        );
+    }
+
+    let mut outcomes = Vec::with_capacity(requests.len());
+    let (mut cache_hits, mut deduped, mut solved) = (0usize, 0usize, 0usize);
+    for (i, req) in requests.iter().enumerate() {
+        let rec = db
+            .get_canonical(&canon[i])
+            .ok_or_else(|| anyhow!("request `{}` missing from db after batch", req.kernel))?;
+        let (source, solve_time) = match sources[i] {
+            Source::Cache => {
+                cache_hits += 1;
+                (Source::Cache, Duration::ZERO)
+            }
+            Source::Deduped => {
+                deduped += 1;
+                (Source::Deduped, Duration::ZERO)
+            }
+            _ => {
+                solved += 1;
+                match solve_times.get(&canon[i]) {
+                    Some(&(t, true)) => (Source::WarmSolve, t),
+                    Some(&(t, false)) => (Source::ColdSolve, t),
+                    None => (Source::ColdSolve, Duration::ZERO),
+                }
+            }
+        };
+        outcomes.push(BatchOutcome {
+            request: req.clone(),
+            key: canon[i].clone(),
+            source,
+            gflops: rec.gflops,
+            latency_cycles: rec.latency_cycles,
+            solve_time,
+        });
+    }
+
+    Ok(BatchReport { outcomes, cache_hits, deduped, solved, elapsed: t0.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_parsing_round_trips() {
+        assert_eq!(parse_scenario("rtl").unwrap(), Scenario::Rtl);
+        assert_eq!(
+            parse_scenario("onboard:3:0.6").unwrap(),
+            Scenario::OnBoard { slrs: 3, frac: 0.6 }
+        );
+        assert_eq!(
+            parse_scenario("onboard:1").unwrap(),
+            Scenario::OnBoard { slrs: 1, frac: 0.6 }
+        );
+        for s in ["rtl", "onboard:1:0.6", "onboard:3:0.15"] {
+            assert_eq!(parse_scenario(s).unwrap().to_string(), s);
+        }
+        assert!(parse_scenario("onboard:").is_err());
+        assert!(parse_scenario("onboard:x:0.6").is_err());
+        assert!(parse_scenario("onboard:1:0.6:9").is_err());
+        assert!(parse_scenario("board").is_err());
+        // degenerate fractions / SLR counts fail fast instead of
+        // panicking a solver worker later
+        assert!(parse_scenario("onboard:0:0.6").is_err());
+        assert!(parse_scenario("onboard:1:nan").is_err());
+        assert!(parse_scenario("onboard:1:inf").is_err());
+        assert!(parse_scenario("onboard:1:0").is_err());
+        assert!(parse_scenario("onboard:1:-0.5").is_err());
+        assert!(parse_scenario("onboard:1:1.5").is_err());
+    }
+
+    #[test]
+    fn model_parsing() {
+        assert_eq!(parse_model("dataflow").unwrap(), ExecutionModel::Dataflow);
+        assert_eq!(parse_model("sequential").unwrap(), ExecutionModel::Sequential);
+        assert!(parse_model("magic").is_err());
+    }
+
+    #[test]
+    fn unknown_kernel_fails_fast() {
+        let reqs = vec![BatchRequest::new("not-a-kernel", Scenario::Rtl)];
+        let mut db = QorDb::new();
+        let err = run_batch(&reqs, &Device::u55c(), &mut db, &BatchOptions::default());
+        assert!(err.is_err());
+        assert!(db.is_empty(), "failed batch must not pollute the db");
+    }
+
+    #[test]
+    fn infeasible_request_fails_that_request_only() {
+        let dev = Device::u55c();
+        let opts = BatchOptions {
+            solver: SolverOptions {
+                beam: 4,
+                max_factor_per_loop: 8,
+                max_unroll: 64,
+                timeout: std::time::Duration::from_secs(20),
+                ..SolverOptions::default()
+            },
+            jobs: 2,
+        };
+        let reqs = vec![
+            BatchRequest::new("madd", Scenario::Rtl),
+            // a budget far too small for any design: the solver panics
+            // on "no feasible assembly"; the batch must isolate it
+            BatchRequest::new("madd", Scenario::OnBoard { slrs: 1, frac: 1e-6 }),
+        ];
+        let mut db = QorDb::new();
+        let err = run_batch(&reqs, &dev, &mut db, &opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1 of 2"), "{msg}");
+        // the feasible request's solve survived into the knowledge base
+        assert_eq!(db.len(), 1);
+    }
+
+    #[test]
+    fn dedup_and_cache_classification() {
+        // Small, fast solve: one kernel, duplicated request + a rerun.
+        let dev = Device::u55c();
+        let opts = BatchOptions {
+            solver: SolverOptions {
+                beam: 4,
+                max_factor_per_loop: 8,
+                max_unroll: 64,
+                timeout: std::time::Duration::from_secs(20),
+                ..SolverOptions::default()
+            },
+            jobs: 2,
+        };
+        let reqs = vec![
+            BatchRequest::new("madd", Scenario::Rtl),
+            BatchRequest::new("madd", Scenario::Rtl),
+        ];
+        let mut db = QorDb::new();
+        let rep = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+        assert_eq!(rep.solved, 1, "identical requests must collapse to one solve");
+        assert_eq!(rep.deduped, 1);
+        assert_eq!(rep.cache_hits, 0);
+        assert_eq!(db.len(), 1);
+        assert_eq!(rep.outcomes[0].latency_cycles, rep.outcomes[1].latency_cycles);
+
+        let rep2 = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+        assert_eq!(rep2.solved, 0, "second run must be all cache hits");
+        assert_eq!(rep2.cache_hits, 2);
+        let table = rep2.render();
+        assert!(table.contains("madd"), "{table}");
+        assert!(table.contains("cache"), "{table}");
+    }
+}

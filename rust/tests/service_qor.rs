@@ -1,0 +1,207 @@
+//! QoR knowledge-base integration tests: round-trip persistence, key
+//! canonicalization, corrupt/old-version fallback, and the warm-start
+//! property (a warm-started solve never returns a worse design than its
+//! incumbent).
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::dse::config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
+use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::service::qor_db::{DesignKey, QorDb, QorRecord, FORMAT_VERSION};
+use prometheus::sim::engine::simulate;
+use prometheus::testutil::for_random;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("prom_qor_{tag}_{}.json", std::process::id()))
+}
+
+fn hand_built_design(kernel: &str) -> DesignConfig {
+    let mut plans = BTreeMap::new();
+    plans.insert(
+        "A".to_string(),
+        TransferPlan { define_level: 0, transfer_level: 1, bitwidth: 512, buffers: 2 },
+    );
+    plans.insert(
+        "y".to_string(),
+        TransferPlan { define_level: 1, transfer_level: 1, bitwidth: 64, buffers: 1 },
+    );
+    DesignConfig {
+        kernel: kernel.to_string(),
+        model: ExecutionModel::Dataflow,
+        overlap: true,
+        tasks: vec![TaskConfig {
+            task: 0,
+            perm: vec![1, 0],
+            padded_trip: vec![400, 416],
+            intra: vec![4, 8],
+            ii: 3,
+            plans,
+            slr: 2,
+        }],
+    }
+}
+
+fn record(kernel: &str, latency: u64) -> QorRecord {
+    QorRecord {
+        design: hand_built_design(kernel),
+        latency_cycles: latency,
+        gflops: 101.5,
+        solve_time_ms: 2250.75,
+        explored: 123_456,
+        timed_out: false,
+    }
+}
+
+#[test]
+fn db_round_trips_through_disk() {
+    let dev = Device::u55c();
+    let mut db = QorDb::new();
+    let opts = SolverOptions::default();
+    db.insert(&DesignKey::new("mvt", &dev, &opts), record("mvt", 9_999));
+    db.insert(
+        &DesignKey::new(
+            "mvt",
+            &dev,
+            &SolverOptions { scenario: Scenario::OnBoard { slrs: 3, frac: 0.6 }, ..opts.clone() },
+        ),
+        record("mvt", 12_345),
+    );
+    let path = tmp_path("roundtrip");
+    db.save(&path).unwrap();
+    let back = QorDb::load(&path);
+    assert_eq!(back, db, "load(save(db)) must be identity");
+    assert_eq!(back.len(), 2);
+    // and the file really is versioned JSON
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"format_version\""), "{text}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn keys_canonicalize_identical_requests_together() {
+    let dev = Device::u55c();
+    let opts = SolverOptions::default();
+    // same request built twice -> same key string
+    let a = DesignKey::new("gemm", &dev, &opts);
+    let b = DesignKey::new("gemm", &dev, &opts.clone());
+    assert_eq!(a.canonical(), b.canonical());
+    assert_eq!(a, b);
+    // a warm-start incumbent is a hint, not part of the problem
+    let with_inc = SolverOptions { incumbent: Some(hand_built_design("gemm")), ..opts.clone() };
+    assert_eq!(DesignKey::new("gemm", &dev, &with_inc).canonical(), a.canonical());
+    // every axis that changes the problem changes the key
+    let variants = [
+        SolverOptions { scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 }, ..opts.clone() },
+        SolverOptions { model: ExecutionModel::Sequential, ..opts.clone() },
+        SolverOptions { overlap: false, ..opts.clone() },
+        SolverOptions { max_pad: 0, ..opts.clone() },
+        SolverOptions { permute: false, ..opts.clone() },
+        SolverOptions { tiling: false, ..opts.clone() },
+        SolverOptions { max_factor_per_loop: 64, ..opts.clone() },
+        SolverOptions { max_unroll: 64, ..opts.clone() },
+        SolverOptions { beam: 3, ..opts.clone() },
+        SolverOptions { timeout: Duration::from_secs(1), ..opts.clone() },
+    ];
+    let mut keys: Vec<String> =
+        variants.iter().map(|o| DesignKey::new("gemm", &dev, o).canonical()).collect();
+    keys.push(a.canonical());
+    keys.push(DesignKey::new("3mm", &dev, &opts).canonical());
+    let unique: std::collections::BTreeSet<&String> = keys.iter().collect();
+    assert_eq!(unique.len(), keys.len(), "all key variants must be distinct: {keys:#?}");
+}
+
+#[test]
+fn corrupt_file_falls_back_to_empty() {
+    let path = tmp_path("corrupt");
+    std::fs::write(&path, "{ this is not json").unwrap();
+    assert!(QorDb::load(&path).is_empty());
+    std::fs::write(&path, "[1, 2, 3]").unwrap(); // valid JSON, wrong shape
+    assert!(QorDb::load(&path).is_empty());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn old_version_falls_back_to_empty() {
+    let dev = Device::u55c();
+    let mut db = QorDb::new();
+    db.insert(&DesignKey::new("gemm", &dev, &SolverOptions::default()), record("gemm", 777));
+    let path = tmp_path("version");
+    db.save(&path).unwrap();
+    // rewrite the version stamp to a future version
+    let text = std::fs::read_to_string(&path).unwrap();
+    let bumped = text.replace(
+        &format!("\"format_version\": {FORMAT_VERSION}"),
+        &format!("\"format_version\": {}", FORMAT_VERSION + 41),
+    );
+    assert_ne!(text, bumped, "version stamp must exist in the serialized form");
+    std::fs::write(&path, bumped).unwrap();
+    assert!(QorDb::load(&path).is_empty(), "future-version file must load as empty");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn save_backs_up_unreadable_files_instead_of_clobbering() {
+    let path = tmp_path("clobber");
+    let bak = PathBuf::from(format!("{}.bak", path.display()));
+    let _ = std::fs::remove_file(&bak);
+    let garbage = "{ not json - maybe a future format }";
+    std::fs::write(&path, garbage).unwrap();
+    let db = QorDb::new(); // what load() would have produced for it
+    db.save(&path).unwrap();
+    // the original bytes survived in the backup file
+    assert_eq!(std::fs::read_to_string(&bak).unwrap(), garbage);
+    // and the new file is a valid, empty, versioned db
+    assert!(QorDb::load(&path).is_empty());
+    assert!(std::fs::read_to_string(&path).unwrap().contains("format_version"));
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&bak);
+}
+
+#[test]
+fn missing_file_loads_as_empty() {
+    assert!(QorDb::load(&tmp_path("definitely_missing")).is_empty());
+}
+
+#[test]
+fn prop_warm_started_solves_never_regress() {
+    // The satellite property: for random kernels and randomly weakened
+    // re-solves, warm-starting from a cached incumbent can never yield a
+    // design slower than that incumbent (the incumbent seeds the
+    // branch-and-bound bound and survives unless beaten).
+    let dev = Device::u55c();
+    let kernels = ["madd", "bicg", "mvt", "atax", "gesummv"];
+    let base = SolverOptions {
+        beam: 6,
+        max_factor_per_loop: 16,
+        max_unroll: 256,
+        timeout: Duration::from_secs(20),
+        ..SolverOptions::default()
+    };
+    for_random(0x9A12, 5, |rng, i| {
+        let k = polybench::by_name(kernels[i % kernels.len()]).unwrap();
+        let fg = fuse(&k);
+        let cold = solve(&k, &dev, &base);
+        let inc_cycles = simulate(&k, &fg, &cold.design, &dev).cycles;
+        // weakened, warm-started re-solve: tiny beam, randomized (often
+        // expired) timeout — the anytime path must still hold the line
+        let warm_opts = SolverOptions {
+            beam: 1 + (rng.next_u64() % 6) as usize,
+            timeout: Duration::from_millis(rng.range(1, 60)),
+            incumbent: Some(cold.design.clone()),
+            ..base.clone()
+        };
+        let warm = solve(&k, &dev, &warm_opts);
+        let warm_cycles = simulate(&k, &fg, &warm.design, &dev).cycles;
+        assert!(
+            warm_cycles <= inc_cycles,
+            "{}: warm-started solve regressed ({} > {} cycles)",
+            k.name,
+            warm_cycles,
+            inc_cycles
+        );
+    });
+}

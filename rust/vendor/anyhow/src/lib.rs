@@ -1,0 +1,194 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This environment has no network access and no vendored registry, so
+//! the subset of `anyhow` the repository actually uses is reimplemented
+//! here with the same names and semantics:
+//!
+//! * [`Error`] — an opaque error value carrying a message and a context
+//!   chain (no backtraces, no source downcasting);
+//! * [`Result`] — `Result<T, Error>` with a defaultable error type;
+//! * [`anyhow!`] / [`bail!`] — format-style error construction;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! `Display` prints the outermost context (like real `anyhow`); the
+//! alternate form `{:#}` prints the whole chain outermost-to-root
+//! separated by `: `, and `Debug` prints the chain with a `Caused by:`
+//! block, so `{e:#}` and `{e:?}` in the host crate behave familiarly.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaultable error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a root message plus a stack of context strings
+/// (innermost first).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The context chain from outermost to the root message.
+    fn chain(&self) -> impl Iterator<Item = &str> {
+        self.context.iter().rev().map(String::as_str).chain(std::iter::once(self.msg.as_str()))
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let parts: Vec<&str> = self.chain().collect();
+            write!(f, "{}", parts.join(": "))
+        } else {
+            let outer = self.context.last().map(String::as_str).unwrap_or(&self.msg);
+            write!(f, "{outer}")
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts = self.chain();
+        let outer = parts.next().unwrap_or("");
+        write!(f, "{outer}")?;
+        let rest: Vec<&str> = parts.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket conversion coherent and
+// makes `?` work on any std error type.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context entries.
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(err) = cur {
+            msgs.push(err.to_string());
+            cur = err.source();
+        }
+        let root = msgs.pop().unwrap_or_default();
+        Error { msg: root, context: msgs.into_iter().rev().collect() }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context extension for `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e = anyhow!("root problem").context("while loading").context("during startup");
+        assert_eq!(format!("{e}"), "during startup");
+        assert_eq!(format!("{e:#}"), "during startup: while loading: root problem");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root problem"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("file missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert!(format!("{e:#}").contains("file missing"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "slot")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing slot");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope: {}", 42);
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "nope: 42");
+    }
+}

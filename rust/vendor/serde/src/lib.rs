@@ -1,0 +1,235 @@
+//! Minimal offline stand-in for the `serde` + `serde_json` crates.
+//!
+//! The repository's environment has no network access and no vendored
+//! registry, so persistence (the QoR knowledge base) runs on this small
+//! serialization framework instead of real serde:
+//!
+//! * [`Serialize`] / [`Deserialize`] — the trait pair, implemented for
+//!   primitives, `String`, `Vec<T>`, `Option<T>` and
+//!   `BTreeMap<String, V>` here, and implemented by hand for the host
+//!   crate's types (manual impls stand in for `#[derive(Serialize,
+//!   Deserialize)]`, which would need a proc-macro crate);
+//! * [`json::Value`] — a JSON document model with exact integers
+//!   (`i128`) so `u64` cycle counts survive round-trips bit-exactly;
+//! * [`json::parse`] / [`json::to_string`] / [`json::to_string_pretty`]
+//!   — a recursive-descent parser and a writer.
+//!
+//! The API is intentionally value-based (`serialize(&self) -> Value`)
+//! rather than visitor-based: the QoR database is small (hundreds of
+//! records) and debuggability beats zero-copy here.
+
+pub mod json;
+
+pub use json::{parse, to_string, to_string_pretty, Value};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Serialization error (also used by [`Deserialize`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new<S: Into<String>>(msg: S) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Types that can render themselves as a JSON [`Value`].
+pub trait Serialize {
+    fn serialize(&self) -> Value;
+}
+
+/// Types that can be reconstructed from a JSON [`Value`].
+pub trait Deserialize: Sized {
+    fn deserialize(v: &Value) -> Result<Self, Error>;
+}
+
+// ---- primitive impls ---------------------------------------------------
+
+impl Serialize for bool {
+    fn serialize(&self) -> Value {
+        Value::Bool(*self)
+    }
+}
+
+impl Deserialize for bool {
+    fn deserialize(v: &Value) -> Result<bool, Error> {
+        v.as_bool().ok_or_else(|| Error::new(format!("expected bool, got {}", v.kind())))
+    }
+}
+
+impl Serialize for u64 {
+    fn serialize(&self) -> Value {
+        Value::Int(*self as i128)
+    }
+}
+
+impl Deserialize for u64 {
+    fn deserialize(v: &Value) -> Result<u64, Error> {
+        match v.as_int() {
+            Some(i) if i >= 0 && i <= u64::MAX as i128 => Ok(i as u64),
+            Some(i) => Err(Error::new(format!("integer {i} out of u64 range"))),
+            None => Err(Error::new(format!("expected integer, got {}", v.kind()))),
+        }
+    }
+}
+
+impl Serialize for usize {
+    fn serialize(&self) -> Value {
+        Value::Int(*self as i128)
+    }
+}
+
+impl Deserialize for usize {
+    fn deserialize(v: &Value) -> Result<usize, Error> {
+        let n = u64::deserialize(v)?;
+        usize::try_from(n).map_err(|_| Error::new(format!("integer {n} out of usize range")))
+    }
+}
+
+impl Serialize for i64 {
+    fn serialize(&self) -> Value {
+        Value::Int(*self as i128)
+    }
+}
+
+impl Deserialize for i64 {
+    fn deserialize(v: &Value) -> Result<i64, Error> {
+        match v.as_int() {
+            Some(i) if i >= i64::MIN as i128 && i <= i64::MAX as i128 => Ok(i as i64),
+            Some(i) => Err(Error::new(format!("integer {i} out of i64 range"))),
+            None => Err(Error::new(format!("expected integer, got {}", v.kind()))),
+        }
+    }
+}
+
+impl Serialize for f64 {
+    fn serialize(&self) -> Value {
+        Value::Float(*self)
+    }
+}
+
+impl Deserialize for f64 {
+    fn deserialize(v: &Value) -> Result<f64, Error> {
+        v.as_f64().ok_or_else(|| Error::new(format!("expected number, got {}", v.kind())))
+    }
+}
+
+impl Serialize for String {
+    fn serialize(&self) -> Value {
+        Value::Str(self.clone())
+    }
+}
+
+impl Deserialize for String {
+    fn deserialize(v: &Value) -> Result<String, Error> {
+        v.as_str()
+            .map(str::to_string)
+            .ok_or_else(|| Error::new(format!("expected string, got {}", v.kind())))
+    }
+}
+
+impl<T: Serialize> Serialize for Vec<T> {
+    fn serialize(&self) -> Value {
+        Value::Arr(self.iter().map(Serialize::serialize).collect())
+    }
+}
+
+impl<T: Deserialize> Deserialize for Vec<T> {
+    fn deserialize(v: &Value) -> Result<Vec<T>, Error> {
+        let items = v
+            .as_arr()
+            .ok_or_else(|| Error::new(format!("expected array, got {}", v.kind())))?;
+        items.iter().map(T::deserialize).collect()
+    }
+}
+
+impl<T: Serialize> Serialize for Option<T> {
+    fn serialize(&self) -> Value {
+        match self {
+            Some(t) => t.serialize(),
+            None => Value::Null,
+        }
+    }
+}
+
+impl<T: Deserialize> Deserialize for Option<T> {
+    fn deserialize(v: &Value) -> Result<Option<T>, Error> {
+        match v {
+            Value::Null => Ok(None),
+            other => T::deserialize(other).map(Some),
+        }
+    }
+}
+
+impl<V: Serialize> Serialize for BTreeMap<String, V> {
+    fn serialize(&self) -> Value {
+        // BTreeMap iteration order is sorted: the output is canonical.
+        Value::Obj(self.iter().map(|(k, v)| (k.clone(), v.serialize())).collect())
+    }
+}
+
+impl<V: Deserialize> Deserialize for BTreeMap<String, V> {
+    fn deserialize(v: &Value) -> Result<BTreeMap<String, V>, Error> {
+        let fields = v
+            .as_obj()
+            .ok_or_else(|| Error::new(format!("expected object, got {}", v.kind())))?;
+        let mut out = BTreeMap::new();
+        for (k, val) in fields {
+            out.insert(k.clone(), V::deserialize(val)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        assert_eq!(u64::deserialize(&42u64.serialize()).unwrap(), 42);
+        assert_eq!(u64::deserialize(&u64::MAX.serialize()).unwrap(), u64::MAX);
+        assert!(bool::deserialize(&true.serialize()).unwrap());
+        assert_eq!(f64::deserialize(&1.5f64.serialize()).unwrap(), 1.5);
+        assert_eq!(String::deserialize(&"hi".to_string().serialize()).unwrap(), "hi");
+        let v: Vec<u64> = vec![1, 2, 3];
+        assert_eq!(Vec::<u64>::deserialize(&v.serialize()).unwrap(), v);
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), 1u64);
+        assert_eq!(BTreeMap::<String, u64>::deserialize(&m.serialize()).unwrap(), m);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        assert!(u64::deserialize(&Value::Str("x".into())).is_err());
+        assert!(bool::deserialize(&Value::Int(1)).is_err());
+        assert!(u64::deserialize(&Value::Int(-1)).is_err());
+        assert!(Vec::<u64>::deserialize(&Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn option_uses_null() {
+        let some: Option<u64> = Some(3);
+        let none: Option<u64> = None;
+        assert_eq!(some.serialize(), Value::Int(3));
+        assert_eq!(none.serialize(), Value::Null);
+        assert_eq!(Option::<u64>::deserialize(&Value::Null).unwrap(), None);
+        assert_eq!(Option::<u64>::deserialize(&Value::Int(3)).unwrap(), Some(3));
+    }
+
+    #[test]
+    fn float_accepts_integer_tokens() {
+        // `2.0` prints as `2` and must still deserialize as f64.
+        assert_eq!(f64::deserialize(&Value::Int(2)).unwrap(), 2.0);
+    }
+}
