@@ -9,11 +9,11 @@
 
 use prometheus::analysis::fusion::fuse;
 use prometheus::dse::cost::{graph_latency, task_latency};
+use prometheus::dse::eval::{resolve_task, GeometryCache, ResolvedDesign};
 use prometheus::dse::solver::{solve, SolverOptions};
-use prometheus::dse::space::TaskGeometry;
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
-use prometheus::sim::engine::simulate;
+use prometheus::sim::engine::{simulate, simulate_resolved};
 use std::time::Instant;
 
 fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
@@ -42,18 +42,23 @@ fn main() {
     {
         let k = polybench::three_mm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let r = solve(&k, &dev, &SolverOptions::default());
         let cfgs = r.design.tasks.clone();
-        bench("cost::task_latency (3mm FT0)", 20_000, || {
-            let geo = TaskGeometry::new(&k, &fg, &cfgs[0]);
-            task_latency(&geo, &dev, true)
+        bench("eval::resolve + cost::task_latency (3mm FT0)", 20_000, || {
+            let rt = resolve_task(&k, &cache.tasks[0], &cfgs[0]);
+            task_latency(&rt, &dev, true)
         });
         let design = r.design.clone();
-        bench("cost::graph_latency (3mm, 3 tasks)", 5_000, || {
+        bench("cost::graph_latency cold (3mm, 3 tasks)", 5_000, || {
             graph_latency(&k, &fg, &design, &dev).total
         });
-        bench("sim::simulate (3mm dataflow)", 2_000, || {
+        bench("sim::simulate cold (3mm dataflow)", 2_000, || {
             simulate(&k, &fg, &design, &dev).cycles
+        });
+        bench("sim::simulate_resolved warm (3mm dataflow)", 2_000, || {
+            let rd = ResolvedDesign::new(&k, &fg, &cache, &design);
+            simulate_resolved(&rd, &dev).cycles
         });
     }
 

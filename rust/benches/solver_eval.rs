@@ -1,0 +1,120 @@
+//! Candidate-evaluation throughput for the solver's inner loop
+//! (ISSUE 2 satellite): resolve a design point against the shared
+//! evaluation core and score it (task latency + resources), comparing
+//!
+//! * **cold** — the fusion-time `GeometryCache` is rebuilt for every
+//!   candidate: what a per-candidate evaluation costs when the shared
+//!   layer's construction (array-declaration joins, legal-order
+//!   enumeration, statement position maps) is not amortized. This is
+//!   the cost structure of constructing the evaluation state from the
+//!   kernel per point — NOT a reconstruction of the pre-refactor code
+//!   path (which amortized `array_info` at fusion time but re-did
+//!   per-consumer plan resolution and kernel string lookups instead;
+//!   that path no longer exists to measure), against
+//! * **warm** — one shared `GeometryCache` built at fusion time, so a
+//!   candidate evaluation recomputes only what its changed tile
+//!   factors/permutation invalidate.
+//!
+//! The acceptance bar is >= 2x candidate evaluations/sec warm vs cold
+//! on the 3-task fused kernel (3mm); the run prints both rates and the
+//! speedup, and exits nonzero if the bar is missed so CI's
+//! `cargo bench --no-run` compile gate can be upgraded to a run gate
+//! later without edits here.
+//!
+//! ```bash
+//! cargo bench --bench solver_eval
+//! ```
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::dse::config::TaskConfig;
+use prometheus::dse::constraints::task_resources;
+use prometheus::dse::cost::task_latency;
+use prometheus::dse::eval::{resolve_task, GeometryCache};
+use prometheus::dse::padding::legal_intra_factors;
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Build a batch of stage-1-shaped design points (default transfer
+/// plans, varied tile factors) for every fused task of the kernel.
+fn candidate_batch(k: &prometheus::ir::Kernel, fg: &prometheus::analysis::fusion::FusedGraph) -> Vec<TaskConfig> {
+    let mut cfgs = Vec::new();
+    for (t, task) in fg.tasks.iter().enumerate() {
+        let rep = task.representative(k);
+        let nest = &k.statements[rep].loops;
+        let per_loop: Vec<Vec<prometheus::dse::padding::FactorChoice>> =
+            nest.iter().map(|l| legal_intra_factors(l.trip, 4, 32)).collect();
+        // cycle through per-loop factor choices to get a varied batch
+        let n = per_loop.iter().map(|f| f.len()).max().unwrap_or(1);
+        for i in 0..n.min(64) {
+            let mut intra = Vec::with_capacity(nest.len());
+            let mut padded = Vec::with_capacity(nest.len());
+            for f in &per_loop {
+                let c = f[i % f.len()];
+                intra.push(c.intra);
+                padded.push(c.padded);
+            }
+            cfgs.push(TaskConfig {
+                task: t,
+                perm: (0..nest.len()).collect(),
+                padded_trip: padded,
+                intra,
+                ii: 3,
+                plans: BTreeMap::new(),
+                slr: 0,
+            });
+        }
+    }
+    cfgs
+}
+
+fn main() {
+    let dev = Device::u55c();
+    let k = polybench::three_mm(); // the 3-task fused kernel of the issue
+    let fg = fuse(&k);
+    let cfgs = candidate_batch(&k, &fg);
+    println!("== solver_eval: candidate evaluations/sec, cold vs GeometryCache-warm ==");
+    println!("kernel 3mm: {} fused tasks, {} candidate points per pass\n", fg.tasks.len(), cfgs.len());
+
+    let score = |cache: &GeometryCache, cfg: &TaskConfig| -> u64 {
+        let rt = resolve_task(&k, &cache.tasks[cfg.task], cfg);
+        task_latency(&rt, &dev, true).wrapping_add(task_resources(&rt, &dev).dsp as u64)
+    };
+
+    // warm: one cache, shared across every evaluation (what the solver
+    // and the batch service do)
+    let shared = GeometryCache::new(&k, &fg);
+    let mut sink = 0u64;
+    let warm_reps = 200usize;
+    let t0 = Instant::now();
+    for _ in 0..warm_reps {
+        for cfg in &cfgs {
+            sink = sink.wrapping_add(score(&shared, cfg));
+        }
+    }
+    let warm_secs = t0.elapsed().as_secs_f64();
+    let warm_evals = (warm_reps * cfgs.len()) as f64 / warm_secs;
+
+    // cold: rebuild the fusion-time memo per candidate (the old
+    // duplicated-resolution cost structure)
+    let cold_reps = 20usize;
+    let t1 = Instant::now();
+    for _ in 0..cold_reps {
+        for cfg in &cfgs {
+            let cache = GeometryCache::new(&k, &fg);
+            sink = sink.wrapping_add(score(&cache, cfg));
+        }
+    }
+    let cold_secs = t1.elapsed().as_secs_f64();
+    let cold_evals = (cold_reps * cfgs.len()) as f64 / cold_secs;
+
+    let speedup = warm_evals / cold_evals;
+    println!("cold  (cache rebuilt per evaluation): {cold_evals:>12.0} evals/s");
+    println!("warm  (shared GeometryCache):         {warm_evals:>12.0} evals/s");
+    println!("speedup: {speedup:.2}x   (sink {sink})");
+    assert!(
+        speedup >= 2.0,
+        "GeometryCache must buy >= 2x candidate evaluations/sec (got {speedup:.2}x)"
+    );
+}

@@ -7,8 +7,8 @@
 //! ```
 
 use prometheus::analysis::fusion::fuse;
+use prometheus::dse::eval::{GeometryCache, ResolvedDesign};
 use prometheus::dse::solver::{solve, Scenario, SolverOptions};
-use prometheus::dse::space::TaskGeometry;
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
 use prometheus::report::Table;
@@ -41,23 +41,19 @@ fn main() {
                 )
             })
             .collect();
+        let cache = GeometryCache::new(&k, &fg);
+        let rd = ResolvedDesign::new(&k, &fg, &cache, &r.design);
         let mut orders = Vec::new();
         let mut tiles = Vec::new();
-        for tc in &r.design.tasks {
-            let geo = TaskGeometry::new(&k, &fg, tc);
-            let rep = geo.rep_stmt();
+        for rt in &rd.tasks {
+            let tc = rt.cfg();
+            let rep = rt.geo.rep_stmt();
             let names: Vec<&str> =
                 tc.perm.iter().map(|&p| rep.loops[p].name.as_str()).collect();
             orders.push(format!("FT{}: {}", tc.task, names.join(",")));
-            for a in geo.arrays() {
-                let plan = tc
-                    .plans
-                    .get(&a)
-                    .copied()
-                    .unwrap_or_else(|| geo.default_plan(&a, geo.levels() - 1));
-                let dims = geo.tile_dims(&a, plan.define_level.min(geo.levels() - 1));
-                let dims_s: Vec<String> = dims.iter().map(u64::to_string).collect();
-                tiles.push(format!("{a}(FT{}): {}", tc.task, dims_s.join("x")));
+            for (a, rp) in rt.arrays() {
+                let dims_s: Vec<String> = rp.tile_dims.iter().map(u64::to_string).collect();
+                tiles.push(format!("{}(FT{}): {}", a.name, tc.task, dims_s.join("x")));
             }
         }
         t.row(vec![

@@ -8,5 +8,5 @@
 pub mod hls;
 pub mod host;
 
-pub use hls::generate_hls;
+pub use hls::{generate_hls, generate_hls_resolved};
 pub use host::generate_host;

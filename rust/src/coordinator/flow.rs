@@ -1,15 +1,19 @@
 //! The Prometheus flow (paper Fig 2): from kernel IR to an optimized,
-//! simulated, optionally hardware-validated design.
+//! simulated, optionally hardware-validated design. The flow resolves
+//! each kernel once into a [`GeometryCache`] and threads it through the
+//! solver and every evaluation stage, so all products (simulated cycles,
+//! board model, generated HLS) derive from the same resolved design.
 
 use crate::analysis::fusion::{fuse, FusedGraph};
-use crate::codegen::{generate_hls, generate_host};
+use crate::codegen::{generate_hls_resolved, generate_host};
 use crate::dse::config::DesignConfig;
-use crate::dse::cost::{gflops, graph_latency};
-use crate::dse::solver::{solve, Scenario, SolverOptions, SolverResult};
+use crate::dse::cost::{gflops, graph_latency, graph_latency_resolved};
+use crate::dse::eval::{GeometryCache, ResolvedDesign};
+use crate::dse::solver::{solve_with_cache, Scenario, SolverOptions, SolverResult};
 use crate::hw::Device;
 use crate::ir::Kernel;
-use crate::sim::board::{board_eval, BoardReport};
-use crate::sim::engine::{simulate, SimReport};
+use crate::sim::board::{board_eval_resolved, BoardReport};
+use crate::sim::engine::{simulate_resolved, SimReport};
 use anyhow::Result;
 use std::path::Path;
 use std::time::Duration;
@@ -59,13 +63,14 @@ pub fn optimize_kernel(
     let kernel = crate::ir::polybench::by_name(kernel_name)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name}"))?;
     let fused = fuse(&kernel);
+    let cache = GeometryCache::new(&kernel, &fused);
 
     // 1. solve the design space
     let mut solver = opts.solver.clone();
     solver.scenario = opts.scenario;
-    let result = solve_validated(&kernel, &fused, dev, &solver)?;
+    let result = solve_validated(&kernel, &fused, &cache, dev, &solver)?;
 
-    finish_flow(kernel, fused, result, dev, opts)
+    finish_flow(kernel, fused, cache, result, dev, opts)
 }
 
 /// Stage 1 of the flow: solve and structurally validate the winner.
@@ -74,10 +79,11 @@ pub fn optimize_kernel(
 fn solve_validated(
     kernel: &Kernel,
     fused: &FusedGraph,
+    cache: &GeometryCache,
     dev: &Device,
     solver: &SolverOptions,
 ) -> Result<SolverResult> {
-    let result = solve(kernel, dev, solver);
+    let result = solve_with_cache(kernel, fused, cache, dev, solver);
     result
         .design
         .validate(kernel, fused, dev.slrs)
@@ -91,17 +97,19 @@ fn solve_validated(
 fn finish_flow(
     kernel: Kernel,
     fused: FusedGraph,
+    cache: GeometryCache,
     result: SolverResult,
     dev: &Device,
     opts: &OptimizeOptions,
 ) -> Result<OptimizedKernel> {
-    // 2. simulate (RTL-equivalent)
-    let sim = simulate(&kernel, &fused, &result.design, dev);
+    // 2. simulate (RTL-equivalent) + 3. board model where applicable,
+    //    both reading the one resolved design
+    let rd = ResolvedDesign::new(&kernel, &fused, &cache, &result.design);
+    let sim = simulate_resolved(&rd, dev);
+    let (board, gf) = scenario_eval_resolved(&rd, dev, opts.scenario, &sim);
+    drop(rd);
 
-    // 3. board model where applicable
-    let (board, gf) = scenario_eval(&kernel, &fused, &result.design, dev, opts.scenario, &sim);
-
-    finish_flow_with(kernel, fused, result, sim, board, gf, opts)
+    finish_flow_with(kernel, fused, &cache, result, sim, board, gf, opts)
 }
 
 /// Stages 4–5 with the evaluation products already computed — lets the
@@ -111,16 +119,19 @@ fn finish_flow(
 fn finish_flow_with(
     kernel: Kernel,
     fused: FusedGraph,
+    cache: &GeometryCache,
     result: SolverResult,
     sim: SimReport,
     board: Option<BoardReport>,
     gf: f64,
     opts: &OptimizeOptions,
 ) -> Result<OptimizedKernel> {
-    // 4. codegen
+    // 4. codegen, off the same resolved design the evaluation used
     if let Some(dir) = &opts.emit_dir {
         std::fs::create_dir_all(dir)?;
-        let hls = generate_hls(&kernel, &result.design);
+        let rd = ResolvedDesign::new(&kernel, &fused, cache, &result.design);
+        let hls = generate_hls_resolved(&rd);
+        drop(rd);
         let host = generate_host(&kernel, &result.design);
         std::fs::write(dir.join(format!("{}_kernel.cpp", kernel.name.replace('-', "_"))), hls)?;
         std::fs::write(dir.join(format!("{}_host.cpp", kernel.name.replace('-', "_"))), host)?;
@@ -159,6 +170,25 @@ fn artifact_exists(root: &Path, kernel: &str) -> bool {
 /// at the target clock for RTL. The single source of truth for "what
 /// throughput do we report for this request" — the flow and the batch
 /// orchestrator both call it, so their numbers cannot drift apart.
+pub fn scenario_eval_resolved(
+    rd: &ResolvedDesign,
+    dev: &Device,
+    scenario: Scenario,
+    sim: &SimReport,
+) -> (Option<BoardReport>, f64) {
+    match scenario {
+        Scenario::Rtl => (None, sim.gflops(rd.k, dev)),
+        Scenario::OnBoard { frac, .. } => {
+            let budget = dev.slr.scaled(frac);
+            let b = board_eval_resolved(rd, dev, &budget);
+            let g = b.gflops;
+            (Some(b), g)
+        }
+    }
+}
+
+/// [`scenario_eval_resolved`] with cold resolution, for callers that
+/// hold only the design.
 pub fn scenario_eval(
     k: &Kernel,
     fg: &FusedGraph,
@@ -167,15 +197,9 @@ pub fn scenario_eval(
     scenario: Scenario,
     sim: &SimReport,
 ) -> (Option<BoardReport>, f64) {
-    match scenario {
-        Scenario::Rtl => (None, sim.gflops(k, dev)),
-        Scenario::OnBoard { frac, .. } => {
-            let budget = dev.slr.scaled(frac);
-            let b = board_eval(k, fg, design, dev, &budget);
-            let g = b.gflops;
-            (Some(b), g)
-        }
-    }
+    let cache = GeometryCache::new(k, fg);
+    let rd = ResolvedDesign::new(k, fg, &cache, design);
+    scenario_eval_resolved(&rd, dev, scenario, sim)
 }
 
 /// How `optimize_kernel_cached` answered a request.
@@ -221,6 +245,7 @@ pub fn optimize_kernel_cached(
     let kernel = crate::ir::polybench::by_name(kernel_name)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name}"))?;
     let fused = fuse(&kernel);
+    let cache = GeometryCache::new(&kernel, &fused);
 
     // Exact hit: rebuild the flow products around the cached design.
     let mut stale_hit = false;
@@ -229,11 +254,21 @@ pub fn optimize_kernel_cached(
         // (same on-disk version) is a miss, not an error: drop through
         // to a fresh solve and evict it. Same predicate as the solver's
         // warm-start gate.
-        if !crate::dse::solver::design_usable(&kernel, &fused, &rec.design, dev, opts.scenario) {
+        if !crate::dse::solver::design_usable_with_cache(
+            &kernel,
+            &fused,
+            &cache,
+            &rec.design,
+            dev,
+            opts.scenario,
+        ) {
             stale_hit = true;
         } else {
             let design = rec.design.clone();
-            let latency = graph_latency(&kernel, &fused, &design, dev);
+            let latency = {
+                let rd = ResolvedDesign::new(&kernel, &fused, &cache, &design);
+                graph_latency_resolved(&rd, dev)
+            };
             let result = SolverResult {
                 gflops: gflops(&kernel, latency.total, dev),
                 design,
@@ -243,7 +278,7 @@ pub fn optimize_kernel_cached(
                 timed_out: false,
                 warm_started: false,
             };
-            let r = finish_flow(kernel, fused, result, dev, opts)?;
+            let r = finish_flow(kernel, fused, cache, result, dev, opts)?;
             return Ok((r, CacheStatus::Hit));
         }
     }
@@ -257,17 +292,19 @@ pub fn optimize_kernel_cached(
     solver.incumbent = db
         .incumbent_for(kernel_name, solver.model, solver.overlap)
         .map(|rec| rec.design.clone());
-    let result = solve_validated(&kernel, &fused, dev, &solver)?;
+    let result = solve_validated(&kernel, &fused, &cache, dev, &solver)?;
     let status =
         if result.warm_started { CacheStatus::WarmMiss } else { CacheStatus::ColdMiss };
     // Evaluate once, then record the solve *before* the fallible finish
     // stages (codegen emit, PJRT validation): a completed solve must
     // never be lost to an unwritable emit dir. The caller persists the
     // db even when this function errors.
-    let sim = simulate(&kernel, &fused, &result.design, dev);
-    let (board, gf) = scenario_eval(&kernel, &fused, &result.design, dev, opts.scenario, &sim);
+    let rd = ResolvedDesign::new(&kernel, &fused, &cache, &result.design);
+    let sim = simulate_resolved(&rd, dev);
+    let (board, gf) = scenario_eval_resolved(&rd, dev, opts.scenario, &sim);
+    drop(rd);
     db.insert(&key, crate::service::QorRecord::from_products(&result, &sim, gf));
-    let r = finish_flow_with(kernel, fused, result, sim, board, gf, opts)?;
+    let r = finish_flow_with(kernel, fused, &cache, result, sim, board, gf, opts)?;
     Ok((r, status))
 }
 

@@ -1,7 +1,11 @@
-//! Resource constraints (paper Eqs 7–11) and design resource estimation.
+//! Resource constraints (paper Eqs 7–11) and design resource estimation,
+//! evaluated over the shared evaluation core ([`super::eval`]): tile
+//! bytes, buffer counts and partition factors come precomputed from a
+//! [`ResolvedTask`], so the constraints see exactly the plans the cost
+//! model, simulator and codegen see.
 
 use super::config::DesignConfig;
-use super::space::TaskGeometry;
+use super::eval::{GeometryCache, ResolvedDesign, ResolvedTask};
 use crate::analysis::fusion::FusedGraph;
 use crate::hw::resources::{bram18_for, cost, ResourceVec};
 use crate::hw::{Device, SlrBudget};
@@ -9,43 +13,38 @@ use crate::ir::{Kernel, StmtKind};
 
 /// Eq 8–9: array partitioning per array = product of the intra-tile trip
 /// counts of the loops indexing it; must not exceed `max_part`.
-pub fn partition_of(geo: &TaskGeometry, array: &str) -> u64 {
-    match geo.access_ref(array) {
-        Some(acc) => acc
-            .iter()
-            .map(|p| p.map(|p| geo.cfg.intra[p]).unwrap_or(1))
-            .product(),
-        None => 1,
-    }
+pub fn partition_of(rt: &ResolvedTask, array: &str) -> u64 {
+    rt.plan_for(array).map(|(_, rp)| rp.partitions).unwrap_or(1)
 }
 
 /// Check Eq 8 for every array of every task.
-pub fn partition_ok(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device) -> bool {
-    design.tasks.iter().all(|tc| {
-        let geo = TaskGeometry::new(k, fg, tc);
-        geo.arrays()
-            .iter()
-            .all(|a| partition_of(&geo, a) <= dev.max_partition)
-    })
+pub fn partition_ok(rd: &ResolvedDesign, dev: &Device) -> bool {
+    rd.tasks
+        .iter()
+        .all(|rt| rt.plans.iter().all(|rp| rp.partitions <= dev.max_partition))
 }
 
 /// Resource usage of one fused task (DSP via Eq 10 with the II division,
 /// LUT/FF via per-op costs, BRAM via buffered tiles × N_a in 18 Kb
 /// blocks plus stream engines).
-pub fn task_resources(geo: &TaskGeometry, _dev: &Device) -> ResourceVec {
+pub fn task_resources(rt: &ResolvedTask, _dev: &Device) -> ResourceVec {
     let mut r = cost::KERNEL_BASE;
+    let st = rt.statics();
+    let cfg = rt.cfg();
 
     // compute: every statement in the fused task contributes its unrolled
     // op tree. II-pipelined loops let Vitis fold DSPs by ~II (Eq 10).
-    for &sid in &geo.fused.stmts {
-        let s = &geo.kernel.statements[sid];
+    for (si, &sid) in st.stmts.iter().enumerate() {
+        let s = &rt.geo.k.statements[sid];
         // unroll factor of this statement = product of intra factors of
-        // its own loops (mapped onto the representative nest)
-        let uf: u64 = (0..s.loops.len())
-            .map(|p| geo.rep_pos_of(sid, p).map(|rp| geo.cfg.intra[rp]).unwrap_or(1))
+        // its own loops (mapped onto the representative nest, memoized
+        // at fusion time)
+        let uf: u64 = st.stmt_rep_pos[si]
+            .iter()
+            .map(|rp| rp.map(|rp| cfg.intra[rp]).unwrap_or(1))
             .product();
         let ii = if s.loops.iter().any(|l| l.reduction) && s.kind == StmtKind::Compute {
-            geo.cfg.ii.max(1)
+            cfg.ii.max(1)
         } else {
             1
         };
@@ -57,40 +56,33 @@ pub fn task_resources(geo: &TaskGeometry, _dev: &Device) -> ResourceVec {
     }
 
     // memory: buffers at their define level × N_a, partitioned (Eq 7)
-    for info in geo.infos() {
-        let plan = geo
-            .cfg
-            .plans
-            .get(info.name.as_str())
-            .copied()
-            .unwrap_or_else(|| geo.default_plan(&info.name, geo.levels() - 1));
-        let d = plan.define_level.min(geo.levels() - 1);
-        let bytes = geo.tile_bytes_for(info, d);
-        let parts: u64 = info
-            .access
-            .iter()
-            .map(|p| p.map(|p| geo.cfg.intra[p]).unwrap_or(1))
-            .product();
-        r.bram18 += bram18_for(bytes, parts) * plan.buffers as f64;
+    for (_, rp) in rt.arrays() {
+        r.bram18 += bram18_for(rp.tile_bytes, rp.partitions) * rp.buffers as f64;
         // one stream engine per off-chip or FIFO connection
         r += cost::STREAM_ENGINE;
     }
     r
 }
 
-/// Per-SLR resource usage of the whole design.
+/// Per-SLR resource usage of a resolved design.
+pub fn slr_usage_resolved(rd: &ResolvedDesign, dev: &Device) -> Vec<ResourceVec> {
+    let mut per = vec![ResourceVec::ZERO; dev.slrs];
+    for rt in &rd.tasks {
+        per[rt.cfg().slr.min(dev.slrs - 1)] += task_resources(rt, dev);
+    }
+    per
+}
+
+/// Per-SLR resource usage of the whole design (cold-resolving wrapper).
 pub fn slr_usage(
     k: &Kernel,
     fg: &FusedGraph,
     design: &DesignConfig,
     dev: &Device,
 ) -> Vec<ResourceVec> {
-    let mut per = vec![ResourceVec::ZERO; dev.slrs];
-    for tc in &design.tasks {
-        let geo = TaskGeometry::new(k, fg, tc);
-        per[tc.slr.min(dev.slrs - 1)] += task_resources(&geo, dev);
-    }
-    per
+    let cache = GeometryCache::new(k, fg);
+    let rd = ResolvedDesign::new(k, fg, &cache, design);
+    slr_usage_resolved(&rd, dev)
 }
 
 /// Total design resources.
@@ -101,7 +93,19 @@ pub fn total_usage(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Dev
 }
 
 /// Eq 7 + Eq 10 + Eq 11 applied per SLR with budget `budget` (already
-/// scaled to the scenario's utilization cap).
+/// scaled to the scenario's utilization cap), over a resolved design.
+pub fn feasible_resolved(rd: &ResolvedDesign, dev: &Device, budget: &SlrBudget) -> bool {
+    if !partition_ok(rd, dev) {
+        return false;
+    }
+    if rd.design.tasks.iter().any(|t| t.slr >= dev.slrs) {
+        return false;
+    }
+    slr_usage_resolved(rd, dev).iter().all(|u| u.fits(budget))
+}
+
+/// [`feasible_resolved`] with cold resolution — callers that already
+/// hold a [`ResolvedDesign`] should use the resolved variant.
 pub fn feasible(
     k: &Kernel,
     fg: &FusedGraph,
@@ -109,19 +113,14 @@ pub fn feasible(
     dev: &Device,
     budget: &SlrBudget,
 ) -> bool {
-    if !partition_ok(k, fg, design, dev) {
-        return false;
-    }
-    if design.tasks.iter().any(|t| t.slr >= dev.slrs) {
-        return false;
-    }
-    slr_usage(k, fg, design, dev)
-        .iter()
-        .all(|u| u.fits(budget))
+    let cache = GeometryCache::new(k, fg);
+    let rd = ResolvedDesign::new(k, fg, &cache, design);
+    feasible_resolved(&rd, dev, budget)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::eval::resolve_task;
     use super::*;
     use crate::analysis::fusion::fuse;
     use crate::dse::config::{ExecutionModel, TaskConfig};
@@ -145,22 +144,24 @@ mod tests {
         // -> 96 partitions.
         let k = crate::ir::polybench::three_mm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let c = cfg(1, vec![19, 32, 3], vec![190, 224, 220]);
-        let geo = TaskGeometry::new(&k, &fg, &c);
-        assert_eq!(partition_of(&geo, "D"), 3 * 32);
-        assert_eq!(partition_of(&geo, "F"), 19 * 32);
-        assert_eq!(partition_of(&geo, "C"), 19 * 3);
+        let rt = resolve_task(&k, &cache.tasks[1], &c);
+        assert_eq!(partition_of(&rt, "D"), 3 * 32);
+        assert_eq!(partition_of(&rt, "F"), 19 * 32);
+        assert_eq!(partition_of(&rt, "C"), 19 * 3);
     }
 
     #[test]
     fn dsp_scales_with_unroll_over_ii() {
         let k = crate::ir::polybench::gemm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let dev = Device::u55c();
         let small = cfg(0, vec![2, 2, 1], vec![200, 220, 240]);
         let big = cfg(0, vec![8, 8, 1], vec![200, 220, 240]);
-        let rs = task_resources(&TaskGeometry::new(&k, &fg, &small), &dev);
-        let rb = task_resources(&TaskGeometry::new(&k, &fg, &big), &dev);
+        let rs = task_resources(&resolve_task(&k, &cache.tasks[0], &small), &dev);
+        let rb = task_resources(&resolve_task(&k, &cache.tasks[0], &big), &dev);
         assert!(rb.dsp > rs.dsp * 8.0, "dsp {} vs {}", rb.dsp, rs.dsp);
         // Eq 10 spot check: gemm S1 = 1 add + 1 mul, II=3, UF=64 ->
         // (2+3)/3*64 ≈ 106 DSP for S1 plus S0's mul (UF 64, II 1 -> 192).
@@ -191,6 +192,7 @@ mod tests {
     fn partition_limit_enforced() {
         let k = crate::ir::polybench::gemm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let dev = Device::u55c(); // max_partition = 1024
         let d = DesignConfig {
             kernel: k.name.clone(),
@@ -199,6 +201,7 @@ mod tests {
             // C partitions = 50*44 = 2200 > 1024
             tasks: vec![cfg(0, vec![50, 44, 1], vec![200, 220, 240])],
         };
-        assert!(!partition_ok(&k, &fg, &d, &dev));
+        let rd = ResolvedDesign::new(&k, &fg, &cache, &d);
+        assert!(!partition_ok(&rd, &dev));
     }
 }

@@ -1,4 +1,5 @@
-//! The analytic latency model (paper §4.2, Eqs 12–16).
+//! The analytic latency model (paper §4.2, Eqs 12–16), evaluated over
+//! the shared evaluation core.
 //!
 //! `task_latency` implements the per-task recursion: intra-tile latency
 //! (Eq 15), pipelined reduction tiles (Eq 16), then the level recursion
@@ -6,46 +7,42 @@
 //! explicit). `graph_latency` implements the DAG recursion (Eqs 12–13)
 //! with FIFO `shift`s for dataflow designs and full serialization for
 //! shared-buffer (Sequential) designs.
+//!
+//! All inputs come precomputed from a [`ResolvedTask`] /
+//! [`ResolvedDesign`] ([`super::eval`]): clamped transfer plans, tile
+//! bytes at the define level, transfer counts. This module performs no
+//! plan resolution of its own — the simulator, constraints and codegen
+//! read the same resolved numbers, so the consumers cannot drift.
 
-use super::config::{DesignConfig, ExecutionModel};
-use super::space::TaskGeometry;
-use crate::analysis::fusion::FusedGraph;
+use super::config::ExecutionModel;
+use super::eval::{ResolvedDesign, ResolvedTask};
 use crate::hw::Device;
-use crate::ir::{Kernel, StmtKind};
+use crate::ir::Kernel;
 
 /// Latency of one fused task in cycles, including its share of off-chip
 /// and FIFO communication.
-pub fn task_latency(geo: &TaskGeometry, dev: &Device, overlap: bool) -> u64 {
-    let compute = pipelined_compute_latency(geo, dev);
+pub fn task_latency(rt: &ResolvedTask, dev: &Device, overlap: bool) -> u64 {
+    let compute = pipelined_compute_latency(rt, dev);
 
     // Per-array total inbound cycles, amortized over the iterations of the
     // loop level where the movement happens (define level granularity —
-    // data is brought on-chip once per define-tile; see space.rs).
-    let levels = geo.levels();
+    // data is brought on-chip once per define-tile).
+    let levels = rt.levels();
     // per level, the set of inbound stream totals: distinct arrays ride
     // distinct HBM channels concurrently (§3.7 duplicates read-only
     // arrays), so a level's inbound cost is its slowest stream.
     let mut in_streams: Vec<Vec<u64>> = vec![Vec::new(); levels + 1];
     let mut out_total = vec![0u64; levels + 1];
-    for info in geo.infos() {
-        let decl = geo.kernel.array(&info.name).expect("declared");
-        let plan = match geo.cfg.plans.get(info.name.as_str()) {
-            Some(p) => *p,
-            None => geo.default_plan(&info.name, geo.levels() - 1),
-        };
-        let d = plan.define_level.min(levels - 1);
-        let t = plan.transfer_level.min(levels - 1);
+    for (a, rp) in rt.arrays() {
         // inbound: inputs from off-chip, intermediates from FIFOs — both
         // modelled at the selected bit width. Pure-write outputs are not
         // preloaded (§2.4: E/F/G initialized on chip).
-        let inbound = decl.is_input || (info.reads && !info.writes);
-        if inbound {
-            let per_tile = dev.transfer_cycles(geo.tile_bytes_for(info, d), plan.bitwidth);
-            in_streams[t].push(geo.transfer_count(d) * per_tile);
+        let per_tile = dev.transfer_cycles(rp.tile_bytes, rp.bitwidth);
+        if a.inbound() {
+            in_streams[rp.transfer_level].push(rp.transfer_count * per_tile);
         }
-        if info.writes && (decl.is_output || decl.is_intermediate()) {
-            let per_tile = dev.transfer_cycles(geo.tile_bytes_for(info, d), plan.bitwidth);
-            out_total[d] += geo.transfer_count(d) * per_tile;
+        if a.writes && (a.is_output || a.is_intermediate) {
+            out_total[rp.define_level] += rp.transfer_count * per_tile;
         }
     }
     let in_total: Vec<u64> = in_streams
@@ -54,7 +51,9 @@ pub fn task_latency(geo: &TaskGeometry, dev: &Device, overlap: bool) -> u64 {
             if streams.len() <= dev.mem_channels {
                 streams.iter().copied().max().unwrap_or(0)
             } else {
-                streams.iter().sum::<u64>() / dev.mem_channels as u64
+                // oversubscribed channels serialize; ceiling division —
+                // truncating here under-counted the transfer cycles
+                streams.iter().sum::<u64>().div_ceil(dev.mem_channels as u64)
             }
         })
         .collect();
@@ -63,16 +62,16 @@ pub fn task_latency(geo: &TaskGeometry, dev: &Device, overlap: bool) -> u64 {
     // the trip count T_l explicit):
     //   overlap:  lat_l = in_l + T_l * max(body, in_l/T_l, out_l/T_l) + out_l/T_l
     //   serial:   lat_l = T_l * (in+body+out per iteration)
-    let nlev = geo.nonred.len();
+    let nlev = rt.geo.nonred.len();
     let mut body = compute;
     for l in (1..=nlev).rev() {
-        let t_l = geo.cfg.inter_trip(geo.nonred[l - 1]).max(1);
+        let t_l = rt.cfg().inter_trip(rt.geo.nonred[l - 1]).max(1);
         // in_total[l]/out_total[l] are TOTAL cycles over the whole kernel
-        // run; the body at level l executes transfer_count(l) times, so
+        // run; the body at level l executes transfer_counts[l] times, so
         // the per-iteration share divides by that (not by t_l alone —
         // otherwise reuse plans with define < transfer get re-multiplied
         // by the outer trip counts).
-        let execs = geo.transfer_count(l).max(1);
+        let execs = rt.transfer_counts[l].max(1);
         let per_in = in_total[l] / execs;
         let per_out = out_total[l] / execs;
         body = if overlap {
@@ -90,12 +89,13 @@ pub fn task_latency(geo: &TaskGeometry, dev: &Device, overlap: bool) -> u64 {
 }
 
 /// Eq 15 + Eq 16: intra-tile latency and the pipelined reduction loop.
-pub fn pipelined_compute_latency(geo: &TaskGeometry, dev: &Device) -> u64 {
+pub fn pipelined_compute_latency(rt: &ResolvedTask, dev: &Device) -> u64 {
     let il_par = dev.fmul_latency + dev.fadd_latency; // dependent MAC chain
     let il_red = dev.fadd_latency;
 
     // Eq 15: reduction tree depth over the intra-tile reduction extent.
-    let red_intra: u64 = geo.red.iter().map(|&p| geo.cfg.intra[p]).product();
+    let cfg = rt.cfg();
+    let red_intra: u64 = rt.geo.red.iter().map(|&p| cfg.intra[p]).product();
     let lat_intra = il_par
         + if red_intra > 1 {
             (il_red as f64 * (red_intra as f64).log2()).ceil() as u64
@@ -104,18 +104,13 @@ pub fn pipelined_compute_latency(geo: &TaskGeometry, dev: &Device) -> u64 {
         };
 
     // Eq 16: II-pipelined inter-tile reduction iterations.
-    let red_inter: u64 = geo.red.iter().map(|&p| geo.cfg.inter_trip(p)).product();
-    let ii = if geo.red.is_empty() { 1 } else { geo.cfg.ii };
+    let red_inter: u64 = rt.geo.red.iter().map(|&p| cfg.inter_trip(p)).product();
+    let ii = if rt.geo.red.is_empty() { 1 } else { cfg.ii };
     let mut lat = lat_intra + ii * red_inter.saturating_sub(1);
 
     // Init statements in the fused task execute as their own intra task
     // once per output tile — one unrolled assignment, a couple of cycles.
-    if geo
-        .fused
-        .stmts
-        .iter()
-        .any(|&s| geo.kernel.statements[s].kind == StmtKind::Init)
-    {
+    if rt.statics().has_init {
         lat += 2;
     }
     lat
@@ -132,22 +127,30 @@ pub struct GraphLatency {
     pub total: u64,
 }
 
-/// Eqs 12–13 over the fused-task graph.
+/// Eqs 12–13 over the fused-task graph. Convenience wrapper that
+/// resolves `design` cold; hot paths resolve once and call
+/// [`graph_latency_resolved`].
 pub fn graph_latency(
     k: &Kernel,
-    fg: &FusedGraph,
-    design: &DesignConfig,
+    fg: &crate::analysis::fusion::FusedGraph,
+    design: &super::config::DesignConfig,
     dev: &Device,
 ) -> GraphLatency {
-    let n = fg.tasks.len();
+    let cache = super::eval::GeometryCache::new(k, fg);
+    let rd = ResolvedDesign::new(k, fg, &cache, design);
+    graph_latency_resolved(&rd, dev)
+}
+
+/// Eqs 12–13 over a resolved design.
+pub fn graph_latency_resolved(rd: &ResolvedDesign, dev: &Device) -> GraphLatency {
+    let n = rd.fg.tasks.len();
     let mut duration = vec![0u64; n];
-    for tc in &design.tasks {
-        let geo = TaskGeometry::new(k, fg, tc);
-        duration[tc.task] = task_latency(&geo, dev, design.overlap);
+    for rt in &rd.tasks {
+        duration[rt.cfg().task] = task_latency(rt, dev, rd.design.overlap);
     }
 
     let mut finish = vec![0u64; n];
-    match design.model {
+    match rd.design.model {
         ExecutionModel::Sequential => {
             // shared-buffer frameworks: tasks in program order, no overlap.
             let mut t = 0;
@@ -159,24 +162,26 @@ pub fn graph_latency(
         ExecutionModel::Dataflow => {
             for i in 0..n {
                 let mut start = 0u64;
-                for p in fg.predecessors(i) {
-                    let sh = shift(k, fg, design, p, i, duration[p]);
+                for p in rd.fg.predecessors(i) {
+                    let sh = shift(rd, p, i, duration[p]);
                     // producer began at finish[p] - duration[p]
                     let p_start = finish[p] - duration[p];
                     start = start.max(p_start + sh);
                 }
                 // inter-SLR FIFO crossing penalty
-                let slr_pen: u64 = fg
+                let slr_pen: u64 = rd
+                    .fg
                     .predecessors(i)
                     .iter()
-                    .filter(|&&p| design.tasks[p].slr != design.tasks[i].slr)
+                    .filter(|&&p| rd.task(p).cfg().slr != rd.task(i).cfg().slr)
                     .count() as u64
                     * dev.inter_slr_latency;
                 finish[i] = start + slr_pen + duration[i];
             }
         }
     }
-    let total = fg
+    let total = rd
+        .fg
         .sinks()
         .into_iter()
         .map(|s| finish[s])
@@ -190,31 +195,18 @@ pub fn graph_latency(
 /// data tile the consumer waits for. If the consumer ingests array `a`
 /// with its transfer at level 0 (whole-array buffering), it must wait for
 /// all of `a`; otherwise for the fraction its first tile covers.
-fn shift(
-    k: &Kernel,
-    fg: &FusedGraph,
-    design: &DesignConfig,
-    producer: usize,
-    consumer: usize,
-    producer_duration: u64,
-) -> u64 {
+fn shift(rd: &ResolvedDesign, producer: usize, consumer: usize, producer_duration: u64) -> u64 {
     let mut sh = 0u64;
-    for (s, d, a) in &fg.edges {
+    for (s, d, a) in &rd.fg.edges {
         if *s != producer || *d != consumer {
             continue;
         }
-        let total = k.array(a).map(|x| x.elems()).unwrap_or(1).max(1);
-        let ccfg = &design.tasks[consumer];
-        let geo_c = TaskGeometry::new(k, fg, ccfg);
-        let plan = ccfg
-            .plans
-            .get(a)
-            .copied()
-            .unwrap_or_else(|| geo_c.default_plan(a, geo_c.levels() - 1));
-        let first_tile: u64 = geo_c
-            .tile_dims(a, plan.define_level.min(geo_c.levels() - 1))
-            .iter()
-            .product::<u64>()
+        let total = rd.k.array(a).map(|x| x.elems()).unwrap_or(1).max(1);
+        let first_tile = rd
+            .task(consumer)
+            .plan_for(a)
+            .map(|(_, rp)| rp.tile_elems)
+            .unwrap_or(1)
             .max(1);
         let frac = (first_tile as f64 / total as f64).min(1.0);
         sh = sh.max((producer_duration as f64 * frac).ceil() as u64);
@@ -233,9 +225,10 @@ pub fn gflops(k: &Kernel, total_cycles: u64, dev: &Device) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    use super::super::config::{DesignConfig, TaskConfig, TransferPlan};
+    use super::super::eval::{resolve_task, GeometryCache};
     use super::*;
     use crate::analysis::fusion::fuse;
-    use crate::dse::config::{TaskConfig, TransferPlan};
     use crate::ir::polybench;
     use std::collections::BTreeMap;
 
@@ -255,13 +248,12 @@ mod tests {
     fn intra_latency_grows_with_reduction_log() {
         let k = polybench::gemm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let dev = Device::u55c();
         let c1 = simple_cfg(0, vec![0, 1, 2], vec![200, 220, 240], vec![10, 10, 1]);
         let c2 = simple_cfg(0, vec![0, 1, 2], vec![200, 220, 240], vec![10, 10, 8]);
-        let g1 = TaskGeometry::new(&k, &fg, &c1);
-        let g2 = TaskGeometry::new(&k, &fg, &c2);
-        let l1 = pipelined_compute_latency(&g1, &dev);
-        let l2 = pipelined_compute_latency(&g2, &dev);
+        let l1 = pipelined_compute_latency(&resolve_task(&k, &cache.tasks[0], &c1), &dev);
+        let l2 = pipelined_compute_latency(&resolve_task(&k, &cache.tasks[0], &c2), &dev);
         // wider reduction tile: fewer pipelined iterations, so lower total
         assert!(l2 < l1, "{l2} !< {l1}");
     }
@@ -270,11 +262,12 @@ mod tests {
     fn unrolling_reduces_task_latency() {
         let k = polybench::gemm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let dev = Device::u55c();
         let small = simple_cfg(0, vec![0, 1, 2], vec![200, 220, 240], vec![2, 2, 1]);
         let big = simple_cfg(0, vec![0, 1, 2], vec![200, 220, 240], vec![10, 22, 4]);
-        let ls = task_latency(&TaskGeometry::new(&k, &fg, &small), &dev, true);
-        let lb = task_latency(&TaskGeometry::new(&k, &fg, &big), &dev, true);
+        let ls = task_latency(&resolve_task(&k, &cache.tasks[0], &small), &dev, true);
+        let lb = task_latency(&resolve_task(&k, &cache.tasks[0], &big), &dev, true);
         assert!(lb < ls / 4, "expected big unroll much faster: {lb} vs {ls}");
     }
 
@@ -282,11 +275,12 @@ mod tests {
     fn overlap_beats_serial() {
         let k = polybench::gemm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let dev = Device::u55c();
         let cfg = simple_cfg(0, vec![0, 1, 2], vec![200, 220, 240], vec![10, 22, 4]);
-        let geo = TaskGeometry::new(&k, &fg, &cfg);
-        let with = task_latency(&geo, &dev, true);
-        let without = task_latency(&geo, &dev, false);
+        let rt = resolve_task(&k, &cache.tasks[0], &cfg);
+        let with = task_latency(&rt, &dev, true);
+        let without = task_latency(&rt, &dev, false);
         assert!(with <= without);
     }
 

@@ -1,0 +1,573 @@
+//! The unified evaluation core: **one** plan-resolution layer shared by
+//! the analytic cost model ([`super::cost`]), the resource constraints
+//! ([`super::constraints`]), the executing simulator
+//! ([`crate::sim::engine`]), the board model ([`crate::sim::board`]) and
+//! the HLS code generator ([`crate::codegen::hls`]).
+//!
+//! Before this module existed, each of those consumers independently
+//! re-resolved transfer plans (`default_plan`, `define_level` /
+//! `transfer_level` clamping, tile geometry) from a `TaskGeometry` it
+//! rebuilt per evaluation — four copies of the same logic that could
+//! silently diverge. Now a candidate design is resolved **once** into a
+//! [`ResolvedDesign`] and every consumer reads the same precomputed
+//! numbers, so they agree on what the design *means* by construction.
+//!
+//! Two layers, split by what can be memoized when:
+//!
+//! * [`GeometryCache`] / [`TaskStatics`] — everything that depends only
+//!   on the kernel and its fusion, built **once at fusion time**:
+//!   per-array declarations and translated accesses, representative
+//!   nests, legal loop orders, statement→representative position maps,
+//!   FIFO topology. The solver's inner loop (10^5+ evaluations per
+//!   solve) shares one cache; `service::batch` shares it further across
+//!   parallel jobs for the same kernel.
+//! * [`ResolvedTask`] / [`ResolvedPlan`] — everything a concrete
+//!   [`TaskConfig`] adds: clamped+defaulted transfer plans, tile
+//!   dimensions and byte counts at the define level, transfer counts,
+//!   partition factors. Rebuilt per candidate; invalidated by any change
+//!   to tile factors, permutation or plans (see DESIGN.md §Evaluation
+//!   core for the invalidation rules).
+
+use super::config::{DesignConfig, TaskConfig, TransferPlan};
+use super::permutation::legal_orders;
+use super::space::TaskGeometry;
+use crate::analysis::fusion::{FusedGraph, FusedTask};
+use crate::ir::{Kernel, StmtKind};
+
+/// Configuration-independent facts about one array of a fused task:
+/// the fused-time access memo joined with the array's declaration and
+/// its FIFO topology, so per-candidate resolution never does string
+/// lookups into the kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayStatics {
+    pub name: String,
+    /// Access translated to representative-nest loop positions, one
+    /// entry per array dimension (`None` = dimension not indexed by a
+    /// loop iterator).
+    pub access: Vec<Option<usize>>,
+    /// Declared extent of each dimension.
+    pub dims: Vec<u64>,
+    pub elem_bytes: u64,
+    pub elem_bits: u64,
+    /// Declared total element count.
+    pub total_elems: u64,
+    pub reads: bool,
+    pub writes: bool,
+    pub is_input: bool,
+    pub is_output: bool,
+    pub is_intermediate: bool,
+    /// Producing fused task when this array arrives over a FIFO.
+    pub fifo_producer: Option<usize>,
+}
+
+impl ArrayStatics {
+    /// Whether the task ingests this array (off-chip input, or a
+    /// read-only intermediate arriving over a FIFO).
+    pub fn inbound(&self) -> bool {
+        self.is_input || (self.reads && !self.writes)
+    }
+}
+
+/// Configuration-independent facts about one fused task, memoized at
+/// fusion time so the solver's per-candidate evaluation starts from
+/// here instead of re-deriving them.
+#[derive(Debug, Clone)]
+pub struct TaskStatics {
+    /// Fused task id.
+    pub task: usize,
+    /// Representative statement id (deepest compute nest).
+    pub rep: usize,
+    /// Reduction mask of the representative nest, by loop position.
+    pub red_mask: Vec<bool>,
+    /// Statement ids of the fused task, program order.
+    pub stmts: Vec<usize>,
+    /// The array this task produces.
+    pub output: String,
+    /// Whether the task contains an init statement.
+    pub has_init: bool,
+    /// Legal inter-tile loop orders (reduction loops pinned innermost).
+    pub orders: Vec<Vec<usize>>,
+    /// Per-array statics, first-touch order.
+    pub arrays: Vec<ArrayStatics>,
+    /// Per statement (parallel to `stmts`): each of its loop positions
+    /// mapped onto the representative nest by iterator name.
+    pub stmt_rep_pos: Vec<Vec<Option<usize>>>,
+    /// Total elements this task emits over outgoing FIFO edges.
+    pub fifo_out_total_elems: u64,
+}
+
+impl TaskStatics {
+    fn new(k: &Kernel, fg: &FusedGraph, fused: &FusedTask) -> TaskStatics {
+        let rep = fused.representative(k);
+        let rep_stmt = &k.statements[rep];
+        let red_mask: Vec<bool> = rep_stmt.loops.iter().map(|l| l.reduction).collect();
+        let orders = legal_orders(rep_stmt);
+        let stmt_rep_pos: Vec<Vec<Option<usize>>> = fused
+            .stmts
+            .iter()
+            .map(|&sid| {
+                k.statements[sid]
+                    .loops
+                    .iter()
+                    .map(|l| rep_stmt.loops.iter().position(|rl| rl.name == l.name))
+                    .collect()
+            })
+            .collect();
+        let arrays: Vec<ArrayStatics> = fused
+            .array_info
+            .iter()
+            .map(|info| {
+                let decl = k.array(&info.name).expect("declared array");
+                let fifo_producer = fg
+                    .edges
+                    .iter()
+                    .find(|(_, dst, arr)| *dst == fused.id && arr == &info.name)
+                    .map(|(src, _, _)| *src);
+                ArrayStatics {
+                    name: info.name.clone(),
+                    access: info.access.clone(),
+                    dims: decl.dims.clone(),
+                    elem_bytes: decl.dtype.bytes(),
+                    elem_bits: decl.dtype.bits(),
+                    total_elems: decl.elems(),
+                    reads: info.reads,
+                    writes: info.writes,
+                    is_input: decl.is_input,
+                    is_output: decl.is_output,
+                    is_intermediate: decl.is_intermediate(),
+                    fifo_producer,
+                }
+            })
+            .collect();
+        let fifo_out_total_elems: u64 = fg
+            .edges
+            .iter()
+            .filter(|(src, _, _)| *src == fused.id)
+            .map(|(_, _, a)| k.array(a).map(|x| x.elems()).unwrap_or(0))
+            .sum();
+        let has_init = fused
+            .stmts
+            .iter()
+            .any(|&s| k.statements[s].kind == StmtKind::Init);
+        TaskStatics {
+            task: fused.id,
+            rep,
+            red_mask,
+            stmts: fused.stmts.clone(),
+            output: fused.output.clone(),
+            has_init,
+            orders,
+            arrays,
+            stmt_rep_pos,
+            fifo_out_total_elems,
+        }
+    }
+
+    /// The statics of array `name`, if this task touches it.
+    pub fn array(&self, name: &str) -> Option<&ArrayStatics> {
+        self.arrays.iter().find(|a| a.name == name)
+    }
+}
+
+/// Fusion-time memo for every task of a kernel. Owns all its data
+/// (no borrows), so one cache can be shared across solver stages and
+/// across `service::batch` worker threads for the same kernel.
+#[derive(Debug, Clone)]
+pub struct GeometryCache {
+    pub tasks: Vec<TaskStatics>,
+}
+
+impl GeometryCache {
+    pub fn new(k: &Kernel, fg: &FusedGraph) -> GeometryCache {
+        GeometryCache {
+            tasks: fg.tasks.iter().map(|t| TaskStatics::new(k, fg, t)).collect(),
+        }
+    }
+}
+
+/// One array's transfer plan after resolution: levels clamped into the
+/// task's level range, defaults filled in, and the plan-dependent
+/// geometry precomputed. This is the *only* place in the codebase where
+/// plans are defaulted and clamped — every consumer reads these fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResolvedPlan {
+    /// Define level, clamped to `0..levels`.
+    pub define_level: usize,
+    /// Transfer level, clamped to `0..levels`.
+    pub transfer_level: usize,
+    pub bitwidth: u64,
+    pub buffers: u64,
+    /// Data-tile extents at the define level (paper `f_{a,l}`).
+    pub tile_dims: Vec<u64>,
+    /// Product of `tile_dims` (1 for zero-rank tiles).
+    pub tile_elems: u64,
+    /// Bytes of one define-level tile (0 for zero-rank tiles).
+    pub tile_bytes: u64,
+    /// How many times the define-level transfer executes.
+    pub transfer_count: u64,
+    /// Array partitioning factor (Eq 8): product of the intra factors
+    /// of the loops indexing the array.
+    pub partitions: u64,
+}
+
+impl ResolvedPlan {
+    /// The plan as the (clamped) decision-variable tuple.
+    pub fn as_plan(&self) -> TransferPlan {
+        TransferPlan {
+            define_level: self.define_level,
+            transfer_level: self.transfer_level,
+            bitwidth: self.bitwidth,
+            buffers: self.buffers,
+        }
+    }
+}
+
+/// One fused task under a concrete [`TaskConfig`], fully resolved:
+/// permuted loop orders, per-level transfer counts and one
+/// [`ResolvedPlan`] per array. Constructed once per candidate and read
+/// by every consumer.
+pub struct ResolvedTask<'a> {
+    /// The underlying tile geometry (permuted orders, tile math).
+    pub geo: TaskGeometry<'a>,
+    /// Per-array resolved plans, parallel to `statics().arrays`.
+    pub plans: Vec<ResolvedPlan>,
+    /// Output tile steps = product of all non-reduction inter trips.
+    pub steps: u64,
+    /// `transfer_counts[l]` = executions of a level-`l` transfer.
+    pub transfer_counts: Vec<u64>,
+}
+
+impl<'a> ResolvedTask<'a> {
+    pub fn statics(&self) -> &'a TaskStatics {
+        self.geo.st
+    }
+
+    pub fn cfg(&self) -> &'a TaskConfig {
+        self.geo.cfg
+    }
+
+    /// Number of transfer levels: 0 (before loops) ..= nonred.len().
+    pub fn levels(&self) -> usize {
+        self.geo.levels()
+    }
+
+    /// Iterate (array statics, resolved plan) pairs, first-touch order.
+    pub fn arrays(&self) -> impl Iterator<Item = (&ArrayStatics, &ResolvedPlan)> + '_ {
+        self.geo.st.arrays.iter().zip(self.plans.iter())
+    }
+
+    /// The (statics, resolved plan) pair of array `name`.
+    pub fn plan_for(&self, name: &str) -> Option<(&ArrayStatics, &ResolvedPlan)> {
+        self.geo
+            .st
+            .arrays
+            .iter()
+            .position(|a| a.name == name)
+            .map(|i| (&self.geo.st.arrays[i], &self.plans[i]))
+    }
+}
+
+/// Build the default transfer plan for `a` at `level`: define and
+/// transfer at `level`, buffers = 2 (read xor write) or 3 (both),
+/// natural bit width (Eq 3). Consumers never call this directly —
+/// [`resolve_task`] applies it to every array without an explicit plan.
+pub fn default_plan(geo: &TaskGeometry, a: &ArrayStatics, level: usize) -> TransferPlan {
+    let rw = a.writes && a.reads;
+    TransferPlan {
+        define_level: level,
+        transfer_level: level,
+        bitwidth: geo.natural_bitwidth_at(a, level),
+        buffers: if rw { 3 } else { 2 },
+    }
+}
+
+/// The transfer-plan candidates the solver's coordinate descent scores
+/// for one array: the diagonal plans (define = transfer at each level)
+/// plus, per non-deepest level, the reuse plan that buffers at the
+/// level but streams at the deepest level.
+pub fn plan_options(geo: &TaskGeometry, a: &ArrayStatics) -> Vec<TransferPlan> {
+    let levels = geo.levels();
+    let mut options = Vec::with_capacity(2 * levels);
+    for l in 0..levels {
+        options.push(default_plan(geo, a, l));
+        if l + 1 < levels {
+            let mut p = default_plan(geo, a, l);
+            p.transfer_level = levels - 1;
+            options.push(p);
+        }
+    }
+    options
+}
+
+/// Resolve one task configuration against its fusion-time statics: the
+/// single construction every consumer's numbers derive from.
+pub fn resolve_task<'a>(
+    k: &'a Kernel,
+    st: &'a TaskStatics,
+    cfg: &'a TaskConfig,
+) -> ResolvedTask<'a> {
+    let geo = TaskGeometry::new(k, st, cfg);
+    let levels = geo.levels();
+    let transfer_counts: Vec<u64> = (0..levels).map(|l| geo.transfer_count(l)).collect();
+    let steps = transfer_counts[levels - 1].max(1);
+    let plans: Vec<ResolvedPlan> = st
+        .arrays
+        .iter()
+        .map(|a| {
+            let plan = cfg
+                .plans
+                .get(a.name.as_str())
+                .copied()
+                .unwrap_or_else(|| default_plan(&geo, a, levels - 1));
+            let d = plan.define_level.min(levels - 1);
+            let t = plan.transfer_level.min(levels - 1);
+            let tile_dims = geo.tile_dims_at(a, d);
+            let tile_elems: u64 = tile_dims.iter().product();
+            let tile_bytes =
+                if tile_dims.is_empty() { 0 } else { tile_elems * a.elem_bytes };
+            let partitions: u64 = a
+                .access
+                .iter()
+                .map(|p| p.map(|p| cfg.intra[p]).unwrap_or(1))
+                .product();
+            ResolvedPlan {
+                define_level: d,
+                transfer_level: t,
+                bitwidth: plan.bitwidth,
+                buffers: plan.buffers,
+                tile_dims,
+                tile_elems,
+                tile_bytes,
+                transfer_count: transfer_counts[d],
+                partitions,
+            }
+        })
+        .collect();
+    ResolvedTask { geo, plans, steps, transfer_counts }
+}
+
+/// A complete design resolved against one kernel: one [`ResolvedTask`]
+/// per task config, plus the graph context every DAG-level consumer
+/// needs. Constructed once per candidate design, consumed by
+/// `graph_latency`, `feasible`/`slr_usage`, `simulate`, `board_eval`
+/// and `generate_hls`.
+pub struct ResolvedDesign<'a> {
+    pub k: &'a Kernel,
+    pub fg: &'a FusedGraph,
+    pub design: &'a DesignConfig,
+    /// Indexed by **task id** (`tasks[i].cfg().task == i`), regardless
+    /// of the order `design.tasks` was stored in — graph-level
+    /// consumers index by id, and persisted designs (QoR DB) are not
+    /// guaranteed to list their tasks in id order.
+    pub tasks: Vec<ResolvedTask<'a>>,
+}
+
+impl<'a> ResolvedDesign<'a> {
+    pub fn new(
+        k: &'a Kernel,
+        fg: &'a FusedGraph,
+        cache: &'a GeometryCache,
+        design: &'a DesignConfig,
+    ) -> ResolvedDesign<'a> {
+        let mut tasks: Vec<ResolvedTask<'a>> = design
+            .tasks
+            .iter()
+            .map(|tc| resolve_task(k, &cache.tasks[tc.task], tc))
+            .collect();
+        tasks.sort_by_key(|rt| rt.geo.cfg.task);
+        ResolvedDesign { k, fg, design, tasks }
+    }
+
+    /// The resolved task with id `t`.
+    pub fn task(&self, t: usize) -> &ResolvedTask<'a> {
+        &self.tasks[t]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fusion::fuse;
+    use crate::dse::config::ExecutionModel;
+    use crate::ir::polybench;
+    use std::collections::BTreeMap;
+
+    /// The paper's Listing-6 FT0 config for 3mm (see space.rs tests).
+    fn ft0_cfg() -> TaskConfig {
+        let mut plans = BTreeMap::new();
+        plans.insert(
+            "B".into(),
+            TransferPlan { define_level: 0, transfer_level: 0, bitwidth: 512, buffers: 2 },
+        );
+        plans.insert(
+            "A".into(),
+            TransferPlan { define_level: 1, transfer_level: 1, bitwidth: 512, buffers: 2 },
+        );
+        plans.insert(
+            "E".into(),
+            TransferPlan { define_level: 2, transfer_level: 2, bitwidth: 512, buffers: 3 },
+        );
+        TaskConfig {
+            task: 0,
+            perm: vec![0, 1, 2],
+            padded_trip: vec![180, 192, 204],
+            intra: vec![10, 32, 4],
+            ii: 3,
+            plans,
+            slr: 0,
+        }
+    }
+
+    #[test]
+    fn statics_memoize_fusion_facts() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        assert_eq!(cache.tasks.len(), 3);
+        let ft0 = &cache.tasks[0];
+        assert_eq!(ft0.rep, 1);
+        assert_eq!(ft0.red_mask, [false, false, true]);
+        assert_eq!(ft0.stmts, [0, 1]);
+        assert_eq!(ft0.output, "E");
+        assert!(ft0.has_init);
+        // 2 non-reduction loops -> 2 legal orders, k pinned innermost
+        assert_eq!(ft0.orders.len(), 2);
+        for o in &ft0.orders {
+            assert_eq!(*o.last().unwrap(), 2);
+        }
+        // E is written by S0 (init, loops i,j) and S1; the access memo
+        // resolves through the representative nest.
+        let e = ft0.array("E").unwrap();
+        assert_eq!(e.access, [Some(0), Some(1)]);
+        assert!(e.writes && e.reads);
+        let a = ft0.array("A").unwrap();
+        assert!(a.reads && !a.writes);
+        assert!(a.is_input);
+        // FT2 ingests E over a FIFO from FT0
+        let e_in_ft2 = cache.tasks[2].array("E").unwrap();
+        assert_eq!(e_in_ft2.fifo_producer, Some(0));
+        assert_eq!(ft0.array("E").unwrap().fifo_producer, None);
+        // FT0 emits E (180x190 elements) downstream
+        assert_eq!(ft0.fifo_out_total_elems, 180 * 190);
+    }
+
+    #[test]
+    fn resolution_precomputes_listing6_tiles() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let cfg = ft0_cfg();
+        let rt = resolve_task(&k, &cache.tasks[0], &cfg);
+        assert_eq!(rt.levels(), 3);
+        assert_eq!(rt.transfer_counts, [1, 18, 108]);
+        assert_eq!(rt.steps, 108);
+        let (b, bp) = rt.plan_for("B").unwrap();
+        assert!(b.is_input);
+        assert_eq!(bp.tile_dims, [204, 192]);
+        assert_eq!(bp.tile_bytes, 204 * 192 * 4);
+        assert_eq!(bp.transfer_count, 1);
+        let (_, ap) = rt.plan_for("A").unwrap();
+        assert_eq!(ap.tile_dims, [10, 204]);
+        assert_eq!(ap.transfer_count, 18);
+        let (_, ep) = rt.plan_for("E").unwrap();
+        assert_eq!(ep.tile_dims, [10, 32]);
+        assert_eq!(ep.transfer_count, 108);
+        assert_eq!(ep.buffers, 3);
+        // Eq 8: partitions = product of intra factors on indexed dims
+        assert_eq!(ap.partitions, 10 * 4);
+        assert_eq!(ep.partitions, 10 * 32);
+    }
+
+    #[test]
+    fn missing_plans_default_to_deepest_level() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let mut cfg = ft0_cfg();
+        cfg.plans.clear();
+        let rt = resolve_task(&k, &cache.tasks[0], &cfg);
+        for (a, rp) in rt.arrays() {
+            assert_eq!(rp.define_level, rt.levels() - 1, "{}", a.name);
+            assert_eq!(rp.transfer_level, rt.levels() - 1, "{}", a.name);
+            // read xor write -> 2 buffers, read and write -> 3
+            let expect = if a.reads && a.writes { 3 } else { 2 };
+            assert_eq!(rp.buffers, expect, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn out_of_range_levels_are_clamped() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let mut cfg = ft0_cfg();
+        cfg.plans.insert(
+            "A".into(),
+            TransferPlan { define_level: 9, transfer_level: 9, bitwidth: 128, buffers: 2 },
+        );
+        let rt = resolve_task(&k, &cache.tasks[0], &cfg);
+        let (_, ap) = rt.plan_for("A").unwrap();
+        assert_eq!(ap.define_level, rt.levels() - 1);
+        assert_eq!(ap.transfer_level, rt.levels() - 1);
+        assert_eq!(ap.bitwidth, 128, "explicit bit width survives clamping");
+    }
+
+    #[test]
+    fn plan_options_cover_diagonal_and_reuse() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let cfg = ft0_cfg();
+        let geo = TaskGeometry::new(&k, &cache.tasks[0], &cfg);
+        let a = cache.tasks[0].array("A").unwrap();
+        let opts = plan_options(&geo, a);
+        // levels = 3: diagonal plans at 0,1,2 + reuse plans at 0,1
+        assert_eq!(opts.len(), 5);
+        for p in &opts {
+            assert!(p.define_level <= p.transfer_level, "{p:?}");
+            assert!(p.validate().is_ok(), "{p:?}");
+        }
+        assert!(opts.iter().any(|p| p.define_level == 0 && p.transfer_level == 2));
+    }
+
+    #[test]
+    fn resolved_design_parallels_config() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let design = DesignConfig {
+            kernel: k.name.clone(),
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+            tasks: (0..3)
+                .map(|t| {
+                    let rep = fg.tasks[t].representative(&k);
+                    let nest = &k.statements[rep].loops;
+                    TaskConfig {
+                        task: t,
+                        perm: (0..nest.len()).collect(),
+                        padded_trip: nest.iter().map(|l| l.trip).collect(),
+                        intra: vec![1; nest.len()],
+                        ii: 3,
+                        plans: BTreeMap::new(),
+                        slr: 0,
+                    }
+                })
+                .collect(),
+        };
+        let rd = ResolvedDesign::new(&k, &fg, &cache, &design);
+        assert_eq!(rd.tasks.len(), 3);
+        for (rt, tc) in rd.tasks.iter().zip(&design.tasks) {
+            assert_eq!(rt.cfg().task, tc.task);
+            assert_eq!(rt.plans.len(), rt.statics().arrays.len());
+        }
+        // a persisted design may store its tasks out of id order; the
+        // resolved view is id-indexed regardless
+        let mut shuffled = design.clone();
+        shuffled.tasks.reverse();
+        let rd2 = ResolvedDesign::new(&k, &fg, &cache, &shuffled);
+        for (i, rt) in rd2.tasks.iter().enumerate() {
+            assert_eq!(rt.cfg().task, i);
+        }
+    }
+}

@@ -1,15 +1,22 @@
 //! Design-space exploration: the unified optimization space of Table 2,
-//! the constraints of Eqs 1–11, the latency cost model of Eqs 12–16, and
-//! the solver that replaces AMPL+Gurobi with an exact combinatorial
-//! branch-and-bound over the same (finite, discrete) space.
+//! the constraints of Eqs 1–11, the latency cost model of Eqs 12–16, the
+//! shared evaluation core ([`eval`]) every consumer reads its resolved
+//! design from, and the solver that replaces AMPL+Gurobi with an exact
+//! combinatorial branch-and-bound over the same (finite, discrete) space.
 
 pub mod config;
 pub mod constraints;
 pub mod cost;
+// The evaluation core is the one place plans are resolved; it is held
+// to a stricter bar than the inherited tree (CI runs clippy blocking
+// for this module, advisory elsewhere).
+#[deny(clippy::all)]
+pub mod eval;
 pub mod padding;
 pub mod permutation;
 pub mod solver;
 pub mod space;
 
 pub use config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
-pub use solver::{solve, SolverOptions, SolverResult};
+pub use eval::{GeometryCache, ResolvedDesign, ResolvedTask};
+pub use solver::{solve, solve_with_cache, SolverOptions, SolverResult};

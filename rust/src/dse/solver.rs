@@ -15,19 +15,28 @@
 //!    assignments (Eq 11) minimizing the DAG latency (Eqs 12–13) under
 //!    per-region budgets, with branch-and-bound pruning.
 //!
+//! The inner loop is incremental on top of the shared evaluation core
+//! ([`super::eval`]): the configuration-independent parts (array infos,
+//! access translations, legal orders) are memoized at fusion time in a
+//! [`GeometryCache`], so per-candidate evaluation only recomputes what
+//! a changed tile factor/permutation/plan invalidates. `solve` builds
+//! the cache itself; [`solve_with_cache`] lets callers (the coordinator
+//! flow, `service::batch` worker pools) share one cache per kernel
+//! across solves.
+//!
 //! A timeout makes the solver *anytime*: it returns the incumbent with
 //! `timed_out = true`, mirroring the paper's Gurobi-timeout mode (§6.4).
 
 use super::config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
-use super::constraints::{partition_of, task_resources};
-use super::cost::{gflops, graph_latency, task_latency, GraphLatency};
+use super::constraints::task_resources;
+use super::cost::{gflops, graph_latency_resolved, task_latency, GraphLatency};
+use super::eval::{self, GeometryCache, ResolvedDesign, TaskStatics};
 use super::padding::legal_intra_factors;
-use super::permutation::legal_orders;
-use super::space::TaskGeometry;
 use crate::analysis::fusion::{fuse, FusedGraph};
 use crate::hw::resources::ResourceVec;
 use crate::hw::{Device, SlrBudget};
 use crate::ir::Kernel;
+use crate::sim::engine::simulate_resolved;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
@@ -179,16 +188,52 @@ pub fn design_usable(
     dev: &Device,
     scenario: Scenario,
 ) -> bool {
-    let (regions, budget) = region_budget(dev, scenario);
-    design.validate(k, fg, dev.slrs).is_ok()
-        && design.tasks.iter().all(|t| t.slr < regions)
-        && crate::dse::constraints::feasible(k, fg, design, dev, &budget)
+    let cache = GeometryCache::new(k, fg);
+    design_usable_with_cache(k, fg, &cache, design, dev, scenario)
 }
 
-/// Solve the design space for `k`. Returns the best feasible design found.
+/// [`design_usable`] over a pre-built geometry cache — the warm-start
+/// gate, the cached flow and the batch orchestrator all hold one.
+pub fn design_usable_with_cache(
+    k: &Kernel,
+    fg: &FusedGraph,
+    cache: &GeometryCache,
+    design: &DesignConfig,
+    dev: &Device,
+    scenario: Scenario,
+) -> bool {
+    let (regions, budget) = region_budget(dev, scenario);
+    // structural validation first: resolution indexes the cache by task
+    // id, which is only safe on a validated design
+    design.validate(k, fg, dev.slrs).is_ok()
+        && design.tasks.iter().all(|t| t.slr < regions)
+        && {
+            let rd = ResolvedDesign::new(k, fg, cache, design);
+            crate::dse::constraints::feasible_resolved(&rd, dev, &budget)
+        }
+}
+
+/// Solve the design space for `k`. Returns the best feasible design
+/// found. Builds the fusion and geometry cache itself; callers that
+/// solve the same kernel repeatedly should build both once and use
+/// [`solve_with_cache`].
 pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
-    let start = Instant::now();
     let fg = fuse(k);
+    let cache = GeometryCache::new(k, &fg);
+    solve_with_cache(k, &fg, &cache, dev, opts)
+}
+
+/// [`solve`] over a pre-built fusion + geometry cache. The cache is
+/// read-only and thread-safe: `service::batch` shares one per kernel
+/// across its worker pool.
+pub fn solve_with_cache(
+    k: &Kernel,
+    fg: &FusedGraph,
+    cache: &GeometryCache,
+    dev: &Device,
+    opts: &SolverOptions,
+) -> SolverResult {
+    let start = Instant::now();
     let (regions, budget) = region_budget(dev, opts.scenario);
     let mut explored = 0u64;
     let mut timed_out = false;
@@ -205,7 +250,7 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
     for t in 0..n_tasks {
         let mut cands = enumerate_task(
             k,
-            &fg,
+            cache,
             t,
             dev,
             opts,
@@ -223,7 +268,7 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
             let nopad = SolverOptions { max_pad: 0, ..opts.clone() };
             cands.extend(enumerate_task(
                 k,
-                &fg,
+                cache,
                 t,
                 dev,
                 &nopad,
@@ -252,9 +297,10 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
         let usable = inc.kernel == k.name
             && inc.model == opts.model
             && inc.overlap == opts.overlap
-            && design_usable(k, &fg, inc, dev, opts.scenario);
+            && design_usable_with_cache(k, fg, cache, inc, dev, opts.scenario);
         if usable {
-            let lat = crate::sim::engine::simulate(k, &fg, inc, dev).cycles;
+            let rd = ResolvedDesign::new(k, fg, cache, inc);
+            let lat = simulate_resolved(&rd, dev).cycles;
             best = Some((lat, inc.clone()));
             warm_started = true;
         }
@@ -262,7 +308,8 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
     let mut assign: Vec<(usize, usize)> = Vec::new();
     dfs_assign(
         k,
-        &fg,
+        fg,
+        cache,
         dev,
         opts,
         &budget,
@@ -276,7 +323,9 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
     );
 
     let (_, design) = best.expect("at least one feasible assembly");
-    let latency = graph_latency(k, &fg, &design, dev);
+    let rd = ResolvedDesign::new(k, fg, cache, &design);
+    let latency = graph_latency_resolved(&rd, dev);
+    drop(rd);
     let gf = gflops(k, latency.total, dev);
     SolverResult {
         design,
@@ -290,11 +339,14 @@ pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
 }
 
 /// Enumerate tile factors × permutations × transfer plans for one fused
-/// task and reduce to a Pareto front.
+/// task and reduce to a Pareto front. All configuration-independent
+/// inputs (representative nest, legal orders, array statics) come from
+/// the [`GeometryCache`]; per candidate, only the resolution of the
+/// changed configuration is recomputed.
 #[allow(clippy::too_many_arguments)]
 fn enumerate_task(
     k: &Kernel,
-    fg: &FusedGraph,
+    cache: &GeometryCache,
     t: usize,
     dev: &Device,
     opts: &SolverOptions,
@@ -303,8 +355,8 @@ fn enumerate_task(
     explored: &mut u64,
     timed_out: &mut bool,
 ) -> Vec<Candidate> {
-    let rep = fg.tasks[t].representative(k);
-    let rep_stmt = &k.statements[rep];
+    let st = &cache.tasks[t];
+    let rep_stmt = &k.statements[st.rep];
     let nest = &rep_stmt.loops;
     let has_red = nest.iter().any(|l| l.reduction);
     let ii = if has_red { dev.fadd_latency } else { 1 };
@@ -325,11 +377,14 @@ fn enumerate_task(
         })
         .collect();
 
-    // permutations (inter-tile order); reduction loops pinned innermost
-    let orders = if opts.permute {
-        legal_orders(rep_stmt)
+    // permutations (inter-tile order, memoized at fusion time);
+    // reduction loops pinned innermost
+    let pinned;
+    let orders: &[Vec<usize>] = if opts.permute {
+        &st.orders
     } else {
-        vec![legal_orders(rep_stmt)[0].clone()]
+        pinned = vec![st.orders[0].clone()];
+        &pinned
     };
 
     // ---- stage 1: factor combos scored with a default transfer plan ----
@@ -369,19 +424,16 @@ fn enumerate_task(
             cfg.perm.clone_from(ord);
             cfg.padded_trip.clone_from(padded);
             cfg.intra.clone_from(intra);
-            let geo = TaskGeometry::new(k, fg, &cfg);
+            let rt = eval::resolve_task(k, st, &cfg);
             // partition constraint (Eq 8)
-            if geo
-                .array_names()
-                .any(|a| partition_of(&geo, a) > dev.max_partition)
-            {
+            if rt.plans.iter().any(|rp| rp.partitions > dev.max_partition) {
                 continue;
             }
-            let res = task_resources(&geo, dev);
+            let res = task_resources(&rt, dev);
             if !res.fits(budget) {
                 continue;
             }
-            let lat = task_latency(&geo, dev, opts.overlap);
+            let lat = task_latency(&rt, dev, opts.overlap);
             scored.push((lat, intra.iter().product(), ci as u32, oi as u32));
         }
     }
@@ -417,23 +469,22 @@ fn enumerate_task(
             break;
         }
         let (intra, padded) = &combos[ci as usize];
-        let ord = &orders[oi as usize];
         let base = TaskConfig {
             task: t,
-            perm: ord.clone(),
+            perm: orders[oi as usize].clone(),
             padded_trip: padded.clone(),
             intra: intra.clone(),
             ii,
             plans: BTreeMap::new(),
             slr: 0,
         };
-        let cfg = choose_transfer_plans(k, fg, base, dev, opts, budget, explored);
-        let geo = TaskGeometry::new(k, fg, &cfg);
-        let res = task_resources(&geo, dev);
+        let cfg = choose_transfer_plans(k, st, base, dev, opts, budget, explored);
+        let rt = eval::resolve_task(k, st, &cfg);
+        let res = task_resources(&rt, dev);
         if !res.fits(budget) {
             continue;
         }
-        let lat = task_latency(&geo, dev, opts.overlap);
+        let lat = task_latency(&rt, dev, opts.overlap);
         cands.push(Candidate { cfg, latency: lat, res });
     }
 
@@ -451,9 +502,9 @@ fn enumerate_task(
                 plans: BTreeMap::new(),
                 slr: 0,
             };
-            let geo = TaskGeometry::new(k, fg, &cfg);
-            let res = task_resources(&geo, dev);
-            let lat = task_latency(&geo, dev, opts.overlap);
+            let rt = eval::resolve_task(k, st, &cfg);
+            let res = task_resources(&rt, dev);
+            let lat = task_latency(&rt, dev, opts.overlap);
             cands.push(Candidate { cfg, latency: lat, res });
         }
     }
@@ -487,29 +538,25 @@ fn enum_factors(
 
 /// Pick the (define, transfer) level and bit width per array: enumerate
 /// the diagonal plans (define = transfer at each level) plus the
-/// buffer-whole/stream-deep plan, choose per-array the one minimizing the
-/// task latency, then demote buffers greedily if BRAM overflows.
+/// buffer-whole/stream-deep plan ([`eval::plan_options`]), choose
+/// per-array the one minimizing the task latency, then demote buffers
+/// greedily if BRAM overflows.
 fn choose_transfer_plans(
     k: &Kernel,
-    fg: &FusedGraph,
+    st: &TaskStatics,
     mut cfg: TaskConfig,
     dev: &Device,
     opts: &SolverOptions,
     budget: &SlrBudget,
     explored: &mut u64,
 ) -> TaskConfig {
-    let arrays = {
-        let geo = TaskGeometry::new(k, fg, &cfg);
-        geo.arrays()
-    };
-    // seed: everything at its deepest level (smallest buffers)
+    // seed: everything at its deepest level (smallest buffers) — exactly
+    // the defaults resolution applies to a plan-less config
     {
-        let geo = TaskGeometry::new(k, fg, &cfg);
-        let deep = geo.levels() - 1;
-        let seeded: Vec<(String, TransferPlan)> = arrays
-            .iter()
-            .map(|a| (a.clone(), geo.default_plan(a, deep)))
-            .collect();
+        let rt = eval::resolve_task(k, st, &cfg);
+        let seeded: Vec<(String, TransferPlan)> =
+            rt.arrays().map(|(a, rp)| (a.name.clone(), rp.as_plan())).collect();
+        drop(rt);
         for (a, p) in seeded {
             cfg.plans.insert(a, p);
         }
@@ -518,36 +565,29 @@ fn choose_transfer_plans(
     // coordinate descent, one array at a time (two sweeps converge for
     // the plan structures in this zoo)
     for _sweep in 0..2 {
-        for a in &arrays {
-            let levels = TaskGeometry::new(k, fg, &cfg).levels();
-            let mut options: Vec<TransferPlan> = Vec::new();
-            for l in 0..levels {
-                let geo = TaskGeometry::new(k, fg, &cfg);
-                options.push(geo.default_plan(a, l));
-                if l + 1 < levels {
-                    // reuse plan: buffer at l, stream at the deepest level
-                    let mut p = geo.default_plan(a, l);
-                    p.transfer_level = levels - 1;
-                    options.push(p);
-                }
-            }
-            let mut best_plan = cfg.plans[a];
+        for ai in 0..st.arrays.len() {
+            let a_name = st.arrays[ai].name.clone();
+            let options: Vec<TransferPlan> = {
+                let geo = super::space::TaskGeometry::new(k, st, &cfg);
+                eval::plan_options(&geo, &st.arrays[ai])
+            };
+            let mut best_plan = cfg.plans[&a_name];
             let mut best_lat = u64::MAX;
             for p in options {
                 *explored += 1;
-                cfg.plans.insert(a.clone(), p);
-                let geo = TaskGeometry::new(k, fg, &cfg);
-                let res = task_resources(&geo, dev);
+                cfg.plans.insert(a_name.clone(), p);
+                let rt = eval::resolve_task(k, st, &cfg);
+                let res = task_resources(&rt, dev);
                 if !res.fits(budget) {
                     continue;
                 }
-                let lat = task_latency(&geo, dev, opts.overlap);
+                let lat = task_latency(&rt, dev, opts.overlap);
                 if lat < best_lat {
                     best_lat = lat;
                     best_plan = p;
                 }
             }
-            cfg.plans.insert(a.clone(), best_plan);
+            cfg.plans.insert(a_name, best_plan);
         }
     }
     cfg
@@ -574,6 +614,7 @@ fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
 fn dfs_assign(
     k: &Kernel,
     fg: &FusedGraph,
+    cache: &GeometryCache,
     dev: &Device,
     opts: &SolverOptions,
     budget: &SlrBudget,
@@ -614,7 +655,9 @@ fn dfs_assign(
         // analytic model: the model (Eqs 12–16) guides enumeration, but
         // picking the winner with the authoritative latency keeps
         // heuristic-beam local optima from inverting feature ablations.
-        let lat = crate::sim::engine::simulate(k, fg, &design, dev).cycles;
+        let rd = ResolvedDesign::new(k, fg, cache, &design);
+        let lat = simulate_resolved(&rd, dev).cycles;
+        drop(rd);
         if best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true) {
             *best = Some((lat, design));
         }
@@ -634,8 +677,8 @@ fn dfs_assign(
         for slr in 0..regions {
             assign.push((c, slr));
             dfs_assign(
-                k, fg, dev, opts, budget, regions, per_task, assign, best, start, explored,
-                timed_out,
+                k, fg, cache, dev, opts, budget, regions, per_task, assign, best, start,
+                explored, timed_out,
             );
             assign.pop();
         }
@@ -666,6 +709,21 @@ mod tests {
         r.design.validate(&k, &fg, dev.slrs).unwrap();
         assert!(r.gflops > 50.0, "gemm RTL gflops too low: {}", r.gflops);
         assert!(r.explored > 100);
+    }
+
+    #[test]
+    fn solve_with_shared_cache_matches_cold_solve() {
+        // The shared GeometryCache must not change what the solver finds:
+        // same design, same latency, point for point.
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let cold = solve(&k, &dev, &quick_opts());
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let warm = solve_with_cache(&k, &fg, &cache, &dev, &quick_opts());
+        assert_eq!(cold.design, warm.design);
+        assert_eq!(cold.latency.total, warm.latency.total);
+        assert_eq!(cold.explored, warm.explored);
     }
 
     #[test]

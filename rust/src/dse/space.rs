@@ -1,7 +1,7 @@
-//! Tile geometry: the bridge between a [`TaskConfig`] and everything that
-//! consumes it (cost model, resource constraints, simulator, codegen).
+//! Tile geometry: the pure per-task tile math (paper §3.3–3.5) that the
+//! evaluation core ([`super::eval`]) builds [`ResolvedTask`]s from.
 //!
-//! For a fused task, the generated loop structure is (§3.3–3.5):
+//! For a fused task, the generated loop structure is:
 //!
 //! ```text
 //! [level-0 transfers]                       // t_{a,0}: before any loop
@@ -17,111 +17,50 @@
 //! An array transferred at level `l` moves one *data tile* per iteration
 //! of the enclosing loops; its tile covers everything accessed deeper
 //! than `l`.
+//!
+//! [`TaskGeometry`] answers only configuration-geometry questions (tile
+//! dims, transfer counts, natural bit widths) against the fusion-time
+//! [`TaskStatics`] memo. It does **not** resolve transfer plans: plan
+//! defaulting and level clamping live in exactly one place,
+//! [`super::eval`], and downstream consumers (cost model, constraints,
+//! simulator, codegen) read the precomputed [`ResolvedTask`] instead of
+//! re-deriving geometry per evaluation.
+//!
+//! [`ResolvedTask`]: super::eval::ResolvedTask
+//! [`TaskStatics`]: super::eval::TaskStatics
 
-use super::config::{TaskConfig, TransferPlan};
+use super::config::TaskConfig;
+use super::eval::{ArrayStatics, TaskStatics};
 use super::padding::best_bitwidth;
-use crate::analysis::fusion::{ArrayInfo, FusedGraph, FusedTask};
 use crate::ir::{Kernel, Statement};
-use std::collections::BTreeMap;
 
-/// Resolved geometry of one fused task under a given configuration.
-///
-/// Construction memoizes everything that is configuration-independent
-/// but repeatedly needed by the cost model and constraints (array list,
-/// translated accesses, read/write sets) — this is the solver's inner
-/// loop, see EXPERIMENTS.md §Perf.
+/// Tile geometry of one fused task under a given configuration, built
+/// from the fusion-time statics (no per-evaluation string lookups).
 pub struct TaskGeometry<'a> {
-    pub kernel: &'a Kernel,
-    pub fused: &'a FusedTask,
+    pub k: &'a Kernel,
+    pub st: &'a TaskStatics,
     pub cfg: &'a TaskConfig,
-    /// Representative statement id and its reduction mask.
-    pub rep: usize,
-    pub red_mask: Vec<bool>,
     /// Non-reduction inter-tile loop positions, permuted (outer→inner).
     pub nonred: Vec<usize>,
     /// Reduction loop positions, permuted order (outer→inner).
     pub red: Vec<usize>,
-    /// Memoized per-array info, borrowed from the fused task (built once
-    /// at fusion time — the solver constructs a geometry per evaluation).
-    cache: &'a [ArrayInfo],
 }
 
 impl<'a> TaskGeometry<'a> {
-    pub fn new(kernel: &'a Kernel, fg: &'a FusedGraph, cfg: &'a TaskConfig) -> Self {
-        let fused = &fg.tasks[cfg.task];
-        let rep = fused.representative(kernel);
-        let nest = &kernel.statements[rep].loops;
-        let red_mask: Vec<bool> = nest.iter().map(|l| l.reduction).collect();
-        let nonred = cfg.nonred_order(&red_mask);
-        let red = cfg.red_order(&red_mask);
-        TaskGeometry {
-            kernel,
-            fused,
-            cfg,
-            rep,
-            red_mask,
-            nonred,
-            red,
-            cache: &fused.array_info,
-        }
+    pub fn new(k: &'a Kernel, st: &'a TaskStatics, cfg: &'a TaskConfig) -> Self {
+        let nonred = cfg.nonred_order(&st.red_mask);
+        let red = cfg.red_order(&st.red_mask);
+        TaskGeometry { k, st, cfg, nonred, red }
     }
 
     /// Representative statement.
-    pub fn rep_stmt(&self) -> &Statement {
-        &self.kernel.statements[self.rep]
+    pub fn rep_stmt(&self) -> &'a Statement {
+        &self.k.statements[self.st.rep]
     }
 
     /// Number of transfer levels: 0 (before loops) ..= nonred.len().
     pub fn levels(&self) -> usize {
         self.nonred.len() + 1
-    }
-
-    /// Map a loop position of statement `sid` onto the representative
-    /// nest by iterator name (fused statements share iterators, Eq 4).
-    pub fn rep_pos_of(&self, sid: usize, pos: usize) -> Option<usize> {
-        let name = &self.kernel.statements[sid].loops[pos].name;
-        self.rep_stmt().loops.iter().position(|l| &l.name == name)
-    }
-
-    /// The access of array `a` from any statement in this fused task,
-    /// with loop positions translated to representative positions
-    /// (memoized at construction).
-    pub fn access_of(&self, a: &str) -> Option<Vec<Option<usize>>> {
-        self.access_ref(a).map(|acc| acc.to_vec())
-    }
-
-    /// Borrowing variant of [`Self::access_of`] — no allocation.
-    pub fn access_ref(&self, a: &str) -> Option<&[Option<usize>]> {
-        self.cache
-            .iter()
-            .find(|i| i.name == a)
-            .map(|i| i.access.as_slice())
-    }
-
-    /// The full per-array memo (name, translated access, writes, reads).
-    pub fn infos(&self) -> &[ArrayInfo] {
-        self.cache
-    }
-
-    /// All arrays this fused task touches (reads ∪ writes), deduplicated
-    /// in first-touch order (memoized).
-    pub fn arrays(&self) -> Vec<String> {
-        self.cache.iter().map(|i| i.name.clone()).collect()
-    }
-
-    /// Iterate array names without allocating (perf-sensitive callers).
-    pub fn array_names(&self) -> impl Iterator<Item = &str> {
-        self.cache.iter().map(|i| i.name.as_str())
-    }
-
-    /// Whether the task writes `a` (memoized).
-    pub fn writes(&self, a: &str) -> bool {
-        self.cache.iter().any(|i| i.name == a && i.writes)
-    }
-
-    /// Whether the task reads `a` (memoized).
-    pub fn reads(&self, a: &str) -> bool {
-        self.cache.iter().any(|i| i.name == a && i.reads)
     }
 
     /// Depth of loop position `p` in the generated structure: place in
@@ -137,17 +76,14 @@ impl<'a> TaskGeometry<'a> {
         }
     }
 
-    /// Extent of each dimension of array `a`'s data tile when transferred
-    /// at `level` (paper `f_{a,l}`): dimensions indexed by loops strictly
+    /// Extent of each dimension of `a`'s data tile when transferred at
+    /// `level` (paper `f_{a,l}`): dimensions indexed by loops strictly
     /// deeper than the transfer point span the full padded extent;
     /// dimensions whose loop is at or outside the transfer point span
     /// only the intra-tile factor. Unindexed dims span fully.
-    pub fn tile_dims(&self, a: &str, level: usize) -> Vec<u64> {
-        let Some(acc) = self.access_ref(a) else {
-            return vec![];
-        };
-        let decl = self.kernel.array(a).expect("declared array");
-        acc.iter()
+    pub fn tile_dims_at(&self, a: &ArrayStatics, level: usize) -> Vec<u64> {
+        a.access
+            .iter()
             .enumerate()
             .map(|(d, rep_pos)| match rep_pos {
                 Some(p) => {
@@ -159,63 +95,18 @@ impl<'a> TaskGeometry<'a> {
                         self.cfg.intra[*p]
                     }
                 }
-                None => decl.dims[d],
+                None => a.dims[d],
             })
             .collect()
     }
 
     /// Bytes of one data tile of `a` at `level`.
-    pub fn tile_bytes(&self, a: &str, level: usize) -> u64 {
-        let dims = self.tile_dims(a, level);
-        if dims.is_empty() {
+    pub fn tile_bytes_at(&self, a: &ArrayStatics, level: usize) -> u64 {
+        if a.access.is_empty() {
             return 0;
         }
-        let elems: u64 = dims.iter().product();
-        elems * self.kernel.array(a).map(|d| d.dtype.bytes()).unwrap_or(4)
-    }
-
-    /// Tile dims computed from a memoized [`ArrayInfo`] — the
-    /// allocation-free fast path used by the cost model and constraints.
-    pub fn tile_dims_for(&self, info: &ArrayInfo, level: usize) -> Vec<u64> {
-        let decl = self.kernel.array(&info.name).expect("declared array");
-        info.access
-            .iter()
-            .enumerate()
-            .map(|(d, rep_pos)| match rep_pos {
-                Some(p) => {
-                    if self.depth_of(*p) > level {
-                        self.cfg.padded_trip[*p]
-                    } else {
-                        self.cfg.intra[*p]
-                    }
-                }
-                None => decl.dims[d],
-            })
-            .collect()
-    }
-
-    /// Tile bytes from a memoized [`ArrayInfo`] (no name lookups).
-    pub fn tile_bytes_for(&self, info: &ArrayInfo, level: usize) -> u64 {
-        if info.access.is_empty() {
-            return 0;
-        }
-        let decl = self.kernel.array(&info.name).expect("declared array");
-        let elems: u64 = info
-            .access
-            .iter()
-            .enumerate()
-            .map(|(d, rep_pos)| match rep_pos {
-                Some(p) => {
-                    if self.depth_of(*p) > level {
-                        self.cfg.padded_trip[*p]
-                    } else {
-                        self.cfg.intra[*p]
-                    }
-                }
-                None => decl.dims[d],
-            })
-            .product();
-        elems * decl.dtype.bytes()
+        let elems: u64 = self.tile_dims_at(a, level).iter().product();
+        elems * a.elem_bytes
     }
 
     /// How many times a transfer at `level` executes = product of inter
@@ -231,23 +122,26 @@ impl<'a> TaskGeometry<'a> {
     /// Natural bit width for `a` transferred at `level` (Eq 3): widest
     /// power-of-two burst whose element count divides the tile's last
     /// dimension.
-    pub fn natural_bitwidth(&self, a: &str, level: usize) -> u64 {
-        let dims = self.tile_dims(a, level);
+    pub fn natural_bitwidth_at(&self, a: &ArrayStatics, level: usize) -> u64 {
+        let dims = self.tile_dims_at(a, level);
         let Some(&last) = dims.last() else { return 32 };
-        let elem_bits = self.kernel.array(a).map(|d| d.dtype.bits()).unwrap_or(32);
-        best_bitwidth(last, elem_bits, 512)
+        best_bitwidth(last, a.elem_bits, 512)
     }
 
-    /// Build the default transfer plan for `a`: define and transfer at
-    /// `level`, buffers = 2 (read xor write) or 3 (both), natural width.
-    pub fn default_plan(&self, a: &str, level: usize) -> TransferPlan {
-        let rw = self.writes(a) && self.reads(a);
-        TransferPlan {
-            define_level: level,
-            transfer_level: level,
-            bitwidth: self.natural_bitwidth(a, level),
-            buffers: if rw { 3 } else { 2 },
-        }
+    /// By-name variant of [`Self::tile_dims_at`] (tests, reports).
+    pub fn tile_dims(&self, name: &str, level: usize) -> Vec<u64> {
+        self.st
+            .array(name)
+            .map(|a| self.tile_dims_at(a, level))
+            .unwrap_or_default()
+    }
+
+    /// By-name variant of [`Self::natural_bitwidth_at`].
+    pub fn natural_bitwidth(&self, name: &str, level: usize) -> u64 {
+        self.st
+            .array(name)
+            .map(|a| self.natural_bitwidth_at(a, level))
+            .unwrap_or(32)
     }
 
     /// Intra-tile instances of the representative statement = unroll
@@ -257,22 +151,10 @@ impl<'a> TaskGeometry<'a> {
     }
 }
 
-/// Map of array → (tile_bytes, per-level transfer cycles) used by both
-/// the cost model and the solver's transfer-plan selection.
-pub fn plan_footprints(
-    geo: &TaskGeometry,
-) -> BTreeMap<String, Vec<u64>> {
-    let mut out = BTreeMap::new();
-    for a in geo.arrays() {
-        let per_level: Vec<u64> =
-            (0..geo.levels()).map(|l| geo.tile_bytes(&a, l)).collect();
-        out.insert(a, per_level);
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
+    use super::super::config::TransferPlan;
+    use super::super::eval::GeometryCache;
     use super::*;
     use crate::analysis::fusion::fuse;
     use crate::ir::polybench;
@@ -310,9 +192,10 @@ mod tests {
     fn listing6_ft0_tiles() {
         let k = polybench::three_mm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let cfg = ft0_cfg();
-        let geo = TaskGeometry::new(&k, &fg, &cfg);
-        assert_eq!(geo.rep, 1);
+        let geo = TaskGeometry::new(&k, &cache.tasks[0], &cfg);
+        assert_eq!(geo.st.rep, 1);
         assert_eq!(geo.nonred, vec![0, 1]);
         assert_eq!(geo.red, vec![2]);
         // B[k][j] at level 0: full padded extents = 204 x 192 (Listing 6 l.2)
@@ -332,8 +215,9 @@ mod tests {
     fn natural_bitwidths() {
         let k = polybench::three_mm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let cfg = ft0_cfg();
-        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        let geo = TaskGeometry::new(&k, &cache.tasks[0], &cfg);
         // B tile last dim 192 = 16*12 -> full 512-bit
         assert_eq!(geo.natural_bitwidth("B", 0), 512);
         // A tile last dim 204 = 4*51 -> 4 floats = 128 bits
@@ -343,29 +227,15 @@ mod tests {
     }
 
     #[test]
-    fn init_stmt_access_translates() {
-        // E is written by S0 (init, loops i,j) and S1; access must resolve
-        // through the representative nest.
-        let k = polybench::three_mm();
-        let fg = fuse(&k);
-        let cfg = ft0_cfg();
-        let geo = TaskGeometry::new(&k, &fg, &cfg);
-        let acc = geo.access_of("E").unwrap();
-        assert_eq!(acc, vec![Some(0), Some(1)]);
-        assert!(geo.writes("E"));
-        assert!(geo.reads("A"));
-        assert!(!geo.writes("A"));
-    }
-
-    #[test]
     fn permuted_depths() {
         // With perm (j,i,k) the level-1 loop is j: a tile of A[i][k] at
         // level 1 spans full i and k (i is deeper).
         let k = polybench::three_mm();
         let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
         let mut cfg = ft0_cfg();
         cfg.perm = vec![1, 0, 2];
-        let geo = TaskGeometry::new(&k, &fg, &cfg);
+        let geo = TaskGeometry::new(&k, &cache.tasks[0], &cfg);
         assert_eq!(geo.nonred, vec![1, 0]);
         assert_eq!(geo.tile_dims("A", 1), vec![180, 204]);
         // E under level 2 (now i0 inner): intra_i x intra_j

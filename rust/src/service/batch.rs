@@ -12,7 +12,10 @@
 //! 3. **parallel fan-out** — the remaining unique misses are solved on a
 //!    scoped worker pool (hand-rolled work queue over
 //!    `std::thread::scope`; rayon is not vendored in this environment,
-//!    matching the in-tree criterion/proptest stand-ins);
+//!    matching the in-tree criterion/proptest stand-ins). Each kernel is
+//!    fused and resolved into a [`GeometryCache`] **once** up front;
+//!    every worker job for that kernel shares the cache, so parallel
+//!    batch jobs skip the configuration-independent re-resolution;
 //! 4. **warm start** — each miss seeds the solver with the best related
 //!    record ([`QorDb::incumbent_for`]), so even cold-ish solves prune
 //!    against a known-good bound;
@@ -20,16 +23,28 @@
 //!    through [`crate::report::Table`].
 
 use super::qor_db::{DesignKey, QorDb, QorRecord};
-use crate::analysis::fusion::fuse;
+use crate::analysis::fusion::{fuse, FusedGraph};
 use crate::dse::config::ExecutionModel;
-use crate::dse::solver::{solve, Scenario, SolverOptions};
+use crate::dse::eval::GeometryCache;
+use crate::dse::solver::{solve_with_cache, Scenario, SolverOptions};
 use crate::hw::Device;
 use crate::ir::polybench;
+use crate::ir::Kernel;
 use crate::report::{gfs, Table};
 use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Per-kernel shared context for one batch run: the kernel, its fusion
+/// and the fusion-time geometry cache, built once and shared (read-only)
+/// by every worker job for that kernel.
+struct KernelCtx {
+    kernel: Kernel,
+    fg: FusedGraph,
+    cache: GeometryCache,
+}
 
 /// One optimization request.
 #[derive(Debug, Clone)]
@@ -239,13 +254,22 @@ pub fn run_batch(
 ) -> Result<BatchReport> {
     let t0 = Instant::now();
 
-    // Validate every kernel up front: a typo should fail the batch
-    // before any solver time is spent.
+    // Validate every kernel up front (a typo should fail the batch
+    // before any solver time is spent) and build the shared per-kernel
+    // context — fusion + geometry cache — exactly once per kernel.
+    let mut ctxs: BTreeMap<String, KernelCtx> = BTreeMap::new();
     for r in requests {
-        if polybench::by_name(&r.kernel).is_none() {
-            bail!("unknown kernel `{}` in batch request", r.kernel);
+        if ctxs.contains_key(&r.kernel) {
+            continue;
         }
+        let Some(kernel) = polybench::by_name(&r.kernel) else {
+            bail!("unknown kernel `{}` in batch request", r.kernel);
+        };
+        let fg = fuse(&kernel);
+        let cache = GeometryCache::new(&kernel, &fg);
+        ctxs.insert(r.kernel.clone(), KernelCtx { kernel, fg, cache });
     }
+    let ctxs = &ctxs; // shared read-only with the worker pool
 
     // Canonicalize, classify hits, dedup misses. A cached record whose
     // design no longer validates against the current kernel zoo (a
@@ -257,8 +281,15 @@ pub fn run_batch(
     let mut job_requests: Vec<usize> = Vec::new(); // request index per unique miss
     for (i, key) in canon.iter().enumerate() {
         let cached_valid = db.get_canonical(key).map(|rec| {
-            let k = polybench::by_name(&requests[i].kernel).expect("validated above");
-            crate::dse::solver::design_usable(&k, &fuse(&k), &rec.design, dev, requests[i].scenario)
+            let ctx = &ctxs[&requests[i].kernel];
+            crate::dse::solver::design_usable_with_cache(
+                &ctx.kernel,
+                &ctx.fg,
+                &ctx.cache,
+                &rec.design,
+                dev,
+                requests[i].scenario,
+            )
         });
         if cached_valid == Some(false) {
             db.remove_canonical(key);
@@ -302,13 +333,21 @@ pub fn run_batch(
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let mut sopts = req.solver_options(&opts.solver);
                     sopts.incumbent = incumbents[j].clone();
-                    let k = polybench::by_name(&req.kernel).expect("validated above");
-                    let fg = fuse(&k);
-                    let r = solve(&k, dev, &sopts);
+                    // One fusion + geometry cache per kernel, shared by
+                    // every job of the batch (read-only).
+                    let ctx = &ctxs[&req.kernel];
+                    let r = solve_with_cache(&ctx.kernel, &ctx.fg, &ctx.cache, dev, &sopts);
                     // Shared record constructor (simulated cycles +
                     // scenario-consistent GF/s): identical to what
                     // `optimize --db` would store for this request.
-                    let record = QorRecord::from_solve(&k, &fg, &r, req.scenario, dev);
+                    let record = QorRecord::from_solve_with_cache(
+                        &ctx.kernel,
+                        &ctx.fg,
+                        &ctx.cache,
+                        &r,
+                        req.scenario,
+                        dev,
+                    );
                     SolvedJob {
                         canonical: canon[job_requests[j]].clone(),
                         record,

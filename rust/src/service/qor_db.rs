@@ -130,9 +130,26 @@ impl QorRecord {
         scenario: Scenario,
         dev: &Device,
     ) -> QorRecord {
-        let sim = crate::sim::engine::simulate(k, fg, &result.design, dev);
+        let cache = crate::dse::eval::GeometryCache::new(k, fg);
+        QorRecord::from_solve_with_cache(k, fg, &cache, result, scenario, dev)
+    }
+
+    /// [`QorRecord::from_solve`] over a pre-built geometry cache: one
+    /// resolution feeds both the simulation and the scenario GF/s. The
+    /// batch orchestrator passes its shared per-kernel cache here so
+    /// record construction does not silently re-resolve per job.
+    pub fn from_solve_with_cache(
+        k: &crate::ir::Kernel,
+        fg: &crate::analysis::fusion::FusedGraph,
+        cache: &crate::dse::eval::GeometryCache,
+        result: &crate::dse::solver::SolverResult,
+        scenario: Scenario,
+        dev: &Device,
+    ) -> QorRecord {
+        let rd = crate::dse::eval::ResolvedDesign::new(k, fg, cache, &result.design);
+        let sim = crate::sim::engine::simulate_resolved(&rd, dev);
         let (_, gflops) =
-            crate::coordinator::flow::scenario_eval(k, fg, &result.design, dev, scenario, &sim);
+            crate::coordinator::flow::scenario_eval_resolved(&rd, dev, scenario, &sim);
         QorRecord::from_products(result, &sim, gflops)
     }
 

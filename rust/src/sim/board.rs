@@ -15,12 +15,12 @@
 
 use crate::analysis::fusion::FusedGraph;
 use crate::dse::config::DesignConfig;
-use crate::dse::constraints::{partition_of, slr_usage};
-use crate::dse::space::TaskGeometry;
+use crate::dse::constraints::slr_usage_resolved;
+use crate::dse::eval::{GeometryCache, ResolvedDesign};
 use crate::hw::{Device, SlrBudget};
 use crate::ir::Kernel;
 
-use super::engine::{simulate, SimReport};
+use super::engine::{simulate_resolved, SimReport};
 
 /// Result of a modelled on-board run.
 #[derive(Debug, Clone)]
@@ -45,7 +45,8 @@ pub struct BoardReport {
 /// degrading steeply and feasibility becomes marginal.
 const CONGESTION_KNEE: f64 = 0.80;
 
-/// Evaluate `design` as an on-board run with per-region budget `budget`.
+/// Evaluate `design` as an on-board run with per-region budget `budget`
+/// (cold-resolving wrapper over [`board_eval_resolved`]).
 pub fn board_eval(
     k: &Kernel,
     fg: &FusedGraph,
@@ -53,30 +54,32 @@ pub fn board_eval(
     dev: &Device,
     budget: &SlrBudget,
 ) -> BoardReport {
-    let usage = slr_usage(k, fg, design, dev);
+    let cache = GeometryCache::new(k, fg);
+    let rd = ResolvedDesign::new(k, fg, &cache, design);
+    board_eval_resolved(&rd, dev, budget)
+}
+
+/// Evaluate a resolved design as an on-board run.
+pub fn board_eval_resolved(rd: &ResolvedDesign, dev: &Device, budget: &SlrBudget) -> BoardReport {
+    let usage = slr_usage_resolved(rd, dev);
     let peak_utilization = usage
         .iter()
         .map(|u| u.utilization(budget))
         .fold(0.0, f64::max);
 
-    let slr_crossings = fg
+    let slr_crossings = rd
+        .fg
         .edges
         .iter()
-        .filter(|(s, d, _)| design.tasks[*s].slr != design.tasks[*d].slr)
+        .filter(|(s, d, _)| rd.task(*s).cfg().slr != rd.task(*d).cfg().slr)
         .count();
 
-    // widest partitioning in the design (routing fan-out pressure)
-    let max_part = design
+    // widest partitioning in the design (routing fan-out pressure),
+    // read straight off the resolved plans
+    let max_part = rd
         .tasks
         .iter()
-        .map(|tc| {
-            let geo = TaskGeometry::new(k, fg, tc);
-            geo.arrays()
-                .iter()
-                .map(|a| partition_of(&geo, a))
-                .max()
-                .unwrap_or(1)
-        })
+        .map(|rt| rt.plans.iter().map(|rp| rp.partitions).max().unwrap_or(1))
         .max()
         .unwrap_or(1);
 
@@ -97,10 +100,10 @@ pub fn board_eval(
     let slr_pen = 9.0 * slr_crossings as f64;
     let fmhz = (dev.fmax_mhz - util_pen - part_pen - slr_pen).max(100.0);
 
-    let sim = simulate(k, fg, design, dev);
+    let sim = simulate_resolved(rd, dev);
     let time_ms = sim.cycles as f64 / (fmhz * 1e6) * 1e3;
     let gflops = if sim.cycles > 0 {
-        k.total_flops() as f64 / (time_ms / 1e3) / 1e9
+        rd.k.total_flops() as f64 / (time_ms / 1e3) / 1e9
     } else {
         0.0
     };

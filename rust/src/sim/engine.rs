@@ -7,11 +7,23 @@
 //! through the ping-pong recurrences, and resolve FIFO waits against the
 //! producer's emission timestamps. This executes the same pipeline an
 //! event-heap simulator would, in O(total tile steps).
+//!
+//! All per-task numbers (tile bytes, transfer counts, FIFO topology)
+//! come precomputed from the shared evaluation core
+//! ([`crate::dse::eval`]) — the engine performs no plan resolution, so
+//! it cannot drift from the analytic model or the code generator.
+//!
+//! For **Sequential** (shared-buffer) designs there is no cross-task
+//! concurrency to execute: each task's duration is the closed form of
+//! the shared per-task recursion (Eq 14), evaluated on the very same
+//! [`ResolvedTask`] the analytic model reads. This makes `simulate` and
+//! `graph_latency` equal by construction for Sequential designs — the
+//! guard pinned by `tests/consistency_model_sim.rs`.
 
 use crate::analysis::fusion::FusedGraph;
 use crate::dse::config::{DesignConfig, ExecutionModel};
-use crate::dse::cost::pipelined_compute_latency;
-use crate::dse::space::TaskGeometry;
+use crate::dse::cost::{pipelined_compute_latency, task_latency};
+use crate::dse::eval::{GeometryCache, ResolvedDesign};
 use crate::hw::Device;
 use crate::ir::Kernel;
 
@@ -39,7 +51,7 @@ impl SimReport {
     }
 }
 
-/// Per-task tile-step cost description derived from the geometry.
+/// Per-task tile-step cost description derived from the resolved design.
 struct TaskSteps {
     /// Number of output tile steps (product of non-reduction inter trips).
     steps: u64,
@@ -59,55 +71,27 @@ struct TaskSteps {
     overlap: bool,
 }
 
-fn build_steps(
-    k: &Kernel,
-    fg: &FusedGraph,
-    design: &DesignConfig,
-    t: usize,
-    dev: &Device,
-) -> TaskSteps {
-    let cfg = &design.tasks[t];
-    let geo = TaskGeometry::new(k, fg, cfg);
-    let steps: u64 = geo
-        .nonred
-        .iter()
-        .map(|&p| cfg.inter_trip(p))
-        .product::<u64>()
-        .max(1);
-    let compute = pipelined_compute_latency(&geo, dev);
+fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
+    let rt = rd.task(t);
+    let steps = rt.steps;
+    let compute = pipelined_compute_latency(rt, dev);
 
-    let levels = geo.levels();
     let mut preload = 0u64;
     let mut ddr_in_streams: Vec<u64> = Vec::new(); // per-array totals
     let mut ddr_out_total = 0u64;
     let mut fifo_in = Vec::new();
 
-    for a in geo.arrays() {
-        let decl = k.array(&a).expect("declared");
-        let plan = cfg
-            .plans
-            .get(&a)
-            .copied()
-            .unwrap_or_else(|| geo.default_plan(&a, geo.levels() - 1));
-        let d = plan.define_level.min(levels - 1);
-        let per_tile = dev.transfer_cycles(geo.tile_bytes(&a, d), plan.bitwidth);
-        let times = geo.transfer_count(d);
-
+    for (a, rp) in rt.arrays() {
         // FIFO input: array produced by another fused task
-        let producer = fg
-            .edges
-            .iter()
-            .find(|(_, dst, arr)| *dst == t && arr == &a)
-            .map(|(src, _, _)| *src);
-        if let Some(p) = producer {
-            let total_elems = k.array(&a).map(|x| x.elems()).unwrap_or(0);
-            fifo_in.push((p, total_elems.div_ceil(steps)));
+        if let Some(p) = a.fifo_producer {
+            fifo_in.push((p, a.total_elems.div_ceil(steps)));
             continue; // FIFO tiles don't hit DDR
         }
+        let per_tile = dev.transfer_cycles(rp.tile_bytes, rp.bitwidth);
+        let times = rp.transfer_count;
 
-        let inbound = decl.is_input || (geo.reads(&a) && !geo.writes(&a));
-        if inbound {
-            if d == 0 {
+        if a.inbound() {
+            if rp.define_level == 0 {
                 // preloads of distinct arrays stream over distinct HBM
                 // channels concurrently (U55C: 32 channels, one per
                 // array after the read-only duplication of §3.7)
@@ -116,26 +100,21 @@ fn build_steps(
                 ddr_in_streams.push(times * per_tile);
             }
         }
-        if geo.writes(&a) && decl.is_output {
+        if a.writes && a.is_output {
             ddr_out_total += times * per_tile;
         }
     }
     // concurrent channels: per-step inbound cost is the slowest stream,
-    // as long as channels remain (beyond that, streams serialize)
+    // as long as channels remain (beyond that, streams serialize —
+    // ceiling division, matching the cost model)
     let ddr_in_total = if ddr_in_streams.len() <= dev.mem_channels {
         ddr_in_streams.iter().copied().max().unwrap_or(0)
     } else {
-        ddr_in_streams.iter().sum::<u64>() / dev.mem_channels as u64
+        ddr_in_streams.iter().sum::<u64>().div_ceil(dev.mem_channels as u64)
     };
 
     // does this task feed any FIFO?
-    let fifo_out_elems: u64 = fg
-        .edges
-        .iter()
-        .filter(|(src, _, _)| *src == t)
-        .map(|(_, _, a)| k.array(a).map(|x| x.elems()).unwrap_or(0))
-        .sum::<u64>()
-        .div_ceil(steps);
+    let fifo_out_elems = rt.statics().fifo_out_total_elems.div_ceil(steps);
 
     TaskSteps {
         steps,
@@ -145,15 +124,74 @@ fn build_steps(
         preload,
         fifo_in,
         fifo_out_elems,
-        overlap: design.overlap,
+        overlap: rd.design.overlap,
     }
 }
 
-/// Execute the design. Returns the simulated report.
+/// Execute the design (cold-resolving wrapper over
+/// [`simulate_resolved`]).
 pub fn simulate(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device) -> SimReport {
-    let n = fg.tasks.len();
-    let specs: Vec<TaskSteps> =
-        (0..n).map(|t| build_steps(k, fg, design, t, dev)).collect();
+    let cache = GeometryCache::new(k, fg);
+    let rd = ResolvedDesign::new(k, fg, &cache, design);
+    simulate_resolved(&rd, dev)
+}
+
+/// Execute a resolved design. Returns the simulated report.
+pub fn simulate_resolved(rd: &ResolvedDesign, dev: &Device) -> SimReport {
+    match rd.design.model {
+        ExecutionModel::Sequential => simulate_sequential(rd, dev),
+        ExecutionModel::Dataflow => simulate_dataflow(rd, dev),
+    }
+}
+
+/// Shared-buffer execution: tasks run back-to-back, so the tile
+/// pipeline degenerates to the closed-form per-task recursion evaluated
+/// on the shared [`crate::dse::eval::ResolvedTask`] — equal to the
+/// analytic model by construction.
+fn simulate_sequential(rd: &ResolvedDesign, dev: &Device) -> SimReport {
+    let n = rd.fg.tasks.len();
+    let mut duration = vec![0u64; n];
+    let mut finish = vec![0u64; n];
+    let mut compute_cycles = vec![0u64; n];
+    let mut ddr_blocked = vec![0u64; n];
+    let mut total_steps = 0u64;
+    // Index by task id, exactly like `graph_latency_resolved` — a
+    // persisted design whose `tasks` vector is not ordered by id must
+    // still serialize in task-id (program) order.
+    for rt in &rd.tasks {
+        let t = rt.cfg().task;
+        let dur = task_latency(rt, dev, rd.design.overlap);
+        let compute = pipelined_compute_latency(rt, dev) * rt.steps;
+        duration[t] = dur;
+        compute_cycles[t] = compute;
+        ddr_blocked[t] = dur.saturating_sub(compute);
+        total_steps += rt.steps;
+    }
+    let mut clock = 0u64;
+    for t in 0..n {
+        clock += duration[t];
+        finish[t] = clock;
+    }
+    let cycles = rd
+        .fg
+        .sinks()
+        .into_iter()
+        .map(|s| finish[s])
+        .max()
+        .unwrap_or(0);
+    SimReport {
+        cycles,
+        compute_cycles,
+        fifo_stall_cycles: vec![0; n],
+        ddr_blocked_cycles: ddr_blocked,
+        steps: total_steps,
+    }
+}
+
+/// Dataflow execution: the tile-step pipeline with FIFO token waits.
+fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
+    let n = rd.fg.tasks.len();
+    let specs: Vec<TaskSteps> = (0..n).map(|t| build_steps(rd, t, dev)).collect();
 
     // producer emission timestamps: per task, the time at which the i-th
     // step's outputs are emitted (filled in topological order).
@@ -164,22 +202,17 @@ pub fn simulate(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device
     let mut ddr_blocked = vec![0u64; n];
     let mut total_steps = 0u64;
 
-    // sequential start offsets for shared-buffer designs
-    let mut seq_clock = 0u64;
-
     for t in 0..n {
         let spec = &specs[t];
-        let slr_pen: u64 = fg
+        let slr_pen: u64 = rd
+            .fg
             .predecessors(t)
             .iter()
-            .filter(|&&p| design.tasks[p].slr != design.tasks[t].slr)
+            .filter(|&&p| rd.task(p).cfg().slr != rd.task(t).cfg().slr)
             .count() as u64
             * dev.inter_slr_latency;
 
-        let start_base = match design.model {
-            ExecutionModel::Sequential => seq_clock,
-            ExecutionModel::Dataflow => slr_pen,
-        };
+        let start_base = slr_pen;
 
         // cumulative FIFO availability: time when `e` elements of the
         // producer's output have been emitted.
@@ -203,8 +236,6 @@ pub fn simulate(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device
             ddr_blocked[t] += spec.preload;
         }
 
-        // In Sequential mode tasks also lose the overlap (paper: Sisyphus
-        // has no comm/comp overlap) unless the design says otherwise.
         for i in 0..spec.steps {
             total_steps += 1;
             // FIFO wait: cumulative elements needed through step i+1
@@ -241,12 +272,10 @@ pub fn simulate(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device
         }
         finish[t] = store_done_prev.max(preload_done);
         emit_times[t] = emits;
-        if design.model == ExecutionModel::Sequential {
-            seq_clock = finish[t];
-        }
     }
 
-    let cycles = fg
+    let cycles = rd
+        .fg
         .sinks()
         .into_iter()
         .map(|s| finish[s])
@@ -265,8 +294,9 @@ pub fn simulate(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, dev: &Device
 mod tests {
     use super::*;
     use crate::analysis::fusion::fuse;
-    use crate::dse::solver::{solve, SolverOptions};
     use crate::dse::cost::graph_latency;
+    use crate::dse::eval::resolve_task;
+    use crate::dse::solver::{solve, SolverOptions};
     use crate::ir::polybench;
     use std::time::Duration;
 
@@ -332,9 +362,8 @@ mod tests {
         let fg = fuse(&k);
         let r = solve(&k, &dev, &opts());
         let sim = simulate(&k, &fg, &r.design, &dev);
-        let cfg = &r.design.tasks[0];
-        let geo = crate::dse::space::TaskGeometry::new(&k, &fg, cfg);
-        let expect: u64 = geo.nonred.iter().map(|&p| cfg.inter_trip(p)).product();
-        assert_eq!(sim.steps, expect.max(1));
+        let cache = GeometryCache::new(&k, &fg);
+        let rt = resolve_task(&k, &cache.tasks[0], &r.design.tasks[0]);
+        assert_eq!(sim.steps, rt.steps);
     }
 }

@@ -14,5 +14,5 @@
 pub mod board;
 pub mod engine;
 
-pub use board::{board_eval, BoardReport};
-pub use engine::{simulate, SimReport};
+pub use board::{board_eval, board_eval_resolved, BoardReport};
+pub use engine::{simulate, simulate_resolved, SimReport};

@@ -1,0 +1,112 @@
+//! Cross-model consistency over the shared evaluation core
+//! (`dse::eval`): the analytic latency model (Eqs 12–16) and the
+//! executing simulator consume the **same** `ResolvedDesign`, so their
+//! relationship is pinned here as the regression guard that the shared
+//! layer cannot drift:
+//!
+//! * **Sequential designs** — shared-buffer execution has no cross-task
+//!   concurrency, so both sides reduce to the serialized per-task
+//!   recursion on the same resolved plans: `graph_latency` must equal
+//!   `simulate` *exactly*, for every kernel in the zoo.
+//! * **Dataflow designs** — the DAG recursion starts consumers early
+//!   (`shift` never exceeds the producer's duration) and, for
+//!   single-region designs, adds no inter-SLR penalty: its total is a
+//!   lower bound on the sequential serialization of the very same
+//!   resolved design — which (by the equality above) is exactly what
+//!   the simulator charges for the sequentialized design.
+//! * **Warm vs cold resolution** — resolving through a shared
+//!   `GeometryCache` must be bit-identical to cold resolution, for both
+//!   consumers.
+
+use prometheus::analysis::fusion::fuse;
+use prometheus::dse::config::ExecutionModel;
+use prometheus::dse::cost::{graph_latency, graph_latency_resolved};
+use prometheus::dse::eval::{GeometryCache, ResolvedDesign};
+use prometheus::dse::solver::{solve, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::sim::engine::{simulate, simulate_resolved};
+use std::time::Duration;
+
+/// Small-but-real search space: the consistency properties hold for any
+/// solver output, so keep the per-kernel solves quick.
+fn quick() -> SolverOptions {
+    SolverOptions {
+        beam: 6,
+        max_factor_per_loop: 16,
+        max_unroll: 256,
+        timeout: Duration::from_secs(15),
+        ..SolverOptions::default()
+    }
+}
+
+#[test]
+fn sequential_model_equals_simulator_for_every_kernel() {
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        let fg = fuse(&k);
+        for overlap in [false, true] {
+            let r = solve(
+                &k,
+                &dev,
+                &SolverOptions { model: ExecutionModel::Sequential, overlap, ..quick() },
+            );
+            let model = graph_latency(&k, &fg, &r.design, &dev);
+            let sim = simulate(&k, &fg, &r.design, &dev);
+            assert_eq!(
+                model.total, sim.cycles,
+                "{} (overlap={overlap}): analytic {} != simulated {}",
+                k.name, model.total, sim.cycles
+            );
+            // and the serialization is exactly the duration sum
+            assert_eq!(model.total, model.duration.iter().sum::<u64>(), "{}", k.name);
+        }
+    }
+}
+
+#[test]
+fn dataflow_model_lower_bounds_sequentialized_simulation() {
+    // RTL solves place every task in region 0, so the dataflow DAG
+    // recursion pays no inter-SLR penalty and each consumer's start is
+    // bounded by its producers' finishes — the dataflow analytic total
+    // can never exceed the simulator's cycles for the same design run
+    // sequentially (concurrency only ever helps).
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &quick());
+        assert!(r.design.tasks.iter().all(|t| t.slr == 0), "{}: RTL solve is 1-region", k.name);
+        let df_model = graph_latency(&k, &fg, &r.design, &dev).total;
+        let mut seq = r.design.clone();
+        seq.model = ExecutionModel::Sequential;
+        let seq_sim = simulate(&k, &fg, &seq, &dev).cycles;
+        assert!(
+            df_model <= seq_sim,
+            "{}: dataflow model {} exceeds sequentialized sim {}",
+            k.name,
+            df_model,
+            seq_sim
+        );
+    }
+}
+
+#[test]
+fn warm_cache_resolution_is_bit_identical_to_cold() {
+    let dev = Device::u55c();
+    for name in ["gemm", "3mm", "atax", "3-madd"] {
+        let k = polybench::by_name(name).unwrap();
+        let fg = fuse(&k);
+        let r = solve(&k, &dev, &quick());
+        let cache = GeometryCache::new(&k, &fg);
+        let rd = ResolvedDesign::new(&k, &fg, &cache, &r.design);
+        let cold_model = graph_latency(&k, &fg, &r.design, &dev);
+        let warm_model = graph_latency_resolved(&rd, &dev);
+        assert_eq!(cold_model.total, warm_model.total, "{name}");
+        assert_eq!(cold_model.duration, warm_model.duration, "{name}");
+        assert_eq!(
+            simulate(&k, &fg, &r.design, &dev).cycles,
+            simulate_resolved(&rd, &dev).cycles,
+            "{name}"
+        );
+    }
+}

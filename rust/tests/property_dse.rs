@@ -7,6 +7,7 @@ use prometheus::analysis::fusion::fuse;
 use prometheus::dse::config::{TaskConfig, TransferPlan};
 use prometheus::dse::constraints::partition_of;
 use prometheus::dse::cost::task_latency;
+use prometheus::dse::eval::{resolve_task, GeometryCache};
 use prometheus::dse::padding::{divisors, legal_intra_factors, pad_for_burst};
 use prometheus::dse::solver::{solve, Scenario, SolverOptions};
 use prometheus::dse::space::TaskGeometry;
@@ -107,15 +108,18 @@ fn prop_tile_geometry_consistency() {
             plans: BTreeMap::new(),
             slr: 0,
         };
-        let geo = TaskGeometry::new(&k, &fg, &cfg);
-        for a in geo.arrays() {
+        let cache = GeometryCache::new(&k, &fg);
+        let st = &cache.tasks[t];
+        let geo = TaskGeometry::new(&k, st, &cfg);
+        let rt = resolve_task(&k, st, &cfg);
+        for a in &st.arrays {
             let mut prev: Option<u64> = None;
             for lvl in 0..geo.levels() {
-                let dims = geo.tile_dims(&a, lvl);
+                let dims = geo.tile_dims_at(a, lvl);
                 let elems: u64 = dims.iter().product();
                 // deeper levels shrink (or keep) the tile
                 if let Some(p) = prev {
-                    assert!(elems <= p, "{}: {a} grew at level {lvl}", k.name);
+                    assert!(elems <= p, "{}: {} grew at level {lvl}", k.name, a.name);
                 }
                 prev = Some(elems);
                 // counts are monotone the other way
@@ -124,7 +128,7 @@ fn prop_tile_geometry_consistency() {
                 }
             }
             // partitioning equals the product of intra factors on indexed dims
-            let parts = partition_of(&geo, &a);
+            let parts = partition_of(&rt, &a.name);
             assert!(parts >= 1);
         }
     });
@@ -152,9 +156,10 @@ fn prop_latency_positive_and_buffering_never_hurts() {
             plans: BTreeMap::new(),
             slr: 0,
         };
-        let geo = TaskGeometry::new(&k, &fg, &cfg);
-        let with = task_latency(&geo, &dev, true);
-        let without = task_latency(&geo, &dev, false);
+        let cache = GeometryCache::new(&k, &fg);
+        let rt = resolve_task(&k, &cache.tasks[t], &cfg);
+        let with = task_latency(&rt, &dev, true);
+        let without = task_latency(&rt, &dev, false);
         assert!(with > 0);
         assert!(with <= without, "{}: overlap {} > serial {}", k.name, with, without);
     });
