@@ -45,7 +45,7 @@ fn main() {
         for kn in kernels {
             let k = polybench::by_name(kn).unwrap();
             let fg = fuse(&k);
-            let r = solve(&k, &dev, &opts);
+            let r = solve(&k, &dev, &opts).expect("ablation variants stay feasible at RTL");
             let g = simulate(&k, &fg, &r.design, &dev).gflops(&k, &dev);
             row.push(gfs(g));
         }

@@ -43,7 +43,7 @@ fn main() {
         let k = polybench::three_mm();
         let fg = fuse(&k);
         let cache = GeometryCache::new(&k, &fg);
-        let r = solve(&k, &dev, &SolverOptions::default());
+        let r = solve(&k, &dev, &SolverOptions::default()).unwrap();
         let cfgs = r.design.tasks.clone();
         bench("eval::resolve + cost::task_latency (3mm FT0)", 20_000, || {
             let rt = resolve_task(&k, &cache.tasks[0], &cfgs[0]);
@@ -66,7 +66,7 @@ fn main() {
     for name in ["gemm", "3mm", "bicg"] {
         let k = polybench::by_name(name).unwrap();
         bench(&format!("solver::solve ({name})"), 5, || {
-            solve(&k, &dev, &SolverOptions::default()).latency.total
+            solve(&k, &dev, &SolverOptions::default()).unwrap().latency.total
         });
     }
 
@@ -78,7 +78,8 @@ fn main() {
             &k,
             &dev,
             &SolverOptions { max_unroll: 16, max_factor_per_loop: 4, ..SolverOptions::default() },
-        );
+        )
+        .unwrap();
         let sim = simulate(&k, &fg, &r.design, &dev);
         let t0 = Instant::now();
         let reps = 200;

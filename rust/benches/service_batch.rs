@@ -81,14 +81,15 @@ fn main() {
     let k = polybench::by_name("3mm").unwrap();
     let base = quick_solver();
     let t3 = Instant::now();
-    let cold_solve = solve(&k, &dev, &base);
+    let cold_solve = solve(&k, &dev, &base).unwrap();
     let cold_solve_t = t3.elapsed();
     let t4 = Instant::now();
     let warm_solve = solve(
         &k,
         &dev,
         &SolverOptions { incumbent: Some(cold_solve.design.clone()), ..base },
-    );
+    )
+    .unwrap();
     let warm_solve_t = t4.elapsed();
     println!(
         "\nsolver warm start (3mm): cold {cold_solve_t:.2?} ({} pts) -> warm {warm_solve_t:.2?} \

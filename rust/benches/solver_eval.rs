@@ -1,6 +1,10 @@
-//! Candidate-evaluation throughput for the solver's inner loop
-//! (ISSUE 2 satellite): resolve a design point against the shared
-//! evaluation core and score it (task latency + resources), comparing
+//! Solver-throughput benchmarks: candidate evaluations/sec for the
+//! inner loop (part 1) and whole solves/sec single- vs multi-threaded
+//! (part 2).
+//!
+//! **Part 1** (ISSUE 2 satellite): resolve a design point against the
+//! shared evaluation core and score it (task latency + resources),
+//! comparing
 //!
 //! * **cold** — the fusion-time `GeometryCache` is rebuilt for every
 //!   candidate: what a per-candidate evaluation costs when the shared
@@ -21,6 +25,14 @@
 //! `cargo bench --no-run` compile gate can be upgraded to a run gate
 //! later without edits here.
 //!
+//! **Part 2** (ISSUE 3 tentpole): end-to-end `solve_with_cache`
+//! throughput at `jobs = 1` vs `jobs = 4` on the same kernel. The
+//! solver's determinism contract makes the comparison honest — both
+//! runs return bit-identical designs (asserted) — so the only delta is
+//! wall time. The bar is >= 2x solves/sec at 4 workers, asserted at
+//! runtime like part 1 but only on hosts with >= 4 cores (elsewhere
+//! the rates are printed and the assert is skipped).
+//!
 //! ```bash
 //! cargo bench --bench solver_eval
 //! ```
@@ -31,6 +43,7 @@ use prometheus::dse::constraints::task_resources;
 use prometheus::dse::cost::task_latency;
 use prometheus::dse::eval::{resolve_task, GeometryCache};
 use prometheus::dse::padding::legal_intra_factors;
+use prometheus::dse::solver::{solve_with_cache, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
 use std::collections::BTreeMap;
@@ -117,4 +130,43 @@ fn main() {
         speedup >= 2.0,
         "GeometryCache must buy >= 2x candidate evaluations/sec (got {speedup:.2}x)"
     );
+
+    // ---- part 2: whole solves/sec, 1 worker vs 4 -----------------------
+    println!("\n== solver_eval: whole solves/sec, jobs=1 vs jobs=4 ==");
+    let solve_opts = |jobs: usize| SolverOptions {
+        beam: 24,
+        max_factor_per_loop: 32,
+        max_unroll: 1024,
+        jobs,
+        ..SolverOptions::default()
+    };
+    let reps = 3usize;
+    let mut rates = [0.0f64; 2];
+    let mut designs: Vec<prometheus::dse::config::DesignConfig> = Vec::new();
+    for (slot, jobs) in [(0usize, 1usize), (1, 4)] {
+        let t0 = Instant::now();
+        let mut last = None;
+        for _ in 0..reps {
+            let r = solve_with_cache(&k, &fg, &shared, &dev, &solve_opts(jobs))
+                .expect("3mm RTL solve is feasible");
+            last = Some(r.design);
+        }
+        rates[slot] = reps as f64 / t0.elapsed().as_secs_f64();
+        designs.push(last.unwrap());
+        println!("jobs={jobs}: {:>8.3} solves/s", rates[slot]);
+    }
+    // determinism contract, checked where it is cheapest to notice a
+    // violation: both thread counts must land on the same design
+    assert_eq!(designs[0], designs[1], "jobs=1 and jobs=4 diverged");
+    let scaling = rates[1] / rates[0];
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("parallel scaling: {scaling:.2}x at 4 workers ({cores} cores available)");
+    if cores >= 4 {
+        assert!(
+            scaling >= 2.0,
+            "intra-solve parallelism must buy >= 2x solves/sec at jobs=4 (got {scaling:.2}x)"
+        );
+    } else {
+        println!("(host has {cores} cores < 4 — scaling bar not asserted)");
+    }
 }

@@ -29,7 +29,8 @@ fn main() {
                 scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 },
                 ..SolverOptions::default()
             },
-        );
+        )
+        .expect("Table 9's 1-SLR/60% scenario is feasible for the zoo");
         let fused: Vec<String> = fg
             .tasks
             .iter()

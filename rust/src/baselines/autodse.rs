@@ -52,7 +52,7 @@ pub fn options(k: &Kernel) -> SolverOptions {
 
 /// Optimize `k` under AutoDSE's restrictions (RTL scenario).
 pub fn optimize(k: &Kernel, dev: &Device) -> SolverResult {
-    solve(k, dev, &options(k))
+    solve(k, dev, &options(k)).expect("the full-device RTL baseline space is always feasible")
 }
 
 /// On-board: AutoDSE is single-SLR (the paper had to cap it at 15% for
@@ -66,6 +66,7 @@ pub fn optimize_onboard(k: &Kernel, dev: &Device, frac: f64) -> SolverResult {
             ..options(k)
         },
     )
+    .expect("the Table 8 on-board fractions are feasible for the AutoDSE space")
 }
 
 #[cfg(test)]
@@ -85,7 +86,7 @@ mod tests {
         let dev = Device::u55c();
         let k = polybench::two_mm();
         let auto = optimize(&k, &dev);
-        let ours = solve(&k, &dev, &SolverOptions::default());
+        let ours = solve(&k, &dev, &SolverOptions::default()).unwrap();
         assert!(
             ours.gflops > auto.gflops * 10.0,
             "expected ≫: {} vs {}",

@@ -69,6 +69,7 @@ impl Framework {
         match self {
             Framework::Prometheus => {
                 crate::dse::solver::solve(k, dev, &crate::dse::solver::SolverOptions::default())
+                    .expect("the full-device RTL space is always feasible")
             }
             Framework::Sisyphus => sisyphus::optimize(k, dev),
             Framework::StreamHls => streamhls::optimize(k, dev),

@@ -42,7 +42,7 @@ pub fn options() -> SolverOptions {
 
 /// Optimize `k` under Sisyphus's restrictions (RTL scenario).
 pub fn optimize(k: &Kernel, dev: &Device) -> SolverResult {
-    solve(k, dev, &options())
+    solve(k, dev, &options()).expect("the full-device RTL baseline space is always feasible")
 }
 
 /// Optimize for an on-board scenario (Sisyphus is single-SLR only).
@@ -55,6 +55,7 @@ pub fn optimize_onboard(k: &Kernel, dev: &Device, frac: f64) -> SolverResult {
             ..options()
         },
     )
+    .expect("the Table 8 on-board fractions are feasible for the Sisyphus space")
 }
 
 /// Size of Sisyphus's *joint* shared-buffer space: the product over all

@@ -75,7 +75,8 @@ pub fn optimize_kernel(
 
 /// Stage 1 of the flow: solve and structurally validate the winner.
 /// Shared by [`optimize_kernel`] and the miss path of
-/// [`optimize_kernel_cached`].
+/// [`optimize_kernel_cached`]. An infeasible budget is a clean request
+/// error (`SolverError::Infeasible`), not a panic.
 fn solve_validated(
     kernel: &Kernel,
     fused: &FusedGraph,
@@ -83,7 +84,8 @@ fn solve_validated(
     dev: &Device,
     solver: &SolverOptions,
 ) -> Result<SolverResult> {
-    let result = solve_with_cache(kernel, fused, cache, dev, solver);
+    let result = solve_with_cache(kernel, fused, cache, dev, solver)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", kernel.name))?;
     result
         .design
         .validate(kernel, fused, dev.slrs)

@@ -21,7 +21,9 @@ pub struct RegenOutcome {
 
 /// Solve for `slrs`×`frac`, evaluate on the board model, and tighten the
 /// budget by `step` until the bitstream succeeds (or `min_frac` is hit,
-/// in which case the last attempt is returned).
+/// in which case the last attempt is returned). Errs when a tightened
+/// budget becomes infeasible for the solver — tightening further could
+/// only make that worse, so regeneration cannot recover.
 pub fn regenerate_until_feasible(
     k: &Kernel,
     dev: &Device,
@@ -30,7 +32,7 @@ pub fn regenerate_until_feasible(
     mut frac: f64,
     step: f64,
     min_frac: f64,
-) -> RegenOutcome {
+) -> anyhow::Result<RegenOutcome> {
     let fg = fuse(k);
     let mut attempts = Vec::new();
     loop {
@@ -39,11 +41,12 @@ pub fn regenerate_until_feasible(
             scenario: Scenario::OnBoard { slrs, frac },
             ..base.clone()
         };
-        let result = solve(k, dev, &opts);
+        let result = solve(k, dev, &opts)
+            .map_err(|e| anyhow::anyhow!("{}: regeneration at {frac:.2}: {e}", k.name))?;
         let budget = dev.slr.scaled(frac);
         let board = board_eval(k, &fg, &result.design, dev, &budget);
         if board.bitstream_ok || frac - step < min_frac {
-            return RegenOutcome { result, board, attempts };
+            return Ok(RegenOutcome { result, board, attempts });
         }
         frac -= step;
     }
@@ -60,7 +63,7 @@ mod tests {
         let k = polybench::atax();
         let dev = Device::u55c();
         let out =
-            regenerate_until_feasible(&k, &dev, &quick_solver(), 1, 0.60, 0.05, 0.15);
+            regenerate_until_feasible(&k, &dev, &quick_solver(), 1, 0.60, 0.05, 0.15).unwrap();
         assert!(!out.attempts.is_empty());
         assert!(out.attempts.len() <= 10);
         // either feasible or we hit the floor
@@ -72,7 +75,7 @@ mod tests {
         let k = polybench::bicg();
         let dev = Device::u55c();
         let out =
-            regenerate_until_feasible(&k, &dev, &quick_solver(), 1, 0.60, 0.05, 0.30);
+            regenerate_until_feasible(&k, &dev, &quick_solver(), 1, 0.60, 0.05, 0.30).unwrap();
         for w in out.attempts.windows(2) {
             assert!(w[1] < w[0]);
         }

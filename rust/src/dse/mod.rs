@@ -19,4 +19,4 @@ pub mod space;
 
 pub use config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
 pub use eval::{GeometryCache, ResolvedDesign, ResolvedTask};
-pub use solver::{solve, solve_with_cache, SolverOptions, SolverResult};
+pub use solver::{solve, solve_with_cache, SolverError, SolverOptions, SolverResult};

@@ -10,7 +10,7 @@
 //! 1. **per-task enumeration** — tile factors (with padding, Eqs 1–2) ×
 //!    legal permutations × transfer plans (Eqs 5–6), filtered by the
 //!    resource constraints (Eqs 7–10), reduced to a Pareto front over
-//!    (latency, DSP, BRAM);
+//!    (latency, full resource vector);
 //! 2. **global assembly** — DFS over per-task candidates and SLR
 //!    assignments (Eq 11) minimizing the DAG latency (Eqs 12–13) under
 //!    per-region budgets, with branch-and-bound pruning.
@@ -24,6 +24,28 @@
 //! flow, `service::batch` worker pools) share one cache per kernel
 //! across solves.
 //!
+//! **Parallelism.** One solve can use several cores
+//! ([`SolverOptions::jobs`]): stage 1/2 fans the per-task enumeration
+//! passes (padded + padding-free restart) across a scoped worker pool
+//! sharing the read-only [`GeometryCache`] and one [`Deadline`], and
+//! stage 3 distributes the top of the DFS tree across the same pool
+//! with a shared atomic incumbent bound ([`SharedBest`]), so every
+//! worker prunes against the globally best design. Region-renamed
+//! duplicate assignments are never explored (SLR symmetry breaking:
+//! task *t* may reuse an open region or open exactly the next fresh
+//! one — regions are interchangeable, latency only compares SLR ids
+//! for equality). Results are **deterministic and thread-count
+//! independent** for solves that finish within the timeout: candidate
+//! lists merge in a fixed order, complete assignments are compared by
+//! the total order (simulated latency, then candidate index, then
+//! assignment order), and workers prune only *strictly* above the
+//! shared bound, so `jobs = 1` and `jobs = N` return bit-identical
+//! designs (see DESIGN.md §Parallel solver).
+//!
+//! Infeasible budgets are a user input, not a bug: the solver returns
+//! [`SolverError::Infeasible`] instead of panicking, and the service
+//! layer surfaces it as a per-request error.
+//!
 //! A timeout makes the solver *anytime*: it returns the incumbent with
 //! `timed_out = true`, mirroring the paper's Gurobi-timeout mode (§6.4).
 
@@ -36,8 +58,11 @@ use crate::analysis::fusion::{fuse, FusedGraph};
 use crate::hw::resources::ResourceVec;
 use crate::hw::{Device, SlrBudget};
 use crate::ir::Kernel;
+use crate::par::run_indexed;
 use crate::sim::engine::simulate_resolved;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Resource scenario the solver targets.
@@ -96,6 +121,71 @@ impl serde::Deserialize for Scenario {
     }
 }
 
+/// Why a solve produced no design. Infeasibility is an expected outcome
+/// of user-chosen budgets (a tiny `OnBoard` fraction, an over-restricted
+/// baseline space), never a panic: it flows as an `Err` through the
+/// coordinator flow, `service::batch` and the CLI.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SolverError {
+    /// No design satisfies the scenario's per-region resource budget.
+    /// `task` names the first task with no individually-fitting
+    /// candidate when the infeasibility is attributable to one task;
+    /// `None` means every task fits alone but no global assembly does.
+    Infeasible { task: Option<usize>, detail: String },
+}
+
+impl std::fmt::Display for SolverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverError::Infeasible { task: Some(t), detail } => {
+                write!(f, "infeasible budget: task {t}: {detail}")
+            }
+            SolverError::Infeasible { task: None, detail } => {
+                write!(f, "infeasible budget: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SolverError {}
+
+/// Shared solve deadline: one `Instant` fixed at solve start, read by
+/// every stage-1/2/3 worker. Replaces the old per-call `start` /
+/// `&mut timed_out` out-params, which could not be shared across a
+/// worker pool.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    timeout: Duration,
+}
+
+impl Deadline {
+    pub fn new(timeout: Duration) -> Deadline {
+        Deadline { start: Instant::now(), timeout }
+    }
+
+    pub fn expired(&self) -> bool {
+        self.start.elapsed() > self.timeout
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Worker count for a fresh `SolverOptions`: `$PROMETHEUS_JOBS` when set
+/// to a positive integer (CI runs the suite under both `1` and `4` to
+/// enforce thread-count independence), else 1. Parallelism is opt-in —
+/// `optimize --jobs`/`batch --jobs` and the service layer raise it
+/// explicitly.
+pub fn default_jobs() -> usize {
+    std::env::var("PROMETHEUS_JOBS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&j| j >= 1)
+        .unwrap_or(1)
+}
+
 /// Solver knobs. Baselines restrict this space to mimic each framework.
 #[derive(Debug, Clone)]
 pub struct SolverOptions {
@@ -124,6 +214,12 @@ pub struct SolverOptions {
     /// return a worse design than the incumbent. Ignored (never copied
     /// into the result blindly) when it does not fit the scenario.
     pub incumbent: Option<DesignConfig>,
+    /// Worker threads for *this* solve (stage-1/2 enumeration fan-out
+    /// and stage-3 DFS branch distribution). The returned design is
+    /// thread-count independent — like `incumbent`, `jobs` changes
+    /// solve speed, never the answer — so it is excluded from the QoR
+    /// cache key. 0 is treated as 1.
+    pub jobs: usize,
 }
 
 impl Default for SolverOptions {
@@ -140,6 +236,7 @@ impl Default for SolverOptions {
             beam: 192,
             timeout: Duration::from_secs(120),
             incumbent: None,
+            jobs: default_jobs(),
         }
     }
 }
@@ -151,7 +248,9 @@ pub struct SolverResult {
     pub latency: GraphLatency,
     pub gflops: f64,
     pub solve_time: Duration,
-    /// Design points evaluated.
+    /// Design points evaluated. Deterministic for `jobs = 1`; with more
+    /// workers the count varies slightly run to run (pruning races),
+    /// while `design`/`latency` stay bit-identical.
     pub explored: u64,
     pub timed_out: bool,
     /// Whether a usable `SolverOptions::incumbent` actually seeded the
@@ -160,12 +259,13 @@ pub struct SolverResult {
     pub warm_started: bool,
 }
 
-/// One per-task candidate with its standalone metrics.
+/// One per-task candidate with its standalone metrics. Public so tests
+/// can exercise [`pareto`] directly on synthetic fronts.
 #[derive(Debug, Clone)]
-struct Candidate {
-    cfg: TaskConfig,
-    latency: u64,
-    res: ResourceVec,
+pub struct Candidate {
+    pub cfg: TaskConfig,
+    pub latency: u64,
+    pub res: ResourceVec,
 }
 
 /// Region budget for the scenario.
@@ -214,84 +314,130 @@ pub fn design_usable_with_cache(
 }
 
 /// Solve the design space for `k`. Returns the best feasible design
-/// found. Builds the fusion and geometry cache itself; callers that
-/// solve the same kernel repeatedly should build both once and use
-/// [`solve_with_cache`].
-pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> SolverResult {
+/// found, or [`SolverError::Infeasible`] when the scenario's budget
+/// admits no design at all. Builds the fusion and geometry cache
+/// itself; callers that solve the same kernel repeatedly should build
+/// both once and use [`solve_with_cache`].
+pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> Result<SolverResult, SolverError> {
     let fg = fuse(k);
     let cache = GeometryCache::new(k, &fg);
     solve_with_cache(k, &fg, &cache, dev, opts)
 }
 
+/// Globally shared branch-and-bound incumbent for stage 3: a lock-free
+/// latency bound for pruning plus the full deterministic tie-break
+/// state under a mutex.
+struct SharedBest {
+    /// Best simulated latency so far (`u64::MAX` = none). Workers prune
+    /// with a *strict* compare against this relaxed-loaded value: the
+    /// bound only ever decreases, so a stale read can only under-prune,
+    /// never cut off a branch that could still win a tie.
+    bound: AtomicU64,
+    /// `(latency, assignment key, design)`. The assignment key — the
+    /// `(candidate index, region)` sequence — breaks latency ties by
+    /// lexicographic order, which is exactly the order the sequential
+    /// DFS enumerates leaves in, making the winner independent of which
+    /// worker reached it first. The warm-start incumbent gets the empty
+    /// key, so it wins all ties and the solve can never return a design
+    /// worse than (or a tied re-discovery of) the incumbent.
+    best: Mutex<Option<(u64, Vec<(usize, usize)>, DesignConfig)>>,
+}
+
+impl SharedBest {
+    fn new() -> SharedBest {
+        SharedBest { bound: AtomicU64::new(u64::MAX), best: Mutex::new(None) }
+    }
+
+    fn bound(&self) -> u64 {
+        self.bound.load(Ordering::Relaxed)
+    }
+
+    fn has_best(&self) -> bool {
+        self.bound() != u64::MAX
+    }
+
+    /// Offer a complete design. Keeps the minimum under the total order
+    /// `(latency, key)`; the fast path rejects anything strictly above
+    /// the current bound without taking the lock (such a design can
+    /// neither win nor tie the final minimum).
+    fn offer(&self, lat: u64, key: Vec<(usize, usize)>, design: DesignConfig) {
+        if lat > self.bound.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut best = self.best.lock().unwrap();
+        let better = match &*best {
+            None => true,
+            Some((blat, bkey, _)) => lat < *blat || (lat == *blat && key < *bkey),
+        };
+        if better {
+            self.bound.store(lat, Ordering::Relaxed);
+            *best = Some((lat, key, design));
+        }
+    }
+}
+
 /// [`solve`] over a pre-built fusion + geometry cache. The cache is
 /// read-only and thread-safe: `service::batch` shares one per kernel
-/// across its worker pool.
+/// across its worker pool, and this solve's own workers share it again.
 pub fn solve_with_cache(
     k: &Kernel,
     fg: &FusedGraph,
     cache: &GeometryCache,
     dev: &Device,
     opts: &SolverOptions,
-) -> SolverResult {
-    let start = Instant::now();
+) -> Result<SolverResult, SolverError> {
+    let deadline = Deadline::new(opts.timeout);
+    let jobs = opts.jobs.max(1);
     let (regions, budget) = region_budget(dev, opts.scenario);
-    let mut explored = 0u64;
-    let mut timed_out = false;
 
     // ---- stage 1 + 2: per-task Pareto candidates -----------------------
     // Tasks placed in the same region share its budget; enumerate each
     // task against a fair share (regions spread tasks, so the share is
     // n_tasks / regions per region) — the global DFS re-checks the true
     // summed feasibility.
+    //
+    // Work units are (task, pass) pairs: the padded enumeration, plus a
+    // restart pass without padding when padding is on (padded variants
+    // can flood the stage-1 beam and bury the unpadded optimum — the
+    // beam proxy uses default transfer plans; the second pass is cheap
+    // and guarantees the Prometheus space dominates the Sisyphus
+    // no-padding subspace). Units fan out across the worker pool; the
+    // per-task merge (padded list, then no-pad list, then one Pareto
+    // reduction) is a fixed fold, so the candidate fronts are identical
+    // for any thread count.
     let n_tasks = fg.tasks.len();
     let per_region_tasks = n_tasks.div_ceil(regions).max(1);
     let share = budget.scaled(1.0 / per_region_tasks as f64);
-    let mut per_task: Vec<Vec<Candidate>> = Vec::with_capacity(n_tasks);
-    for t in 0..n_tasks {
-        let mut cands = enumerate_task(
-            k,
-            cache,
-            t,
-            dev,
-            opts,
-            &share,
-            start,
-            &mut explored,
-            &mut timed_out,
-        );
-        // Restart pass without padding: padded variants can flood the
-        // stage-1 beam and bury the unpadded optimum (the beam proxy uses
-        // default transfer plans). A second, padding-free enumeration is
-        // cheap and guarantees the Prometheus space dominates the
-        // Sisyphus (no-padding) subspace.
-        if opts.max_pad > 0 {
-            let nopad = SolverOptions { max_pad: 0, ..opts.clone() };
-            cands.extend(enumerate_task(
-                k,
-                cache,
-                t,
-                dev,
-                &nopad,
-                &share,
-                start,
-                &mut explored,
-                &mut timed_out,
-            ));
-            cands = pareto(cands);
-        }
-        assert!(
-            !cands.is_empty(),
-            "no feasible candidate for task {t} of {} — budget too small",
-            k.name
-        );
-        per_task.push(cands);
+    let nopad_opts = SolverOptions { max_pad: 0, ..opts.clone() };
+    let units: Vec<(usize, bool)> = (0..n_tasks)
+        .flat_map(|t| {
+            if opts.max_pad > 0 {
+                vec![(t, false), (t, true)]
+            } else {
+                vec![(t, false)]
+            }
+        })
+        .collect();
+    let unit_results = run_indexed(units.len(), jobs, |i| {
+        let (t, nopad) = units[i];
+        let o = if nopad { &nopad_opts } else { opts };
+        enumerate_task(k, cache, t, dev, o, &share, deadline)
+    });
+    let mut explored = 0u64;
+    let mut stage1_timed_out = false;
+    let mut per_task: Vec<Vec<Candidate>> = vec![Vec::new(); n_tasks];
+    for (&(t, _), (cands, ex, to)) in units.iter().zip(unit_results) {
+        per_task[t].extend(cands);
+        explored += ex;
+        stage1_timed_out |= to;
     }
+    let per_task: Vec<Vec<Candidate>> = per_task.into_iter().map(pareto).collect();
 
     // ---- stage 3: global assembly over candidates × SLRs ---------------
     // Warm start: a valid, feasible incumbent (e.g. a QoR-DB design from
     // a previous run) becomes the initial bound, so the DFS prunes
     // against it immediately and the anytime result can never be worse.
-    let mut best: Option<(u64, DesignConfig)> = None; // (simulated latency, design)
+    let shared = SharedBest::new();
     let mut warm_started = false;
     if let Some(inc) = &opts.incumbent {
         let usable = inc.kernel == k.name
@@ -301,49 +447,145 @@ pub fn solve_with_cache(
         if usable {
             let rd = ResolvedDesign::new(k, fg, cache, inc);
             let lat = simulate_resolved(&rd, dev).cycles;
-            best = Some((lat, inc.clone()));
+            drop(rd);
+            shared.offer(lat, Vec::new(), inc.clone());
             warm_started = true;
         }
     }
-    let mut assign: Vec<(usize, usize)> = Vec::new();
-    dfs_assign(
+
+    for (t, cands) in per_task.iter().enumerate() {
+        // An empty list would be a solver bug, not an infeasible input:
+        // enumerate_task's anytime fallbacks always yield >= 1 candidate.
+        debug_assert!(!cands.is_empty(), "anytime fallbacks guarantee a candidate per task");
+        // The anytime fallbacks keep unfiltered candidates around, so an
+        // impossibly small budget shows up here: not even the cheapest
+        // enumerated configuration of this task fits one whole region.
+        // Skipped after a stage-1 timeout (fitting configurations may
+        // simply not have been scored yet) and under a usable incumbent
+        // (which *proves* feasibility — the fair-share filter inside
+        // enumerate_task can starve a task's list on budgets between
+        // share and region, and the anytime contract says the incumbent
+        // must come back, not an error).
+        if !stage1_timed_out
+            && !warm_started
+            && !cands.iter().any(|c| c.res.fits(&budget))
+        {
+            return Err(SolverError::Infeasible {
+                task: Some(t),
+                detail: format!(
+                    "no configuration of task {t} of {} fits a single region budget \
+                     (DSP {}, BRAM18 {}, LUT {}, FF {})",
+                    k.name, budget.dsp, budget.bram18, budget.lut, budget.ff
+                ),
+            });
+        }
+    }
+
+    let timed_out_flag = AtomicBool::new(stage1_timed_out);
+    let ctx = DfsCtx {
         k,
         fg,
         cache,
         dev,
         opts,
-        &budget,
+        budget: &budget,
         regions,
-        &per_task,
-        &mut assign,
-        &mut best,
-        start,
-        &mut explored,
-        &mut timed_out,
-    );
+        per_task: &per_task,
+        deadline,
+        shared: &shared,
+        timed_out: &timed_out_flag,
+    };
 
-    let (_, design) = best.expect("at least one feasible assembly");
+    // Distribute the top of the DFS tree: expand prefixes breadth-first
+    // in lexicographic order until there is enough work to spread across
+    // the pool, then let workers pull prefixes from an atomic cursor and
+    // run the ordinary DFS below each. Which worker finishes first does
+    // not matter: the final design is the `(latency, key)` minimum over
+    // every non-pruned leaf, and pruning is strictly above the shared
+    // bound, so no potential winner is ever cut off.
+    let mut frontier: Vec<Vec<(usize, usize)>> = vec![Vec::new()];
+    if jobs > 1 {
+        let target = jobs * 4;
+        let mut depth = 0usize;
+        while depth < n_tasks && frontier.len() < target {
+            let mut next = Vec::new();
+            for prefix in &frontier {
+                let max_slr = open_regions(prefix, regions);
+                for c in 0..per_task[depth].len() {
+                    for slr in 0..max_slr {
+                        let mut p = prefix.clone();
+                        p.push((c, slr));
+                        next.push(p);
+                    }
+                }
+            }
+            frontier = next;
+            depth += 1;
+        }
+    }
+    let run_prefix = |prefix: &[(usize, usize)], explored: &mut u64| {
+        // Re-derive what the in-tree DFS would have pruned before
+        // reaching this prefix: per-region usage (sums only grow with
+        // depth, so an overfull prefix dooms the whole subtree) and the
+        // standalone-latency bound (strict, like dfs_assign, so ties
+        // stay reachable).
+        let bound = ctx.shared.bound();
+        if prefix.iter().enumerate().any(|(ti, &(c, _))| per_task[ti][c].latency > bound) {
+            return;
+        }
+        let mut used = vec![ResourceVec::ZERO; regions];
+        for (ti, &(c, slr)) in prefix.iter().enumerate() {
+            used[slr] += per_task[ti][c].res;
+        }
+        if used.iter().any(|r| !r.fits(&budget)) {
+            return;
+        }
+        let mut assign = prefix.to_vec();
+        dfs_assign(&ctx, &mut assign, &mut used, explored);
+    };
+    let prefix_explored = run_indexed(frontier.len(), jobs, |i| {
+        let mut ex = 0u64;
+        run_prefix(&frontier[i], &mut ex);
+        ex
+    });
+    explored += prefix_explored.into_iter().sum::<u64>();
+    let timed_out = timed_out_flag.load(Ordering::Relaxed);
+
+    let best = shared.best.into_inner().unwrap();
+    let Some((_, _, design)) = best else {
+        return Err(SolverError::Infeasible {
+            task: None,
+            detail: format!(
+                "no assignment of the {n_tasks} task(s) of {} onto {regions} region(s) \
+                 satisfies the per-region budget{}",
+                k.name,
+                if timed_out { " (search timed out; infeasibility unproven)" } else { "" }
+            ),
+        });
+    };
     let rd = ResolvedDesign::new(k, fg, cache, &design);
     let latency = graph_latency_resolved(&rd, dev);
     drop(rd);
     let gf = gflops(k, latency.total, dev);
-    SolverResult {
+    Ok(SolverResult {
         design,
         latency,
         gflops: gf,
-        solve_time: start.elapsed(),
+        solve_time: deadline.elapsed(),
         explored,
         timed_out,
         warm_started,
-    }
+    })
 }
 
 /// Enumerate tile factors × permutations × transfer plans for one fused
-/// task and reduce to a Pareto front. All configuration-independent
-/// inputs (representative nest, legal orders, array statics) come from
-/// the [`GeometryCache`]; per candidate, only the resolution of the
-/// changed configuration is recomputed.
-#[allow(clippy::too_many_arguments)]
+/// task. All configuration-independent inputs (representative nest,
+/// legal orders, array statics) come from the [`GeometryCache`]; per
+/// candidate, only the resolution of the changed configuration is
+/// recomputed. Returns the raw (un-Pareto'd) candidates plus this
+/// unit's explored count and whether it hit the deadline — the caller
+/// merges passes in a fixed order and Pareto-reduces once, so the
+/// result is identical however the units were scheduled.
 fn enumerate_task(
     k: &Kernel,
     cache: &GeometryCache,
@@ -351,10 +593,10 @@ fn enumerate_task(
     dev: &Device,
     opts: &SolverOptions,
     budget: &SlrBudget,
-    start: Instant,
-    explored: &mut u64,
-    timed_out: &mut bool,
-) -> Vec<Candidate> {
+    deadline: Deadline,
+) -> (Vec<Candidate>, u64, bool) {
+    let mut explored = 0u64;
+    let mut timed_out = false;
     let st = &cache.tasks[t];
     let rep_stmt = &k.statements[st.rep];
     let nest = &rep_stmt.loops;
@@ -416,11 +658,11 @@ fn enumerate_task(
     };
     'outer: for (oi, ord) in orders.iter().enumerate() {
         for (ci, (intra, padded)) in combos.iter().enumerate() {
-            if start.elapsed() > opts.timeout {
-                *timed_out = true;
+            if deadline.expired() {
+                timed_out = true;
                 break 'outer;
             }
-            *explored += 1;
+            explored += 1;
             cfg.perm.clone_from(ord);
             cfg.padded_trip.clone_from(padded);
             cfg.intra.clone_from(intra);
@@ -464,8 +706,8 @@ fn enumerate_task(
     // ---- stage 2: refine transfer plans for surviving combos -----------
     let mut cands: Vec<Candidate> = Vec::new();
     for &(_, _, ci, oi) in &scored {
-        if start.elapsed() > opts.timeout {
-            *timed_out = true;
+        if deadline.expired() {
+            timed_out = true;
             break;
         }
         let (intra, padded) = &combos[ci as usize];
@@ -478,7 +720,7 @@ fn enumerate_task(
             plans: BTreeMap::new(),
             slr: 0,
         };
-        let cfg = choose_transfer_plans(k, st, base, dev, opts, budget, explored);
+        let cfg = choose_transfer_plans(k, st, base, dev, opts, budget, &mut explored);
         let rt = eval::resolve_task(k, st, &cfg);
         let res = task_resources(&rt, dev);
         if !res.fits(budget) {
@@ -509,7 +751,7 @@ fn enumerate_task(
         }
     }
 
-    pareto(cands)
+    (cands, explored, timed_out)
 }
 
 /// Cartesian enumeration of per-loop factor choices with an unroll cap.
@@ -593,59 +835,132 @@ fn choose_transfer_plans(
     cfg
 }
 
-/// Keep the Pareto front over (latency, dsp, bram18), sorted by latency.
-fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
+/// Latency-sorted front size kept per task after the Pareto reduction
+/// (resource-diversity witnesses ride on top).
+const PARETO_KEEP: usize = 16;
+
+/// Keep the Pareto front over (latency, **full** resource vector),
+/// sorted by latency. A candidate is dominated only when another one is
+/// no worse in latency *and every* resource class — DSP, BRAM18, LUT
+/// and FF — so a LUT- or FF-cheap configuration survives even when a
+/// faster candidate beats it on DSP/BRAM (the old three-field filter
+/// silently dropped those, starving stage-3 assembly on LUT-tight
+/// budgets).
+///
+/// The front is then cut to [`PARETO_KEEP`] by latency, but the
+/// cheapest-per-resource witnesses (min-LUT, min-BRAM18, min-FF,
+/// min-DSP) are never dropped: when stage 3 has to trade speed for
+/// resources, the extreme points are exactly the candidates it needs.
+/// Fully deterministic: stable latency sort, first-wins witnesses.
+pub fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
     cands.sort_by_key(|c| c.latency);
     let mut front: Vec<Candidate> = Vec::new();
     for c in cands {
         let dominated = front.iter().any(|f| {
-            f.latency <= c.latency && f.res.dsp <= c.res.dsp && f.res.bram18 <= c.res.bram18
+            f.latency <= c.latency
+                && f.res.dsp <= c.res.dsp
+                && f.res.bram18 <= c.res.bram18
+                && f.res.lut <= c.res.lut
+                && f.res.ff <= c.res.ff
         });
         if !dominated {
             front.push(c);
         }
     }
-    front.truncate(16);
+    if front.len() > PARETO_KEEP {
+        let min_idx = |key: fn(&Candidate) -> f64| {
+            let mut best = 0usize;
+            for i in 1..front.len() {
+                if key(&front[i]) < key(&front[best]) {
+                    best = i;
+                }
+            }
+            best
+        };
+        let mut witnesses = [
+            min_idx(|c| c.res.lut),
+            min_idx(|c| c.res.bram18),
+            min_idx(|c| c.res.ff),
+            min_idx(|c| c.res.dsp),
+        ];
+        witnesses.sort_unstable();
+        let mut tail: Vec<Candidate> = Vec::new();
+        for (j, &w) in witnesses.iter().enumerate() {
+            if w >= PARETO_KEEP && witnesses[..j].last() != Some(&w) {
+                tail.push(front[w].clone());
+            }
+        }
+        front.truncate(PARETO_KEEP);
+        front.extend(tail);
+    }
     front
 }
 
-/// DFS over per-task candidate picks and SLR ids with branch-and-bound.
-#[allow(clippy::too_many_arguments)]
-fn dfs_assign(
-    k: &Kernel,
-    fg: &FusedGraph,
-    cache: &GeometryCache,
-    dev: &Device,
-    opts: &SolverOptions,
-    budget: &SlrBudget,
+/// SLR symmetry breaking — the one child-generation rule, shared by
+/// `dfs_assign` and the stage-3 frontier expansion so the two can
+/// never drift. Regions are interchangeable (identical budgets;
+/// latency compares region ids only for equality), so the next task
+/// may reuse an already-open region or open exactly the next fresh
+/// one: region-renamed duplicates are never explored, and the kept
+/// representative (first-use-ordered region ids) is the
+/// lexicographically smallest of its class, preserving the
+/// deterministic tie-break. Returns the exclusive upper bound on the
+/// region id the next task may take.
+fn open_regions(assign: &[(usize, usize)], regions: usize) -> usize {
+    let next_fresh = assign.iter().map(|&(_, s)| s + 1).max().unwrap_or(0);
+    regions.min(next_fresh + 1)
+}
+
+/// Read-only context shared by every stage-3 DFS worker.
+struct DfsCtx<'a> {
+    k: &'a Kernel,
+    fg: &'a FusedGraph,
+    cache: &'a GeometryCache,
+    dev: &'a Device,
+    opts: &'a SolverOptions,
+    budget: &'a SlrBudget,
     regions: usize,
-    per_task: &[Vec<Candidate>],
+    per_task: &'a [Vec<Candidate>],
+    deadline: Deadline,
+    shared: &'a SharedBest,
+    timed_out: &'a AtomicBool,
+}
+
+/// DFS over per-task candidate picks and SLR ids with branch-and-bound.
+/// `assign` holds the (candidate, region) prefix, `used` the prefix's
+/// per-region resource sums (kept incrementally — sums only grow, so an
+/// overfull region prunes the whole subtree).
+fn dfs_assign(
+    ctx: &DfsCtx<'_>,
     assign: &mut Vec<(usize, usize)>,
-    best: &mut Option<(u64, DesignConfig)>,
-    start: Instant,
+    used: &mut [ResourceVec],
     explored: &mut u64,
-    timed_out: &mut bool,
 ) {
     let t = assign.len();
-    if t == per_task.len() {
-        *explored += 1;
-        // feasibility per region
-        let mut per_region = vec![ResourceVec::ZERO; regions];
-        for (ti, &(c, slr)) in assign.iter().enumerate() {
-            per_region[slr] += per_task[ti][c].res;
-        }
-        if per_region.iter().any(|r| !r.fits(budget)) {
+    // Anytime gate, checked at node entry AND before the (expensive)
+    // leaf simulation: once the deadline passed and *some* design is in
+    // hand — a found leaf or the warm-start incumbent — stop scoring.
+    // With no design in hand yet, the search degrades to a greedy dive
+    // (see the bottom of the loop) instead of running the exponential
+    // tree arbitrarily far past the deadline.
+    let expired = ctx.deadline.expired();
+    if expired {
+        ctx.timed_out.store(true, Ordering::Relaxed);
+        if ctx.shared.has_best() {
             return;
         }
+    }
+    if t == ctx.per_task.len() {
+        *explored += 1;
         let design = DesignConfig {
-            kernel: k.name.clone(),
-            model: opts.model,
-            overlap: opts.overlap,
+            kernel: ctx.k.name.clone(),
+            model: ctx.opts.model,
+            overlap: ctx.opts.overlap,
             tasks: assign
                 .iter()
                 .enumerate()
                 .map(|(ti, &(c, slr))| {
-                    let mut cfg = per_task[ti][c].cfg.clone();
+                    let mut cfg = ctx.per_task[ti][c].cfg.clone();
                     cfg.slr = slr;
                     cfg
                 })
@@ -655,32 +970,40 @@ fn dfs_assign(
         // analytic model: the model (Eqs 12–16) guides enumeration, but
         // picking the winner with the authoritative latency keeps
         // heuristic-beam local optima from inverting feature ablations.
-        let rd = ResolvedDesign::new(k, fg, cache, &design);
-        let lat = simulate_resolved(&rd, dev).cycles;
+        let rd = ResolvedDesign::new(ctx.k, ctx.fg, ctx.cache, &design);
+        let lat = simulate_resolved(&rd, ctx.dev).cycles;
         drop(rd);
-        if best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true) {
-            *best = Some((lat, design));
+        ctx.shared.offer(lat, assign.clone(), design);
+        return;
+    }
+    let max_slr = open_regions(assign, ctx.regions);
+    for (c, cand) in ctx.per_task[t].iter().enumerate() {
+        // bound: any task's standalone latency lower-bounds the total.
+        // STRICTLY above the shared bound only — an equal-latency leaf
+        // may still win the deterministic tie-break, so it must stay
+        // reachable from every worker.
+        if cand.latency > ctx.shared.bound() {
+            continue;
         }
-        return;
-    }
-    if start.elapsed() > opts.timeout && best.is_some() {
-        *timed_out = true;
-        return;
-    }
-    // bound: any task's standalone latency lower-bounds the total
-    for (c, cand) in per_task[t].iter().enumerate() {
-        if let Some((b, _)) = best {
-            if cand.latency >= *b {
-                continue; // this candidate alone already exceeds incumbent
+        for slr in 0..max_slr {
+            let prev = used[slr];
+            let acc = prev + cand.res;
+            if !acc.fits(ctx.budget) {
+                continue;
             }
-        }
-        for slr in 0..regions {
+            used[slr] = acc;
             assign.push((c, slr));
-            dfs_assign(
-                k, fg, cache, dev, opts, budget, regions, per_task, assign, best, start,
-                explored, timed_out,
-            );
+            dfs_assign(ctx, assign, used, explored);
             assign.pop();
+            used[slr] = prev;
+            // Post-deadline with no design yet: one greedy dive down
+            // the first viable branch (which either just produced the
+            // anytime design, or dead-ended). Give up on the siblings
+            // rather than exhaust the tree past the deadline — the
+            // caller reports the timeout in the Infeasible detail.
+            if expired {
+                return;
+            }
         }
     }
 }
@@ -704,7 +1027,7 @@ mod tests {
     fn gemm_solves_and_is_valid() {
         let k = polybench::gemm();
         let dev = Device::u55c();
-        let r = solve(&k, &dev, &quick_opts());
+        let r = solve(&k, &dev, &quick_opts()).unwrap();
         let fg = fuse(&k);
         r.design.validate(&k, &fg, dev.slrs).unwrap();
         assert!(r.gflops > 50.0, "gemm RTL gflops too low: {}", r.gflops);
@@ -717,20 +1040,24 @@ mod tests {
         // same design, same latency, point for point.
         let k = polybench::gemm();
         let dev = Device::u55c();
-        let cold = solve(&k, &dev, &quick_opts());
+        let cold = solve(&k, &dev, &quick_opts()).unwrap();
         let fg = fuse(&k);
         let cache = GeometryCache::new(&k, &fg);
-        let warm = solve_with_cache(&k, &fg, &cache, &dev, &quick_opts());
+        let warm = solve_with_cache(&k, &fg, &cache, &dev, &quick_opts()).unwrap();
         assert_eq!(cold.design, warm.design);
         assert_eq!(cold.latency.total, warm.latency.total);
-        assert_eq!(cold.explored, warm.explored);
+        // explored counts are only exactly reproducible single-threaded
+        // (parallel pruning races change them, never the design)
+        if quick_opts().jobs == 1 {
+            assert_eq!(cold.explored, warm.explored);
+        }
     }
 
     #[test]
     fn three_madd_uses_concurrency() {
         let k = polybench::three_madd();
         let dev = Device::u55c();
-        let df = solve(&k, &dev, &quick_opts());
+        let df = solve(&k, &dev, &quick_opts()).unwrap();
         let seq = solve(
             &k,
             &dev,
@@ -739,7 +1066,8 @@ mod tests {
                 overlap: false,
                 ..quick_opts()
             },
-        );
+        )
+        .unwrap();
         assert!(
             df.latency.total < seq.latency.total,
             "dataflow {} !< sequential {}",
@@ -752,7 +1080,7 @@ mod tests {
     fn onboard_budget_shrinks_design() {
         let k = polybench::gemm();
         let dev = Device::u55c();
-        let rtl = solve(&k, &dev, &quick_opts());
+        let rtl = solve(&k, &dev, &quick_opts()).unwrap();
         let board = solve(
             &k,
             &dev,
@@ -760,7 +1088,8 @@ mod tests {
                 scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 },
                 ..quick_opts()
             },
-        );
+        )
+        .unwrap();
         assert!(board.gflops <= rtl.gflops * 1.05);
         // on-board design must fit the scaled budget
         let fg = fuse(&k);
@@ -783,7 +1112,7 @@ mod tests {
         let k = polybench::gemm();
         let dev = Device::u55c();
         let fg = fuse(&k);
-        let cold = solve(&k, &dev, &quick_opts());
+        let cold = solve(&k, &dev, &quick_opts()).unwrap();
         let inc_cycles = crate::sim::engine::simulate(&k, &fg, &cold.design, &dev).cycles;
         // a much weaker search, warm-started from the cold design, may
         // not beat the incumbent but can never fall below it
@@ -791,7 +1120,8 @@ mod tests {
             &k,
             &dev,
             &SolverOptions { incumbent: Some(cold.design.clone()), beam: 2, ..quick_opts() },
-        );
+        )
+        .unwrap();
         let warm_cycles = crate::sim::engine::simulate(&k, &fg, &warm.design, &dev).cycles;
         assert!(warm_cycles <= inc_cycles, "warm {warm_cycles} > incumbent {inc_cycles}");
         assert!(warm.warm_started, "usable incumbent must be reported as a warm start");
@@ -802,9 +1132,9 @@ mod tests {
         let k = polybench::gemm();
         let other = polybench::bicg();
         let dev = Device::u55c();
-        let inc = solve(&other, &dev, &quick_opts()).design;
+        let inc = solve(&other, &dev, &quick_opts()).unwrap().design;
         // an incumbent from another kernel must not leak into the result
-        let r = solve(&k, &dev, &SolverOptions { incumbent: Some(inc), ..quick_opts() });
+        let r = solve(&k, &dev, &SolverOptions { incumbent: Some(inc), ..quick_opts() }).unwrap();
         assert_eq!(r.design.kernel, "gemm");
         assert!(!r.warm_started, "rejected incumbent must not count as a warm start");
         let fg = fuse(&k);
@@ -819,8 +1149,49 @@ mod tests {
             &k,
             &dev,
             &SolverOptions { timeout: Duration::from_millis(50), ..quick_opts() },
-        );
+        )
+        .unwrap();
         // even with a tiny timeout we get *a* design
         assert!(r.latency.total > 0);
+    }
+
+    #[test]
+    fn infeasible_budget_is_an_error() {
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let err = solve(
+            &k,
+            &dev,
+            &SolverOptions {
+                scenario: Scenario::OnBoard { slrs: 1, frac: 1e-6 },
+                ..quick_opts()
+            },
+        )
+        .unwrap_err();
+        let SolverError::Infeasible { task, detail } = err;
+        assert!(task.is_some(), "a single-region overflow names the task");
+        assert!(detail.contains("gemm"), "{detail}");
+    }
+
+    #[test]
+    fn multi_slr_solves_are_symmetry_broken() {
+        // Region ids appear in first-use order: the renamed duplicates
+        // are pruned, so region r can only appear after 0..r did.
+        let k = polybench::three_mm();
+        let dev = Device::u55c();
+        let r = solve(
+            &k,
+            &dev,
+            &SolverOptions {
+                scenario: Scenario::OnBoard { slrs: 3, frac: 0.6 },
+                ..quick_opts()
+            },
+        )
+        .unwrap();
+        let mut seen = 0usize;
+        for tc in &r.design.tasks {
+            assert!(tc.slr <= seen, "region {} opened before {}", tc.slr, seen);
+            seen = seen.max(tc.slr + 1);
+        }
     }
 }

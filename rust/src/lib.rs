@@ -30,6 +30,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod hw;
 pub mod ir;
+mod par;
 pub mod report;
 pub mod runtime;
 pub mod service;

@@ -5,7 +5,7 @@
 //! ```text
 //! prometheus list                               list kernels (Table 5 data)
 //! prometheus analyze  <kernel>                  task graph + fusion report
-//! prometheus optimize <kernel> [--onboard N --frac F] [--emit DIR] [--db FILE]
+//! prometheus optimize <kernel> [--onboard N --frac F] [--emit DIR] [--db FILE] [--jobs N]
 //! prometheus batch    [--kernels K,..] [--scenarios S,..] [--db FILE] [--jobs N]
 //! prometheus compare  <kernel>                  all 6 frameworks (Table 3 shape)
 //! prometheus codegen  <kernel> <dir>            emit HLS-C++ + host
@@ -91,9 +91,16 @@ fn run() -> Result<()> {
                 },
                 None => Scenario::Rtl,
             };
+            // Intra-solve worker threads: --jobs beats $PROMETHEUS_JOBS
+            // beats 1 (the solver's default). The answer is identical
+            // for any jobs value — only the solve time changes.
+            let mut solver = SolverOptions::default();
+            if let Some(j) = flag_value(&args, "--jobs") {
+                solver.jobs = j.parse()?;
+            }
             let opts = OptimizeOptions {
                 scenario,
-                solver: SolverOptions::default(),
+                solver,
                 emit_dir: flag_value(&args, "--emit").map(PathBuf::from),
                 artifacts_dir: flag_value(&args, "--artifacts").map(PathBuf::from),
             };
@@ -280,9 +287,12 @@ fn run() -> Result<()> {
                  \x20 list                                 kernel zoo (Table 5 data)\n\
                  \x20 analyze  <kernel>                    task graph + fusion\n\
                  \x20 optimize <kernel> [--onboard N --frac F] [--emit DIR] [--artifacts D] [--db FILE]\n\
+                 \x20          [--jobs N]                  --jobs = intra-solve worker threads\n\
                  \x20 batch [--kernels K,..|all] [--scenarios rtl,onboard:N:F,..]\n\
                  \x20       [--models dataflow,sequential] [--db FILE] [--jobs N] [--quick]\n\
                  \x20                                      parallel batch service + QoR knowledge base\n\
+                 \x20                                      (--jobs = total cores, split between\n\
+                 \x20                                      requests and intra-solve workers)\n\
                  \x20 compare  <kernel>                    all frameworks (Table 3/6 shape)\n\
                  \x20 codegen  <kernel> <dir>              emit HLS-C++ + OpenCL host\n\
                  \x20 validate <kernel> [--artifacts D]    PJRT functional check\n\

@@ -1,0 +1,52 @@
+//! The one in-tree scoped worker-pool primitive (rayon is not vendored
+//! in this offline environment, matching the criterion/proptest
+//! stand-in policy). Both layers of parallelism use it: the solver's
+//! intra-solve fan-out (`dse::solver`, stage-1 enumeration units and
+//! stage-3 DFS prefixes) and the batch orchestrator's inter-request
+//! fan-out (`service::batch`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(0..n)` across `jobs` scoped workers and return the results in
+/// index order. Work is pulled from an atomic cursor, so which worker
+/// runs which index is racy — but every result lands in its own slot,
+/// keeping the output order (and everything downstream) deterministic.
+/// `jobs <= 1` (or a single item) runs inline without spawning.
+pub fn run_indexed<T: Send>(n: usize, jobs: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs.min(n) {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_index_order_for_any_worker_count() {
+        for jobs in [1usize, 2, 7, 32] {
+            let out = run_indexed(23, jobs, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+    }
+}

@@ -12,10 +12,14 @@
 //! 3. **parallel fan-out** — the remaining unique misses are solved on a
 //!    scoped worker pool (hand-rolled work queue over
 //!    `std::thread::scope`; rayon is not vendored in this environment,
-//!    matching the in-tree criterion/proptest stand-ins). Each kernel is
-//!    fused and resolved into a [`GeometryCache`] **once** up front;
-//!    every worker job for that kernel shares the cache, so parallel
-//!    batch jobs skip the configuration-independent re-resolution;
+//!    matching the in-tree criterion/proptest stand-ins). The core
+//!    budget ([`BatchOptions::jobs`]) is split between this
+//!    inter-request pool and each solve's own intra-solve workers
+//!    (`SolverOptions::jobs`), so both a wide batch and a single heavy
+//!    miss saturate the machine. Each kernel is fused and resolved into
+//!    a [`GeometryCache`] **once** up front; every worker job for that
+//!    kernel shares the cache, so parallel batch jobs skip the
+//!    configuration-independent re-resolution;
 //! 4. **warm start** — each miss seeds the solver with the best related
 //!    record ([`QorDb::incumbent_for`]), so even cold-ish solves prune
 //!    against a known-good bound;
@@ -33,8 +37,6 @@ use crate::ir::Kernel;
 use crate::report::{gfs, Table};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Per-kernel shared context for one batch run: the kernel, its fusion
@@ -129,8 +131,16 @@ pub fn parse_model(s: &str) -> Result<ExecutionModel> {
 pub struct BatchOptions {
     /// Base solver knobs; each request overrides scenario/model/overlap.
     pub solver: SolverOptions,
-    /// Worker threads for the fan-out (clamped to the number of unique
-    /// misses; 0 means one worker).
+    /// Total core budget for the batch, split between inter-request and
+    /// intra-solve parallelism: with `U` unique misses the orchestrator
+    /// runs `min(U, jobs)` request workers and gives each solve
+    /// `jobs / workers` threads (`SolverOptions::jobs`; the division
+    /// remainder is spread one-extra-thread over the first misses), so
+    /// a batch of one request still saturates the machine through the
+    /// solver's own stage-1/stage-3 fan-out. 0 means one worker.
+    /// Results are thread-count independent (the solver's determinism
+    /// contract), so the split never changes what lands in the
+    /// knowledge base.
     pub jobs: usize,
 }
 
@@ -314,29 +324,37 @@ pub fn run_batch(
         })
         .collect();
 
-    // Parallel fan-out over the unique misses. Each job runs under
-    // `catch_unwind` so one infeasible request (the solver asserts on
-    // impossibly small budgets) fails that request, not the whole
-    // batch — completed solves still reach the knowledge base.
-    let results: Vec<Mutex<Option<Result<SolvedJob, String>>>> =
-        job_requests.iter().map(|_| Mutex::new(None)).collect();
-    let cursor = AtomicUsize::new(0);
-    let workers = opts.jobs.max(1).min(job_requests.len().max(1));
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let j = cursor.fetch_add(1, Ordering::Relaxed);
-                if j >= job_requests.len() {
-                    break;
-                }
-                let req = &requests[job_requests[j]];
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+    // Parallel fan-out over the unique misses (the shared
+    // `par::run_indexed` worker pool), splitting the core budget
+    // between the two layers of parallelism: `workers` requests in
+    // flight, each solve running on `intra_jobs` threads of its own
+    // (a 16-core box serving 2 misses gives each solve 8 threads
+    // instead of idling 14 cores). An infeasible request is a clean
+    // `SolverError` that fails that request only; `catch_unwind` stays,
+    // but now guards true bugs, not expected infeasibility — completed
+    // solves still reach the knowledge base either way.
+    let total_jobs = opts.jobs.max(1);
+    let workers = total_jobs.min(job_requests.len().max(1));
+    // Integer split plus remainder: the first `total % workers` misses
+    // get one extra intra-solve thread, so e.g. 16 cores over 9 misses
+    // run 7 solves at 2 threads + 2 at 1 instead of idling 7 cores.
+    // Deterministic (a function of the job index), so re-running a
+    // batch cannot flip which answer a request gets.
+    let base_intra = (total_jobs / workers).max(1);
+    let extra_intra = if total_jobs > workers { total_jobs % workers } else { 0 };
+    let results: Vec<Result<SolvedJob, String>> =
+        crate::par::run_indexed(job_requests.len(), workers, |j| {
+            let req = &requests[job_requests[j]];
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || -> Result<SolvedJob, String> {
                     let mut sopts = req.solver_options(&opts.solver);
                     sopts.incumbent = incumbents[j].clone();
+                    sopts.jobs = base_intra + usize::from(j < extra_intra);
                     // One fusion + geometry cache per kernel, shared by
                     // every job of the batch (read-only).
                     let ctx = &ctxs[&req.kernel];
-                    let r = solve_with_cache(&ctx.kernel, &ctx.fg, &ctx.cache, dev, &sopts);
+                    let r = solve_with_cache(&ctx.kernel, &ctx.fg, &ctx.cache, dev, &sopts)
+                        .map_err(|e| e.to_string())?;
                     // Shared record constructor (simulated cycles +
                     // scenario-consistent GF/s): identical to what
                     // `optimize --db` would store for this request.
@@ -348,17 +366,19 @@ pub fn run_batch(
                         req.scenario,
                         dev,
                     );
-                    SolvedJob {
+                    Ok(SolvedJob {
                         canonical: canon[job_requests[j]].clone(),
                         record,
                         warm: r.warm_started,
                         solve_time: r.solve_time,
-                    }
-                }));
-                *results[j].lock().unwrap() = Some(outcome.map_err(|p| panic_message(&p)));
-            });
-        }
-    });
+                    })
+                },
+            ));
+            match outcome {
+                Ok(res) => res,
+                Err(p) => Err(panic_message(&p)),
+            }
+        });
 
     // Fold results back into the knowledge base (completed solves
     // first, so they survive even when some requests failed), then
@@ -367,20 +387,16 @@ pub fn run_batch(
         std::collections::BTreeMap::new();
     let mut failures: Vec<String> = Vec::new();
     let mut failed_keys: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
-    for (slot, &ri) in results.iter().zip(&job_requests) {
+    for (outcome, &ri) in results.into_iter().zip(&job_requests) {
         let req = &requests[ri];
-        match slot.lock().unwrap().take() {
-            Some(Ok(job)) => {
+        match outcome {
+            Ok(job) => {
                 solve_times.insert(job.canonical.clone(), (job.solve_time, job.warm));
                 db.insert_canonical(job.canonical, job.record);
             }
-            Some(Err(msg)) => {
+            Err(msg) => {
                 failed_keys.insert(canon[ri].clone());
                 failures.push(format!("{} @ {}: {msg}", req.kernel, req.scenario));
-            }
-            None => {
-                failed_keys.insert(canon[ri].clone());
-                failures.push(format!("{} @ {}: job never ran", req.kernel, req.scenario));
             }
         }
     }
@@ -497,14 +513,16 @@ mod tests {
         };
         let reqs = vec![
             BatchRequest::new("madd", Scenario::Rtl),
-            // a budget far too small for any design: the solver panics
-            // on "no feasible assembly"; the batch must isolate it
+            // a budget far too small for any design: the solver returns
+            // `SolverError::Infeasible`; the batch must fail exactly
+            // that request, with the solver's message, not a panic's
             BatchRequest::new("madd", Scenario::OnBoard { slrs: 1, frac: 1e-6 }),
         ];
         let mut db = QorDb::new();
         let err = run_batch(&reqs, &dev, &mut db, &opts).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("1 of 2"), "{msg}");
+        assert!(msg.contains("infeasible"), "expected a clean solver error, got: {msg}");
         // the feasible request's solve survived into the knowledge base
         assert_eq!(db.len(), 1);
     }

@@ -37,8 +37,10 @@ pub const FORMAT_VERSION: u64 = 1;
 ///
 /// Two requests with equal keys are the *same* optimization problem:
 /// the cached answer is exact, not approximate. The solver's `incumbent`
-/// (a warm-start hint) is deliberately excluded — it changes solve
-/// speed, never the problem.
+/// (a warm-start hint) and `jobs` (worker threads; the solver's
+/// determinism contract guarantees a thread-count-independent answer)
+/// are deliberately excluded — they change solve speed, never the
+/// problem.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DesignKey {
     pub kernel: String,

@@ -143,7 +143,7 @@ mod tests {
         let k = polybench::gemm();
         let dev = Device::u55c();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &board_opts(1, 0.6));
+        let r = solve(&k, &dev, &board_opts(1, 0.6)).unwrap();
         let budget = dev.slr.scaled(0.6);
         let b = board_eval(&k, &fg, &r.design, &dev, &budget);
         assert!(b.bitstream_ok, "utilization {}", b.peak_utilization);
@@ -158,7 +158,7 @@ mod tests {
         let k = polybench::gemm();
         let dev = Device::u55c();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &board_opts(1, 1.0));
+        let r = solve(&k, &dev, &board_opts(1, 1.0)).unwrap();
         let tiny = dev.slr.scaled(0.15);
         let b = board_eval(&k, &fg, &r.design, &dev, &tiny);
         assert!(!b.bitstream_ok);
@@ -169,7 +169,7 @@ mod tests {
         let k = polybench::three_mm();
         let dev = Device::u55c();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &board_opts(3, 0.6));
+        let r = solve(&k, &dev, &board_opts(3, 0.6)).unwrap();
         let budget = dev.slr.scaled(0.6);
         let b = board_eval(&k, &fg, &r.design, &dev, &budget);
         if b.slr_crossings > 0 {

@@ -317,7 +317,7 @@ mod tests {
         // the model-fidelity check DESIGN.md §6 promises.
         let k = polybench::gemm();
         let dev = Device::u55c();
-        let r = solve(&k, &dev, &opts());
+        let r = solve(&k, &dev, &opts()).unwrap();
         let fg = fuse(&k);
         let sim = simulate(&k, &fg, &r.design, &dev);
         let model = graph_latency(&k, &fg, &r.design, &dev).total;
@@ -335,7 +335,7 @@ mod tests {
         let k = polybench::three_madd();
         let dev = Device::u55c();
         let fg = fuse(&k);
-        let df = solve(&k, &dev, &opts());
+        let df = solve(&k, &dev, &opts()).unwrap();
         let mut seq_design = df.design.clone();
         seq_design.model = ExecutionModel::Sequential;
         let s_df = simulate(&k, &fg, &df.design, &dev);
@@ -349,7 +349,7 @@ mod tests {
         let k = polybench::two_madd();
         let dev = Device::u55c();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &opts());
+        let r = solve(&k, &dev, &opts()).unwrap();
         let sim = simulate(&k, &fg, &r.design, &dev);
         assert!(sim.cycles > 0);
         assert_eq!(sim.compute_cycles.len(), 2);
@@ -360,7 +360,7 @@ mod tests {
         let k = polybench::madd();
         let dev = Device::u55c();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &opts());
+        let r = solve(&k, &dev, &opts()).unwrap();
         let sim = simulate(&k, &fg, &r.design, &dev);
         let cache = GeometryCache::new(&k, &fg);
         let rt = resolve_task(&k, &cache.tasks[0], &r.design.tasks[0]);

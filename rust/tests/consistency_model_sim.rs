@@ -50,7 +50,8 @@ fn sequential_model_equals_simulator_for_every_kernel() {
                 &k,
                 &dev,
                 &SolverOptions { model: ExecutionModel::Sequential, overlap, ..quick() },
-            );
+            )
+            .unwrap();
             let model = graph_latency(&k, &fg, &r.design, &dev);
             let sim = simulate(&k, &fg, &r.design, &dev);
             assert_eq!(
@@ -74,7 +75,7 @@ fn dataflow_model_lower_bounds_sequentialized_simulation() {
     let dev = Device::u55c();
     for k in polybench::all_kernels() {
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &quick());
+        let r = solve(&k, &dev, &quick()).unwrap();
         assert!(r.design.tasks.iter().all(|t| t.slr == 0), "{}: RTL solve is 1-region", k.name);
         let df_model = graph_latency(&k, &fg, &r.design, &dev).total;
         let mut seq = r.design.clone();
@@ -96,7 +97,7 @@ fn warm_cache_resolution_is_bit_identical_to_cold() {
     for name in ["gemm", "3mm", "atax", "3-madd"] {
         let k = polybench::by_name(name).unwrap();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &quick());
+        let r = solve(&k, &dev, &quick()).unwrap();
         let cache = GeometryCache::new(&k, &fg);
         let rd = ResolvedDesign::new(&k, &fg, &cache, &r.design);
         let cold_model = graph_latency(&k, &fg, &r.design, &dev);

@@ -15,7 +15,7 @@ fn every_kernel_solves_and_simulates() {
     let dev = Device::u55c();
     for k in polybench::all_kernels() {
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &quick_solver());
+        let r = solve(&k, &dev, &quick_solver()).unwrap();
         r.design
             .validate(&k, &fg, dev.slrs)
             .unwrap_or_else(|e| panic!("{}: {e}", k.name));
@@ -35,7 +35,7 @@ fn model_and_simulator_agree_within_bounds() {
     for name in ["gemm", "2mm", "3mm", "bicg", "mvt", "madd", "3-madd"] {
         let k = polybench::by_name(name).unwrap();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &quick_solver());
+        let r = solve(&k, &dev, &quick_solver()).unwrap();
         let sim = simulate(&k, &fg, &r.design, &dev).cycles as f64;
         let model = graph_latency(&k, &fg, &r.design, &dev).total as f64;
         let ratio = sim / model;
@@ -53,7 +53,7 @@ fn compute_bound_kernels_outperform_memory_bound() {
     let g = |n: &str| {
         let k = polybench::by_name(n).unwrap();
         let fg = fuse(&k);
-        let r = solve(&k, &dev, &quick_solver());
+        let r = solve(&k, &dev, &quick_solver()).unwrap();
         simulate(&k, &fg, &r.design, &dev).gflops(&k, &dev)
     };
     let gemm = g("gemm");
@@ -77,7 +77,8 @@ fn onboard_designs_fit_their_budget() {
                     scenario: Scenario::OnBoard { slrs, frac },
                     ..quick_solver()
                 },
-            );
+            )
+            .unwrap();
             let budget = dev.slr.scaled(frac);
             assert!(
                 prometheus::dse::constraints::feasible(&k, &fg, &r.design, &dev, &budget),
@@ -93,7 +94,7 @@ fn onboard_designs_fit_their_budget() {
 fn codegen_emits_for_every_kernel() {
     let dev = Device::u55c();
     for k in polybench::all_kernels() {
-        let r = solve(&k, &dev, &quick_solver());
+        let r = solve(&k, &dev, &quick_solver()).unwrap();
         let hls = generate_hls(&k, &r.design);
         let host = generate_host(&k, &r.design);
         assert!(hls.contains("extern \"C\""), "{}", k.name);
@@ -120,12 +121,14 @@ fn three_slr_beats_one_slr_on_compute_bound() {
         &k,
         &dev,
         &SolverOptions { scenario: Scenario::OnBoard { slrs: 1, frac: 0.6 }, ..quick_solver() },
-    );
+    )
+    .unwrap();
     let three = solve(
         &k,
         &dev,
         &SolverOptions { scenario: Scenario::OnBoard { slrs: 3, frac: 0.6 }, ..quick_solver() },
-    );
+    )
+    .unwrap();
     assert!(
         three.gflops > one.gflops,
         "3-SLR {} !> 1-SLR {}",

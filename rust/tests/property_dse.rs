@@ -9,7 +9,7 @@ use prometheus::dse::constraints::partition_of;
 use prometheus::dse::cost::task_latency;
 use prometheus::dse::eval::{resolve_task, GeometryCache};
 use prometheus::dse::padding::{divisors, legal_intra_factors, pad_for_burst};
-use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::dse::solver::{pareto, solve, Candidate, Scenario, SolverError, SolverOptions};
 use prometheus::dse::space::TaskGeometry;
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
@@ -197,7 +197,7 @@ fn prop_solver_feasible_under_random_budgets() {
             timeout: Duration::from_secs(20),
             ..SolverOptions::default()
         };
-        let r = solve(&k, &dev, &opts);
+        let r = solve(&k, &dev, &opts).unwrap();
         r.design.validate(&k, &fg, dev.slrs).unwrap();
         let budget = dev.slr.scaled(frac);
         assert!(
@@ -209,4 +209,139 @@ fn prop_solver_feasible_under_random_budgets() {
         let sim = simulate(&k, &fg, &r.design, &dev);
         assert!(sim.cycles > 0);
     });
+}
+
+/// Determinism contract of the parallel solver (ISSUE 3 tentpole): the
+/// worker count changes solve speed, never the answer. One worker and
+/// eight must return bit-identical designs and latencies for every
+/// kernel in the zoo.
+#[test]
+fn prop_solver_is_thread_count_independent() {
+    let dev = Device::u55c();
+    let opts = |jobs: usize| SolverOptions {
+        beam: 6,
+        max_factor_per_loop: 16,
+        max_unroll: 256,
+        timeout: Duration::from_secs(60),
+        jobs,
+        ..SolverOptions::default()
+    };
+    for k in polybench::all_kernels() {
+        let one = solve(&k, &dev, &opts(1)).unwrap();
+        let many = solve(&k, &dev, &opts(8)).unwrap();
+        assert_eq!(one.design, many.design, "{}: jobs=1 vs jobs=8 design", k.name);
+        assert_eq!(
+            one.latency.total, many.latency.total,
+            "{}: jobs=1 vs jobs=8 latency",
+            k.name
+        );
+    }
+    // The multi-region stage-3 machinery — SLR symmetry breaking,
+    // frontier expansion, cross-region SharedBest races — on the
+    // multi-task subset (RTL above only ever has one region).
+    let onboard = Scenario::OnBoard { slrs: 3, frac: 0.6 };
+    for name in ["2mm", "3mm", "3-madd", "bicg", "atax"] {
+        let k = polybench::by_name(name).unwrap();
+        let one = solve(&k, &dev, &SolverOptions { scenario: onboard, ..opts(1) }).unwrap();
+        let many = solve(&k, &dev, &SolverOptions { scenario: onboard, ..opts(8) }).unwrap();
+        assert_eq!(one.design, many.design, "{name} onboard: jobs=1 vs jobs=8 design");
+        assert_eq!(
+            one.latency.total, many.latency.total,
+            "{name} onboard: jobs=1 vs jobs=8 latency"
+        );
+    }
+}
+
+/// An impossibly small budget is a clean `Err(Infeasible)`, not a
+/// panic — directly from the solver and through the batch service.
+#[test]
+fn infeasible_budget_errors_cleanly() {
+    let dev = Device::u55c();
+    let tiny = SolverOptions {
+        scenario: Scenario::OnBoard { slrs: 1, frac: 1e-6 },
+        beam: 4,
+        max_factor_per_loop: 8,
+        max_unroll: 64,
+        timeout: Duration::from_secs(20),
+        ..SolverOptions::default()
+    };
+    for jobs in [1usize, 4] {
+        let k = polybench::by_name("gemm").unwrap();
+        let err = solve(&k, &dev, &SolverOptions { jobs, ..tiny.clone() }).unwrap_err();
+        let SolverError::Infeasible { task, detail } = err;
+        assert!(task.is_some(), "single-region overflow should name a task: {detail}");
+    }
+}
+
+#[test]
+fn infeasible_budget_errors_cleanly_through_batch() {
+    use prometheus::service::batch::{run_batch, BatchOptions, BatchRequest};
+    use prometheus::service::QorDb;
+    let dev = Device::u55c();
+    let opts = BatchOptions {
+        solver: SolverOptions {
+            beam: 4,
+            max_factor_per_loop: 8,
+            max_unroll: 64,
+            timeout: Duration::from_secs(20),
+            ..SolverOptions::default()
+        },
+        jobs: 2,
+    };
+    let reqs = vec![BatchRequest::new("gemm", Scenario::OnBoard { slrs: 1, frac: 1e-6 })];
+    let mut db = QorDb::new();
+    let err = run_batch(&reqs, &dev, &mut db, &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    // the solver's message, not a caught panic payload
+    assert!(msg.contains("infeasible"), "{msg}");
+    assert!(db.is_empty(), "an infeasible request must not pollute the knowledge base");
+}
+
+fn res_cand(latency: u64, dsp: f64, bram18: f64, lut: f64, ff: f64) -> Candidate {
+    Candidate {
+        cfg: TaskConfig {
+            task: 0,
+            perm: Vec::new(),
+            padded_trip: Vec::new(),
+            intra: Vec::new(),
+            ii: 1,
+            plans: BTreeMap::new(),
+            slr: 0,
+        },
+        latency,
+        res: prometheus::hw::ResourceVec { dsp, bram18, lut, ff },
+    }
+}
+
+/// The Pareto filter dominates over the **full** resource vector: a
+/// candidate that is slower but strictly cheaper in LUT/FF must
+/// survive (the old three-field filter dropped it, which could starve
+/// stage-3 assembly on LUT-tight budgets), while a candidate worse on
+/// every axis still dies.
+#[test]
+fn pareto_keeps_lut_cheap_candidates() {
+    let fast_lut_hungry = res_cand(10, 10.0, 10.0, 1000.0, 1000.0);
+    let slow_lut_cheap = res_cand(12, 10.0, 10.0, 100.0, 100.0);
+    let strictly_worse = res_cand(15, 20.0, 20.0, 2000.0, 2000.0);
+    let front = pareto(vec![fast_lut_hungry, slow_lut_cheap, strictly_worse]);
+    assert_eq!(front.len(), 2, "LUT/FF-cheaper candidate must survive");
+    assert!(front.iter().any(|c| c.res.lut == 100.0));
+    assert!(!front.iter().any(|c| c.latency == 15));
+}
+
+/// Truncation keeps the per-resource witnesses: min-LUT and min-BRAM
+/// candidates survive even when they sit past the latency-sorted cut.
+#[test]
+fn pareto_truncation_keeps_resource_witnesses() {
+    // 40 mutually non-dominated points (latency up, DSP down), plus a
+    // min-LUT and a min-BRAM witness at the very end of the sort order.
+    let mut cands: Vec<Candidate> = (0..40u64)
+        .map(|i| res_cand(10 + i, 1000.0 - 10.0 * i as f64, 500.0, 5000.0, 5000.0))
+        .collect();
+    cands.push(res_cand(1000, 2000.0, 500.0, 1.0, 5000.0)); // min LUT
+    cands.push(res_cand(1001, 2000.0, 1.0, 5000.0, 5000.0)); // min BRAM18
+    let front = pareto(cands);
+    assert!(front.len() <= 20, "front of {} exceeds keep + witnesses", front.len());
+    assert!(front.iter().any(|c| c.res.lut == 1.0), "min-LUT witness dropped");
+    assert!(front.iter().any(|c| c.res.bram18 == 1.0), "min-BRAM18 witness dropped");
 }

@@ -184,7 +184,7 @@ fn prop_warm_started_solves_never_regress() {
     for_random(0x9A12, 5, |rng, i| {
         let k = polybench::by_name(kernels[i % kernels.len()]).unwrap();
         let fg = fuse(&k);
-        let cold = solve(&k, &dev, &base);
+        let cold = solve(&k, &dev, &base).unwrap();
         let inc_cycles = simulate(&k, &fg, &cold.design, &dev).cycles;
         // weakened, warm-started re-solve: tiny beam, randomized (often
         // expired) timeout — the anytime path must still hold the line
@@ -194,7 +194,7 @@ fn prop_warm_started_solves_never_regress() {
             incumbent: Some(cold.design.clone()),
             ..base.clone()
         };
-        let warm = solve(&k, &dev, &warm_opts);
+        let warm = solve(&k, &dev, &warm_opts).unwrap();
         let warm_cycles = simulate(&k, &fg, &warm.design, &dev).cycles;
         assert!(
             warm_cycles <= inc_cycles,
