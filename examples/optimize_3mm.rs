@@ -42,7 +42,8 @@ fn main() {
         Framework::AutoDse,
     ] {
         let r = fw.optimize(&k, &dev);
-        let sim = simulate(&k, &fg, &r.design, &dev);
+        // each framework's design is simulated on its own fusion variant
+        let sim = simulate(&k, &r.fused, &r.design, &dev);
         row.push(gfs(sim.gflops(&k, &dev)));
     }
     table.row(row);

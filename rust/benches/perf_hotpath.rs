@@ -7,7 +7,6 @@
 //! cargo bench --bench perf_hotpath
 //! ```
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::dse::cost::{graph_latency, task_latency};
 use prometheus::dse::eval::{resolve_task, GeometryCache, ResolvedDesign};
 use prometheus::dse::solver::{solve, SolverOptions};
@@ -41,9 +40,9 @@ fn main() {
     // 1. cost-model single evaluation (the solver's inner loop)
     {
         let k = polybench::three_mm();
-        let fg = fuse(&k);
-        let cache = GeometryCache::new(&k, &fg);
         let r = solve(&k, &dev, &SolverOptions::default()).unwrap();
+        let fg = r.fused.clone();
+        let cache = GeometryCache::new(&k, &fg);
         let cfgs = r.design.tasks.clone();
         bench("eval::resolve + cost::task_latency (3mm FT0)", 20_000, || {
             let rt = resolve_task(&k, &cache.tasks[0], &cfgs[0]);
@@ -73,13 +72,13 @@ fn main() {
     // 3. simulator scaling: steps/second on a fine-tiled design
     {
         let k = polybench::madd();
-        let fg = fuse(&k);
         let r = solve(
             &k,
             &dev,
             &SolverOptions { max_unroll: 16, max_factor_per_loop: 4, ..SolverOptions::default() },
         )
         .unwrap();
+        let fg = r.fused.clone();
         let sim = simulate(&k, &fg, &r.design, &dev);
         let t0 = Instant::now();
         let reps = 200;

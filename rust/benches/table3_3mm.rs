@@ -5,7 +5,6 @@
 //! cargo bench --bench table3_3mm
 //! ```
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::baselines::Framework;
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
@@ -26,7 +25,7 @@ const PAPER: &[(&str, f64)] = &[
 fn main() {
     let dev = Device::u55c();
     let k = polybench::three_mm();
-    let fg = fuse(&k);
+
 
     println!("== Table 3: 3mm throughput across frameworks (GF/s) ==\n");
     let mut t = Table::new(&["Framework", "GF/s (ours)", "GF/s (paper)", "Bench time"]);
@@ -45,7 +44,7 @@ fn main() {
         assert_eq!(fw.name(), pname);
         let t0 = Instant::now();
         let r = fw.optimize(&k, &dev);
-        let sim = simulate(&k, &fg, &r.design, &dev);
+        let sim = simulate(&k, &r.fused, &r.design, &dev);
         let g = sim.gflops(&k, &dev);
         if *fw == Framework::Prometheus {
             ours_prom = g;

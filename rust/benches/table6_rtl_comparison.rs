@@ -6,7 +6,6 @@
 //! cargo bench --bench table6_rtl_comparison
 //! ```
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::baselines::{streamhls, Framework};
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
@@ -32,7 +31,6 @@ fn main() {
     // per-framework PI samples (ours / theirs)
     let mut pi: Vec<Vec<f64>> = vec![Vec::new(); frameworks.len()];
     for k in &kernels {
-        let fg = fuse(k);
         let mut cells = vec![k.name.clone()];
         let mut ours = 0.0f64;
         for (fi, fw) in frameworks.iter().enumerate() {
@@ -41,7 +39,7 @@ fn main() {
                 continue;
             }
             let r = fw.optimize(k, &dev);
-            let sim = simulate(k, &fg, &r.design, &dev);
+            let sim = simulate(k, &r.fused, &r.design, &dev);
             let g = sim.gflops(k, &dev);
             if fi == 0 {
                 ours = g;

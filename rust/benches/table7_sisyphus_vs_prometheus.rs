@@ -6,7 +6,6 @@
 //! cargo bench --bench table7_sisyphus_vs_prometheus
 //! ```
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::baselines::Framework;
 use prometheus::dse::constraints::total_usage;
 use prometheus::hw::Device;
@@ -29,14 +28,13 @@ fn main() {
     let mut speedups = Vec::new();
     for name in KERNELS {
         let k = polybench::by_name(name).unwrap();
-        let fg = fuse(&k);
         let mut cells = vec![k.name.clone()];
         let mut gf = [0.0f64; 2];
         for (i, fw) in [Framework::Sisyphus, Framework::Prometheus].iter().enumerate() {
             let r = fw.optimize(&k, &dev);
-            let sim = simulate(&k, &fg, &r.design, &dev);
+            let sim = simulate(&k, &r.fused, &r.design, &dev);
             gf[i] = sim.gflops(&k, &dev);
-            let u = total_usage(&k, &fg, &r.design, &dev);
+            let u = total_usage(&k, &r.fused, &r.design, &dev);
             cells.push(gfs(gf[i]));
             cells.push(pct(u.bram18, total.bram18));
             cells.push(pct(u.dsp, total.dsp));

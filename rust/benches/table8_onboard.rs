@@ -9,7 +9,6 @@
 //! cargo bench --bench table8_onboard
 //! ```
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::baselines::{autodse, sisyphus};
 use prometheus::coordinator::flow::quick_solver;
 use prometheus::coordinator::regen::regenerate_until_feasible;
@@ -33,7 +32,6 @@ fn main() {
     for (label, which) in [("1 SLR Sisyphus", 0usize), ("1 SLR AutoDSE", 1)] {
         for name in KERNELS {
             let k = polybench::by_name(name).unwrap();
-            let fg = fuse(&k);
             let mut frac = 0.60;
             loop {
                 let r = match which {
@@ -41,9 +39,9 @@ fn main() {
                     _ => autodse::optimize_onboard(&k, &dev, frac),
                 };
                 let budget = dev.slr.scaled(frac);
-                let b = board_eval(&k, &fg, &r.design, &dev, &budget);
+                let b = board_eval(&k, &r.fused, &r.design, &dev, &budget);
                 if b.bitstream_ok || frac <= 0.15 {
-                    let u = total_usage(&k, &fg, &r.design, &dev);
+                    let u = total_usage(&k, &r.fused, &r.design, &dev);
                     t.row(vec![
                         label.into(),
                         k.name.clone(),
@@ -68,10 +66,9 @@ fn main() {
     for (label, slrs) in [("1 SLR Ours", 1usize), ("3 SLR Ours", 3)] {
         for name in KERNELS {
             let k = polybench::by_name(name).unwrap();
-            let fg = fuse(&k);
             let out = regenerate_until_feasible(&k, &dev, &base, slrs, 0.60, 0.05, 0.15)
                 .expect("Table 8 regeneration stays feasible down to the 15% floor");
-            let u = total_usage(&k, &fg, &out.result.design, &dev);
+            let u = total_usage(&k, &out.result.fused, &out.result.design, &dev);
             t.row(vec![
                 label.into(),
                 k.name.clone(),

@@ -6,7 +6,6 @@
 //! cargo bench --bench table9_nlp_params
 //! ```
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::dse::eval::{GeometryCache, ResolvedDesign};
 use prometheus::dse::solver::{solve, Scenario, SolverOptions};
 use prometheus::hw::Device;
@@ -21,7 +20,6 @@ fn main() {
     let mut t = Table::new(&["Kernel", "Fused statements", "Loop order", "Data tile sizes"]);
     for name in KERNELS {
         let k = polybench::by_name(name).unwrap();
-        let fg = fuse(&k);
         let r = solve(
             &k,
             &dev,
@@ -31,19 +29,12 @@ fn main() {
             },
         )
         .expect("Table 9's 1-SLR/60% scenario is feasible for the zoo");
-        let fused: Vec<String> = fg
-            .tasks
-            .iter()
-            .map(|ft| {
-                format!(
-                    "FT{}: {}",
-                    ft.id,
-                    ft.stmts.iter().map(|s| format!("S{s}")).collect::<Vec<_>>().join(",")
-                )
-            })
-            .collect();
-        let cache = GeometryCache::new(&k, &fg);
-        let rd = ResolvedDesign::new(&k, &fg, &cache, &r.design);
+        // the partition the solver *chose* (the paper's FTi = {Sj, ...}
+        // column), not a recomputed max fusion
+        let fg = &r.fused;
+        let fused = fg.partition_string();
+        let cache = GeometryCache::new(&k, fg);
+        let rd = ResolvedDesign::new(&k, fg, &cache, &r.design);
         let mut orders = Vec::new();
         let mut tiles = Vec::new();
         for rt in &rd.tasks {
@@ -59,7 +50,7 @@ fn main() {
         }
         t.row(vec![
             k.name.clone(),
-            fused.join("  "),
+            fused,
             orders.join("  "),
             tiles.join(", "),
         ]);

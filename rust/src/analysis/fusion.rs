@@ -1,8 +1,39 @@
-//! Output-stationary task fusion (paper §3.1): statements writing the same
-//! array merge into one fused task, so every output tile is produced —
-//! loaded, computed, stored or sent — exactly once.
+//! Task fusion (paper §3.1) — as an *explored* dimension of the design
+//! space, not a fixed pre-pass.
+//!
+//! A [`FusionPlan`] is a canonical partition of the kernel's statements
+//! into fused tasks. [`enumerate_fusions`] produces every
+//! dependence-legal plan between the two extremes the paper's unified
+//! space spans:
+//!
+//! * **fully fissioned** — one task per statement;
+//! * **max output-stationary fusion** — statements writing the same
+//!   array merge into one task (today's [`fuse`] output, variant 0), so
+//!   every output tile is produced — loaded, computed, stored or sent —
+//!   exactly once.
+//!
+//! Legality is checked against [`super::deps`]:
+//!
+//! * an init/update pair (a [`StmtKind::Init`] statement and the
+//!   updates of the same array) may never split across a FIFO — the
+//!   zero-init writes the very tile the update accumulates into, and a
+//!   loop-carried accumulator cannot re-read its running value from a
+//!   stream;
+//! * each task's statements write a single array (the output-stationary
+//!   invariant: a `FusedTask` has one `output`), and a split group is
+//!   partitioned into *contiguous* program-order runs — concurrent
+//!   tasks overwriting the same array in an unordered way are rejected;
+//! * flow dependences between tasks must not create a cycle (checked by
+//!   Kahn's algorithm, not assumed from statement numbering).
+//!
+//! FIFO edges use **last-writer** flow semantics: a statement reading
+//! array `a` depends on the *latest* preceding writer of `a`, so a
+//! split update chain (`x += A·y` then `x += z`) pipelines through one
+//! FIFO instead of fanning every historical writer into every reader.
+//! For max fusion this is edge-for-edge identical to the classic
+//! array-level flow graph (all writers of an array share a task), which
+//! the property suite pins bit-exactly.
 
-use super::taskgraph::TaskGraph;
 use crate::ir::access::Index;
 use crate::ir::{Kernel, StmtKind};
 use std::collections::BTreeSet;
@@ -51,21 +82,342 @@ impl FusedTask {
     }
 }
 
+// ---- FusionPlan: the canonical partition encoding ----------------------
+
+/// A fusion choice, encoded as a canonical partition of statement ids
+/// into tasks: each part ascending (= program order), parts ordered by
+/// their first statement. This is the form persisted in
+/// [`crate::dse::config::DesignConfig`] and compared by the QoR
+/// knowledge base, so two solves of the same variant always agree on
+/// the encoding regardless of task renumbering.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FusionPlan {
+    parts: Vec<Vec<usize>>,
+}
+
+impl FusionPlan {
+    /// Build a plan from raw parts, canonicalizing the encoding (parts
+    /// sorted internally and by first element). Legality against a
+    /// kernel is a separate question — see [`FusionPlan::validate`].
+    pub fn new(mut parts: Vec<Vec<usize>>) -> FusionPlan {
+        for p in &mut parts {
+            p.sort_unstable();
+        }
+        parts.sort_by_key(|p| p.first().copied().unwrap_or(usize::MAX));
+        FusionPlan { parts }
+    }
+
+    /// The canonical parts, each ascending, ordered by first statement.
+    pub fn parts(&self) -> &[Vec<usize>] {
+        &self.parts
+    }
+
+    /// Number of fused tasks this plan induces.
+    pub fn n_tasks(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Today's coarsest plan: statements grouped by written array.
+    pub fn max_fusion(k: &Kernel) -> FusionPlan {
+        FusionPlan::new(output_groups(k))
+    }
+
+    /// The finest nominal plan: one task per statement. Not necessarily
+    /// *legal* (init/update pairs must stay fused) — it bounds the
+    /// space, the enumeration filters legality.
+    pub fn fissioned(k: &Kernel) -> FusionPlan {
+        FusionPlan::new(k.statements.iter().map(|s| vec![s.id]).collect())
+    }
+
+    /// Full legality check against `k` (the rules in the module doc):
+    /// exact statement coverage, one output array per part, contiguous
+    /// runs within each output group, init/update pairs unsplit, and an
+    /// acyclic induced task graph.
+    pub fn validate(&self, k: &Kernel) -> Result<(), String> {
+        let n = k.statements.len();
+        let mut owner = vec![usize::MAX; n];
+        for (pi, part) in self.parts.iter().enumerate() {
+            if part.is_empty() {
+                return Err(format!("fusion plan for {}: empty task", k.name));
+            }
+            for w in part.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!(
+                        "fusion plan for {}: part {:?} is not strictly ascending",
+                        k.name, part
+                    ));
+                }
+            }
+            for &sid in part {
+                if sid >= n {
+                    return Err(format!(
+                        "fusion plan for {}: statement S{sid} out of range (kernel has {n})",
+                        k.name
+                    ));
+                }
+                if owner[sid] != usize::MAX {
+                    return Err(format!(
+                        "fusion plan for {}: statement S{sid} appears in two tasks",
+                        k.name
+                    ));
+                }
+                owner[sid] = pi;
+            }
+            let out = &k.statements[part[0]].write.array;
+            if part.iter().any(|&sid| &k.statements[sid].write.array != out) {
+                return Err(format!(
+                    "fusion plan for {}: task {:?} mixes output arrays (not output-stationary)",
+                    k.name, part
+                ));
+            }
+        }
+        if owner.iter().any(|&o| o == usize::MAX) {
+            return Err(format!(
+                "fusion plan for {}: not every statement is assigned a task",
+                k.name
+            ));
+        }
+
+        // Per output group: init/update glue and contiguous runs.
+        for group in output_groups(k) {
+            let has_init = group.iter().any(|&s| k.statements[s].kind == StmtKind::Init);
+            let first_owner = owner[group[0]];
+            if has_init && group.iter().any(|&s| owner[s] != first_owner) {
+                return Err(format!(
+                    "fusion plan for {}: init/update pair of `{}` split across a FIFO",
+                    k.name, k.statements[group[0]].write.array
+                ));
+            }
+            // each part's members must be consecutive in the group: once
+            // the owning part changes it may never come back
+            let mut seen: Vec<usize> = Vec::new();
+            for &s in &group {
+                let o = owner[s];
+                match seen.last() {
+                    Some(&last) if last == o => {}
+                    _ => {
+                        if seen.contains(&o) {
+                            return Err(format!(
+                                "fusion plan for {}: non-contiguous split of `{}` writers",
+                                k.name, k.statements[group[0]].write.array
+                            ));
+                        }
+                        seen.push(o);
+                    }
+                }
+            }
+        }
+
+        // Acyclicity of the induced task graph under last-writer flow.
+        let edges = task_flow_edges(k, &owner);
+        if kahn_order(self.parts.len(), &edges).is_none() {
+            return Err(format!(
+                "fusion plan for {}: flow dependences create a task cycle",
+                k.name
+            ));
+        }
+        Ok(())
+    }
+}
+
+// Manual serde impls (the vendored serde has no derive proc-macro): a
+// plan is a JSON array of arrays of statement ids. Deserialization
+// re-canonicalizes, so hand-edited databases cannot smuggle in a
+// non-canonical encoding.
+impl serde::Serialize for FusionPlan {
+    fn serialize(&self) -> serde::Value {
+        serde::Value::Arr(
+            self.parts
+                .iter()
+                .map(|p| serde::Value::Arr(p.iter().map(|s| serde::Serialize::serialize(s)).collect()))
+                .collect(),
+        )
+    }
+}
+
+impl serde::Deserialize for FusionPlan {
+    fn deserialize(v: &serde::Value) -> Result<FusionPlan, serde::Error> {
+        let parts: Vec<Vec<usize>> = serde::Deserialize::deserialize(v)?;
+        Ok(FusionPlan::new(parts))
+    }
+}
+
+/// Max statement-partition variants [`enumerate_fusions`] returns; the
+/// zoo needs at most a handful, the cap bounds pathological inputs.
+/// Variant 0 (max fusion) is always retained.
+pub const MAX_FUSION_VARIANTS: usize = 64;
+
+/// Max split combinations the enumeration *examines* (validation
+/// included) — bounds the walk itself for kernels whose per-group
+/// composition product explodes, independent of how many combos turn
+/// out legal. Combo 0 (max fusion) is always examined first.
+pub const MAX_FUSION_COMBOS: usize = 4096;
+
+/// Enumerate every dependence-legal fusion plan of `k` between full
+/// fission and max output-stationary fusion, deterministically ordered
+/// with **max fusion first** (variant 0). Each output group either
+/// stays whole or splits into contiguous runs; groups holding an init
+/// statement never split; plans whose induced task graph is cyclic are
+/// dropped.
+pub fn enumerate_fusions(k: &Kernel) -> Vec<FusionPlan> {
+    let groups = output_groups(k);
+    let choices: Vec<Vec<Vec<Vec<usize>>>> =
+        groups.iter().map(|g| group_partitions(k, g)).collect();
+    let mut out = Vec::new();
+    let mut idx = vec![0usize; choices.len()];
+    // the caps bound the *work*, not just the list: stop walking (and
+    // validating) the cartesian product once the list is full, and stop
+    // examining combos altogether past a fixed budget even when most of
+    // them are invalid (cyclic) — enumeration must stay cheap relative
+    // to one solve. Both cuts are deterministic (odometer order).
+    let mut examined = 0usize;
+    'odometer: loop {
+        if out.len() >= MAX_FUSION_VARIANTS || examined >= MAX_FUSION_COMBOS {
+            break;
+        }
+        examined += 1;
+        let mut parts: Vec<Vec<usize>> = Vec::new();
+        for (gi, &ci) in choices.iter().zip(idx.iter()) {
+            parts.extend(gi[ci].iter().cloned());
+        }
+        let plan = FusionPlan::new(parts);
+        if plan.validate(k).is_ok() {
+            out.push(plan);
+        }
+        // advance the odometer, last group fastest (combo 0 = all-whole
+        // = max fusion, so it leads the list)
+        let mut d = choices.len();
+        loop {
+            if d == 0 {
+                break 'odometer;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < choices[d].len() {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    debug_assert!(!out.is_empty(), "max fusion is always legal");
+    out
+}
+
+/// Statements grouped by written array, in first-writer program order —
+/// the atoms of the fusion space.
+fn output_groups(k: &Kernel) -> Vec<Vec<usize>> {
+    let mut groups: Vec<(&str, Vec<usize>)> = Vec::new();
+    for s in &k.statements {
+        if let Some(g) = groups.iter_mut().find(|(a, _)| *a == s.write.array) {
+            g.1.push(s.id);
+        } else {
+            groups.push((s.write.array.as_str(), vec![s.id]));
+        }
+    }
+    groups.into_iter().map(|(_, g)| g).collect()
+}
+
+/// Legal sub-partitions of one output group: the whole group first,
+/// then (when no init statement glues the group together) every
+/// contiguous composition, in split-mask order.
+fn group_partitions(k: &Kernel, group: &[usize]) -> Vec<Vec<Vec<usize>>> {
+    let m = group.len();
+    let has_init = group.iter().any(|&s| k.statements[s].kind == StmtKind::Init);
+    if m == 1 || has_init || m > 16 {
+        return vec![vec![group.to_vec()]];
+    }
+    let mut res = Vec::with_capacity(1usize << (m - 1));
+    for mask in 0u32..(1u32 << (m - 1)) {
+        let mut parts: Vec<Vec<usize>> = vec![vec![group[0]]];
+        for (i, &s) in group.iter().enumerate().skip(1) {
+            if mask & (1 << (i - 1)) != 0 {
+                parts.push(vec![s]);
+            } else {
+                parts.last_mut().expect("non-empty").push(s);
+            }
+        }
+        res.push(parts);
+    }
+    res
+}
+
+/// The latest statement before `before` (program order) that writes
+/// `array` — the producer a read of `array` actually consumes.
+fn last_writer(k: &Kernel, before: usize, array: &str) -> Option<usize> {
+    k.statements[..before]
+        .iter()
+        .rev()
+        .find(|s| s.write.array == array)
+        .map(|s| s.id)
+}
+
+/// Cross-task FIFO edges `(src_part, dst_part, array)` induced by a
+/// statement→part assignment, under last-writer flow semantics.
+fn task_flow_edges(k: &Kernel, owner: &[usize]) -> Vec<(usize, usize, String)> {
+    let mut edges = BTreeSet::new();
+    for d in &k.statements {
+        for r in &d.reads {
+            if let Some(lw) = last_writer(k, d.id, &r.array) {
+                let (ts, td) = (owner[lw], owner[d.id]);
+                if ts != td {
+                    edges.insert((ts, td, r.array.clone()));
+                }
+            }
+        }
+    }
+    edges.into_iter().collect()
+}
+
+/// Kahn's algorithm with the smallest-id-first tie-break (a `BTreeSet`
+/// worklist — the old `Vec` + `remove(0)` was O(n²)). Returns the
+/// topological order, or `None` when the edges contain a cycle.
+fn kahn_order(n: usize, edges: &[(usize, usize, String)]) -> Option<Vec<usize>> {
+    let mut indeg = vec![0usize; n];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (s, d, _) in edges {
+        if s != d {
+            indeg[*d] += 1;
+            succ[*s].push(*d);
+        }
+    }
+    let mut ready: BTreeSet<usize> = (0..n).filter(|&t| indeg[t] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(t) = ready.pop_first() {
+        order.push(t);
+        for &d in &succ[t] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                ready.insert(d);
+            }
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+// ---- FusedGraph --------------------------------------------------------
+
 /// The fused task graph: nodes are [`FusedTask`]s, edges carry the array
-/// communicated over a FIFO between fused tasks.
+/// communicated over a FIFO between fused tasks. Task ids are
+/// topological (producers precede consumers); `stmt_task` memoizes the
+/// statement→task map so lookups are O(1).
 #[derive(Debug, Clone)]
 pub struct FusedGraph {
     pub tasks: Vec<FusedTask>,
     /// `(src_task, dst_task, array)` FIFO edges.
     pub edges: Vec<(usize, usize, String)>,
+    /// Statement id → owning task id (precomputed at fusion time; the
+    /// old per-call linear scan over every task was O(tasks × stmts)).
+    stmt_task: Vec<usize>,
 }
 
 impl FusedGraph {
+    /// Owning task of statement `sid` — O(1) via the fusion-time index.
     pub fn task_of_stmt(&self, sid: usize) -> usize {
-        self.tasks
-            .iter()
-            .position(|t| t.stmts.contains(&sid))
-            .expect("statement belongs to a fused task")
+        self.stmt_task[sid]
     }
 
     pub fn predecessors(&self, t: usize) -> Vec<usize> {
@@ -99,97 +451,95 @@ impl FusedGraph {
         total
     }
 
+    /// Whether the graph is acyclic — a real topological check (Kahn)
+    /// over the edges, not an assumption about id ordering: enumerated
+    /// fusion variants are renumbered, but the check must hold on its
+    /// own for any graph handed to a consumer.
     pub fn is_acyclic(&self) -> bool {
-        self.edges.iter().all(|(s, d, _)| s < d)
+        kahn_order(self.tasks.len(), &self.edges).is_some()
+    }
+
+    /// The canonical [`FusionPlan`] this graph realizes — derived from
+    /// the tasks (never stored separately), so it cannot drift.
+    pub fn plan(&self) -> FusionPlan {
+        FusionPlan::new(self.tasks.iter().map(|t| t.stmts.clone()).collect())
+    }
+
+    /// The partition in the paper's Table 9 shape:
+    /// `FT0 = {S1, S2}; FT1 = {S0, S3}`.
+    pub fn partition_string(&self) -> String {
+        self.tasks
+            .iter()
+            .map(|t| {
+                let stmts: Vec<String> = t.stmts.iter().map(|s| format!("S{s}")).collect();
+                format!("FT{} = {{{}}}", t.id, stmts.join(", "))
+            })
+            .collect::<Vec<_>>()
+            .join("; ")
     }
 }
 
-/// Fuse statements of `k` into output-stationary tasks.
-///
-/// Legality: statements writing the same array are merged when every
-/// statement between them (in program order) that also belongs to the group
-/// chain preserves dependences — for the PolyBench zoo the groups are
-/// exactly {init, update} pairs plus single compute statements, and merging
-/// them is always legal because the init writes the same element the update
-/// accumulates into (same output-stationary tile).
+/// Fuse statements of `k` into max output-stationary tasks — the fixed
+/// coarsest plan, kept as the default entry point for consumers that do
+/// not explore fusion.
 pub fn fuse(k: &Kernel) -> FusedGraph {
-    let mut tasks: Vec<FusedTask> = Vec::new();
-    for s in &k.statements {
-        if let Some(t) = tasks.iter_mut().find(|t| t.output == s.write.array) {
-            t.stmts.push(s.id);
-        } else {
-            tasks.push(FusedTask {
-                id: tasks.len(),
-                stmts: vec![s.id],
-                output: s.write.array.clone(),
-                array_info: Vec::new(),
-            });
-        }
-    }
-    for t in &mut tasks {
-        t.array_info = build_array_info(k, t);
-    }
+    fuse_with_plan(k, &FusionPlan::max_fusion(k))
+        .expect("max output-stationary fusion is always legal")
+}
 
-    // FIFO edges: flow deps whose endpoints ended up in different tasks.
-    let stmt_graph = TaskGraph::build(k);
-    let task_of = |sid: usize| -> usize {
-        tasks.iter().position(|t| t.stmts.contains(&sid)).unwrap()
-    };
-    let mut edges = BTreeSet::new();
-    for (s, d, a) in &stmt_graph.edges {
-        let (ts, td) = (task_of(*s), task_of(*d));
-        if ts != td {
-            edges.insert((ts, td, a.clone()));
+/// Materialize a fusion plan into a [`FusedGraph`]: validate legality,
+/// build per-task array memos, derive last-writer FIFO edges, and
+/// renumber tasks topologically (Kahn with stable smallest-id
+/// tie-break) so producers always precede consumers — atax groups
+/// y={S0,S3} before tmp={S1,S2} in program order, but tmp feeds y; the
+/// paper's Table 9 likewise lists atax as FT0:{S1,S2}, FT1:{S0,S3}.
+pub fn fuse_with_plan(k: &Kernel, plan: &FusionPlan) -> Result<FusedGraph, String> {
+    plan.validate(k)?;
+    let n = plan.n_tasks();
+    let mut owner = vec![0usize; k.statements.len()];
+    for (pi, part) in plan.parts().iter().enumerate() {
+        for &sid in part {
+            owner[sid] = pi;
         }
     }
-    let edges: Vec<(usize, usize, String)> = edges.into_iter().collect();
+    let edges = task_flow_edges(k, &owner);
+    let order = kahn_order(n, &edges)
+        .ok_or_else(|| format!("fusion plan for {} induces a cyclic task graph", k.name))?;
 
-    // Topologically renumber so producers always precede consumers (atax
-    // groups y={S0,S3} before tmp={S1,S2} in program order, but tmp feeds
-    // y — the paper's Table 9 likewise lists atax as FT0:{S1,S2},
-    // FT1:{S0,S3}). Kahn's algorithm with stable (original-id) tie-break.
-    let n = tasks.len();
-    let mut indeg = vec![0usize; n];
-    for (s, d, _) in &edges {
-        if s != d {
-            indeg[*d] += 1;
-        }
-    }
-    let mut order = Vec::with_capacity(n);
-    let mut ready: Vec<usize> = (0..n).filter(|&t| indeg[t] == 0).collect();
-    while let Some(t) = ready.first().copied() {
-        ready.remove(0);
-        order.push(t);
-        let mut unlocked = Vec::new();
-        for (s, d, _) in &edges {
-            if *s == t {
-                indeg[*d] -= 1;
-                if indeg[*d] == 0 && !unlocked.contains(d) {
-                    unlocked.push(*d);
-                }
-            }
-        }
-        ready.extend(unlocked);
-        ready.sort_unstable();
-        ready.dedup();
-    }
-    debug_assert_eq!(order.len(), n, "fused task graph must be acyclic");
     // order[new_id] = old_id; build the inverse map and renumber.
     let mut new_of_old = vec![0usize; n];
     for (new_id, &old_id) in order.iter().enumerate() {
         new_of_old[old_id] = new_id;
     }
-    let mut renumbered: Vec<FusedTask> = order
+    let mut tasks: Vec<FusedTask> = order
         .iter()
         .enumerate()
-        .map(|(new_id, &old_id)| FusedTask { id: new_id, ..tasks[old_id].clone() })
+        .map(|(new_id, &old_id)| {
+            let stmts = plan.parts()[old_id].clone();
+            let output = k.statements[stmts[0]].write.array.clone();
+            FusedTask { id: new_id, stmts, output, array_info: Vec::new() }
+        })
         .collect();
-    renumbered.sort_by_key(|t| t.id);
-    let edges = edges
-        .into_iter()
-        .map(|(s, d, a)| (new_of_old[s], new_of_old[d], a))
-        .collect();
-    FusedGraph { tasks: renumbered, edges }
+    let edges: Vec<(usize, usize, String)> = {
+        let mut e: Vec<(usize, usize, String)> = edges
+            .into_iter()
+            .map(|(s, d, a)| (new_of_old[s], new_of_old[d], a))
+            .collect();
+        e.sort();
+        e
+    };
+    let mut stmt_task = vec![0usize; k.statements.len()];
+    for t in &tasks {
+        for &sid in &t.stmts {
+            stmt_task[sid] = t.id;
+        }
+    }
+    for t in &mut tasks {
+        t.array_info = build_array_info(k, t);
+    }
+    let fg = FusedGraph { tasks, edges, stmt_task };
+    debug_assert!(fg.is_acyclic());
+    Ok(fg)
 }
 
 /// Build the per-array memo for one fused task: translate every access
@@ -319,6 +669,7 @@ mod tests {
         assert_eq!(g.tasks[1].output, "y");
         assert_eq!(g.tasks[1].stmts, vec![0, 3]);
         assert!(g.is_acyclic());
+        assert_eq!(g.partition_string(), "FT0 = {S1, S2}; FT1 = {S0, S3}");
     }
 
     #[test]
@@ -341,6 +692,116 @@ mod tests {
                 }
             }
             assert!(seen.iter().all(|&c| c == 1), "{}", k.name);
+            // and the O(1) index agrees with membership
+            for t in &g.tasks {
+                for &s in &t.stmts {
+                    assert_eq!(g.task_of_stmt(s), t.id, "{}", k.name);
+                }
+            }
         }
+    }
+
+    #[test]
+    fn max_fusion_plan_round_trips() {
+        for k in polybench::all_kernels() {
+            let plan = FusionPlan::max_fusion(&k);
+            plan.validate(&k).unwrap_or_else(|e| panic!("{e}"));
+            let g = fuse_with_plan(&k, &plan).unwrap();
+            assert_eq!(g.plan(), plan, "{}", k.name);
+            // serde round-trip preserves the canonical encoding
+            use serde::{Deserialize, Serialize};
+            let back = FusionPlan::deserialize(&plan.serialize()).unwrap();
+            assert_eq!(back, plan, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn enumerate_is_max_fusion_first_and_legal() {
+        for k in polybench::all_kernels() {
+            let variants = enumerate_fusions(&k);
+            assert!(!variants.is_empty(), "{}", k.name);
+            assert_eq!(variants[0], FusionPlan::max_fusion(&k), "{}", k.name);
+            for plan in &variants {
+                plan.validate(&k).unwrap_or_else(|e| panic!("{}: {e}", k.name));
+            }
+            // variants are distinct
+            let set: BTreeSet<&FusionPlan> = variants.iter().collect();
+            assert_eq!(set.len(), variants.len(), "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn splittable_groups_yield_extra_variants() {
+        // gemver's x = {S1, S2} (update + update), trmm's B = {S0, S1}
+        // and symm's C = {S1, S2} are compute/compute chains: each
+        // yields exactly one extra fission variant. Init/update kernels
+        // stay single-variant.
+        for (name, n) in [
+            ("gemver", 2),
+            ("trmm", 2),
+            ("symm", 2),
+            ("gemm", 1),
+            ("3mm", 1),
+            ("atax", 1),
+            ("gesummv", 1),
+            ("mvt", 1),
+            ("3-madd", 1),
+        ] {
+            let k = polybench::by_name(name).unwrap();
+            assert_eq!(enumerate_fusions(&k).len(), n, "{name}");
+        }
+    }
+
+    #[test]
+    fn split_variant_pipelines_over_a_fifo() {
+        // gemver split: x's two updates become a producer/consumer pair
+        // carrying x over a FIFO; the graph stays acyclic and
+        // topologically numbered.
+        let k = polybench::gemver();
+        let variants = enumerate_fusions(&k);
+        let split = &variants[1];
+        assert_eq!(split.n_tasks(), 4);
+        let g = fuse_with_plan(&k, split).unwrap();
+        assert!(g.is_acyclic());
+        let t1 = g.task_of_stmt(1);
+        let t2 = g.task_of_stmt(2);
+        assert_ne!(t1, t2);
+        assert!(t1 < t2, "producer must be renumbered before consumer");
+        assert!(
+            g.edges.iter().any(|(s, d, a)| (*s, *d, a.as_str()) == (t1, t2, "x")),
+            "x FIFO edge missing: {:?}",
+            g.edges
+        );
+        // last-writer semantics: S3 (reads x) consumes from S2's task,
+        // not from both updates
+        let t3 = g.task_of_stmt(3);
+        assert!(g.edges.iter().any(|(s, d, a)| (*s, *d, a.as_str()) == (t2, t3, "x")));
+        assert!(!g.edges.iter().any(|(s, d, a)| (*s, *d, a.as_str()) == (t1, t3, "x")));
+    }
+
+    #[test]
+    fn illegal_plans_are_rejected() {
+        let k = polybench::gemm(); // C = {S0 init, S1 update}
+        // splitting the init/update pair
+        let split = FusionPlan::new(vec![vec![0], vec![1]]);
+        assert!(split.validate(&k).unwrap_err().contains("init/update"));
+        assert!(fuse_with_plan(&k, &split).is_err());
+        // mixing output arrays in one task
+        let k2 = polybench::mvt();
+        let mixed = FusionPlan::new(vec![vec![0, 1]]);
+        assert!(mixed.validate(&k2).unwrap_err().contains("output"));
+        // missing / duplicated statements
+        assert!(FusionPlan::new(vec![vec![0]]).validate(&k).is_err());
+        assert!(FusionPlan::new(vec![vec![0, 1], vec![1]]).validate(&k).is_err());
+        assert!(FusionPlan::new(vec![vec![0, 1, 2]]).validate(&k).is_err());
+    }
+
+    #[test]
+    fn fissioned_bounds_the_space() {
+        // For kernels with no same-array writers, fission == max fusion.
+        let k = polybench::three_madd();
+        assert_eq!(FusionPlan::fissioned(&k), FusionPlan::max_fusion(&k));
+        let k2 = polybench::gemm();
+        assert_ne!(FusionPlan::fissioned(&k2), FusionPlan::max_fusion(&k2));
     }
 }

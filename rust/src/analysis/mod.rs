@@ -7,5 +7,5 @@ pub mod reuse;
 pub mod taskgraph;
 
 pub use deps::{DepEdge, DepKind};
-pub use fusion::{fuse, FusedTask, FusedGraph};
+pub use fusion::{enumerate_fusions, fuse, fuse_with_plan, FusedGraph, FusedTask, FusionPlan};
 pub use taskgraph::TaskGraph;

@@ -29,6 +29,8 @@ pub fn options() -> SolverOptions {
         permute: true,
         tiling: false, // all-or-nothing unroll, the artifact style
         max_unroll: 1024,
+        // schedules are per-kernel; fusion is fixed, not explored
+        explore_fusion: false,
         ..SolverOptions::default()
     }
 }

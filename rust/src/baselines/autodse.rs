@@ -46,6 +46,8 @@ pub fn options(k: &Kernel) -> SolverOptions {
         tiling: true,   // Merlin's `cache`/burst generation tiles for it
         max_unroll: plateau_unroll(k),
         max_factor_per_loop: 64,
+        // pragma insertion only — no code transformation, no fusion DSE
+        explore_fusion: false,
         ..SolverOptions::default()
     }
 }

@@ -32,6 +32,8 @@ pub fn options(k: &Kernel) -> SolverOptions {
         tiling: true,   // "Limit"
         max_factor_per_loop: 32,
         max_unroll: if ii_collapse(k) { 1 } else { 256 },
+        // fixed fusion: ScaleHLS does not co-optimize task fusion
+        explore_fusion: false,
         ..SolverOptions::default()
     }
 }

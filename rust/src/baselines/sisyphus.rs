@@ -36,6 +36,8 @@ pub fn options() -> SolverOptions {
         max_pad: 0, // no padding: divisors of the original trips only
         permute: true,
         tiling: true,
+        // none of the baselines co-optimize task fusion (Table 1)
+        explore_fusion: false,
         ..SolverOptions::default()
     }
 }

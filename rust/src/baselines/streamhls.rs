@@ -32,6 +32,8 @@ pub fn options() -> SolverOptions {
         tiling: true,  // "Limit": multi-FIFO parallelism ≈ modest tiling
         max_factor_per_loop: 64,
         max_unroll: 2048,
+        // fuses greedily once, never explores fusion (Table 1)
+        explore_fusion: false,
         ..SolverOptions::default()
     }
 }

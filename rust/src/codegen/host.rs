@@ -98,6 +98,7 @@ mod tests {
             kernel: k.name.clone(),
             model: ExecutionModel::Dataflow,
             overlap: true,
+            fusion: crate::analysis::fusion::FusionPlan::max_fusion(k),
             tasks: vec![],
         }
     }

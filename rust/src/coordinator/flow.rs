@@ -1,15 +1,18 @@
 //! The Prometheus flow (paper Fig 2): from kernel IR to an optimized,
-//! simulated, optionally hardware-validated design. The flow resolves
-//! each kernel once into a [`GeometryCache`] and threads it through the
-//! solver and every evaluation stage, so all products (simulated cycles,
-//! board model, generated HLS) derive from the same resolved design.
+//! simulated, optionally hardware-validated design. The flow builds
+//! each kernel's [`FusionSpace`] (every legal fusion variant with its
+//! [`GeometryCache`]) once, solves fusion jointly with the rest of the
+//! space, and threads the **winning variant's** fused graph and cache
+//! through every evaluation stage — simulation, board model and
+//! generated HLS all derive from the same resolved design of the same
+//! fusion, never from a recomputed `fuse()`.
 
-use crate::analysis::fusion::{fuse, FusedGraph};
+use crate::analysis::fusion::FusedGraph;
 use crate::codegen::{generate_hls_resolved, generate_host};
 use crate::dse::config::DesignConfig;
 use crate::dse::cost::{gflops, graph_latency, graph_latency_resolved};
-use crate::dse::eval::{GeometryCache, ResolvedDesign};
-use crate::dse::solver::{solve_with_cache, Scenario, SolverOptions, SolverResult};
+use crate::dse::eval::{FusionSpace, FusionVariant, GeometryCache, ResolvedDesign};
+use crate::dse::solver::{solve_space, Scenario, SolverOptions, SolverResult};
 use crate::hw::Device;
 use crate::ir::Kernel;
 use crate::sim::board::{board_eval_resolved, BoardReport};
@@ -43,6 +46,7 @@ impl Default for OptimizeOptions {
 /// Everything the flow produces for one kernel.
 pub struct OptimizedKernel {
     pub kernel: Kernel,
+    /// The winning fusion variant's task graph (== `result.fused`).
     pub fused: FusedGraph,
     pub result: SolverResult,
     pub sim: SimReport,
@@ -62,35 +66,44 @@ pub fn optimize_kernel(
 ) -> Result<OptimizedKernel> {
     let kernel = crate::ir::polybench::by_name(kernel_name)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name}"))?;
-    let fused = fuse(&kernel);
-    let cache = GeometryCache::new(&kernel, &fused);
 
-    // 1. solve the design space
+    // 1. solve the design space — fusion jointly with everything else
     let mut solver = opts.solver.clone();
     solver.scenario = opts.scenario;
-    let result = solve_validated(&kernel, &fused, &cache, dev, &solver)?;
+    let mut space = FusionSpace::for_solver(&kernel, solver.explore_fusion);
+    let result = solve_validated(&kernel, &space, dev, &solver)?;
+    let FusionVariant { fg: fused, cache, .. } = take_winning_variant(&mut space, &result)?;
 
     finish_flow(kernel, fused, cache, result, dev, opts)
 }
 
-/// Stage 1 of the flow: solve and structurally validate the winner.
-/// Shared by [`optimize_kernel`] and the miss path of
-/// [`optimize_kernel_cached`]. An infeasible budget is a clean request
-/// error (`SolverError::Infeasible`), not a panic.
+/// Stage 1 of the flow: solve and structurally validate the winner
+/// against its own fusion variant. Shared by [`optimize_kernel`] and
+/// the miss path of [`optimize_kernel_cached`]. An infeasible budget is
+/// a clean request error (`SolverError::Infeasible`), not a panic.
 fn solve_validated(
     kernel: &Kernel,
-    fused: &FusedGraph,
-    cache: &GeometryCache,
+    space: &FusionSpace,
     dev: &Device,
     solver: &SolverOptions,
 ) -> Result<SolverResult> {
-    let result = solve_with_cache(kernel, fused, cache, dev, solver)
+    let result = solve_space(kernel, space, dev, solver)
         .map_err(|e| anyhow::anyhow!("{}: {e}", kernel.name))?;
     result
         .design
-        .validate(kernel, fused, dev.slrs)
+        .validate(kernel, &result.fused, dev.slrs)
         .map_err(|e| anyhow::anyhow!("solver produced invalid design: {e}"))?;
     Ok(result)
+}
+
+/// Pull the winning variant (the one `result.design.fusion` realizes)
+/// out of the space, so the rest of the flow reuses its graph and
+/// geometry cache instead of recomputing fusion.
+fn take_winning_variant(space: &mut FusionSpace, result: &SolverResult) -> Result<FusionVariant> {
+    let win = space
+        .variant_of(&result.design.fusion)
+        .ok_or_else(|| anyhow::anyhow!("solver returned a fusion variant outside its space"))?;
+    Ok(space.take_variant(win))
 }
 
 /// Stages 2–5 of the flow (simulate → board model → codegen → optional
@@ -246,61 +259,94 @@ pub fn optimize_kernel_cached(
     let key = crate::service::DesignKey::new(kernel_name, dev, &solver);
     let kernel = crate::ir::polybench::by_name(kernel_name)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name}"))?;
-    let fused = fuse(&kernel);
-    let cache = GeometryCache::new(&kernel, &fused);
 
-    // Exact hit: rebuild the flow products around the cached design.
+    // Exact hit: rebuild the flow products around the cached design,
+    // evaluated against the record's *own* fusion variant. The hit path
+    // materializes exactly that one variant (fuse_with_plan + one
+    // GeometryCache) — never the whole fusion space; enumerating and
+    // caching every variant is solver work the cache exists to skip.
     let mut stale_hit = false;
     if let Some(rec) = db.get(&key) {
         // A record from an incompatible (older) code or resource model
-        // (same on-disk version) is a miss, not an error: drop through
-        // to a fresh solve and evict it. Same predicate as the solver's
-        // warm-start gate.
-        if !crate::dse::solver::design_usable_with_cache(
-            &kernel,
-            &fused,
-            &cache,
-            &rec.design,
-            dev,
-            opts.scenario,
-        ) {
-            stale_hit = true;
-        } else {
-            let design = rec.design.clone();
-            let latency = {
-                let rd = ResolvedDesign::new(&kernel, &fused, &cache, &design);
-                graph_latency_resolved(&rd, dev)
-            };
-            let result = SolverResult {
-                gflops: gflops(&kernel, latency.total, dev),
-                design,
-                latency,
-                solve_time: std::time::Duration::ZERO,
-                explored: 0,
-                timed_out: false,
-                warm_started: false,
-            };
-            let r = finish_flow(kernel, fused, cache, result, dev, opts)?;
-            return Ok((r, CacheStatus::Hit));
+        // (same on-disk version), or whose fusion partition is no
+        // longer legal for the kernel, is a miss, not an error: drop
+        // through to a fresh solve and evict it. Same predicate as the
+        // solver's warm-start gate (`design.validate`'s fusion check
+        // keeps cached designs from crossing partitions).
+        let variant = crate::analysis::fusion::fuse_with_plan(&kernel, &rec.design.fusion)
+            .ok()
+            .map(|fg| {
+                let cache = GeometryCache::new(&kernel, &fg);
+                (fg, cache)
+            })
+            .filter(|(fg, cache)| {
+                crate::dse::solver::design_usable_with_cache(
+                    &kernel,
+                    fg,
+                    cache,
+                    &rec.design,
+                    dev,
+                    opts.scenario,
+                )
+            });
+        match variant {
+            None => stale_hit = true,
+            Some((fused, cache)) => {
+                let design = rec.design.clone();
+                let latency = {
+                    let rd = ResolvedDesign::new(&kernel, &fused, &cache, &design);
+                    graph_latency_resolved(&rd, dev)
+                };
+                // the recorded solve weighed the whole space; count the
+                // plans (cheap — no graphs or caches are built) so the
+                // hit reports the same variant count the miss did
+                let fusion_variants = if solver.explore_fusion {
+                    crate::analysis::fusion::enumerate_fusions(&kernel).len()
+                } else {
+                    1
+                };
+                let result = SolverResult {
+                    gflops: gflops(&kernel, latency.total, dev),
+                    fused: fused.clone(),
+                    fusion_variants,
+                    design,
+                    latency,
+                    solve_time: std::time::Duration::ZERO,
+                    explored: 0,
+                    timed_out: false,
+                    warm_started: false,
+                };
+                let r = finish_flow(kernel, fused, cache, result, dev, opts)?;
+                return Ok((r, CacheStatus::Hit));
+            }
         }
     }
     if stale_hit {
         db.remove_canonical(&key.canonical());
     }
 
-    // Miss: solve (warm-started when the KB has a related design).
+    // Miss: build the full fusion space once, for the solve.
+    let mut space = FusionSpace::for_solver(&kernel, solver.explore_fusion);
+
+    // Miss: solve (warm-started when the KB has a related design whose
+    // fusion plan is a variant of *this* solve's space — the solver
+    // additionally binds the incumbent to that variant's graph, so a
+    // warm start can never cross incompatible partitions).
     // `warm_started` comes from the solver, the only party that knows
     // whether the incumbent was actually usable under this scenario.
     solver.incumbent = db
-        .incumbent_for(kernel_name, solver.model, solver.overlap)
+        .incumbent_for_space(kernel_name, solver.model, solver.overlap, |p| {
+            space.variant_of(p).is_some()
+        })
         .map(|rec| rec.design.clone());
-    let result = solve_validated(&kernel, &fused, &cache, dev, &solver)?;
+    let result = solve_validated(&kernel, &space, dev, &solver)?;
     let status =
         if result.warm_started { CacheStatus::WarmMiss } else { CacheStatus::ColdMiss };
     // Evaluate once, then record the solve *before* the fallible finish
     // stages (codegen emit, PJRT validation): a completed solve must
     // never be lost to an unwritable emit dir. The caller persists the
     // db even when this function errors.
+    let FusionVariant { fg: fused, cache, .. } = take_winning_variant(&mut space, &result)?;
     let rd = ResolvedDesign::new(&kernel, &fused, &cache, &result.design);
     let sim = simulate_resolved(&rd, dev);
     let (board, gf) = scenario_eval_resolved(&rd, dev, opts.scenario, &sim);

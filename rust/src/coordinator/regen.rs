@@ -5,7 +5,6 @@
 //! required regeneration with a 55% constraint"); here it is the
 //! automated loop.
 
-use crate::analysis::fusion::fuse;
 use crate::dse::solver::{solve, Scenario, SolverOptions, SolverResult};
 use crate::hw::Device;
 use crate::ir::Kernel;
@@ -33,7 +32,6 @@ pub fn regenerate_until_feasible(
     step: f64,
     min_frac: f64,
 ) -> anyhow::Result<RegenOutcome> {
-    let fg = fuse(k);
     let mut attempts = Vec::new();
     loop {
         attempts.push(frac);
@@ -44,7 +42,9 @@ pub fn regenerate_until_feasible(
         let result = solve(k, dev, &opts)
             .map_err(|e| anyhow::anyhow!("{}: regeneration at {frac:.2}: {e}", k.name))?;
         let budget = dev.slr.scaled(frac);
-        let board = board_eval(k, &fg, &result.design, dev, &budget);
+        // evaluate against the winning variant's own graph — a tighter
+        // budget may flip the chosen fusion between attempts
+        let board = board_eval(k, &result.fused, &result.design, dev, &budget);
         if board.bitstream_ok || frac - step < min_frac {
             return Ok(RegenOutcome { result, board, attempts });
         }

@@ -2,7 +2,7 @@
 //! bound to one kernel. A [`DesignConfig`] fully determines the generated
 //! HLS design, the simulator input and the analytic latency.
 
-use crate::analysis::fusion::FusedGraph;
+use crate::analysis::fusion::{FusedGraph, FusionPlan};
 use crate::ir::Kernel;
 use std::collections::BTreeMap;
 
@@ -108,6 +108,14 @@ pub struct DesignConfig {
     pub model: ExecutionModel,
     /// Whether load/compute/store overlap (ping-pong) is enabled.
     pub overlap: bool,
+    /// The fusion variant this design was solved for — the canonical
+    /// statement partition ([`FusionPlan`]). Task ids in `tasks` index
+    /// the [`FusedGraph`] this plan materializes, so a design is only
+    /// meaningful together with its own fusion: `validate` rejects a
+    /// graph realizing a different partition, which is also the gate
+    /// that keeps QoR-DB warm starts from crossing incompatible
+    /// variants.
+    pub fusion: FusionPlan,
     pub tasks: Vec<TaskConfig>,
 }
 
@@ -116,10 +124,20 @@ impl DesignConfig {
         &self.tasks[id]
     }
 
-    /// Structural validation against the kernel/fused graph: permutation
-    /// is a permutation, intra divides padded trip, padded ≥ original,
-    /// plans valid, SLR ids in range.
+    /// Structural validation against the kernel/fused graph: the fusion
+    /// plan is legal for `k` and is exactly the partition `fg`
+    /// realizes, permutation is a permutation, intra divides padded
+    /// trip, padded ≥ original, plans valid, SLR ids in range.
     pub fn validate(&self, k: &Kernel, fg: &FusedGraph, slrs: usize) -> Result<(), String> {
+        self.fusion.validate(k)?;
+        if self.fusion != fg.plan() {
+            return Err(format!(
+                "design was solved for fusion {:?} but is evaluated against {:?} \
+                 (fusion variants are incompatible)",
+                self.fusion.parts(),
+                fg.plan().parts()
+            ));
+        }
         if self.tasks.len() != fg.tasks.len() {
             return Err(format!(
                 "{} task configs for {} fused tasks",
@@ -252,6 +270,7 @@ mod serde_impls {
                 ("kernel".to_string(), self.kernel.serialize()),
                 ("model".to_string(), self.model.serialize()),
                 ("overlap".to_string(), self.overlap.serialize()),
+                ("fusion".to_string(), self.fusion.serialize()),
                 ("tasks".to_string(), self.tasks.serialize()),
             ])
         }
@@ -263,6 +282,7 @@ mod serde_impls {
                 kernel: String::deserialize(v.field("kernel")?)?,
                 model: ExecutionModel::deserialize(v.field("model")?)?,
                 overlap: bool::deserialize(v.field("overlap")?)?,
+                fusion: FusionPlan::deserialize(v.field("fusion")?)?,
                 tasks: Vec::deserialize(v.field("tasks")?)?,
             })
         }
@@ -318,6 +338,7 @@ mod tests {
             kernel: "gemm".into(),
             model: ExecutionModel::Dataflow,
             overlap: true,
+            fusion: FusionPlan::new(vec![vec![0, 1]]),
             tasks: vec![TaskConfig {
                 task: 0,
                 perm: vec![2, 0, 1],

@@ -178,6 +178,7 @@ mod tests {
             kernel: k.name.clone(),
             model: ExecutionModel::Dataflow,
             overlap: true,
+            fusion: fg.plan(),
             tasks: vec![cfg(0, vec![4, 4, 1], vec![200, 220, 240])],
         };
         assert!(feasible(&k, &fg, &modest, &dev, &budget));
@@ -198,6 +199,7 @@ mod tests {
             kernel: k.name.clone(),
             model: ExecutionModel::Dataflow,
             overlap: true,
+            fusion: fg.plan(),
             // C partitions = 50*44 = 2200 > 1024
             tasks: vec![cfg(0, vec![50, 44, 1], vec![200, 220, 240])],
         };

@@ -304,6 +304,7 @@ mod tests {
             kernel: k.name.clone(),
             model: ExecutionModel::Dataflow,
             overlap: true,
+            fusion: fg.plan(),
             tasks: (0..3).map(mk).collect(),
         };
         let seq = DesignConfig { model: ExecutionModel::Sequential, ..df.clone() };

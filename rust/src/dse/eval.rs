@@ -31,7 +31,7 @@
 use super::config::{DesignConfig, TaskConfig, TransferPlan};
 use super::permutation::legal_orders;
 use super::space::TaskGeometry;
-use crate::analysis::fusion::{FusedGraph, FusedTask};
+use crate::analysis::fusion::{enumerate_fusions, fuse_with_plan, FusedGraph, FusedTask, FusionPlan};
 use crate::ir::{Kernel, StmtKind};
 
 /// Configuration-independent facts about one array of a fused task:
@@ -182,6 +182,74 @@ impl GeometryCache {
         GeometryCache {
             tasks: fg.tasks.iter().map(|t| TaskStatics::new(k, fg, t)).collect(),
         }
+    }
+}
+
+/// One fusion variant, fully materialized: the canonical plan, its
+/// fused-task graph, and the fusion-time geometry memo. Built once per
+/// kernel and shared read-only across solver workers and batch jobs.
+#[derive(Debug, Clone)]
+pub struct FusionVariant {
+    pub plan: FusionPlan,
+    pub fg: FusedGraph,
+    pub cache: GeometryCache,
+}
+
+impl FusionVariant {
+    fn materialize(k: &Kernel, plan: FusionPlan) -> FusionVariant {
+        let fg = fuse_with_plan(k, &plan).expect("enumerated fusion plans are legal");
+        let cache = GeometryCache::new(k, &fg);
+        FusionVariant { plan, fg, cache }
+    }
+}
+
+/// The kernel's explorable fusion space: every legal variant between
+/// full fission and max output-stationary fusion, variant 0 always the
+/// max-fusion plan. The solver's outer loop iterates these; the service
+/// layer builds one space per kernel and shares it across requests.
+#[derive(Debug, Clone)]
+pub struct FusionSpace {
+    pub variants: Vec<FusionVariant>,
+}
+
+impl FusionSpace {
+    /// The full legal fusion space of `k` (variant 0 = max fusion).
+    pub fn enumerate(k: &Kernel) -> FusionSpace {
+        FusionSpace {
+            variants: enumerate_fusions(k)
+                .into_iter()
+                .map(|p| FusionVariant::materialize(k, p))
+                .collect(),
+        }
+    }
+
+    /// The single-variant (fixed max-fusion) space — pre-fusion-DSE
+    /// behaviour, used by the baselines and `explore_fusion = false`.
+    pub fn fixed(k: &Kernel) -> FusionSpace {
+        FusionSpace {
+            variants: vec![FusionVariant::materialize(k, FusionPlan::max_fusion(k))],
+        }
+    }
+
+    /// Build the space a solver run will explore under `explore_fusion`.
+    pub fn for_solver(k: &Kernel, explore_fusion: bool) -> FusionSpace {
+        if explore_fusion {
+            FusionSpace::enumerate(k)
+        } else {
+            FusionSpace::fixed(k)
+        }
+    }
+
+    /// Index of the variant realizing `plan`, if it is in this space.
+    pub fn variant_of(&self, plan: &FusionPlan) -> Option<usize> {
+        self.variants.iter().position(|v| &v.plan == plan)
+    }
+
+    /// Remove and return variant `i` (drops the rest of the space) —
+    /// the flow uses this to hand the winning variant's graph and cache
+    /// onward without cloning them.
+    pub fn take_variant(&mut self, i: usize) -> FusionVariant {
+        self.variants.swap_remove(i)
     }
 }
 
@@ -539,6 +607,7 @@ mod tests {
             kernel: k.name.clone(),
             model: ExecutionModel::Dataflow,
             overlap: true,
+            fusion: fg.plan(),
             tasks: (0..3)
                 .map(|t| {
                     let rep = fg.tasks[t].representative(&k);
@@ -569,5 +638,30 @@ mod tests {
         for (i, rt) in rd2.tasks.iter().enumerate() {
             assert_eq!(rt.cfg().task, i);
         }
+    }
+
+    #[test]
+    fn fusion_space_shapes() {
+        // single-variant kernel: enumerate == fixed
+        let gemm = polybench::gemm();
+        let space = FusionSpace::enumerate(&gemm);
+        assert_eq!(space.variants.len(), 1);
+        assert_eq!(space.variants[0].plan, FusionPlan::max_fusion(&gemm));
+        assert_eq!(FusionSpace::fixed(&gemm).variants.len(), 1);
+        // multi-variant kernel: max fusion leads, lookups resolve, and
+        // take_variant hands out the matching graph + cache
+        let gemver = polybench::gemver();
+        let mut space = FusionSpace::enumerate(&gemver);
+        assert_eq!(space.variants.len(), 2);
+        assert_eq!(space.variants[0].plan, FusionPlan::max_fusion(&gemver));
+        let split = space.variants[1].plan.clone();
+        assert_eq!(space.variant_of(&split), Some(1));
+        assert_eq!(space.variant_of(&FusionPlan::new(vec![vec![0]])), None);
+        let v = space.take_variant(1);
+        assert_eq!(v.plan, split);
+        assert_eq!(v.fg.plan(), split);
+        assert_eq!(v.cache.tasks.len(), v.fg.tasks.len());
+        assert_eq!(FusionSpace::for_solver(&gemver, false).variants.len(), 1);
+        assert_eq!(FusionSpace::for_solver(&gemver, true).variants.len(), 2);
     }
 }

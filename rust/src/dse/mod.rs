@@ -18,5 +18,5 @@ pub mod solver;
 pub mod space;
 
 pub use config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
-pub use eval::{GeometryCache, ResolvedDesign, ResolvedTask};
-pub use solver::{solve, solve_with_cache, SolverError, SolverOptions, SolverResult};
+pub use eval::{FusionSpace, FusionVariant, GeometryCache, ResolvedDesign, ResolvedTask};
+pub use solver::{solve, solve_space, solve_with_cache, SolverError, SolverOptions, SolverResult};

@@ -42,6 +42,19 @@
 //! shared bound, so `jobs = 1` and `jobs = N` return bit-identical
 //! designs (see DESIGN.md §Parallel solver).
 //!
+//! **Fusion as a dimension.** Task fusion is explored jointly with the
+//! rest of the space ([`SolverOptions::explore_fusion`]): every
+//! dependence-legal statement partition between full fission and max
+//! output-stationary fusion ([`crate::analysis::fusion::enumerate_fusions`])
+//! becomes a *variant* with its own [`FusedGraph`] and
+//! [`GeometryCache`]. Stage-1 enumeration units are flattened across
+//! variants onto the same worker pool, and all variants share one
+//! [`SharedBest`] incumbent — a finished variant's simulated latency
+//! prunes its siblings' DFS from the first node. The total order
+//! extends to `(latency, variant index, candidate index, assignment)`,
+//! so the result stays deterministic and thread-count independent, and
+//! latency ties prefer the max-fusion variant (variant 0).
+//!
 //! Infeasible budgets are a user input, not a bug: the solver returns
 //! [`SolverError::Infeasible`] instead of panicking, and the service
 //! layer surfaces it as a per-request error.
@@ -52,9 +65,9 @@
 use super::config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
 use super::constraints::task_resources;
 use super::cost::{gflops, graph_latency_resolved, task_latency, GraphLatency};
-use super::eval::{self, GeometryCache, ResolvedDesign, TaskStatics};
+use super::eval::{self, FusionSpace, GeometryCache, ResolvedDesign, TaskStatics};
 use super::padding::legal_intra_factors;
-use crate::analysis::fusion::{fuse, FusedGraph};
+use crate::analysis::fusion::{FusedGraph, FusionPlan};
 use crate::hw::resources::ResourceVec;
 use crate::hw::{Device, SlrBudget};
 use crate::ir::Kernel;
@@ -220,6 +233,12 @@ pub struct SolverOptions {
     /// solve speed, never the answer — so it is excluded from the QoR
     /// cache key. 0 is treated as 1.
     pub jobs: usize,
+    /// Explore task fusion as a design dimension: [`solve`] enumerates
+    /// every legal fusion variant and solves them jointly under one
+    /// shared incumbent. `false` pins the max output-stationary fusion
+    /// (the pre-fusion-DSE behaviour; every baseline restricts to it).
+    /// Changes the answer, so it *is* part of the QoR cache key.
+    pub explore_fusion: bool,
 }
 
 impl Default for SolverOptions {
@@ -237,6 +256,7 @@ impl Default for SolverOptions {
             timeout: Duration::from_secs(120),
             incumbent: None,
             jobs: default_jobs(),
+            explore_fusion: true,
         }
     }
 }
@@ -245,6 +265,13 @@ impl Default for SolverOptions {
 #[derive(Debug, Clone)]
 pub struct SolverResult {
     pub design: DesignConfig,
+    /// The fused-task graph of the **winning fusion variant** — the one
+    /// `design.tasks` indexes. Downstream consumers (simulation, board
+    /// model, codegen, reports) must evaluate the design against this
+    /// graph, never against a freshly recomputed `fuse()`.
+    pub fused: FusedGraph,
+    /// Fusion variants this solve considered (1 = fixed fusion).
+    pub fusion_variants: usize,
     pub latency: GraphLatency,
     pub gflops: f64,
     pub solve_time: Duration,
@@ -292,6 +319,23 @@ pub fn design_usable(
     design_usable_with_cache(k, fg, &cache, design, dev, scenario)
 }
 
+/// The index of the fusion variant in `space` that `design` realizes,
+/// when the design is also servable against that variant under
+/// `scenario` — the one predicate behind the QoR-cache validity checks,
+/// so the service paths cannot drift on what "usable record" means.
+pub fn usable_variant_in_space(
+    k: &Kernel,
+    space: &FusionSpace,
+    design: &DesignConfig,
+    dev: &Device,
+    scenario: Scenario,
+) -> Option<usize> {
+    space.variant_of(&design.fusion).filter(|&vi| {
+        let v = &space.variants[vi];
+        design_usable_with_cache(k, &v.fg, &v.cache, design, dev, scenario)
+    })
+}
+
 /// [`design_usable`] over a pre-built geometry cache — the warm-start
 /// gate, the cached flow and the batch orchestrator all hold one.
 pub fn design_usable_with_cache(
@@ -315,13 +359,27 @@ pub fn design_usable_with_cache(
 
 /// Solve the design space for `k`. Returns the best feasible design
 /// found, or [`SolverError::Infeasible`] when the scenario's budget
-/// admits no design at all. Builds the fusion and geometry cache
+/// admits no design at all. Builds the fusion space (all legal
+/// variants under `opts.explore_fusion`) and its geometry caches
 /// itself; callers that solve the same kernel repeatedly should build
-/// both once and use [`solve_with_cache`].
+/// a [`FusionSpace`] once and use [`solve_space`].
 pub fn solve(k: &Kernel, dev: &Device, opts: &SolverOptions) -> Result<SolverResult, SolverError> {
-    let fg = fuse(k);
-    let cache = GeometryCache::new(k, &fg);
-    solve_with_cache(k, &fg, &cache, dev, opts)
+    let space = FusionSpace::for_solver(k, opts.explore_fusion);
+    solve_space(k, &space, dev, opts)
+}
+
+/// [`solve`] over a pre-built fusion space (the coordinator flow and
+/// `service::batch` build one space per kernel and share it, read-only,
+/// across requests and workers).
+pub fn solve_space(
+    k: &Kernel,
+    space: &FusionSpace,
+    dev: &Device,
+    opts: &SolverOptions,
+) -> Result<SolverResult, SolverError> {
+    let variants: Vec<(&FusedGraph, &GeometryCache)> =
+        space.variants.iter().map(|v| (&v.fg, &v.cache)).collect();
+    solve_variants(k, &variants, dev, opts)
 }
 
 /// Globally shared branch-and-bound incumbent for stage 3: a lock-free
@@ -333,13 +391,16 @@ struct SharedBest {
     /// bound only ever decreases, so a stale read can only under-prune,
     /// never cut off a branch that could still win a tie.
     bound: AtomicU64,
-    /// `(latency, assignment key, design)`. The assignment key — the
+    /// `(latency, assignment key, design)`. The assignment key — a
+    /// leading `(fusion variant index, 0)` element followed by the
     /// `(candidate index, region)` sequence — breaks latency ties by
     /// lexicographic order, which is exactly the order the sequential
-    /// DFS enumerates leaves in, making the winner independent of which
-    /// worker reached it first. The warm-start incumbent gets the empty
-    /// key, so it wins all ties and the solve can never return a design
-    /// worse than (or a tied re-discovery of) the incumbent.
+    /// outer-variant loop + DFS enumerates leaves in, making the winner
+    /// independent of which worker reached it first (ties between
+    /// fusion variants fall to the lower variant index, i.e. max fusion
+    /// first). The warm-start incumbent gets the empty key, so it wins
+    /// all ties and the solve can never return a design worse than (or
+    /// a tied re-discovery of) the incumbent.
     best: Mutex<Option<(u64, Vec<(usize, usize)>, DesignConfig)>>,
 }
 
@@ -376,9 +437,12 @@ impl SharedBest {
     }
 }
 
-/// [`solve`] over a pre-built fusion + geometry cache. The cache is
-/// read-only and thread-safe: `service::batch` shares one per kernel
-/// across its worker pool, and this solve's own workers share it again.
+/// [`solve`] over a pre-built fusion + geometry cache for **one pinned
+/// fusion variant** (the given `fg` — `explore_fusion` is not
+/// consulted). The cache is read-only and thread-safe: callers holding
+/// one per kernel share it across solves, and this solve's own workers
+/// share it again. To explore fusion with shared caches, build a
+/// [`FusionSpace`] and call [`solve_space`].
 pub fn solve_with_cache(
     k: &Kernel,
     fg: &FusedGraph,
@@ -386,166 +450,209 @@ pub fn solve_with_cache(
     dev: &Device,
     opts: &SolverOptions,
 ) -> Result<SolverResult, SolverError> {
+    solve_variants(k, &[(fg, cache)], dev, opts)
+}
+
+/// The multi-variant solver core: one branch-and-bound across every
+/// given fusion variant, under a single shared deadline, worker pool
+/// and incumbent.
+fn solve_variants(
+    k: &Kernel,
+    variants: &[(&FusedGraph, &GeometryCache)],
+    dev: &Device,
+    opts: &SolverOptions,
+) -> Result<SolverResult, SolverError> {
     let deadline = Deadline::new(opts.timeout);
     let jobs = opts.jobs.max(1);
+    let n_variants = variants.len();
     let (regions, budget) = region_budget(dev, opts.scenario);
+    let plans: Vec<FusionPlan> = variants.iter().map(|(fg, _)| fg.plan()).collect();
 
-    // ---- stage 1 + 2: per-task Pareto candidates -----------------------
+    // ---- stage 1 + 2: per-variant, per-task Pareto candidates ----------
     // Tasks placed in the same region share its budget; enumerate each
     // task against a fair share (regions spread tasks, so the share is
-    // n_tasks / regions per region) — the global DFS re-checks the true
-    // summed feasibility.
+    // n_tasks / regions per region, per variant) — the global DFS
+    // re-checks the true summed feasibility.
     //
-    // Work units are (task, pass) pairs: the padded enumeration, plus a
-    // restart pass without padding when padding is on (padded variants
-    // can flood the stage-1 beam and bury the unpadded optimum — the
-    // beam proxy uses default transfer plans; the second pass is cheap
-    // and guarantees the Prometheus space dominates the Sisyphus
-    // no-padding subspace). Units fan out across the worker pool; the
-    // per-task merge (padded list, then no-pad list, then one Pareto
-    // reduction) is a fixed fold, so the candidate fronts are identical
-    // for any thread count.
-    let n_tasks = fg.tasks.len();
-    let per_region_tasks = n_tasks.div_ceil(regions).max(1);
-    let share = budget.scaled(1.0 / per_region_tasks as f64);
+    // Work units are (variant, task, pass) triples: the padded
+    // enumeration, plus a restart pass without padding when padding is
+    // on (padded variants can flood the stage-1 beam and bury the
+    // unpadded optimum — the beam proxy uses default transfer plans;
+    // the second pass is cheap and guarantees the Prometheus space
+    // dominates the Sisyphus no-padding subspace). Units from *all*
+    // fusion variants fan out across one worker pool; the per-task
+    // merge (padded list, then no-pad list, then one Pareto reduction)
+    // is a fixed fold, so the candidate fronts are identical for any
+    // thread count.
     let nopad_opts = SolverOptions { max_pad: 0, ..opts.clone() };
-    let units: Vec<(usize, bool)> = (0..n_tasks)
-        .flat_map(|t| {
+    let mut units: Vec<(usize, usize, bool)> = Vec::new();
+    for (vi, (fg, _)) in variants.iter().enumerate() {
+        for t in 0..fg.tasks.len() {
+            units.push((vi, t, false));
             if opts.max_pad > 0 {
-                vec![(t, false), (t, true)]
-            } else {
-                vec![(t, false)]
+                units.push((vi, t, true));
             }
+        }
+    }
+    let shares: Vec<SlrBudget> = variants
+        .iter()
+        .map(|(fg, _)| {
+            let per_region_tasks = fg.tasks.len().div_ceil(regions).max(1);
+            budget.scaled(1.0 / per_region_tasks as f64)
         })
         .collect();
     let unit_results = run_indexed(units.len(), jobs, |i| {
-        let (t, nopad) = units[i];
+        let (vi, t, nopad) = units[i];
         let o = if nopad { &nopad_opts } else { opts };
-        enumerate_task(k, cache, t, dev, o, &share, deadline)
+        enumerate_task(k, variants[vi].1, t, dev, o, &shares[vi], deadline)
     });
     let mut explored = 0u64;
     let mut stage1_timed_out = false;
-    let mut per_task: Vec<Vec<Candidate>> = vec![Vec::new(); n_tasks];
-    for (&(t, _), (cands, ex, to)) in units.iter().zip(unit_results) {
-        per_task[t].extend(cands);
+    let mut per_variant: Vec<Vec<Vec<Candidate>>> =
+        variants.iter().map(|(fg, _)| vec![Vec::new(); fg.tasks.len()]).collect();
+    for (&(vi, t, _), (cands, ex, to)) in units.iter().zip(unit_results) {
+        per_variant[vi][t].extend(cands);
         explored += ex;
         stage1_timed_out |= to;
     }
-    let per_task: Vec<Vec<Candidate>> = per_task.into_iter().map(pareto).collect();
+    let per_variant: Vec<Vec<Vec<Candidate>>> =
+        per_variant.into_iter().map(|pt| pt.into_iter().map(pareto).collect()).collect();
 
-    // ---- stage 3: global assembly over candidates × SLRs ---------------
-    // Warm start: a valid, feasible incumbent (e.g. a QoR-DB design from
-    // a previous run) becomes the initial bound, so the DFS prunes
-    // against it immediately and the anytime result can never be worse.
+    // ---- stage 3: global assembly over variants × candidates × SLRs ----
+    // Warm start: a valid, feasible incumbent (e.g. a QoR-DB design
+    // from a previous run) becomes the initial bound, so every
+    // variant's DFS prunes against it immediately and the anytime
+    // result can never be worse. The incumbent binds only to the
+    // variant realizing its own fusion plan — a design from an
+    // incompatible partition is rejected by the same usability gate the
+    // QoR cache uses (`design.validate` checks fusion == fg.plan()).
     let shared = SharedBest::new();
     let mut warm_started = false;
+    let mut inc_variant: Option<usize> = None;
     if let Some(inc) = &opts.incumbent {
-        let usable = inc.kernel == k.name
-            && inc.model == opts.model
-            && inc.overlap == opts.overlap
-            && design_usable_with_cache(k, fg, cache, inc, dev, opts.scenario);
-        if usable {
-            let rd = ResolvedDesign::new(k, fg, cache, inc);
-            let lat = simulate_resolved(&rd, dev).cycles;
-            drop(rd);
-            shared.offer(lat, Vec::new(), inc.clone());
-            warm_started = true;
+        if let Some(vi) = plans.iter().position(|p| p == &inc.fusion) {
+            let (fg_v, cache_v) = variants[vi];
+            let usable = inc.kernel == k.name
+                && inc.model == opts.model
+                && inc.overlap == opts.overlap
+                && design_usable_with_cache(k, fg_v, cache_v, inc, dev, opts.scenario);
+            if usable {
+                let rd = ResolvedDesign::new(k, fg_v, cache_v, inc);
+                let lat = simulate_resolved(&rd, dev).cycles;
+                drop(rd);
+                shared.offer(lat, Vec::new(), inc.clone());
+                warm_started = true;
+                inc_variant = Some(vi);
+            }
         }
     }
 
-    for (t, cands) in per_task.iter().enumerate() {
-        // An empty list would be a solver bug, not an infeasible input:
-        // enumerate_task's anytime fallbacks always yield >= 1 candidate.
-        debug_assert!(!cands.is_empty(), "anytime fallbacks guarantee a candidate per task");
-        // The anytime fallbacks keep unfiltered candidates around, so an
-        // impossibly small budget shows up here: not even the cheapest
-        // enumerated configuration of this task fits one whole region.
-        // Skipped after a stage-1 timeout (fitting configurations may
-        // simply not have been scored yet) and under a usable incumbent
-        // (which *proves* feasibility — the fair-share filter inside
-        // enumerate_task can starve a task's list on budgets between
-        // share and region, and the anytime contract says the incumbent
-        // must come back, not an error).
-        if !stage1_timed_out
-            && !warm_started
-            && !cands.iter().any(|c| c.res.fits(&budget))
-        {
-            return Err(SolverError::Infeasible {
-                task: Some(t),
-                detail: format!(
-                    "no configuration of task {t} of {} fits a single region budget \
-                     (DSP {}, BRAM18 {}, LUT {}, FF {})",
-                    k.name, budget.dsp, budget.bram18, budget.lut, budget.ff
-                ),
-            });
+    // Per-variant feasibility gate. An empty candidate list would be a
+    // solver bug, not an infeasible input: enumerate_task's anytime
+    // fallbacks always yield >= 1 candidate. The anytime fallbacks keep
+    // unfiltered candidates around, so an impossibly small budget shows
+    // up here: not even the cheapest enumerated configuration of a task
+    // fits one whole region. A variant failing the gate is *skipped*
+    // (its siblings may still fit); only when every variant fails is
+    // the problem infeasible, reported with the max-fusion (variant 0)
+    // detail so single-variant solves keep the pre-fusion message. The
+    // gate is waived per variant after a stage-1 timeout (fitting
+    // configurations may simply not have been scored yet) and for the
+    // incumbent's variant (a usable incumbent *proves* feasibility —
+    // the fair-share filter inside enumerate_task can starve a task's
+    // list on budgets between share and region, and the anytime
+    // contract says the incumbent must come back, not an error).
+    let mut dfsable = vec![false; n_variants];
+    let mut variant0_fail: Option<(usize, String)> = None;
+    for (vi, per_task) in per_variant.iter().enumerate() {
+        let mut fits = true;
+        for (t, cands) in per_task.iter().enumerate() {
+            debug_assert!(!cands.is_empty(), "anytime fallbacks guarantee a candidate per task");
+            if !cands.iter().any(|c| c.res.fits(&budget)) {
+                fits = false;
+                if vi == 0 && variant0_fail.is_none() {
+                    variant0_fail = Some((
+                        t,
+                        format!(
+                            "no configuration of task {t} of {} fits a single region budget \
+                             (DSP {}, BRAM18 {}, LUT {}, FF {})",
+                            k.name, budget.dsp, budget.bram18, budget.lut, budget.ff
+                        ),
+                    ));
+                }
+                break;
+            }
         }
+        dfsable[vi] = stage1_timed_out || inc_variant == Some(vi) || fits;
+    }
+    if !dfsable.iter().any(|&d| d) {
+        let (task, detail) = variant0_fail.expect("all variants failed, so variant 0 did");
+        return Err(SolverError::Infeasible { task: Some(task), detail });
     }
 
     let timed_out_flag = AtomicBool::new(stage1_timed_out);
-    let ctx = DfsCtx {
-        k,
-        fg,
-        cache,
-        dev,
-        opts,
-        budget: &budget,
-        regions,
-        per_task: &per_task,
-        deadline,
-        shared: &shared,
-        timed_out: &timed_out_flag,
-    };
+    let ctxs: Vec<DfsCtx> = variants
+        .iter()
+        .enumerate()
+        .map(|(vi, &(fg, cache))| DfsCtx {
+            k,
+            fg,
+            cache,
+            dev,
+            opts,
+            budget: &budget,
+            regions,
+            per_task: &per_variant[vi],
+            deadline,
+            shared: &shared,
+            timed_out: &timed_out_flag,
+            vi,
+            plan: &plans[vi],
+        })
+        .collect();
 
-    // Distribute the top of the DFS tree: expand prefixes breadth-first
-    // in lexicographic order until there is enough work to spread across
-    // the pool, then let workers pull prefixes from an atomic cursor and
-    // run the ordinary DFS below each. Which worker finishes first does
-    // not matter: the final design is the `(latency, key)` minimum over
-    // every non-pruned leaf, and pruning is strictly above the shared
-    // bound, so no potential winner is ever cut off.
-    let mut frontier: Vec<Vec<(usize, usize)>> = vec![Vec::new()];
-    if jobs > 1 {
-        let target = jobs * 4;
-        let mut depth = 0usize;
-        while depth < n_tasks && frontier.len() < target {
-            let mut next = Vec::new();
-            for prefix in &frontier {
-                let max_slr = open_regions(prefix, regions);
-                for c in 0..per_task[depth].len() {
-                    for slr in 0..max_slr {
-                        let mut p = prefix.clone();
-                        p.push((c, slr));
-                        next.push(p);
+    // Distribute the top of the DFS forest: per DFS-able variant,
+    // expand prefixes breadth-first in lexicographic order until there
+    // is enough work to spread across the pool, then let workers pull
+    // (variant, prefix) pairs from an atomic cursor and run the
+    // ordinary DFS below each. Which worker finishes first does not
+    // matter: the final design is the `(latency, key)` minimum over
+    // every non-pruned leaf of every variant, and pruning is strictly
+    // above the shared bound, so no potential winner is ever cut off —
+    // and a variant finishing early tightens the bound its siblings
+    // prune against.
+    let mut frontier: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+    for (vi, ctx) in ctxs.iter().enumerate() {
+        if !dfsable[vi] {
+            continue;
+        }
+        let mut fr: Vec<Vec<(usize, usize)>> = vec![Vec::new()];
+        if jobs > 1 {
+            let target = jobs * 4;
+            let n_tasks = ctx.per_task.len();
+            let mut depth = 0usize;
+            while depth < n_tasks && fr.len() < target {
+                let mut next = Vec::new();
+                for prefix in &fr {
+                    let max_slr = open_regions(prefix, regions);
+                    for c in 0..ctx.per_task[depth].len() {
+                        for slr in 0..max_slr {
+                            let mut p = prefix.clone();
+                            p.push((c, slr));
+                            next.push(p);
+                        }
                     }
                 }
+                fr = next;
+                depth += 1;
             }
-            frontier = next;
-            depth += 1;
         }
+        frontier.extend(fr.into_iter().map(|p| (vi, p)));
     }
-    let run_prefix = |prefix: &[(usize, usize)], explored: &mut u64| {
-        // Re-derive what the in-tree DFS would have pruned before
-        // reaching this prefix: per-region usage (sums only grow with
-        // depth, so an overfull prefix dooms the whole subtree) and the
-        // standalone-latency bound (strict, like dfs_assign, so ties
-        // stay reachable).
-        let bound = ctx.shared.bound();
-        if prefix.iter().enumerate().any(|(ti, &(c, _))| per_task[ti][c].latency > bound) {
-            return;
-        }
-        let mut used = vec![ResourceVec::ZERO; regions];
-        for (ti, &(c, slr)) in prefix.iter().enumerate() {
-            used[slr] += per_task[ti][c].res;
-        }
-        if used.iter().any(|r| !r.fits(&budget)) {
-            return;
-        }
-        let mut assign = prefix.to_vec();
-        dfs_assign(&ctx, &mut assign, &mut used, explored);
-    };
     let prefix_explored = run_indexed(frontier.len(), jobs, |i| {
+        let (vi, prefix) = &frontier[i];
         let mut ex = 0u64;
-        run_prefix(&frontier[i], &mut ex);
+        run_prefix(&ctxs[*vi], prefix, &mut ex);
         ex
     });
     explored += prefix_explored.into_iter().sum::<u64>();
@@ -556,19 +663,26 @@ pub fn solve_with_cache(
         return Err(SolverError::Infeasible {
             task: None,
             detail: format!(
-                "no assignment of the {n_tasks} task(s) of {} onto {regions} region(s) \
-                 satisfies the per-region budget{}",
+                "no task assignment of any of the {n_variants} fusion variant(s) of {} onto \
+                 {regions} region(s) satisfies the per-region budget{}",
                 k.name,
                 if timed_out { " (search timed out; infeasibility unproven)" } else { "" }
             ),
         });
     };
-    let rd = ResolvedDesign::new(k, fg, cache, &design);
+    let win = plans
+        .iter()
+        .position(|p| p == &design.fusion)
+        .expect("the winning design realizes one of the solved variants");
+    let (win_fg, win_cache) = variants[win];
+    let rd = ResolvedDesign::new(k, win_fg, win_cache, &design);
     let latency = graph_latency_resolved(&rd, dev);
     drop(rd);
     let gf = gflops(k, latency.total, dev);
     Ok(SolverResult {
         design,
+        fused: win_fg.clone(),
+        fusion_variants: n_variants,
         latency,
         gflops: gf,
         solve_time: deadline.elapsed(),
@@ -576,6 +690,27 @@ pub fn solve_with_cache(
         timed_out,
         warm_started,
     })
+}
+
+/// Resume the DFS below a distributed prefix, re-deriving what the
+/// in-tree DFS would have pruned before reaching it: per-region usage
+/// (sums only grow with depth, so an overfull prefix dooms the whole
+/// subtree) and the standalone-latency bound (strict, like
+/// [`dfs_assign`], so ties stay reachable).
+fn run_prefix(ctx: &DfsCtx<'_>, prefix: &[(usize, usize)], explored: &mut u64) {
+    let bound = ctx.shared.bound();
+    if prefix.iter().enumerate().any(|(ti, &(c, _))| ctx.per_task[ti][c].latency > bound) {
+        return;
+    }
+    let mut used = vec![ResourceVec::ZERO; ctx.regions];
+    for (ti, &(c, slr)) in prefix.iter().enumerate() {
+        used[slr] += ctx.per_task[ti][c].res;
+    }
+    if used.iter().any(|r| !r.fits(ctx.budget)) {
+        return;
+    }
+    let mut assign = prefix.to_vec();
+    dfs_assign(ctx, &mut assign, &mut used, explored);
 }
 
 /// Enumerate tile factors × permutations × transfer plans for one fused
@@ -911,7 +1046,8 @@ fn open_regions(assign: &[(usize, usize)], regions: usize) -> usize {
     regions.min(next_fresh + 1)
 }
 
-/// Read-only context shared by every stage-3 DFS worker.
+/// Read-only context shared by every stage-3 DFS worker **of one
+/// fusion variant** — the `SharedBest` behind it spans all variants.
 struct DfsCtx<'a> {
     k: &'a Kernel,
     fg: &'a FusedGraph,
@@ -924,6 +1060,12 @@ struct DfsCtx<'a> {
     deadline: Deadline,
     shared: &'a SharedBest,
     timed_out: &'a AtomicBool,
+    /// This variant's index in the solve's variant list (the leading
+    /// element of every leaf's deterministic tie-break key).
+    vi: usize,
+    /// This variant's canonical fusion plan, stamped into every design
+    /// the DFS assembles.
+    plan: &'a FusionPlan,
 }
 
 /// DFS over per-task candidate picks and SLR ids with branch-and-bound.
@@ -956,6 +1098,7 @@ fn dfs_assign(
             kernel: ctx.k.name.clone(),
             model: ctx.opts.model,
             overlap: ctx.opts.overlap,
+            fusion: ctx.plan.clone(),
             tasks: assign
                 .iter()
                 .enumerate()
@@ -973,7 +1116,10 @@ fn dfs_assign(
         let rd = ResolvedDesign::new(ctx.k, ctx.fg, ctx.cache, &design);
         let lat = simulate_resolved(&rd, ctx.dev).cycles;
         drop(rd);
-        ctx.shared.offer(lat, assign.clone(), design);
+        let mut key = Vec::with_capacity(assign.len() + 1);
+        key.push((ctx.vi, 0usize));
+        key.extend_from_slice(assign);
+        ctx.shared.offer(lat, key, design);
         return;
     }
     let max_slr = open_regions(assign, ctx.regions);
@@ -1011,6 +1157,7 @@ fn dfs_assign(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::fusion::fuse;
     use crate::ir::polybench;
 
     fn quick_opts() -> SolverOptions {
@@ -1028,8 +1175,7 @@ mod tests {
         let k = polybench::gemm();
         let dev = Device::u55c();
         let r = solve(&k, &dev, &quick_opts()).unwrap();
-        let fg = fuse(&k);
-        r.design.validate(&k, &fg, dev.slrs).unwrap();
+        r.design.validate(&k, &r.fused, dev.slrs).unwrap();
         assert!(r.gflops > 50.0, "gemm RTL gflops too low: {}", r.gflops);
         assert!(r.explored > 100);
     }
@@ -1037,7 +1183,10 @@ mod tests {
     #[test]
     fn solve_with_shared_cache_matches_cold_solve() {
         // The shared GeometryCache must not change what the solver finds:
-        // same design, same latency, point for point.
+        // same design, same latency, point for point. (gemm's fusion
+        // space has a single variant — its init/update pair cannot
+        // split — so the exploring solve and the pinned-variant solve
+        // see the same space.)
         let k = polybench::gemm();
         let dev = Device::u55c();
         let cold = solve(&k, &dev, &quick_opts()).unwrap();
@@ -1092,9 +1241,8 @@ mod tests {
         .unwrap();
         assert!(board.gflops <= rtl.gflops * 1.05);
         // on-board design must fit the scaled budget
-        let fg = fuse(&k);
         let budget = dev.slr.scaled(0.6);
-        assert!(crate::dse::constraints::feasible(&k, &fg, &board.design, &dev, &budget));
+        assert!(crate::dse::constraints::feasible(&k, &board.fused, &board.design, &dev, &budget));
     }
 
     #[test]
@@ -1111,9 +1259,8 @@ mod tests {
     fn warm_start_never_worse() {
         let k = polybench::gemm();
         let dev = Device::u55c();
-        let fg = fuse(&k);
         let cold = solve(&k, &dev, &quick_opts()).unwrap();
-        let inc_cycles = crate::sim::engine::simulate(&k, &fg, &cold.design, &dev).cycles;
+        let inc_cycles = crate::sim::engine::simulate(&k, &cold.fused, &cold.design, &dev).cycles;
         // a much weaker search, warm-started from the cold design, may
         // not beat the incumbent but can never fall below it
         let warm = solve(
@@ -1122,7 +1269,7 @@ mod tests {
             &SolverOptions { incumbent: Some(cold.design.clone()), beam: 2, ..quick_opts() },
         )
         .unwrap();
-        let warm_cycles = crate::sim::engine::simulate(&k, &fg, &warm.design, &dev).cycles;
+        let warm_cycles = crate::sim::engine::simulate(&k, &warm.fused, &warm.design, &dev).cycles;
         assert!(warm_cycles <= inc_cycles, "warm {warm_cycles} > incumbent {inc_cycles}");
         assert!(warm.warm_started, "usable incumbent must be reported as a warm start");
     }
@@ -1137,8 +1284,7 @@ mod tests {
         let r = solve(&k, &dev, &SolverOptions { incumbent: Some(inc), ..quick_opts() }).unwrap();
         assert_eq!(r.design.kernel, "gemm");
         assert!(!r.warm_started, "rejected incumbent must not count as a warm start");
-        let fg = fuse(&k);
-        r.design.validate(&k, &fg, dev.slrs).unwrap();
+        r.design.validate(&k, &r.fused, dev.slrs).unwrap();
     }
 
     #[test]
@@ -1193,5 +1339,92 @@ mod tests {
             assert!(tc.slr <= seen, "region {} opened before {}", tc.slr, seen);
             seen = seen.max(tc.slr + 1);
         }
+    }
+
+    #[test]
+    fn fixed_fusion_pins_the_max_fusion_variant() {
+        let k = polybench::gemver();
+        let dev = Device::u55c();
+        let r = solve(&k, &dev, &SolverOptions { explore_fusion: false, ..quick_opts() }).unwrap();
+        assert_eq!(r.fusion_variants, 1);
+        assert_eq!(r.design.fusion, FusionPlan::max_fusion(&k));
+        assert_eq!(r.fused.plan(), FusionPlan::max_fusion(&k));
+        r.design.validate(&k, &r.fused, dev.slrs).unwrap();
+    }
+
+    #[test]
+    fn fusion_exploration_never_worse_than_fixed() {
+        // gemver's x-update chain is the splittable group: the explored
+        // space is a superset of the fixed space, and both are scored
+        // by the same simulator, so the explored winner can never be
+        // slower. (The zoo-wide version of this property lives in
+        // tests/property_fusion.rs.)
+        let k = polybench::gemver();
+        let dev = Device::u55c();
+        let fixed = solve(&k, &dev, &SolverOptions { explore_fusion: false, ..quick_opts() })
+            .unwrap();
+        let explored = solve(&k, &dev, &quick_opts()).unwrap();
+        assert!(explored.fusion_variants > 1, "gemver must have a split variant");
+        let fixed_cycles =
+            crate::sim::engine::simulate(&k, &fixed.fused, &fixed.design, &dev).cycles;
+        let explored_cycles =
+            crate::sim::engine::simulate(&k, &explored.fused, &explored.design, &dev).cycles;
+        // superset argument needs completed searches (anytime results
+        // of a timed-out explored solve are exempt)
+        if !fixed.timed_out && !explored.timed_out {
+            assert!(
+                explored_cycles <= fixed_cycles,
+                "fusion-explored {explored_cycles} worse than fixed {fixed_cycles}"
+            );
+        }
+        explored.design.validate(&k, &explored.fused, dev.slrs).unwrap();
+    }
+
+    #[test]
+    fn cross_variant_incumbent_is_rejected_by_the_gate() {
+        // An incumbent solved under the split variant must not seed a
+        // solve that only considers the max-fusion variant: the
+        // usability gate (design.validate checks fusion == fg.plan())
+        // rejects it, exactly like the QoR cache's hit check.
+        let k = polybench::gemver();
+        let dev = Device::u55c();
+        let explored = solve(&k, &dev, &quick_opts()).unwrap();
+        let split_design = explored.design.clone();
+        if split_design.fusion == FusionPlan::max_fusion(&k) {
+            // the split variant did not win — synthesize the rejection
+            // the other way: a max-fusion incumbent into a space that
+            // does not contain it cannot happen (max fusion is always
+            // variant 0), so the property is vacuously covered by the
+            // pinned-variant check below.
+            let fixed = solve(
+                &k,
+                &dev,
+                &SolverOptions {
+                    explore_fusion: false,
+                    incumbent: Some(split_design),
+                    beam: 2,
+                    ..quick_opts()
+                },
+            )
+            .unwrap();
+            assert!(fixed.warm_started, "matching-variant incumbent must warm start");
+            return;
+        }
+        let fixed = solve(
+            &k,
+            &dev,
+            &SolverOptions {
+                explore_fusion: false,
+                incumbent: Some(split_design),
+                beam: 2,
+                ..quick_opts()
+            },
+        )
+        .unwrap();
+        assert!(
+            !fixed.warm_started,
+            "incumbent from a different fusion variant must be rejected"
+        );
+        assert_eq!(fixed.design.fusion, FusionPlan::max_fusion(&k));
     }
 }

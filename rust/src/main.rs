@@ -4,8 +4,10 @@
 //!
 //! ```text
 //! prometheus list                               list kernels (Table 5 data)
-//! prometheus analyze  <kernel>                  task graph + fusion report
+//! prometheus analyze  <kernel>                  task graph + fusion variants
 //! prometheus optimize <kernel> [--onboard N --frac F] [--emit DIR] [--db FILE] [--jobs N]
+//!                     [--fixed-fusion]
+//! prometheus report   [--kernels K,..] [--full]  chosen fusion per kernel (Table 9 shape)
 //! prometheus batch    [--kernels K,..] [--scenarios S,..] [--db FILE] [--jobs N]
 //! prometheus compare  <kernel>                  all 6 frameworks (Table 3 shape)
 //! prometheus codegen  <kernel> <dir>            emit HLS-C++ + host
@@ -14,7 +16,7 @@
 //! ```
 
 use anyhow::{anyhow, Result};
-use prometheus::analysis::fusion::fuse;
+use prometheus::analysis::fusion::{enumerate_fusions, fuse};
 use prometheus::analysis::reuse;
 use prometheus::baselines::Framework;
 use prometheus::coordinator::flow::{optimize_kernel, optimize_kernel_cached, OptimizeOptions};
@@ -66,7 +68,7 @@ fn run() -> Result<()> {
             let k = polybench::by_name(name).ok_or_else(|| anyhow!("unknown kernel {name}"))?;
             let fg = fuse(&k);
             println!(
-                "kernel `{}`: {} statements, {} fused tasks",
+                "kernel `{}`: {} statements, {} fused tasks (max fusion)",
                 k.name,
                 k.statements.len(),
                 fg.tasks.len()
@@ -78,6 +80,19 @@ fn run() -> Result<()> {
                 println!("  FIFO FT{s} --{a}--> FT{d}");
             }
             println!("inter-task traffic: {} elements", fg.inter_task_elems(&k));
+            let variants = enumerate_fusions(&k);
+            println!("legal fusion variants: {}", variants.len());
+            for (vi, plan) in variants.iter().enumerate() {
+                let parts: Vec<String> = plan
+                    .parts()
+                    .iter()
+                    .map(|p| {
+                        let ss: Vec<String> = p.iter().map(|s| format!("S{s}")).collect();
+                        format!("{{{}}}", ss.join(", "))
+                    })
+                    .collect();
+                println!("  variant {vi}{}: {}", if vi == 0 { " (max fusion)" } else { "" }, parts.join(" "));
+            }
         }
         "optimize" => {
             let name = args.get(1).ok_or_else(|| anyhow!("usage: optimize <kernel>"))?;
@@ -97,6 +112,11 @@ fn run() -> Result<()> {
             let mut solver = SolverOptions::default();
             if let Some(j) = flag_value(&args, "--jobs") {
                 solver.jobs = j.parse()?;
+            }
+            // --fixed-fusion pins today's max output-stationary fusion
+            // (fusion is explored as a design dimension by default)
+            if args.iter().any(|a| a == "--fixed-fusion") {
+                solver.explore_fusion = false;
             }
             let opts = OptimizeOptions {
                 scenario,
@@ -132,6 +152,11 @@ fn run() -> Result<()> {
                 r.result.explored,
                 if r.result.timed_out { ", TIMED OUT" } else { "" }
             );
+            println!(
+                "  fusion: {}  ({} variant(s) explored)",
+                r.fused.partition_string(),
+                r.result.fusion_variants
+            );
             for tc in &r.result.design.tasks {
                 println!(
                     "  FT{}: perm {:?} intra {:?} padded {:?} II={} SLR{}",
@@ -150,6 +175,67 @@ fn run() -> Result<()> {
             if let Some(err) = r.validation_rel_err {
                 println!("  PJRT validation: max rel err {err:.2e}");
             }
+        }
+        "report" => {
+            // Paper Table 9 shape: the fusion partition the solver
+            // *chose* per kernel (`FTi = {Sj, ...}`), plus how many
+            // legal variants it weighed. Quick solver knobs by default
+            // (same space, smaller beam) — pass --full for the
+            // default-strength search.
+            let kernels: Vec<String> = match flag_value(&args, "--kernels").as_deref() {
+                None | Some("all") => {
+                    polybench::all_kernels().iter().map(|k| k.name.clone()).collect()
+                }
+                Some(list) => list.split(',').map(str::to_string).collect(),
+            };
+            let scenario = match flag_value(&args, "--onboard") {
+                Some(n) => Scenario::OnBoard {
+                    slrs: n.parse()?,
+                    frac: flag_value(&args, "--frac")
+                        .map(|f| f.parse())
+                        .transpose()?
+                        .unwrap_or(0.6),
+                },
+                None => Scenario::Rtl,
+            };
+            let mut solver = if args.iter().any(|a| a == "--full") {
+                SolverOptions::default()
+            } else {
+                prometheus::coordinator::flow::quick_solver()
+            };
+            solver.scenario = scenario;
+            if let Some(j) = flag_value(&args, "--jobs") {
+                solver.jobs = j.parse()?;
+            }
+            let mut t = Table::new(&["Kernel", "Chosen fusion", "Variants", "GF/s"]);
+            for name in &kernels {
+                let k = polybench::by_name(name)
+                    .ok_or_else(|| anyhow!("unknown kernel {name}"))?;
+                match prometheus::dse::solver::solve(&k, &dev, &solver) {
+                    Ok(r) => {
+                        // scenario-consistent throughput (board-derated
+                        // for on-board), matching what `optimize`
+                        // reports for the same design
+                        let sim = prometheus::sim::engine::simulate(&k, &r.fused, &r.design, &dev);
+                        let (_, gf) = prometheus::coordinator::flow::scenario_eval(
+                            &k, &r.fused, &r.design, &dev, scenario, &sim,
+                        );
+                        t.row(vec![
+                            name.clone(),
+                            r.fused.partition_string(),
+                            r.fusion_variants.to_string(),
+                            gfs(gf),
+                        ])
+                    }
+                    Err(e) => t.row(vec![
+                        name.clone(),
+                        format!("error: {e}"),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                };
+            }
+            print!("{}", t.render());
         }
         "batch" => {
             // Request set = kernels × scenarios × models (the service
@@ -285,9 +371,13 @@ fn run() -> Result<()> {
                  \n\
                  usage: prometheus <command>\n\
                  \x20 list                                 kernel zoo (Table 5 data)\n\
-                 \x20 analyze  <kernel>                    task graph + fusion\n\
+                 \x20 analyze  <kernel>                    task graph + legal fusion variants\n\
                  \x20 optimize <kernel> [--onboard N --frac F] [--emit DIR] [--artifacts D] [--db FILE]\n\
-                 \x20          [--jobs N]                  --jobs = intra-solve worker threads\n\
+                 \x20          [--jobs N] [--fixed-fusion]  --jobs = intra-solve worker threads;\n\
+                 \x20                                      --fixed-fusion pins max fusion\n\
+                 \x20 report [--kernels K,..|all] [--onboard N --frac F] [--full] [--jobs N]\n\
+                 \x20                                      chosen fusion partition per kernel\n\
+                 \x20                                      (paper Table 9 `FTi = {{Sj, ...}}` format)\n\
                  \x20 batch [--kernels K,..|all] [--scenarios rtl,onboard:N:F,..]\n\
                  \x20       [--models dataflow,sequential] [--db FILE] [--jobs N] [--quick]\n\
                  \x20                                      parallel batch service + QoR knowledge base\n\

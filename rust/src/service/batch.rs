@@ -16,9 +16,10 @@
 //!    budget ([`BatchOptions::jobs`]) is split between this
 //!    inter-request pool and each solve's own intra-solve workers
 //!    (`SolverOptions::jobs`), so both a wide batch and a single heavy
-//!    miss saturate the machine. Each kernel is fused and resolved into
-//!    a [`GeometryCache`] **once** up front; every worker job for that
-//!    kernel shares the cache, so parallel batch jobs skip the
+//!    miss saturate the machine. Each kernel's [`FusionSpace`] — every
+//!    legal fusion variant with its fused graph and geometry cache — is
+//!    built **once** up front; every worker job for that kernel shares
+//!    the space, so parallel batch jobs skip both re-fusion and the
 //!    configuration-independent re-resolution;
 //! 4. **warm start** — each miss seeds the solver with the best related
 //!    record ([`QorDb::incumbent_for`]), so even cold-ish solves prune
@@ -27,10 +28,9 @@
 //!    through [`crate::report::Table`].
 
 use super::qor_db::{DesignKey, QorDb, QorRecord};
-use crate::analysis::fusion::{fuse, FusedGraph};
 use crate::dse::config::ExecutionModel;
-use crate::dse::eval::GeometryCache;
-use crate::dse::solver::{solve_with_cache, Scenario, SolverOptions};
+use crate::dse::eval::FusionSpace;
+use crate::dse::solver::{solve_space, Scenario, SolverOptions};
 use crate::hw::Device;
 use crate::ir::polybench;
 use crate::ir::Kernel;
@@ -39,13 +39,13 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-/// Per-kernel shared context for one batch run: the kernel, its fusion
-/// and the fusion-time geometry cache, built once and shared (read-only)
-/// by every worker job for that kernel.
+/// Per-kernel shared context for one batch run: the kernel and its full
+/// fusion space (every legal variant's fused graph + fusion-time
+/// geometry cache), built once and shared (read-only) by every worker
+/// job for that kernel.
 struct KernelCtx {
     kernel: Kernel,
-    fg: FusedGraph,
-    cache: GeometryCache,
+    space: FusionSpace,
 }
 
 /// One optimization request.
@@ -266,7 +266,8 @@ pub fn run_batch(
 
     // Validate every kernel up front (a typo should fail the batch
     // before any solver time is spent) and build the shared per-kernel
-    // context — fusion + geometry cache — exactly once per kernel.
+    // context — the fusion space with its geometry caches — exactly
+    // once per kernel.
     let mut ctxs: BTreeMap<String, KernelCtx> = BTreeMap::new();
     for r in requests {
         if ctxs.contains_key(&r.kernel) {
@@ -275,9 +276,8 @@ pub fn run_batch(
         let Some(kernel) = polybench::by_name(&r.kernel) else {
             bail!("unknown kernel `{}` in batch request", r.kernel);
         };
-        let fg = fuse(&kernel);
-        let cache = GeometryCache::new(&kernel, &fg);
-        ctxs.insert(r.kernel.clone(), KernelCtx { kernel, fg, cache });
+        let space = FusionSpace::for_solver(&kernel, opts.solver.explore_fusion);
+        ctxs.insert(r.kernel.clone(), KernelCtx { kernel, space });
     }
     let ctxs = &ctxs; // shared read-only with the worker pool
 
@@ -292,14 +292,17 @@ pub fn run_batch(
     for (i, key) in canon.iter().enumerate() {
         let cached_valid = db.get_canonical(key).map(|rec| {
             let ctx = &ctxs[&requests[i].kernel];
-            crate::dse::solver::design_usable_with_cache(
+            // the record is judged against its *own* fusion variant; a
+            // partition that is no longer in the kernel's legal space
+            // is stale by definition
+            crate::dse::solver::usable_variant_in_space(
                 &ctx.kernel,
-                &ctx.fg,
-                &ctx.cache,
+                &ctx.space,
                 &rec.design,
                 dev,
                 requests[i].scenario,
             )
+            .is_some()
         });
         if cached_valid == Some(false) {
             db.remove_canonical(key);
@@ -315,12 +318,18 @@ pub fn run_batch(
     }
 
     // Warm-start incumbents resolved on this thread (the db is not
-    // shared with workers).
+    // shared with workers), restricted to designs whose fusion plan is
+    // in the request kernel's solve space so a compatible record is
+    // never shadowed by an incompatible faster one.
     let incumbents: Vec<Option<crate::dse::config::DesignConfig>> = job_requests
         .iter()
         .map(|&ri| {
             let r = &requests[ri];
-            db.incumbent_for(&r.kernel, r.model, r.overlap).map(|rec| rec.design.clone())
+            let space = &ctxs[&r.kernel].space;
+            db.incumbent_for_space(&r.kernel, r.model, r.overlap, |p| {
+                space.variant_of(p).is_some()
+            })
+            .map(|rec| rec.design.clone())
         })
         .collect();
 
@@ -350,18 +359,25 @@ pub fn run_batch(
                     let mut sopts = req.solver_options(&opts.solver);
                     sopts.incumbent = incumbents[j].clone();
                     sopts.jobs = base_intra + usize::from(j < extra_intra);
-                    // One fusion + geometry cache per kernel, shared by
-                    // every job of the batch (read-only).
+                    // One fusion space (graphs + geometry caches) per
+                    // kernel, shared by every job of the batch
+                    // (read-only).
                     let ctx = &ctxs[&req.kernel];
-                    let r = solve_with_cache(&ctx.kernel, &ctx.fg, &ctx.cache, dev, &sopts)
+                    let r = solve_space(&ctx.kernel, &ctx.space, dev, &sopts)
                         .map_err(|e| e.to_string())?;
                     // Shared record constructor (simulated cycles +
-                    // scenario-consistent GF/s): identical to what
+                    // scenario-consistent GF/s) over the *winning*
+                    // variant's graph and cache: identical to what
                     // `optimize --db` would store for this request.
+                    let win = ctx
+                        .space
+                        .variant_of(&r.design.fusion)
+                        .expect("winning design realizes a space variant");
+                    let v = &ctx.space.variants[win];
                     let record = QorRecord::from_solve_with_cache(
                         &ctx.kernel,
-                        &ctx.fg,
-                        &ctx.cache,
+                        &v.fg,
+                        &v.cache,
                         &r,
                         req.scenario,
                         dev,

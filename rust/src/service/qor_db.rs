@@ -31,7 +31,10 @@ use std::path::Path;
 
 /// Version of the on-disk format. Bump on any incompatible change; old
 /// files then fall back to an empty database instead of misparsing.
-pub const FORMAT_VERSION: u64 = 1;
+/// v2: designs carry their fusion variant (`DesignConfig::fusion`) and
+/// keys carry the `explore_fusion` solver knob — v1 records have
+/// neither, so they are evicted wholesale by the version check.
+pub const FORMAT_VERSION: u64 = 2;
 
 /// Everything that determines a solve's outcome, canonicalized.
 ///
@@ -55,6 +58,11 @@ pub struct DesignKey {
     pub max_unroll: u64,
     pub beam: usize,
     pub timeout_ms: u128,
+    /// Whether fusion was explored as a design dimension. Part of the
+    /// key (it changes the answer); which *variant* won is not — that
+    /// is recorded in the stored design itself, and the hit/warm-start
+    /// gates bind a record to the variant its fusion plan realizes.
+    pub explore_fusion: bool,
 }
 
 impl DesignKey {
@@ -73,6 +81,7 @@ impl DesignKey {
             max_unroll: opts.max_unroll,
             beam: opts.beam,
             timeout_ms: opts.timeout.as_millis(),
+            explore_fusion: opts.explore_fusion,
         }
     }
 
@@ -84,7 +93,7 @@ impl DesignKey {
             ExecutionModel::Sequential => "sequential",
         };
         format!(
-            "{}|{}|{}|{}|ov{}|pad{}|perm{}|tile{}|mfl{}|uf{}|beam{}|to{}",
+            "{}|{}|{}|{}|ov{}|pad{}|perm{}|tile{}|mfl{}|uf{}|beam{}|to{}|fuse{}",
             self.kernel,
             self.device,
             self.scenario,
@@ -97,6 +106,7 @@ impl DesignKey {
             self.max_unroll,
             self.beam,
             self.timeout_ms,
+            self.explore_fusion as u8,
         )
     }
 }
@@ -122,9 +132,11 @@ pub struct QorRecord {
 impl QorRecord {
     /// Build the stored record for a completed solve: simulated cycles
     /// plus scenario-consistent GF/s (via
-    /// [`crate::coordinator::flow::scenario_eval`]). The single
-    /// constructor both the cached flow and the batch orchestrator use,
-    /// so cached metrics cannot drift between the two paths.
+    /// [`crate::coordinator::flow::scenario_eval`]). `fg` must be the
+    /// graph of the **design's own fusion variant** (`result.fused`).
+    /// The single constructor both the cached flow and the batch
+    /// orchestrator use, so cached metrics cannot drift between the two
+    /// paths.
     pub fn from_solve(
         k: &crate::ir::Kernel,
         fg: &crate::analysis::fusion::FusedGraph,
@@ -268,17 +280,41 @@ impl QorDb {
     /// Best stored design for warm-starting a *different* request on the
     /// same kernel: lowest-latency record whose design matches the
     /// kernel, execution model and overlap mode (the structural axes the
-    /// solver requires of an incumbent).
+    /// solver requires of an incumbent). Fusion-agnostic — prefer
+    /// [`QorDb::incumbent_for_space`] when the solve's fusion space is
+    /// known, so a record solved under a variant outside that space
+    /// (e.g. a split-fusion design offered to a `--fixed-fusion` solve)
+    /// does not shadow an older, compatible record. Either way the
+    /// solver's usability gate is the final word: an incumbent whose
+    /// plan is not in the space is rejected, never silently crossed.
     pub fn incumbent_for(
         &self,
         kernel: &str,
         model: ExecutionModel,
         overlap: bool,
     ) -> Option<&QorRecord> {
+        self.incumbent_for_space(kernel, model, overlap, |_| true)
+    }
+
+    /// [`QorDb::incumbent_for`] restricted to designs whose fusion plan
+    /// the caller's solve can actually use (`usable_plan` is typically
+    /// `|p| space.variant_of(p).is_some()`): the best *compatible*
+    /// record warm-starts the solve instead of being rejected at the
+    /// gate while a usable one sits in the store.
+    pub fn incumbent_for_space(
+        &self,
+        kernel: &str,
+        model: ExecutionModel,
+        overlap: bool,
+        usable_plan: impl Fn(&crate::analysis::fusion::FusionPlan) -> bool,
+    ) -> Option<&QorRecord> {
         self.records
             .values()
             .filter(|r| {
-                r.design.kernel == kernel && r.design.model == model && r.design.overlap == overlap
+                r.design.kernel == kernel
+                    && r.design.model == model
+                    && r.design.overlap == overlap
+                    && usable_plan(&r.design.fusion)
             })
             .min_by_key(|r| r.latency_cycles)
     }
@@ -360,6 +396,7 @@ fn sibling(path: &Path, suffix: &str) -> std::path::PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::fusion::FusionPlan;
     use crate::dse::config::{TaskConfig, TransferPlan};
 
     fn sample_design(kernel: &str, latency_hint: u64) -> DesignConfig {
@@ -372,6 +409,7 @@ mod tests {
             kernel: kernel.to_string(),
             model: ExecutionModel::Dataflow,
             overlap: true,
+            fusion: FusionPlan::new(vec![vec![0]]),
             tasks: vec![TaskConfig {
                 task: 0,
                 perm: vec![0, 1],
@@ -437,5 +475,26 @@ mod tests {
         assert_eq!(inc.latency_cycles, 700, "best matching record wins");
         assert!(db.incumbent_for("gemm", ExecutionModel::Sequential, true).is_none());
         assert!(db.incumbent_for("3mm", ExecutionModel::Dataflow, true).is_none());
+    }
+
+    #[test]
+    fn incumbent_for_space_skips_incompatible_fusion_plans() {
+        let mut db = QorDb::new();
+        let mut opts = SolverOptions::default();
+        db.insert(&sample_key("gemm"), sample_record("gemm", 1000)); // plan [[0]]
+        opts.beam = 9;
+        let mut fast = sample_record("gemm", 100);
+        fast.design.fusion = FusionPlan::new(vec![vec![0], vec![1]]);
+        db.insert(&DesignKey::new("gemm", &Device::u55c(), &opts), fast);
+        // unrestricted: the faster (split-plan) record shadows
+        let any = db.incumbent_for("gemm", ExecutionModel::Dataflow, true).unwrap();
+        assert_eq!(any.latency_cycles, 100);
+        // restricted to the solve's space: the compatible record warm
+        // starts instead of being rejected at the solver gate
+        let single = FusionPlan::new(vec![vec![0]]);
+        let inc = db
+            .incumbent_for_space("gemm", ExecutionModel::Dataflow, true, |p| p == &single)
+            .unwrap();
+        assert_eq!(inc.latency_cycles, 1000);
     }
 }

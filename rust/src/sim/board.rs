@@ -122,7 +122,6 @@ pub fn board_eval_resolved(rd: &ResolvedDesign, dev: &Device, budget: &SlrBudget
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analysis::fusion::fuse;
     use crate::dse::solver::{solve, Scenario, SolverOptions};
     use crate::ir::polybench;
     use std::time::Duration;
@@ -142,10 +141,9 @@ mod tests {
     fn feasible_design_generates_bitstream() {
         let k = polybench::gemm();
         let dev = Device::u55c();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &board_opts(1, 0.6)).unwrap();
         let budget = dev.slr.scaled(0.6);
-        let b = board_eval(&k, &fg, &r.design, &dev, &budget);
+        let b = board_eval(&k, &r.fused, &r.design, &dev, &budget);
         assert!(b.bitstream_ok, "utilization {}", b.peak_utilization);
         assert!(b.fmhz > 100.0 && b.fmhz <= dev.fmax_mhz);
         assert!(b.gflops > 0.0);
@@ -157,10 +155,9 @@ mod tests {
         // the AutoDSE-3mm situation of Table 8.
         let k = polybench::gemm();
         let dev = Device::u55c();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &board_opts(1, 1.0)).unwrap();
         let tiny = dev.slr.scaled(0.15);
-        let b = board_eval(&k, &fg, &r.design, &dev, &tiny);
+        let b = board_eval(&k, &r.fused, &r.design, &dev, &tiny);
         assert!(!b.bitstream_ok);
     }
 
@@ -168,10 +165,9 @@ mod tests {
     fn multi_slr_derates_frequency() {
         let k = polybench::three_mm();
         let dev = Device::u55c();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &board_opts(3, 0.6)).unwrap();
         let budget = dev.slr.scaled(0.6);
-        let b = board_eval(&k, &fg, &r.design, &dev, &budget);
+        let b = board_eval(&k, &r.fused, &r.design, &dev, &budget);
         if b.slr_crossings > 0 {
             assert!(b.fmhz < dev.fmax_mhz);
         }

@@ -293,7 +293,6 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analysis::fusion::fuse;
     use crate::dse::cost::graph_latency;
     use crate::dse::eval::resolve_task;
     use crate::dse::solver::{solve, SolverOptions};
@@ -318,9 +317,9 @@ mod tests {
         let k = polybench::gemm();
         let dev = Device::u55c();
         let r = solve(&k, &dev, &opts()).unwrap();
-        let fg = fuse(&k);
-        let sim = simulate(&k, &fg, &r.design, &dev);
-        let model = graph_latency(&k, &fg, &r.design, &dev).total;
+        let fg = &r.fused;
+        let sim = simulate(&k, fg, &r.design, &dev);
+        let model = graph_latency(&k, fg, &r.design, &dev).total;
         let ratio = sim.cycles as f64 / model as f64;
         assert!(
             (0.4..2.5).contains(&ratio),
@@ -334,12 +333,12 @@ mod tests {
     fn dataflow_beats_sequential_in_sim() {
         let k = polybench::three_madd();
         let dev = Device::u55c();
-        let fg = fuse(&k);
         let df = solve(&k, &dev, &opts()).unwrap();
+        let fg = &df.fused;
         let mut seq_design = df.design.clone();
         seq_design.model = ExecutionModel::Sequential;
-        let s_df = simulate(&k, &fg, &df.design, &dev);
-        let s_seq = simulate(&k, &fg, &seq_design, &dev);
+        let s_df = simulate(&k, fg, &df.design, &dev);
+        let s_seq = simulate(&k, fg, &seq_design, &dev);
         assert!(s_df.cycles < s_seq.cycles);
     }
 
@@ -348,9 +347,8 @@ mod tests {
         // 2-madd: the second add cannot finish before the first emits.
         let k = polybench::two_madd();
         let dev = Device::u55c();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &opts()).unwrap();
-        let sim = simulate(&k, &fg, &r.design, &dev);
+        let sim = simulate(&k, &r.fused, &r.design, &dev);
         assert!(sim.cycles > 0);
         assert_eq!(sim.compute_cycles.len(), 2);
     }
@@ -359,10 +357,9 @@ mod tests {
     fn sim_counts_steps() {
         let k = polybench::madd();
         let dev = Device::u55c();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &opts()).unwrap();
-        let sim = simulate(&k, &fg, &r.design, &dev);
-        let cache = GeometryCache::new(&k, &fg);
+        let sim = simulate(&k, &r.fused, &r.design, &dev);
+        let cache = GeometryCache::new(&k, &r.fused);
         let rt = resolve_task(&k, &cache.tasks[0], &r.design.tasks[0]);
         assert_eq!(sim.steps, rt.steps);
     }

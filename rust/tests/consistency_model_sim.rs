@@ -18,7 +18,6 @@
 //!   `GeometryCache` must be bit-identical to cold resolution, for both
 //!   consumers.
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::dse::config::ExecutionModel;
 use prometheus::dse::cost::{graph_latency, graph_latency_resolved};
 use prometheus::dse::eval::{GeometryCache, ResolvedDesign};
@@ -44,7 +43,6 @@ fn quick() -> SolverOptions {
 fn sequential_model_equals_simulator_for_every_kernel() {
     let dev = Device::u55c();
     for k in polybench::all_kernels() {
-        let fg = fuse(&k);
         for overlap in [false, true] {
             let r = solve(
                 &k,
@@ -52,8 +50,10 @@ fn sequential_model_equals_simulator_for_every_kernel() {
                 &SolverOptions { model: ExecutionModel::Sequential, overlap, ..quick() },
             )
             .unwrap();
-            let model = graph_latency(&k, &fg, &r.design, &dev);
-            let sim = simulate(&k, &fg, &r.design, &dev);
+            // evaluate against the winning fusion variant's own graph
+            let fg = &r.fused;
+            let model = graph_latency(&k, fg, &r.design, &dev);
+            let sim = simulate(&k, fg, &r.design, &dev);
             assert_eq!(
                 model.total, sim.cycles,
                 "{} (overlap={overlap}): analytic {} != simulated {}",
@@ -74,13 +74,13 @@ fn dataflow_model_lower_bounds_sequentialized_simulation() {
     // sequentially (concurrency only ever helps).
     let dev = Device::u55c();
     for k in polybench::all_kernels() {
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &quick()).unwrap();
+        let fg = &r.fused;
         assert!(r.design.tasks.iter().all(|t| t.slr == 0), "{}: RTL solve is 1-region", k.name);
-        let df_model = graph_latency(&k, &fg, &r.design, &dev).total;
+        let df_model = graph_latency(&k, fg, &r.design, &dev).total;
         let mut seq = r.design.clone();
         seq.model = ExecutionModel::Sequential;
-        let seq_sim = simulate(&k, &fg, &seq, &dev).cycles;
+        let seq_sim = simulate(&k, fg, &seq, &dev).cycles;
         assert!(
             df_model <= seq_sim,
             "{}: dataflow model {} exceeds sequentialized sim {}",
@@ -96,16 +96,16 @@ fn warm_cache_resolution_is_bit_identical_to_cold() {
     let dev = Device::u55c();
     for name in ["gemm", "3mm", "atax", "3-madd"] {
         let k = polybench::by_name(name).unwrap();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &quick()).unwrap();
-        let cache = GeometryCache::new(&k, &fg);
-        let rd = ResolvedDesign::new(&k, &fg, &cache, &r.design);
-        let cold_model = graph_latency(&k, &fg, &r.design, &dev);
+        let fg = &r.fused;
+        let cache = GeometryCache::new(&k, fg);
+        let rd = ResolvedDesign::new(&k, fg, &cache, &r.design);
+        let cold_model = graph_latency(&k, fg, &r.design, &dev);
         let warm_model = graph_latency_resolved(&rd, &dev);
         assert_eq!(cold_model.total, warm_model.total, "{name}");
         assert_eq!(cold_model.duration, warm_model.duration, "{name}");
         assert_eq!(
-            simulate(&k, &fg, &r.design, &dev).cycles,
+            simulate(&k, fg, &r.design, &dev).cycles,
             simulate_resolved(&rd, &dev).cycles,
             "{name}"
         );

@@ -1,7 +1,6 @@
 //! Integration tests over the full L3 pipeline: IR → analysis → solver →
 //! simulator → codegen, for every kernel in the zoo.
 
-use prometheus::analysis::fusion::fuse;
 use prometheus::codegen::{generate_hls, generate_host};
 use prometheus::coordinator::flow::quick_solver;
 use prometheus::dse::cost::graph_latency;
@@ -14,12 +13,13 @@ use prometheus::sim::engine::simulate;
 fn every_kernel_solves_and_simulates() {
     let dev = Device::u55c();
     for k in polybench::all_kernels() {
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &quick_solver()).unwrap();
+        // the winning fusion variant's graph is the design's context
+        let fg = &r.fused;
         r.design
-            .validate(&k, &fg, dev.slrs)
+            .validate(&k, fg, dev.slrs)
             .unwrap_or_else(|e| panic!("{}: {e}", k.name));
-        let sim = simulate(&k, &fg, &r.design, &dev);
+        let sim = simulate(&k, fg, &r.design, &dev);
         assert!(sim.cycles > 0, "{}: zero-cycle simulation", k.name);
         let g = sim.gflops(&k, &dev);
         assert!(g > 0.1, "{}: implausible throughput {g}", k.name);
@@ -34,10 +34,10 @@ fn model_and_simulator_agree_within_bounds() {
     let dev = Device::u55c();
     for name in ["gemm", "2mm", "3mm", "bicg", "mvt", "madd", "3-madd"] {
         let k = polybench::by_name(name).unwrap();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &quick_solver()).unwrap();
-        let sim = simulate(&k, &fg, &r.design, &dev).cycles as f64;
-        let model = graph_latency(&k, &fg, &r.design, &dev).total as f64;
+        let fg = &r.fused;
+        let sim = simulate(&k, fg, &r.design, &dev).cycles as f64;
+        let model = graph_latency(&k, fg, &r.design, &dev).total as f64;
         let ratio = sim / model;
         assert!(
             (0.2..5.0).contains(&ratio),
@@ -52,9 +52,8 @@ fn compute_bound_kernels_outperform_memory_bound() {
     let dev = Device::u55c();
     let g = |n: &str| {
         let k = polybench::by_name(n).unwrap();
-        let fg = fuse(&k);
         let r = solve(&k, &dev, &quick_solver()).unwrap();
-        simulate(&k, &fg, &r.design, &dev).gflops(&k, &dev)
+        simulate(&k, &r.fused, &r.design, &dev).gflops(&k, &dev)
     };
     let gemm = g("gemm");
     let mvt = g("mvt");
@@ -68,7 +67,6 @@ fn onboard_designs_fit_their_budget() {
     let dev = Device::u55c();
     for name in ["2mm", "atax"] {
         let k = polybench::by_name(name).unwrap();
-        let fg = fuse(&k);
         for (slrs, frac) in [(1usize, 0.6), (3usize, 0.6)] {
             let r = solve(
                 &k,
@@ -81,7 +79,7 @@ fn onboard_designs_fit_their_budget() {
             .unwrap();
             let budget = dev.slr.scaled(frac);
             assert!(
-                prometheus::dse::constraints::feasible(&k, &fg, &r.design, &dev, &budget),
+                prometheus::dse::constraints::feasible(&k, &r.fused, &r.design, &dev, &budget),
                 "{name} @ {slrs} SLR x {frac}"
             );
             // SLR ids within the allowed range

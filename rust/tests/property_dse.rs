@@ -186,7 +186,6 @@ fn prop_solver_feasible_under_random_budgets() {
     for_random(0x5010, 10, |rng, i| {
         let kernels = ["gemm", "bicg", "madd", "2-madd", "mvt"];
         let k = polybench::by_name(kernels[i % kernels.len()]).unwrap();
-        let fg = fuse(&k);
         let frac = [0.3, 0.45, 0.6, 0.8][(rng.next_u64() % 4) as usize];
         let slrs = 1 + (rng.next_u64() % 3) as usize;
         let opts = SolverOptions {
@@ -198,15 +197,15 @@ fn prop_solver_feasible_under_random_budgets() {
             ..SolverOptions::default()
         };
         let r = solve(&k, &dev, &opts).unwrap();
-        r.design.validate(&k, &fg, dev.slrs).unwrap();
+        r.design.validate(&k, &r.fused, dev.slrs).unwrap();
         let budget = dev.slr.scaled(frac);
         assert!(
-            prometheus::dse::constraints::feasible(&k, &fg, &r.design, &dev, &budget),
+            prometheus::dse::constraints::feasible(&k, &r.fused, &r.design, &dev, &budget),
             "{} infeasible at {slrs}x{frac}",
             k.name
         );
         // and it simulates
-        let sim = simulate(&k, &fg, &r.design, &dev);
+        let sim = simulate(&k, &r.fused, &r.design, &dev);
         assert!(sim.cycles > 0);
     });
 }

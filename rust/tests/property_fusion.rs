@@ -1,0 +1,188 @@
+//! Fusion-space properties over the 15-kernel zoo (ISSUE 4):
+//!
+//! * every enumerated fusion variant is **legal** — each statement in
+//!   exactly one task, dependence-preserving (cross-task flow deps
+//!   respect the topological task numbering; last-writer deps carry a
+//!   FIFO edge), acyclic by a real topological check;
+//! * the **max-fusion variant reproduces `fuse()` bit-identically** —
+//!   same tasks, same memoized array info, same FIFO edges, and the
+//!   same Table 5 inter-task communication column;
+//! * the **fusion-explored solve never returns a worse (latency)
+//!   design than the fixed-fusion solve** for any zoo kernel — the
+//!   explored space is a superset scored by the same simulator;
+//! * exploration stays **deterministic and thread-count independent**:
+//!   `jobs = 1` and `jobs = 8` return bit-identical designs (the PR 3
+//!   total-order contract, extended by the variant index).
+
+use prometheus::analysis::deps::{dependences, DepKind};
+use prometheus::analysis::fusion::{enumerate_fusions, fuse, fuse_with_plan, FusionPlan};
+use prometheus::dse::solver::{solve, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::sim::engine::simulate;
+use std::time::Duration;
+
+fn quick(jobs: usize) -> SolverOptions {
+    SolverOptions {
+        beam: 6,
+        max_factor_per_loop: 16,
+        max_unroll: 256,
+        timeout: Duration::from_secs(60),
+        jobs,
+        ..SolverOptions::default()
+    }
+}
+
+#[test]
+fn every_enumerated_variant_is_legal() {
+    for k in polybench::all_kernels() {
+        let deps = dependences(&k);
+        for (vi, plan) in enumerate_fusions(&k).iter().enumerate() {
+            plan.validate(&k).unwrap_or_else(|e| panic!("{} variant {vi}: {e}", k.name));
+            let fg = fuse_with_plan(&k, plan)
+                .unwrap_or_else(|e| panic!("{} variant {vi}: {e}", k.name));
+            // partition: each statement in exactly one task, and the
+            // O(1) statement index agrees with task membership
+            let mut seen = vec![0usize; k.statements.len()];
+            for t in &fg.tasks {
+                assert!(!t.stmts.is_empty(), "{} variant {vi}: empty task", k.name);
+                for &s in &t.stmts {
+                    seen[s] += 1;
+                    assert_eq!(fg.task_of_stmt(s), t.id, "{} variant {vi}", k.name);
+                    assert_eq!(
+                        k.statements[s].write.array, t.output,
+                        "{} variant {vi}: mixed-output task",
+                        k.name
+                    );
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{} variant {vi}: {seen:?}", k.name);
+            // acyclic via the real topological check, and producers
+            // renumbered before consumers
+            assert!(fg.is_acyclic(), "{} variant {vi}", k.name);
+            for (s, d, _) in &fg.edges {
+                assert!(s < d, "{} variant {vi}: edge {s}->{d} not topological", k.name);
+            }
+            // dependence preservation: every cross-task flow dep is
+            // respected by the task numbering (same-array writer chains
+            // guarantee a FIFO path, so order is transitive)
+            for e in deps.iter().filter(|e| e.kind == DepKind::Flow) {
+                let (ts, td) = (fg.task_of_stmt(e.src), fg.task_of_stmt(e.dst));
+                if ts != td {
+                    assert!(
+                        ts < td,
+                        "{} variant {vi}: flow dep S{}->S{} runs backwards (FT{ts} !< FT{td})",
+                        k.name,
+                        e.src,
+                        e.dst
+                    );
+                }
+            }
+            // round trip: the graph realizes exactly the plan
+            assert_eq!(&fg.plan(), plan, "{} variant {vi}", k.name);
+        }
+    }
+}
+
+#[test]
+fn max_fusion_variant_is_bit_identical_to_fuse() {
+    for k in polybench::all_kernels() {
+        let variants = enumerate_fusions(&k);
+        assert_eq!(variants[0], FusionPlan::max_fusion(&k), "{}", k.name);
+        let from_plan = fuse_with_plan(&k, &variants[0]).unwrap();
+        let direct = fuse(&k);
+        assert_eq!(from_plan.tasks, direct.tasks, "{}", k.name);
+        assert_eq!(from_plan.edges, direct.edges, "{}", k.name);
+        assert_eq!(
+            from_plan.inter_task_elems(&k),
+            direct.inter_task_elems(&k),
+            "{}",
+            k.name
+        );
+    }
+}
+
+#[test]
+fn table5_comm_column_survives_the_fusion_refactor() {
+    // The paper's Table 5 inter-task communication column, pinned on
+    // the max-fusion variant produced through the plan path.
+    let elems = |name: &str| {
+        let k = polybench::by_name(name).unwrap();
+        fuse_with_plan(&k, &FusionPlan::max_fusion(&k)).unwrap().inter_task_elems(&k)
+    };
+    assert_eq!(elems("bicg"), 0);
+    assert_eq!(elems("madd"), 0);
+    assert_eq!(elems("mvt"), 0);
+    assert_eq!(elems("atax"), 390); // tmp[M]
+    assert_eq!(elems("gesummv"), 2 * 250); // tmp + y
+    assert_eq!(elems("2-madd"), 400 * 400);
+    assert_eq!(elems("3-madd"), 2 * 400 * 400);
+    assert_eq!(elems("3mm"), 180 * 190 + 190 * 210); // E + F
+    assert_eq!(elems("2mm"), 180 * 190); // tmp
+}
+
+#[test]
+fn explored_solve_never_worse_than_fixed_fusion() {
+    // The acceptance property: for every zoo kernel the fusion-explored
+    // winner's simulated latency is <= the fixed-fusion winner's (each
+    // evaluated against its own variant graph). On the 12 single-variant
+    // kernels the two solves are identical by construction; gemver,
+    // trmm and symm have a real split variant to weigh.
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        let fixed = solve(&k, &dev, &SolverOptions { explore_fusion: false, ..quick(1) })
+            .unwrap_or_else(|e| panic!("{} fixed: {e}", k.name));
+        let explored = solve(&k, &dev, &quick(1))
+            .unwrap_or_else(|e| panic!("{} explored: {e}", k.name));
+        let fixed_cycles = simulate(&k, &fixed.fused, &fixed.design, &dev).cycles;
+        let explored_cycles = simulate(&k, &explored.fused, &explored.design, &dev).cycles;
+        // The superset argument needs both searches to have *finished*:
+        // a timed-out explored solve holds an anytime design that may
+        // predate the fixed winner (the explored space is strictly more
+        // work under the same deadline). The quick knobs complete in
+        // well under the 60s timeout on any realistic host, so this
+        // gate exists for pathological CI machines, not as an excuse.
+        if fixed.timed_out || explored.timed_out {
+            eprintln!("note: {} timed out; never-worse not asserted", k.name);
+            continue;
+        }
+        assert!(
+            explored_cycles <= fixed_cycles,
+            "{}: fusion-explored {} worse than fixed-fusion {}",
+            k.name,
+            explored_cycles,
+            fixed_cycles
+        );
+        // single-variant kernels must return the exact fixed design
+        if explored.fusion_variants == 1 {
+            assert_eq!(explored.design, fixed.design, "{}", k.name);
+        }
+        // the winner always validates against its own variant graph
+        explored
+            .design
+            .validate(&k, &explored.fused, dev.slrs)
+            .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+    }
+}
+
+#[test]
+fn fusion_exploration_is_thread_count_independent() {
+    // jobs changes solve speed, never the answer — including which
+    // fusion variant wins. Pinned on the kernels with a real multi-
+    // variant space plus a multi-task single-variant control.
+    let dev = Device::u55c();
+    for name in ["gemver", "trmm", "symm", "3mm", "atax"] {
+        let k = polybench::by_name(name).unwrap();
+        let one = solve(&k, &dev, &quick(1)).unwrap();
+        let eight = solve(&k, &dev, &quick(8)).unwrap();
+        assert_eq!(one.design, eight.design, "{name}: jobs=1 vs jobs=8 design");
+        assert_eq!(
+            one.latency.total, eight.latency.total,
+            "{name}: jobs=1 vs jobs=8 latency"
+        );
+        assert_eq!(
+            one.design.fusion, eight.design.fusion,
+            "{name}: jobs=1 vs jobs=8 fusion variant"
+        );
+    }
+}

@@ -3,7 +3,7 @@
 //! property (a warm-started solve never returns a worse design than its
 //! incumbent).
 
-use prometheus::analysis::fusion::fuse;
+use prometheus::analysis::fusion::FusionPlan;
 use prometheus::dse::config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
 use prometheus::dse::solver::{solve, Scenario, SolverOptions};
 use prometheus::hw::Device;
@@ -33,6 +33,7 @@ fn hand_built_design(kernel: &str) -> DesignConfig {
         kernel: kernel.to_string(),
         model: ExecutionModel::Dataflow,
         overlap: true,
+        fusion: FusionPlan::new(vec![vec![0]]),
         tasks: vec![TaskConfig {
             task: 0,
             perm: vec![1, 0],
@@ -105,6 +106,7 @@ fn keys_canonicalize_identical_requests_together() {
         SolverOptions { max_unroll: 64, ..opts.clone() },
         SolverOptions { beam: 3, ..opts.clone() },
         SolverOptions { timeout: Duration::from_secs(1), ..opts.clone() },
+        SolverOptions { explore_fusion: false, ..opts.clone() },
     ];
     let mut keys: Vec<String> =
         variants.iter().map(|o| DesignKey::new("gemm", &dev, o).canonical()).collect();
@@ -183,9 +185,8 @@ fn prop_warm_started_solves_never_regress() {
     };
     for_random(0x9A12, 5, |rng, i| {
         let k = polybench::by_name(kernels[i % kernels.len()]).unwrap();
-        let fg = fuse(&k);
         let cold = solve(&k, &dev, &base).unwrap();
-        let inc_cycles = simulate(&k, &fg, &cold.design, &dev).cycles;
+        let inc_cycles = simulate(&k, &cold.fused, &cold.design, &dev).cycles;
         // weakened, warm-started re-solve: tiny beam, randomized (often
         // expired) timeout — the anytime path must still hold the line
         let warm_opts = SolverOptions {
@@ -195,7 +196,7 @@ fn prop_warm_started_solves_never_regress() {
             ..base.clone()
         };
         let warm = solve(&k, &dev, &warm_opts).unwrap();
-        let warm_cycles = simulate(&k, &fg, &warm.design, &dev).cycles;
+        let warm_cycles = simulate(&k, &warm.fused, &warm.design, &dev).cycles;
         assert!(
             warm_cycles <= inc_cycles,
             "{}: warm-started solve regressed ({} > {} cycles)",
