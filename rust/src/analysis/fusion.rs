@@ -1,5 +1,6 @@
 //! Task fusion (paper §3.1) — as an *explored* dimension of the design
 //! space, not a fixed pre-pass.
+#![deny(missing_docs)]
 //!
 //! A [`FusionPlan`] is a canonical partition of the kernel's statements
 //! into fused tasks. [`enumerate_fusions`] produces every
@@ -12,27 +13,55 @@
 //!   every output tile is produced — loaded, computed, stored or sent —
 //!   exactly once.
 //!
-//! Legality is checked against [`super::deps`]:
+//! Beyond the contiguous output-stationary partitions of the original
+//! space, a plan part now carries the paper's §3.1 full generality:
+//!
+//! * **cross-array fusion** — one part may contain statements writing
+//!   *different* arrays when their loop nests unify (same iterator
+//!   names with equal trip counts and reduction flags) and no flow or
+//!   anti dependence runs between the merged statement groups. mvt's
+//!   two concurrent MAC nests merge into one engine this way.
+//! * **partial (loop-range) fusion** — a part may carry an optional
+//!   *fusion range* `[lo, hi)` over the statements' shared outermost
+//!   (non-reduction) loop: the statements are fused only over that
+//!   sub-range of their iteration spaces, and the remaining iterations
+//!   are *peeled* into prologue (`[0, lo)`) and epilogue
+//!   (`[hi, trip)`) sub-tasks, materialized as separate tasks of the
+//!   [`FusedGraph`] with their own geometry. Peels are cut per output
+//!   subgroup, so an init/update pair is never split by a range.
+//!
+//! Legality is checked by [`FusionPlan::validate`]:
 //!
 //! * an init/update pair (a [`StmtKind::Init`] statement and the
 //!   updates of the same array) may never split across a FIFO — the
 //!   zero-init writes the very tile the update accumulates into, and a
 //!   loop-carried accumulator cannot re-read its running value from a
 //!   stream;
-//! * each task's statements write a single array (the output-stationary
-//!   invariant: a `FusedTask` has one `output`), and a split group is
-//!   partitioned into *contiguous* program-order runs — concurrent
-//!   tasks overwriting the same array in an unordered way are rejected;
-//! * flow dependences between tasks must not create a cycle (checked by
-//!   Kahn's algorithm, not assumed from statement numbering).
+//! * within one part, every statement group writing the same array is a
+//!   *contiguous* program-order run of that array's writers —
+//!   concurrent tasks overwriting the same array in an unordered way
+//!   are rejected;
+//! * a part mixing output arrays (or carrying a range) must *unify*:
+//!   every loop of every member maps by iterator name onto the
+//!   representative nest with an equal reduction flag and — except for
+//!   the ranged outermost loop — an equal trip count, and no flow/anti
+//!   dependence may run between member statements writing different
+//!   arrays;
+//! * flow dependences between the materialized tasks (peels included)
+//!   must not create a cycle (checked by Kahn's algorithm, not assumed
+//!   from statement numbering).
 //!
 //! FIFO edges use **last-writer** flow semantics: a statement reading
 //! array `a` depends on the *latest* preceding writer of `a`, so a
 //! split update chain (`x += A·y` then `x += z`) pipelines through one
 //! FIFO instead of fanning every historical writer into every reader.
-//! For max fusion this is edge-for-edge identical to the classic
-//! array-level flow graph (all writers of an array share a task), which
-//! the property suite pins bit-exactly.
+//! Peels of one part never exchange FIFO data with each other (their
+//! outer-loop ranges are disjoint, so each peel produces and consumes
+//! its own slice locally); a downstream reader depends on *every* peel
+//! of its producer part. For max fusion all of this is edge-for-edge
+//! identical to the classic array-level flow graph (all writers of an
+//! array share a single whole-range task), which the property suite
+//! pins bit-exactly.
 
 use crate::ir::access::Index;
 use crate::ir::{Kernel, StmtKind};
@@ -44,67 +73,137 @@ use std::collections::BTreeSet;
 /// EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArrayInfo {
+    /// Array name as declared in the kernel.
     pub name: String,
     /// Access function translated to representative-nest loop positions
     /// (None = dimension not indexed by a loop iterator).
     pub access: Vec<Option<usize>>,
+    /// Whether any statement of the task writes this array.
     pub writes: bool,
+    /// Whether any statement of the task reads this array.
     pub reads: bool,
 }
 
-/// A fused task: an ordered group of statement ids sharing one output
-/// array (e.g. `FT0 = {S0, S1}` zero-init + MAC in 3mm).
+/// Role of a materialized task within its [`FusionPlan`] part: ranged
+/// parts peel their leftover iterations into separate tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeelRole {
+    /// The single task of an unranged part (the whole iteration space).
+    Whole,
+    /// The fused task of a ranged part, covering the `[lo, hi)` range.
+    Main,
+    /// A peeled prologue (`[0, lo)`) of one output subgroup.
+    Prologue,
+    /// A peeled epilogue (`[hi, trip)`) of one output subgroup.
+    Epilogue,
+}
+
+/// A fused task: an ordered group of statement ids (e.g. `FT0 = {S0,
+/// S1}` zero-init + MAC in 3mm). Classic tasks write a single array;
+/// cross-array merged tasks write several (`outputs`); ranged tasks
+/// cover only a sub-range of the shared outermost loop (`outer_range`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FusedTask {
+    /// Topological task id within its [`FusedGraph`].
     pub id: usize,
     /// Statement ids, program order. The *representative* statement (the
     /// one whose loop nest shapes the tiling space) is the compute
     /// statement with the deepest nest.
     pub stmts: Vec<usize>,
-    /// The array this task produces.
+    /// The task's primary output: the array written by its first
+    /// statement (the single output for classic tasks).
     pub output: String,
+    /// Every array this task writes, first-touch order (length 1 for
+    /// classic output-stationary tasks, ≥ 2 after a cross-array merge).
+    pub outputs: Vec<String>,
     /// Memoized per-array info (first-touch order).
     pub array_info: Vec<ArrayInfo>,
+    /// Sub-range `[lo, hi)` of the representative's outermost loop this
+    /// task covers (`None` = the full iteration space). Set for the
+    /// main task and the peels of a ranged part.
+    pub outer_range: Option<(u64, u64)>,
+    /// Index of the [`FusionPlan`] part this task realizes (peels share
+    /// their part index with the main task they were cut from).
+    pub part: usize,
+    /// Whether this task is the whole part, the fused range, or a peel.
+    pub role: PeelRole,
 }
 
 impl FusedTask {
     /// The statement whose loop nest drives tiling/permutation choices:
     /// deepest compute statement of the group.
     pub fn representative(&self, k: &Kernel) -> usize {
-        *self
-            .stmts
-            .iter()
-            .max_by_key(|&&sid| {
-                let s = &k.statements[sid];
-                (s.loops.len(), s.kind == StmtKind::Compute, s.ops.total())
-            })
-            .expect("fused task is non-empty")
+        representative_of(k, &self.stmts)
     }
+
+    /// Trip count of the covered outer-loop range (`hi - lo`), `None`
+    /// when the task spans the full iteration space.
+    pub fn outer_span(&self) -> Option<u64> {
+        self.outer_range.map(|(lo, hi)| hi - lo)
+    }
+}
+
+/// The statement of `stmts` whose loop nest drives tiling choices:
+/// deepest compute statement, most ops on ties.
+fn representative_of(k: &Kernel, stmts: &[usize]) -> usize {
+    *stmts
+        .iter()
+        .max_by_key(|&&sid| {
+            let s = &k.statements[sid];
+            (s.loops.len(), s.kind == StmtKind::Compute, s.ops.total())
+        })
+        .expect("fused task is non-empty")
 }
 
 // ---- FusionPlan: the canonical partition encoding ----------------------
 
 /// A fusion choice, encoded as a canonical partition of statement ids
-/// into tasks: each part ascending (= program order), parts ordered by
-/// their first statement. This is the form persisted in
+/// into tasks plus an optional fusion *range* per part: each part
+/// ascending (= program order), parts ordered by their first statement,
+/// ranges riding along. This is the form persisted in
 /// [`crate::dse::config::DesignConfig`] and compared by the QoR
 /// knowledge base, so two solves of the same variant always agree on
-/// the encoding regardless of task renumbering.
+/// the encoding regardless of task renumbering. A part's range is the
+/// `[lo, hi)` slice of the shared outermost loop over which its
+/// statements fuse (`None` = full fusion over the whole space).
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct FusionPlan {
     parts: Vec<Vec<usize>>,
+    ranges: Vec<Option<(u64, u64)>>,
 }
 
 impl FusionPlan {
-    /// Build a plan from raw parts, canonicalizing the encoding (parts
-    /// sorted internally and by first element). Legality against a
-    /// kernel is a separate question — see [`FusionPlan::validate`].
-    pub fn new(mut parts: Vec<Vec<usize>>) -> FusionPlan {
-        for p in &mut parts {
+    /// Build an unranged plan from raw parts, canonicalizing the
+    /// encoding (parts sorted internally and by first element).
+    /// Legality against a kernel is a separate question — see
+    /// [`FusionPlan::validate`].
+    pub fn new(parts: Vec<Vec<usize>>) -> FusionPlan {
+        FusionPlan::new_with_ranges(parts, Vec::new())
+    }
+
+    /// Build a plan from raw parts and per-part fusion ranges
+    /// (`ranges[i]` belongs to `parts[i]`; missing tail entries default
+    /// to `None`), canonicalizing the encoding. The range travels with
+    /// its part through the canonical sort.
+    pub fn new_with_ranges(
+        parts: Vec<Vec<usize>>,
+        mut ranges: Vec<Option<(u64, u64)>>,
+    ) -> FusionPlan {
+        debug_assert!(
+            ranges.len() <= parts.len(),
+            "{} ranges for {} parts — surplus ranges would be dropped silently",
+            ranges.len(),
+            parts.len()
+        );
+        ranges.resize(parts.len(), None);
+        let mut paired: Vec<(Vec<usize>, Option<(u64, u64)>)> =
+            parts.into_iter().zip(ranges).collect();
+        for (p, _) in &mut paired {
             p.sort_unstable();
         }
-        parts.sort_by_key(|p| p.first().copied().unwrap_or(usize::MAX));
-        FusionPlan { parts }
+        paired.sort_by_key(|(p, _)| p.first().copied().unwrap_or(usize::MAX));
+        let (parts, ranges) = paired.into_iter().unzip();
+        FusionPlan { parts, ranges }
     }
 
     /// The canonical parts, each ascending, ordered by first statement.
@@ -112,9 +211,46 @@ impl FusionPlan {
         &self.parts
     }
 
-    /// Number of fused tasks this plan induces.
+    /// The per-part fusion ranges, parallel to [`FusionPlan::parts`]
+    /// (`None` = the part fuses over its whole iteration space).
+    pub fn ranges(&self) -> &[Option<(u64, u64)>] {
+        &self.ranges
+    }
+
+    /// The fusion range of part `i`, if one is set.
+    pub fn range(&self, i: usize) -> Option<(u64, u64)> {
+        self.ranges.get(i).copied().flatten()
+    }
+
+    /// Whether any part carries a fusion range.
+    pub fn has_ranges(&self) -> bool {
+        self.ranges.iter().any(Option::is_some)
+    }
+
+    /// Number of plan parts. The materialized [`FusedGraph`] has at
+    /// least this many tasks (ranged parts add their peels).
     pub fn n_tasks(&self) -> usize {
         self.parts.len()
+    }
+
+    /// Human-readable form of each part, in the paper's Table 9 shape
+    /// with the range suffix for ranged parts: `{S0, S1}` or
+    /// `{S1[100:300], S2[100:300]}`.
+    pub fn part_strings(&self) -> Vec<String> {
+        self.parts
+            .iter()
+            .enumerate()
+            .map(|(pi, p)| {
+                let ss: Vec<String> = p
+                    .iter()
+                    .map(|s| match self.range(pi) {
+                        Some((lo, hi)) => format!("S{s}[{lo}:{hi}]"),
+                        None => format!("S{s}"),
+                    })
+                    .collect();
+                format!("{{{}}}", ss.join(", "))
+            })
+            .collect()
     }
 
     /// Today's coarsest plan: statements grouped by written array.
@@ -130,10 +266,35 @@ impl FusionPlan {
     }
 
     /// Full legality check against `k` (the rules in the module doc):
-    /// exact statement coverage, one output array per part, contiguous
-    /// runs within each output group, init/update pairs unsplit, and an
-    /// acyclic induced task graph.
+    /// exact statement coverage, contiguous same-array runs within each
+    /// output group, init/update pairs unsplit, unification (loop-nest
+    /// compatibility + no internal cross-array dependences) for
+    /// cross-array and ranged parts, well-formed ranges, and an acyclic
+    /// materialized task graph.
+    ///
+    /// ```
+    /// use prometheus::analysis::fusion::FusionPlan;
+    /// use prometheus::ir::polybench;
+    ///
+    /// let k = polybench::gemm();
+    /// // the max output-stationary fusion is always legal
+    /// assert!(FusionPlan::max_fusion(&k).validate(&k).is_ok());
+    /// // splitting gemm's init/update pair across a FIFO is not
+    /// let split = FusionPlan::new(vec![vec![0], vec![1]]);
+    /// assert!(split.validate(&k).unwrap_err().contains("init/update"));
+    /// ```
     pub fn validate(&self, k: &Kernel) -> Result<(), String> {
+        self.checked_layout(k).map(|_| ())
+    }
+
+    /// The full legality check, returning the validated raw layout, its
+    /// flow edges and their topological order — so
+    /// [`fuse_with_plan`] materializes exactly what was checked
+    /// instead of re-deriving all three.
+    fn checked_layout(
+        &self,
+        k: &Kernel,
+    ) -> Result<(Vec<RawTask>, Vec<(usize, usize, String)>, Vec<usize>), String> {
         let n = k.statements.len();
         let mut owner = vec![usize::MAX; n];
         for (pi, part) in self.parts.iter().enumerate() {
@@ -163,13 +324,7 @@ impl FusionPlan {
                 }
                 owner[sid] = pi;
             }
-            let out = &k.statements[part[0]].write.array;
-            if part.iter().any(|&sid| &k.statements[sid].write.array != out) {
-                return Err(format!(
-                    "fusion plan for {}: task {:?} mixes output arrays (not output-stationary)",
-                    k.name, part
-                ));
-            }
+            self.validate_part(k, pi, part)?;
         }
         if owner.iter().any(|&o| o == usize::MAX) {
             return Err(format!(
@@ -208,28 +363,188 @@ impl FusionPlan {
             }
         }
 
-        // Acyclicity of the induced task graph under last-writer flow.
-        let edges = task_flow_edges(k, &owner);
-        if kahn_order(self.parts.len(), &edges).is_none() {
+        // Acyclicity of the materialized task graph (peels included)
+        // under last-writer flow.
+        let layout = materialize_layout(k, self);
+        let edges = layout_flow_edges(k, &layout);
+        let Some(order) = kahn_order(layout.len(), &edges) else {
             return Err(format!(
                 "fusion plan for {}: flow dependences create a task cycle",
                 k.name
             ));
+        };
+        Ok((layout, edges, order))
+    }
+
+    /// Part-local rules: unification and internal-dependence checks for
+    /// cross-array and ranged parts, and range well-formedness.
+    fn validate_part(&self, k: &Kernel, pi: usize, part: &[usize]) -> Result<(), String> {
+        let range = self.range(pi);
+        let cross = part
+            .iter()
+            .any(|&sid| k.statements[sid].write.array != k.statements[part[0]].write.array);
+        if !cross && range.is_none() {
+            return Ok(()); // classic output-stationary part
+        }
+
+        // Unification: every loop of every member maps by name onto the
+        // representative nest with an equal reduction flag; trips must
+        // be equal everywhere except the ranged outermost loop.
+        let rep = representative_of(k, part);
+        let rep_loops = &k.statements[rep].loops;
+        for &sid in part {
+            let s = &k.statements[sid];
+            for (li, l) in s.loops.iter().enumerate() {
+                let Some(rp) = rep_loops.iter().position(|rl| rl.name == l.name) else {
+                    return Err(format!(
+                        "fusion plan for {}: loop `{}` of S{sid} does not unify with the \
+                         representative nest of part {part:?}",
+                        k.name, l.name
+                    ));
+                };
+                if rep_loops[rp].reduction != l.reduction {
+                    return Err(format!(
+                        "fusion plan for {}: loop `{}` of S{sid} disagrees with S{rep} on \
+                         reduction, so part {part:?} does not unify",
+                        k.name, l.name
+                    ));
+                }
+                let outer_exempt = range.is_some() && li == 0 && rp == 0;
+                if !outer_exempt && rep_loops[rp].trip != l.trip {
+                    return Err(format!(
+                        "fusion plan for {}: loop `{}` of S{sid} has trip {} vs {} in S{rep}, \
+                         so part {part:?} does not unify",
+                        k.name, l.name, l.trip, rep_loops[rp].trip
+                    ));
+                }
+            }
+        }
+
+        // No flow or anti dependence between member statements writing
+        // different arrays: a cross-array producer/consumer pair cannot
+        // share one engine (the consumer would read a tile the same
+        // iteration is still producing).
+        for (ai, &a) in part.iter().enumerate() {
+            for &b in &part[ai + 1..] {
+                let (sa, sb) = (&k.statements[a], &k.statements[b]);
+                if sa.write.array == sb.write.array {
+                    continue;
+                }
+                if sb.reads.iter().any(|r| r.array == sa.write.array) {
+                    return Err(format!(
+                        "fusion plan for {}: flow dependence S{a} -> S{b} (array `{}`) inside \
+                         one fused task",
+                        k.name, sa.write.array
+                    ));
+                }
+                if sa.reads.iter().any(|r| r.array == sb.write.array) {
+                    return Err(format!(
+                        "fusion plan for {}: anti dependence S{a} -> S{b} (array `{}`) inside \
+                         one fused task",
+                        k.name, sb.write.array
+                    ));
+                }
+            }
+        }
+
+        // Range well-formedness.
+        if let Some((lo, hi)) = range {
+            if part.len() < 2 {
+                return Err(format!(
+                    "fusion plan for {}: fusion range on single-statement part {part:?}",
+                    k.name
+                ));
+            }
+            if lo >= hi {
+                return Err(format!(
+                    "fusion plan for {}: empty fusion range [{lo}:{hi}) on part {part:?}",
+                    k.name
+                ));
+            }
+            if rep_loops.first().map(|l| l.reduction).unwrap_or(true) {
+                return Err(format!(
+                    "fusion plan for {}: fusion range over a reduction (or missing) outermost \
+                     loop of part {part:?}",
+                    k.name
+                ));
+            }
+            let outer = &rep_loops[0].name;
+            for &sid in part {
+                match k.statements[sid].loops.first() {
+                    Some(l) if &l.name == outer => {}
+                    _ => {
+                        return Err(format!(
+                            "fusion plan for {}: S{sid} does not share the outermost iterator \
+                             `{outer}` required by the fusion range of part {part:?}",
+                            k.name
+                        ))
+                    }
+                }
+            }
+            let outer_trips: Vec<u64> =
+                part.iter().map(|&sid| k.statements[sid].loops[0].trip).collect();
+            let min_trip = *outer_trips.iter().min().expect("part is non-empty");
+            if hi > min_trip {
+                return Err(format!(
+                    "fusion plan for {}: fusion range [{lo}:{hi}) exceeds the smallest outer \
+                     trip {min_trip} of part {part:?}",
+                    k.name
+                ));
+            }
+            if lo == 0 && hi == min_trip && outer_trips.iter().all(|&t| t == min_trip) {
+                return Err(format!(
+                    "fusion plan for {}: degenerate fusion range [{lo}:{hi}) covers the whole \
+                     iteration space of part {part:?} — encode it without a range",
+                    k.name
+                ));
+            }
+            // peels are cut per output subgroup; a subgroup whose
+            // members disagree on the outer trip has no single peel
+            for sg in output_subgroups(k, part) {
+                let t0 = k.statements[sg[0]].loops[0].trip;
+                if sg.iter().any(|&s| k.statements[s].loops[0].trip != t0) {
+                    return Err(format!(
+                        "fusion plan for {}: writers of `{}` disagree on the outer trip, so \
+                         the ranged part {part:?} cannot peel them together",
+                        k.name, k.statements[sg[0]].write.array
+                    ));
+                }
+            }
         }
         Ok(())
     }
 }
 
-// Manual serde impls (the vendored serde has no derive proc-macro): a
-// plan is a JSON array of arrays of statement ids. Deserialization
+// Manual serde impls (the vendored serde has no derive proc-macro): an
+// unranged part is a JSON array of statement ids; a ranged part is an
+// object `{"stmts": [..], "range": [lo, hi]}`. Deserialization
 // re-canonicalizes, so hand-edited databases cannot smuggle in a
-// non-canonical encoding.
+// non-canonical encoding. The QoR DB's FORMAT_VERSION gates old files:
+// v2 databases (whose plans predate ranges) are evicted wholesale.
 impl serde::Serialize for FusionPlan {
     fn serialize(&self) -> serde::Value {
         serde::Value::Arr(
             self.parts
                 .iter()
-                .map(|p| serde::Value::Arr(p.iter().map(|s| serde::Serialize::serialize(s)).collect()))
+                .zip(&self.ranges)
+                .map(|(p, r)| {
+                    let stmts = serde::Value::Arr(
+                        p.iter().map(|s| serde::Serialize::serialize(s)).collect(),
+                    );
+                    match r {
+                        None => stmts,
+                        Some((lo, hi)) => serde::Value::Obj(vec![
+                            ("stmts".to_string(), stmts),
+                            (
+                                "range".to_string(),
+                                serde::Value::Arr(vec![
+                                    serde::Serialize::serialize(lo),
+                                    serde::Serialize::serialize(hi),
+                                ]),
+                            ),
+                        ]),
+                    }
+                })
                 .collect(),
         )
     }
@@ -237,8 +552,37 @@ impl serde::Serialize for FusionPlan {
 
 impl serde::Deserialize for FusionPlan {
     fn deserialize(v: &serde::Value) -> Result<FusionPlan, serde::Error> {
-        let parts: Vec<Vec<usize>> = serde::Deserialize::deserialize(v)?;
-        Ok(FusionPlan::new(parts))
+        let items = v
+            .as_arr()
+            .ok_or_else(|| serde::Error::new("fusion plan must be an array of parts"))?;
+        let mut parts: Vec<Vec<usize>> = Vec::with_capacity(items.len());
+        let mut ranges: Vec<Option<(u64, u64)>> = Vec::with_capacity(items.len());
+        for item in items {
+            match item {
+                serde::Value::Arr(_) => {
+                    parts.push(serde::Deserialize::deserialize(item)?);
+                    ranges.push(None);
+                }
+                serde::Value::Obj(_) => {
+                    parts.push(serde::Deserialize::deserialize(item.field("stmts")?)?);
+                    let r: Vec<u64> = serde::Deserialize::deserialize(item.field("range")?)?;
+                    if r.len() != 2 {
+                        return Err(serde::Error::new(format!(
+                            "fusion range must be [lo, hi], got {} entries",
+                            r.len()
+                        )));
+                    }
+                    ranges.push(Some((r[0], r[1])));
+                }
+                other => {
+                    return Err(serde::Error::new(format!(
+                        "invalid fusion part: expected array or object, got {}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+        Ok(FusionPlan::new_with_ranges(parts, ranges))
     }
 }
 
@@ -247,7 +591,7 @@ impl serde::Deserialize for FusionPlan {
 /// Variant 0 (max fusion) is always retained.
 pub const MAX_FUSION_VARIANTS: usize = 64;
 
-/// Max split combinations the enumeration *examines* (validation
+/// Max split/merge combinations the enumeration *examines* (validation
 /// included) — bounds the walk itself for kernels whose per-group
 /// composition product explodes, independent of how many combos turn
 /// out legal. Combo 0 (max fusion) is always examined first.
@@ -257,19 +601,38 @@ pub const MAX_FUSION_COMBOS: usize = 4096;
 /// fission and max output-stationary fusion, deterministically ordered
 /// with **max fusion first** (variant 0). Each output group either
 /// stays whole or splits into contiguous runs; groups holding an init
-/// statement never split; plans whose induced task graph is cyclic are
-/// dropped.
+/// statement never split; and on top of every base partition, each
+/// *pair* of parts writing different arrays is offered as a cross-array
+/// merge — whole-range when the nests unify exactly, or fused over the
+/// common outer prefix `[0, min_trip)` (with the longer statements'
+/// tails peeled) when only the outer trips differ. Plans whose
+/// materialized task graph is cyclic are dropped.
+///
+/// ```
+/// use prometheus::analysis::fusion::{enumerate_fusions, FusionPlan};
+/// use prometheus::ir::polybench;
+///
+/// let k = polybench::mvt();
+/// let variants = enumerate_fusions(&k);
+/// // variant 0 is always the max output-stationary fusion ...
+/// assert_eq!(variants[0], FusionPlan::max_fusion(&k));
+/// // ... and mvt's two independent MAC nests also merge into one
+/// // engine (a cross-array variant)
+/// assert!(variants.iter().any(|p| p.parts() == [vec![0, 1]]));
+/// ```
 pub fn enumerate_fusions(k: &Kernel) -> Vec<FusionPlan> {
     let groups = output_groups(k);
     let choices: Vec<Vec<Vec<Vec<usize>>>> =
         groups.iter().map(|g| group_partitions(k, g)).collect();
-    let mut out = Vec::new();
+    let mut out: Vec<FusionPlan> = Vec::new();
+    let mut seen: BTreeSet<FusionPlan> = BTreeSet::new();
     let mut idx = vec![0usize; choices.len()];
     // the caps bound the *work*, not just the list: stop walking (and
     // validating) the cartesian product once the list is full, and stop
     // examining combos altogether past a fixed budget even when most of
     // them are invalid (cyclic) — enumeration must stay cheap relative
-    // to one solve. Both cuts are deterministic (odometer order).
+    // to one solve. Both cuts are deterministic (odometer order, then
+    // lexicographic part pairs).
     let mut examined = 0usize;
     'odometer: loop {
         if out.len() >= MAX_FUSION_VARIANTS || examined >= MAX_FUSION_COMBOS {
@@ -280,9 +643,13 @@ pub fn enumerate_fusions(k: &Kernel) -> Vec<FusionPlan> {
         for (gi, &ci) in choices.iter().zip(idx.iter()) {
             parts.extend(gi[ci].iter().cloned());
         }
-        let plan = FusionPlan::new(parts);
-        if plan.validate(k).is_ok() {
-            out.push(plan);
+        let base = FusionPlan::new(parts);
+        let base_ok = base.validate(k).is_ok();
+        if base_ok && seen.insert(base.clone()) {
+            out.push(base.clone());
+        }
+        if base_ok {
+            merge_variants(k, &base, &mut out, &mut seen, &mut examined);
         }
         // advance the odometer, last group fastest (combo 0 = all-whole
         // = max fusion, so it leads the list)
@@ -303,15 +670,102 @@ pub fn enumerate_fusions(k: &Kernel) -> Vec<FusionPlan> {
     out
 }
 
+/// Offer every pairwise cross-array merge of `base`'s parts: the
+/// whole-range merge when the nests unify exactly, else the common
+/// outer-prefix range merge `[0, min_trip)`. Merges are pairwise only —
+/// a merged plan is not re-merged — which keeps the walk linear in
+/// parts² while covering every sibling-nest pair the zoo exhibits.
+fn merge_variants(
+    k: &Kernel,
+    base: &FusionPlan,
+    out: &mut Vec<FusionPlan>,
+    seen: &mut BTreeSet<FusionPlan>,
+    examined: &mut usize,
+) {
+    let nparts = base.parts().len();
+    for i in 0..nparts {
+        for j in (i + 1)..nparts {
+            if out.len() >= MAX_FUSION_VARIANTS || *examined >= MAX_FUSION_COMBOS {
+                return;
+            }
+            // only genuinely cross-array pairs: merging two runs of the
+            // same array's writers just reconstructs another base combo
+            let pa = &base.parts()[i];
+            let pb = &base.parts()[j];
+            if k.statements[pa[0]].write.array == k.statements[pb[0]].write.array {
+                continue;
+            }
+            // base parts carrying a range are not re-merged (base plans
+            // are unranged today; this guards future callers)
+            if base.range(i).is_some() || base.range(j).is_some() {
+                continue;
+            }
+            let mut merged_parts: Vec<Vec<usize>> = Vec::with_capacity(nparts - 1);
+            for (pi, p) in base.parts().iter().enumerate() {
+                if pi == j {
+                    continue;
+                }
+                if pi == i {
+                    let mut m = p.clone();
+                    m.extend(pb.iter().copied());
+                    m.sort_unstable();
+                    merged_parts.push(m);
+                } else {
+                    merged_parts.push(p.clone());
+                }
+            }
+            *examined += 1;
+            let whole = FusionPlan::new(merged_parts.clone());
+            if whole.validate(k).is_ok() {
+                if seen.insert(whole.clone()) {
+                    out.push(whole);
+                }
+                continue;
+            }
+            // exact unification failed — when only the outer trips
+            // disagree, fuse the shared prefix [0, min) and peel the
+            // longer tails (validate re-checks everything)
+            let min_outer = pa
+                .iter()
+                .chain(pb.iter())
+                .map(|&s| k.statements[s].loops.first().map(|l| l.trip).unwrap_or(0))
+                .min()
+                .unwrap_or(0);
+            if min_outer == 0 {
+                continue;
+            }
+            *examined += 1;
+            // the merged part keeps position i in canonical order (its
+            // first statement is unchanged and parts are disjoint)
+            let mut ranges: Vec<Option<(u64, u64)>> = vec![None; merged_parts.len()];
+            ranges[i] = Some((0, min_outer));
+            let ranged = FusionPlan::new_with_ranges(merged_parts, ranges);
+            if ranged.validate(k).is_ok() && seen.insert(ranged.clone()) {
+                out.push(ranged);
+            }
+        }
+    }
+}
+
 /// Statements grouped by written array, in first-writer program order —
-/// the atoms of the fusion space.
+/// the atoms of the fusion space. (The whole-kernel case of
+/// [`output_subgroups`]: one grouping implementation, so enumeration
+/// and peel-cutting can never disagree.)
 fn output_groups(k: &Kernel) -> Vec<Vec<usize>> {
+    let all: Vec<usize> = (0..k.statements.len()).collect();
+    output_subgroups(k, &all)
+}
+
+/// The statements of one plan part grouped by written array,
+/// first-touch order — the units a ranged part peels.
+fn output_subgroups(k: &Kernel, part: &[usize]) -> Vec<Vec<usize>> {
     let mut groups: Vec<(&str, Vec<usize>)> = Vec::new();
-    for s in &k.statements {
-        if let Some(g) = groups.iter_mut().find(|(a, _)| *a == s.write.array) {
-            g.1.push(s.id);
+    for &sid in part {
+        let a = k.statements[sid].write.array.as_str();
+        if let Some(g) = groups.iter_mut().find(|(n, _)| *n == a) {
+            g.1.push(sid);
         } else {
-            groups.push((s.write.array.as_str(), vec![s.id]));
+            groups.push((a, vec![sid]));
         }
     }
     groups.into_iter().map(|(_, g)| g).collect()
@@ -351,16 +805,86 @@ fn last_writer(k: &Kernel, before: usize, array: &str) -> Option<usize> {
         .map(|s| s.id)
 }
 
-/// Cross-task FIFO edges `(src_part, dst_part, array)` induced by a
-/// statement→part assignment, under last-writer flow semantics.
-fn task_flow_edges(k: &Kernel, owner: &[usize]) -> Vec<(usize, usize, String)> {
+/// One not-yet-renumbered task of a plan's materialization: the plan
+/// part it realizes, its peel role, its statements and its outer-loop
+/// range. Unranged parts materialize as a single `Whole` task; ranged
+/// parts as per-subgroup prologues, the `Main` fused range, then
+/// per-subgroup epilogues.
+struct RawTask {
+    part: usize,
+    role: PeelRole,
+    stmts: Vec<usize>,
+    range: Option<(u64, u64)>,
+}
+
+/// Deterministically expand a plan into its raw task layout, cutting
+/// the peels of every ranged part. Assumes a validated plan (indexing
+/// `loops[0]` of ranged statements is then safe).
+fn materialize_layout(k: &Kernel, plan: &FusionPlan) -> Vec<RawTask> {
+    let mut out = Vec::new();
+    for (pi, part) in plan.parts().iter().enumerate() {
+        match plan.range(pi) {
+            None => out.push(RawTask {
+                part: pi,
+                role: PeelRole::Whole,
+                stmts: part.clone(),
+                range: None,
+            }),
+            Some((lo, hi)) => {
+                let subgroups = output_subgroups(k, part);
+                if lo > 0 {
+                    for sg in &subgroups {
+                        out.push(RawTask {
+                            part: pi,
+                            role: PeelRole::Prologue,
+                            stmts: sg.clone(),
+                            range: Some((0, lo)),
+                        });
+                    }
+                }
+                out.push(RawTask {
+                    part: pi,
+                    role: PeelRole::Main,
+                    stmts: part.clone(),
+                    range: Some((lo, hi)),
+                });
+                for sg in &subgroups {
+                    let trip = k.statements[sg[0]]
+                        .loops
+                        .first()
+                        .map(|l| l.trip)
+                        .unwrap_or(0);
+                    if trip > hi {
+                        out.push(RawTask {
+                            part: pi,
+                            role: PeelRole::Epilogue,
+                            stmts: sg.clone(),
+                            range: Some((hi, trip)),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Cross-task FIFO edges `(src_task, dst_task, array)` over a raw
+/// layout, under last-writer flow semantics. Peels of one part never
+/// exchange data (disjoint outer ranges produce and consume locally);
+/// a reader in another part depends on *every* task containing the
+/// last writer.
+fn layout_flow_edges(k: &Kernel, layout: &[RawTask]) -> Vec<(usize, usize, String)> {
     let mut edges = BTreeSet::new();
-    for d in &k.statements {
-        for r in &d.reads {
-            if let Some(lw) = last_writer(k, d.id, &r.array) {
-                let (ts, td) = (owner[lw], owner[d.id]);
-                if ts != td {
-                    edges.insert((ts, td, r.array.clone()));
+    for (ti, t) in layout.iter().enumerate() {
+        for &sid in &t.stmts {
+            for r in &k.statements[sid].reads {
+                if let Some(lw) = last_writer(k, sid, &r.array) {
+                    for (tj, u) in layout.iter().enumerate() {
+                        if u.part != t.part && u.stmts.contains(&lw) {
+                            edges.insert((tj, ti, r.array.clone()));
+                        }
+                    }
                 }
             }
         }
@@ -400,26 +924,33 @@ fn kahn_order(n: usize, edges: &[(usize, usize, String)]) -> Option<Vec<usize>> 
 
 // ---- FusedGraph --------------------------------------------------------
 
-/// The fused task graph: nodes are [`FusedTask`]s, edges carry the array
-/// communicated over a FIFO between fused tasks. Task ids are
-/// topological (producers precede consumers); `stmt_task` memoizes the
-/// statement→task map so lookups are O(1).
+/// The fused task graph: nodes are [`FusedTask`]s (peels included),
+/// edges carry the array communicated over a FIFO between fused tasks.
+/// Task ids are topological (producers precede consumers); `stmt_task`
+/// memoizes the statement→task map so lookups are O(1).
 #[derive(Debug, Clone)]
 pub struct FusedGraph {
+    /// The materialized tasks, topological order.
     pub tasks: Vec<FusedTask>,
     /// `(src_task, dst_task, array)` FIFO edges.
     pub edges: Vec<(usize, usize, String)>,
-    /// Statement id → owning task id (precomputed at fusion time; the
-    /// old per-call linear scan over every task was O(tasks × stmts)).
+    /// Statement id → the task realizing its plan part (the `Whole` or
+    /// `Main` task; a statement in a ranged part additionally appears
+    /// in that part's peels). Precomputed at fusion time; the old
+    /// per-call linear scan over every task was O(tasks × stmts).
     stmt_task: Vec<usize>,
 }
 
 impl FusedGraph {
-    /// Owning task of statement `sid` — O(1) via the fusion-time index.
+    /// The task realizing statement `sid`'s plan part — O(1) via the
+    /// fusion-time index. For ranged parts this is the `Main` fused
+    /// task; the statement's peels are additional tasks of the same
+    /// [`FusedTask::part`].
     pub fn task_of_stmt(&self, sid: usize) -> usize {
         self.stmt_task[sid]
     }
 
+    /// Task ids with an edge into `t`, ascending and deduplicated.
     pub fn predecessors(&self, t: usize) -> Vec<usize> {
         let mut p: Vec<usize> = self
             .edges
@@ -432,6 +963,7 @@ impl FusedGraph {
         p
     }
 
+    /// Task ids with no outgoing FIFO edge (the graph's outputs).
     pub fn sinks(&self) -> Vec<usize> {
         (0..self.tasks.len())
             .filter(|t| !self.edges.iter().any(|(s, _, _)| s == t))
@@ -460,18 +992,38 @@ impl FusedGraph {
     }
 
     /// The canonical [`FusionPlan`] this graph realizes — derived from
-    /// the tasks (never stored separately), so it cannot drift.
+    /// the `Whole`/`Main` tasks (never stored separately), so it cannot
+    /// drift. Peels are materialization detail, not plan parts.
     pub fn plan(&self) -> FusionPlan {
-        FusionPlan::new(self.tasks.iter().map(|t| t.stmts.clone()).collect())
+        let mut parts = Vec::new();
+        let mut ranges = Vec::new();
+        for t in &self.tasks {
+            if matches!(t.role, PeelRole::Whole | PeelRole::Main) {
+                parts.push(t.stmts.clone());
+                ranges.push(match t.role {
+                    PeelRole::Main => t.outer_range,
+                    _ => None,
+                });
+            }
+        }
+        FusionPlan::new_with_ranges(parts, ranges)
     }
 
-    /// The partition in the paper's Table 9 shape:
-    /// `FT0 = {S1, S2}; FT1 = {S0, S3}`.
+    /// The partition in the paper's Table 9 shape, with the range
+    /// suffix for ranged/peeled tasks:
+    /// `FT0 = {S1, S2}; FT1 = {S0[0:100], S3[0:100]}`.
     pub fn partition_string(&self) -> String {
         self.tasks
             .iter()
             .map(|t| {
-                let stmts: Vec<String> = t.stmts.iter().map(|s| format!("S{s}")).collect();
+                let stmts: Vec<String> = t
+                    .stmts
+                    .iter()
+                    .map(|s| match t.outer_range {
+                        Some((lo, hi)) => format!("S{s}[{lo}:{hi}]"),
+                        None => format!("S{s}"),
+                    })
+                    .collect();
                 format!("FT{} = {{{}}}", t.id, stmts.join(", "))
             })
             .collect::<Vec<_>>()
@@ -488,23 +1040,17 @@ pub fn fuse(k: &Kernel) -> FusedGraph {
 }
 
 /// Materialize a fusion plan into a [`FusedGraph`]: validate legality,
-/// build per-task array memos, derive last-writer FIFO edges, and
-/// renumber tasks topologically (Kahn with stable smallest-id
-/// tie-break) so producers always precede consumers — atax groups
-/// y={S0,S3} before tmp={S1,S2} in program order, but tmp feeds y; the
-/// paper's Table 9 likewise lists atax as FT0:{S1,S2}, FT1:{S0,S3}.
+/// expand ranged parts into main + peel tasks, build per-task array
+/// memos, derive last-writer FIFO edges, and renumber tasks
+/// topologically (Kahn with stable smallest-id tie-break) so producers
+/// always precede consumers — atax groups y={S0,S3} before tmp={S1,S2}
+/// in program order, but tmp feeds y; the paper's Table 9 likewise
+/// lists atax as FT0:{S1,S2}, FT1:{S0,S3}.
 pub fn fuse_with_plan(k: &Kernel, plan: &FusionPlan) -> Result<FusedGraph, String> {
-    plan.validate(k)?;
-    let n = plan.n_tasks();
-    let mut owner = vec![0usize; k.statements.len()];
-    for (pi, part) in plan.parts().iter().enumerate() {
-        for &sid in part {
-            owner[sid] = pi;
-        }
-    }
-    let edges = task_flow_edges(k, &owner);
-    let order = kahn_order(n, &edges)
-        .ok_or_else(|| format!("fusion plan for {} induces a cyclic task graph", k.name))?;
+    // one validation pass hands back the layout, edges and topological
+    // order it already derived — nothing is recomputed here
+    let (layout, edges, order) = plan.checked_layout(k)?;
+    let n = layout.len();
 
     // order[new_id] = old_id; build the inverse map and renumber.
     let mut new_of_old = vec![0usize; n];
@@ -515,9 +1061,26 @@ pub fn fuse_with_plan(k: &Kernel, plan: &FusionPlan) -> Result<FusedGraph, Strin
         .iter()
         .enumerate()
         .map(|(new_id, &old_id)| {
-            let stmts = plan.parts()[old_id].clone();
+            let raw = &layout[old_id];
+            let stmts = raw.stmts.clone();
             let output = k.statements[stmts[0]].write.array.clone();
-            FusedTask { id: new_id, stmts, output, array_info: Vec::new() }
+            let mut outputs: Vec<String> = Vec::new();
+            for &sid in &stmts {
+                let a = &k.statements[sid].write.array;
+                if !outputs.iter().any(|x| x == a) {
+                    outputs.push(a.clone());
+                }
+            }
+            FusedTask {
+                id: new_id,
+                stmts,
+                output,
+                outputs,
+                array_info: Vec::new(),
+                outer_range: raw.range,
+                part: raw.part,
+                role: raw.role,
+            }
         })
         .collect();
     let edges: Vec<(usize, usize, String)> = {
@@ -530,8 +1093,10 @@ pub fn fuse_with_plan(k: &Kernel, plan: &FusionPlan) -> Result<FusedGraph, Strin
     };
     let mut stmt_task = vec![0usize; k.statements.len()];
     for t in &tasks {
-        for &sid in &t.stmts {
-            stmt_task[sid] = t.id;
+        if matches!(t.role, PeelRole::Whole | PeelRole::Main) {
+            for &sid in &t.stmts {
+                stmt_task[sid] = t.id;
+            }
         }
     }
     for t in &mut tasks {
@@ -623,6 +1188,9 @@ mod tests {
         assert_eq!(g.tasks[2].stmts, vec![4, 5]);
         assert_eq!(g.tasks[0].output, "E");
         assert_eq!(g.tasks[2].output, "G");
+        assert_eq!(g.tasks[0].outputs, vec!["E".to_string()]);
+        assert_eq!(g.tasks[0].role, PeelRole::Whole);
+        assert_eq!(g.tasks[0].outer_range, None);
         // FIFO edges: FT0 --E--> FT2, FT1 --F--> FT2.
         assert!(g.edges.iter().any(|(s, d, a)| (*s, *d, a.as_str()) == (0, 2, "E")));
         assert!(g.edges.iter().any(|(s, d, a)| (*s, *d, a.as_str()) == (1, 2, "F")));
@@ -673,12 +1241,130 @@ mod tests {
     }
 
     #[test]
-    fn mvt_tasks_stay_separate() {
-        // mvt's two statements write different arrays -> 2 concurrent tasks.
+    fn mvt_tasks_stay_separate_under_max_fusion() {
+        // mvt's two statements write different arrays -> 2 concurrent
+        // tasks under the (output-stationary) max fusion.
         let k = polybench::mvt();
         let g = fuse(&k);
         assert_eq!(g.tasks.len(), 2);
         assert!(g.edges.is_empty());
+    }
+
+    #[test]
+    fn mvt_cross_array_merge_is_one_engine() {
+        // The cross-array variant merges both MAC nests into one task
+        // writing x1 and x2, with no FIFO edges.
+        let k = polybench::mvt();
+        let merged = FusionPlan::new(vec![vec![0, 1]]);
+        merged.validate(&k).unwrap_or_else(|e| panic!("{e}"));
+        let g = fuse_with_plan(&k, &merged).unwrap();
+        assert_eq!(g.tasks.len(), 1);
+        assert_eq!(g.tasks[0].stmts, vec![0, 1]);
+        assert_eq!(g.tasks[0].outputs, vec!["x1".to_string(), "x2".to_string()]);
+        assert_eq!(g.tasks[0].role, PeelRole::Whole);
+        assert!(g.edges.is_empty());
+        assert_eq!(g.plan(), merged);
+        // and the enumeration offers it as a variant
+        let variants = enumerate_fusions(&k);
+        assert!(variants.contains(&merged), "{variants:?}");
+    }
+
+    #[test]
+    fn cross_array_merge_rejects_internal_dependences() {
+        // 2-madd: S1 reads T written by S0 — one engine cannot both
+        // produce and consume the tile in the same iteration.
+        let k = polybench::two_madd();
+        let err = FusionPlan::new(vec![vec![0, 1]]).validate(&k).unwrap_err();
+        assert!(err.contains("dependence"), "{err}");
+        // 3mm: E and F nests unify by name but disagree on every trip.
+        let k3 = polybench::three_mm();
+        let err3 = FusionPlan::new(vec![vec![0, 1, 2, 3], vec![4, 5]])
+            .validate(&k3)
+            .unwrap_err();
+        assert!(err3.contains("unify"), "{err3}");
+    }
+
+    #[test]
+    fn range_fusion_peels_prologue_and_epilogue() {
+        // gemver's x-update chain {S1, S2} fused over i in [100, 300):
+        // the peels keep the chain together and the graph stays acyclic.
+        let k = polybench::gemver();
+        let plan = FusionPlan::new_with_ranges(
+            vec![vec![0], vec![1, 2], vec![3]],
+            vec![None, Some((100, 300)), None],
+        );
+        plan.validate(&k).unwrap_or_else(|e| panic!("{e}"));
+        assert!(plan.has_ranges());
+        let g = fuse_with_plan(&k, &plan).unwrap();
+        // {S0}, prologue {S1,S2}[0:100], main {S1,S2}[100:300],
+        // epilogue {S1,S2}[300:400], {S3}
+        assert_eq!(g.tasks.len(), 5);
+        let main = &g.tasks[g.task_of_stmt(1)];
+        assert_eq!(main.role, PeelRole::Main);
+        assert_eq!(main.outer_range, Some((100, 300)));
+        assert_eq!(main.stmts, vec![1, 2]);
+        let peels: Vec<&FusedTask> = g
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.role, PeelRole::Prologue | PeelRole::Epilogue))
+            .collect();
+        assert_eq!(peels.len(), 2);
+        for p in &peels {
+            assert_eq!(p.stmts, vec![1, 2], "peels keep the update chain together");
+            assert_eq!(p.part, main.part);
+        }
+        assert!(g.is_acyclic());
+        // the plan round-trips through the graph (peels fold back in)
+        assert_eq!(g.plan(), plan);
+        // w's task consumes x from every peel of the ranged part
+        let tw = g.task_of_stmt(3);
+        let x_producers: BTreeSet<usize> = g
+            .edges
+            .iter()
+            .filter(|(_, d, a)| *d == tw && a == "x")
+            .map(|(s, _, _)| *s)
+            .collect();
+        assert_eq!(x_producers.len(), 3, "{:?}", g.edges);
+    }
+
+    #[test]
+    fn range_fusion_never_splits_init_update_pairs() {
+        // gemm {S0 init, S1 update} over i in [0, 100): the epilogue
+        // peel carries the whole pair, not just the update.
+        let k = polybench::gemm();
+        let plan = FusionPlan::new_with_ranges(vec![vec![0, 1]], vec![Some((0, 100))]);
+        plan.validate(&k).unwrap_or_else(|e| panic!("{e}"));
+        let g = fuse_with_plan(&k, &plan).unwrap();
+        assert_eq!(g.tasks.len(), 2); // main [0:100) + epilogue [100:200)
+        for t in &g.tasks {
+            assert_eq!(t.stmts, vec![0, 1], "init/update pair split by a range");
+        }
+        assert_eq!(g.tasks[0].outer_range, Some((0, 100)));
+        assert_eq!(g.tasks[1].outer_range, Some((100, 200)));
+        assert_eq!(g.plan(), plan);
+    }
+
+    #[test]
+    fn malformed_ranges_are_rejected() {
+        let k = polybench::gemm();
+        // empty range
+        assert!(FusionPlan::new_with_ranges(vec![vec![0, 1]], vec![Some((100, 100))])
+            .validate(&k)
+            .is_err());
+        // beyond the outer trip (gemm i = 200)
+        assert!(FusionPlan::new_with_ranges(vec![vec![0, 1]], vec![Some((0, 500))])
+            .validate(&k)
+            .is_err());
+        // degenerate full-span range must be encoded as None
+        let err = FusionPlan::new_with_ranges(vec![vec![0, 1]], vec![Some((0, 200))])
+            .validate(&k)
+            .unwrap_err();
+        assert!(err.contains("degenerate"), "{err}");
+        // single-statement parts cannot carry a range
+        let k2 = polybench::mvt();
+        assert!(FusionPlan::new_with_ranges(vec![vec![0], vec![1]], vec![Some((0, 100)), None])
+            .validate(&k2)
+            .is_err());
     }
 
     #[test]
@@ -716,6 +1402,27 @@ mod tests {
     }
 
     #[test]
+    fn ranged_plans_round_trip_through_serde() {
+        use serde::{Deserialize, Serialize};
+        let plan = FusionPlan::new_with_ranges(
+            vec![vec![0], vec![1, 2], vec![3]],
+            vec![None, Some((100, 300)), None],
+        );
+        let v = plan.serialize();
+        let back = FusionPlan::deserialize(&v).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.range(1), Some((100, 300)));
+        // the textual form really carries the range object
+        let text = serde::json::to_string(&v);
+        assert!(text.contains("\"range\""), "{text}");
+        // malformed ranges fail to parse
+        assert!(FusionPlan::deserialize(&serde::json::parse("[{\"stmts\":[0],\"range\":[1]}]")
+            .unwrap())
+        .is_err());
+        assert!(FusionPlan::deserialize(&serde::Value::Int(3)).is_err());
+    }
+
+    #[test]
     fn enumerate_is_max_fusion_first_and_legal() {
         for k in polybench::all_kernels() {
             let variants = enumerate_fusions(&k);
@@ -731,21 +1438,27 @@ mod tests {
     }
 
     #[test]
-    fn splittable_groups_yield_extra_variants() {
-        // gemver's x = {S1, S2} (update + update), trmm's B = {S0, S1}
-        // and symm's C = {S1, S2} are compute/compute chains: each
-        // yields exactly one extra fission variant. Init/update kernels
-        // stay single-variant.
+    fn splittable_and_mergeable_groups_yield_extra_variants() {
+        // gemver's x = {S1, S2}, trmm's B = {S0, S1} and symm's C =
+        // {S1, S2} are compute/compute chains yielding a fission
+        // variant each; mvt, gesummv and 3-madd carry independent
+        // sibling nests that merge cross-array; symm's fissioned base
+        // additionally lets the temp2/C[k-scatter] nests merge. Kernels
+        // whose nests neither split nor unify stay single-variant.
         for (name, n) in [
             ("gemver", 2),
             ("trmm", 2),
-            ("symm", 2),
+            ("symm", 3),
             ("gemm", 1),
             ("3mm", 1),
+            ("2mm", 1),
             ("atax", 1),
-            ("gesummv", 1),
-            ("mvt", 1),
-            ("3-madd", 1),
+            ("bicg", 1),
+            ("madd", 1),
+            ("2-madd", 1),
+            ("gesummv", 2),
+            ("mvt", 2),
+            ("3-madd", 2),
         ] {
             let k = polybench::by_name(name).unwrap();
             assert_eq!(enumerate_fusions(&k).len(), n, "{name}");
@@ -759,8 +1472,10 @@ mod tests {
         // topologically numbered.
         let k = polybench::gemver();
         let variants = enumerate_fusions(&k);
-        let split = &variants[1];
-        assert_eq!(split.n_tasks(), 4);
+        let split = variants
+            .iter()
+            .find(|p| p.n_tasks() == 4)
+            .expect("gemver has a fission variant");
         let g = fuse_with_plan(&k, split).unwrap();
         assert!(g.is_acyclic());
         let t1 = g.task_of_stmt(1);
@@ -786,14 +1501,15 @@ mod tests {
         let split = FusionPlan::new(vec![vec![0], vec![1]]);
         assert!(split.validate(&k).unwrap_err().contains("init/update"));
         assert!(fuse_with_plan(&k, &split).is_err());
-        // mixing output arrays in one task
-        let k2 = polybench::mvt();
-        let mixed = FusionPlan::new(vec![vec![0, 1]]);
-        assert!(mixed.validate(&k2).unwrap_err().contains("output"));
         // missing / duplicated statements
         assert!(FusionPlan::new(vec![vec![0]]).validate(&k).is_err());
         assert!(FusionPlan::new(vec![vec![0, 1], vec![1]]).validate(&k).is_err());
         assert!(FusionPlan::new(vec![vec![0, 1, 2]]).validate(&k).is_err());
+        // a cross-array merge whose nests cannot unify (bicg's s/q
+        // engines disagree on which loop is the reduction)
+        let kb = polybench::bicg();
+        let err = FusionPlan::new(vec![vec![0, 1, 2, 3]]).validate(&kb).unwrap_err();
+        assert!(err.contains("unify") || err.contains("reduction"), "{err}");
     }
 
     #[test]
@@ -803,5 +1519,14 @@ mod tests {
         assert_eq!(FusionPlan::fissioned(&k), FusionPlan::max_fusion(&k));
         let k2 = polybench::gemm();
         assert_ne!(FusionPlan::fissioned(&k2), FusionPlan::max_fusion(&k2));
+    }
+
+    #[test]
+    fn part_strings_carry_ranges() {
+        let plan = FusionPlan::new_with_ranges(
+            vec![vec![0], vec![1, 2]],
+            vec![None, Some((0, 64))],
+        );
+        assert_eq!(plan.part_strings(), vec!["{S0}", "{S1[0:64], S2[0:64]}"]);
     }
 }

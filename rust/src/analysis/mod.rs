@@ -7,5 +7,7 @@ pub mod reuse;
 pub mod taskgraph;
 
 pub use deps::{DepEdge, DepKind};
-pub use fusion::{enumerate_fusions, fuse, fuse_with_plan, FusedGraph, FusedTask, FusionPlan};
+pub use fusion::{
+    enumerate_fusions, fuse, fuse_with_plan, FusedGraph, FusedTask, FusionPlan, PeelRole,
+};
 pub use taskgraph::TaskGraph;

@@ -1,11 +1,15 @@
 //! The Prometheus flow (paper Fig 2): from kernel IR to an optimized,
 //! simulated, optionally hardware-validated design. The flow builds
-//! each kernel's [`FusionSpace`] (every legal fusion variant with its
+//! each kernel's [`FusionSpace`] (every legal fusion variant — partial
+//! loop-range and cross-array variants included — with its
 //! [`GeometryCache`]) once, solves fusion jointly with the rest of the
 //! space, and threads the **winning variant's** fused graph and cache
 //! through every evaluation stage — simulation, board model and
 //! generated HLS all derive from the same resolved design of the same
-//! fusion, never from a recomputed `fuse()`.
+//! fusion (peeled sub-tasks included), never from a recomputed
+//! `fuse()`. A QoR-cache hit re-materializes exactly the record's own
+//! variant through `fuse_with_plan`, so ranged designs replay their
+//! peels bit-identically.
 
 use crate::analysis::fusion::FusedGraph;
 use crate::codegen::{generate_hls_resolved, generate_host};

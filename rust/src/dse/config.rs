@@ -109,12 +109,14 @@ pub struct DesignConfig {
     /// Whether load/compute/store overlap (ping-pong) is enabled.
     pub overlap: bool,
     /// The fusion variant this design was solved for — the canonical
-    /// statement partition ([`FusionPlan`]). Task ids in `tasks` index
-    /// the [`FusedGraph`] this plan materializes, so a design is only
-    /// meaningful together with its own fusion: `validate` rejects a
-    /// graph realizing a different partition, which is also the gate
-    /// that keeps QoR-DB warm starts from crossing incompatible
-    /// variants.
+    /// statement partition plus per-part fusion ranges
+    /// ([`FusionPlan`]). Task ids in `tasks` index the [`FusedGraph`]
+    /// this plan materializes (a ranged part contributes its peeled
+    /// prologue/epilogue tasks too, each with its own `TaskConfig`), so
+    /// a design is only meaningful together with its own fusion:
+    /// `validate` rejects a graph realizing a different partition,
+    /// which is also the gate that keeps QoR-DB warm starts from
+    /// crossing incompatible variants.
     pub fusion: FusionPlan,
     pub tasks: Vec<TaskConfig>,
 }
@@ -127,7 +129,9 @@ impl DesignConfig {
     /// Structural validation against the kernel/fused graph: the fusion
     /// plan is legal for `k` and is exactly the partition `fg`
     /// realizes, permutation is a permutation, intra divides padded
-    /// trip, padded ≥ original, plans valid, SLR ids in range.
+    /// trip, padded ≥ the task's *effective* trip (a ranged/peeled
+    /// task's outermost loop spans only its `[lo, hi)` slice), plans
+    /// valid, SLR ids in range.
     pub fn validate(&self, k: &Kernel, fg: &FusedGraph, slrs: usize) -> Result<(), String> {
         self.fusion.validate(k)?;
         if self.fusion != fg.plan() {
@@ -145,11 +149,37 @@ impl DesignConfig {
                 fg.tasks.len()
             ));
         }
+        // id coverage before any indexing: persisted designs (QoR DB
+        // records survive hand edits and version skew) must fail this
+        // gate with an Err, never an index panic
+        let mut seen_ids = vec![false; fg.tasks.len()];
+        for tc in &self.tasks {
+            if tc.task >= fg.tasks.len() {
+                return Err(format!(
+                    "task id {} out of range ({} fused tasks)",
+                    tc.task,
+                    fg.tasks.len()
+                ));
+            }
+            if seen_ids[tc.task] {
+                return Err(format!("duplicate config for task {}", tc.task));
+            }
+            seen_ids[tc.task] = true;
+        }
         for tc in &self.tasks {
             let rep = fg.tasks[tc.task].representative(k);
             let nest = &k.statements[rep].loops;
             if tc.perm.len() != nest.len() {
                 return Err(format!("task {}: perm len mismatch", tc.task));
+            }
+            if tc.padded_trip.len() != nest.len() || tc.intra.len() != nest.len() {
+                return Err(format!(
+                    "task {}: padded_trip/intra lengths ({}, {}) do not match the {}-loop nest",
+                    tc.task,
+                    tc.padded_trip.len(),
+                    tc.intra.len(),
+                    nest.len()
+                ));
             }
             let mut sorted = tc.perm.clone();
             sorted.sort_unstable();
@@ -157,13 +187,19 @@ impl DesignConfig {
                 return Err(format!("task {}: perm {:?} is not a permutation", tc.task, tc.perm));
             }
             for (p, l) in nest.iter().enumerate() {
-                if tc.padded_trip[p] < l.trip {
+                // a ranged/peeled task covers only its outer-range span
+                let eff_trip = if p == 0 {
+                    fg.tasks[tc.task].outer_span().unwrap_or(l.trip)
+                } else {
+                    l.trip
+                };
+                if tc.padded_trip[p] < eff_trip {
                     return Err(format!(
-                        "task {}: padded trip {} < original {} at loop {}",
-                        tc.task, tc.padded_trip[p], l.trip, p
+                        "task {}: padded trip {} < effective {} at loop {}",
+                        tc.task, tc.padded_trip[p], eff_trip, p
                     ));
                 }
-                if tc.padded_trip[p] % tc.intra[p] != 0 {
+                if tc.intra[p] == 0 || tc.padded_trip[p] % tc.intra[p] != 0 {
                     return Err(format!(
                         "task {}: intra {} does not divide padded {} (Eq 1)",
                         tc.task, tc.intra[p], tc.padded_trip[p]

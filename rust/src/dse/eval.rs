@@ -3,6 +3,7 @@
 //! ([`super::constraints`]), the executing simulator
 //! ([`crate::sim::engine`]), the board model ([`crate::sim::board`]) and
 //! the HLS code generator ([`crate::codegen::hls`]).
+#![deny(missing_docs)]
 //!
 //! Before this module existed, each of those consumers independently
 //! re-resolved transfer plans (`default_plan`, `define_level` /
@@ -17,10 +18,12 @@
 //! * [`GeometryCache`] / [`TaskStatics`] — everything that depends only
 //!   on the kernel and its fusion, built **once at fusion time**:
 //!   per-array declarations and translated accesses, representative
-//!   nests, legal loop orders, statement→representative position maps,
-//!   FIFO topology. The solver's inner loop (10^5+ evaluations per
-//!   solve) shares one cache; `service::batch` shares it further across
-//!   parallel jobs for the same kernel.
+//!   nests, *effective trip counts* (a ranged/peeled task's outermost
+//!   loop is narrowed to its `[lo, hi)` span, so peeled sub-tasks get
+//!   their own geometry), legal loop orders, statement→representative
+//!   position maps, FIFO topology. The solver's inner loop (10^5+
+//!   evaluations per solve) shares one cache; `service::batch` shares
+//!   it further across parallel jobs for the same kernel.
 //! * [`ResolvedTask`] / [`ResolvedPlan`] — everything a concrete
 //!   [`TaskConfig`] adds: clamped+defaulted transfer plans, tile
 //!   dimensions and byte counts at the define level, transfer counts,
@@ -40,6 +43,7 @@ use crate::ir::{Kernel, StmtKind};
 /// lookups into the kernel.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArrayStatics {
+    /// Array name as declared in the kernel.
     pub name: String,
     /// Access translated to representative-nest loop positions, one
     /// entry per array dimension (`None` = dimension not indexed by a
@@ -47,17 +51,32 @@ pub struct ArrayStatics {
     pub access: Vec<Option<usize>>,
     /// Declared extent of each dimension.
     pub dims: Vec<u64>,
+    /// Bytes per element of the declared dtype.
     pub elem_bytes: u64,
+    /// Bits per element of the declared dtype.
     pub elem_bits: u64,
     /// Declared total element count.
     pub total_elems: u64,
+    /// Whether any statement of the task reads this array.
     pub reads: bool,
+    /// Whether any statement of the task writes this array.
     pub writes: bool,
+    /// Whether the array is a kernel input (lives off-chip).
     pub is_input: bool,
+    /// Whether the array is a kernel output (stored off-chip).
     pub is_output: bool,
+    /// Whether the array is an intermediate (neither input nor output).
     pub is_intermediate: bool,
-    /// Producing fused task when this array arrives over a FIFO.
+    /// Producing fused task when this array arrives over a FIFO: the
+    /// lowest-id producer (the only one, except when a ranged producer
+    /// part was peeled).
     pub fifo_producer: Option<usize>,
+    /// Every producing task of this FIFO-borne array, ascending — a
+    /// ranged producer part contributes each of its peels. The
+    /// simulator token-gates the consumer on all of them, so a
+    /// consumer can never start ahead of an unfinished peel. Empty for
+    /// non-FIFO arrays.
+    pub fifo_producers: Vec<usize>,
 }
 
 impl ArrayStatics {
@@ -81,8 +100,21 @@ pub struct TaskStatics {
     pub red_mask: Vec<bool>,
     /// Statement ids of the fused task, program order.
     pub stmts: Vec<usize>,
-    /// The array this task produces.
+    /// The task's primary output (the single output for classic tasks).
     pub output: String,
+    /// Every array this task writes, first-touch order (≥ 2 entries
+    /// after a cross-array merge).
+    pub outputs: Vec<String>,
+    /// Effective trip count per representative loop position: the
+    /// declared trips, with position 0 narrowed to the task's
+    /// fused/peeled `outer_range` span when one is set. The solver
+    /// enumerates tile factors against these, so peeled sub-tasks get
+    /// their own geometry.
+    pub trips: Vec<u64>,
+    /// Sub-range `[lo, hi)` of the outermost loop this task covers
+    /// (`None` = full iteration space) — see
+    /// [`crate::analysis::fusion::FusedTask::outer_range`].
+    pub outer_range: Option<(u64, u64)>,
     /// Whether the task contains an init statement.
     pub has_init: bool,
     /// Legal inter-tile loop orders (reduction loops pinned innermost).
@@ -92,8 +124,13 @@ pub struct TaskStatics {
     /// Per statement (parallel to `stmts`): each of its loop positions
     /// mapped onto the representative nest by iterator name.
     pub stmt_rep_pos: Vec<Vec<Option<usize>>>,
-    /// Total elements this task emits over outgoing FIFO edges.
-    pub fifo_out_total_elems: u64,
+    /// Per outgoing FIFO edge `(array, elements)`: what this task
+    /// actually emits of that array — a peel's entry is scaled to its
+    /// outer-range share of the array's writer iterations. The
+    /// simulator derives each consumer's per-array token rate from
+    /// this, so a cross-array merged engine is not credited with
+    /// emitting every array at its combined rate.
+    pub fifo_out_elems_by_array: Vec<(String, u64)>,
 }
 
 impl TaskStatics {
@@ -118,11 +155,15 @@ impl TaskStatics {
             .iter()
             .map(|info| {
                 let decl = k.array(&info.name).expect("declared array");
-                let fifo_producer = fg
+                let mut fifo_producers: Vec<usize> = fg
                     .edges
                     .iter()
-                    .find(|(_, dst, arr)| *dst == fused.id && arr == &info.name)
-                    .map(|(src, _, _)| *src);
+                    .filter(|(_, dst, arr)| *dst == fused.id && arr == &info.name)
+                    .map(|(src, _, _)| *src)
+                    .collect();
+                fifo_producers.sort_unstable();
+                fifo_producers.dedup();
+                let fifo_producer = fifo_producers.first().copied();
                 ArrayStatics {
                     name: info.name.clone(),
                     access: info.access.clone(),
@@ -136,36 +177,83 @@ impl TaskStatics {
                     is_output: decl.is_output,
                     is_intermediate: decl.is_intermediate(),
                     fifo_producer,
+                    fifo_producers,
                 }
             })
             .collect();
-        let fifo_out_total_elems: u64 = fg
+        // Per outgoing edge, the elements this task actually emits of
+        // that array: a peel covers only its outer-range share of the
+        // array's *writer* iterations (scaled per array — the writers
+        // of different arrays in a ranged cross-array merge may have
+        // different outer trips), so its stream carries that fraction
+        // of the declared footprint.
+        let fifo_out_elems_by_array: Vec<(String, u64)> = fg
             .edges
             .iter()
             .filter(|(src, _, _)| *src == fused.id)
-            .map(|(_, _, a)| k.array(a).map(|x| x.elems()).unwrap_or(0))
-            .sum();
+            .map(|(_, _, a)| {
+                let total = k.array(a).map(|x| x.elems()).unwrap_or(0);
+                let emitted = match fused.outer_range {
+                    Some((lo, hi)) => {
+                        let wtrip = fused
+                            .stmts
+                            .iter()
+                            .find(|&&s| &k.statements[s].write.array == a)
+                            .and_then(|&s| k.statements[s].loops.first().map(|l| l.trip))
+                            .unwrap_or(0);
+                        if wtrip > 0 {
+                            total * (hi - lo).min(wtrip) / wtrip
+                        } else {
+                            total
+                        }
+                    }
+                    None => total,
+                };
+                (a.clone(), emitted)
+            })
+            .collect();
         let has_init = fused
             .stmts
             .iter()
             .any(|&s| k.statements[s].kind == StmtKind::Init);
+        let trips: Vec<u64> = rep_stmt
+            .loops
+            .iter()
+            .enumerate()
+            .map(|(p, l)| {
+                if p == 0 {
+                    fused.outer_span().unwrap_or(l.trip)
+                } else {
+                    l.trip
+                }
+            })
+            .collect();
         TaskStatics {
             task: fused.id,
             rep,
             red_mask,
             stmts: fused.stmts.clone(),
             output: fused.output.clone(),
+            outputs: fused.outputs.clone(),
+            trips,
+            outer_range: fused.outer_range,
             has_init,
             orders,
             arrays,
             stmt_rep_pos,
-            fifo_out_total_elems,
+            fifo_out_elems_by_array,
         }
     }
 
     /// The statics of array `name`, if this task touches it.
     pub fn array(&self, name: &str) -> Option<&ArrayStatics> {
         self.arrays.iter().find(|a| a.name == name)
+    }
+
+    /// Total elements this task emits over outgoing FIFO edges (the
+    /// sum of [`TaskStatics::fifo_out_elems_by_array`]).
+    pub fn fifo_out_total_elems(&self) -> u64 {
+        self.fifo_out_elems_by_array.iter().map(|(_, e)| *e).sum()
     }
 }
 
@@ -174,10 +262,12 @@ impl TaskStatics {
 /// across `service::batch` worker threads for the same kernel.
 #[derive(Debug, Clone)]
 pub struct GeometryCache {
+    /// Per-task statics, indexed by fused task id.
     pub tasks: Vec<TaskStatics>,
 }
 
 impl GeometryCache {
+    /// Build the fusion-time memo for every task of `fg`.
     pub fn new(k: &Kernel, fg: &FusedGraph) -> GeometryCache {
         GeometryCache {
             tasks: fg.tasks.iter().map(|t| TaskStatics::new(k, fg, t)).collect(),
@@ -190,8 +280,11 @@ impl GeometryCache {
 /// kernel and shared read-only across solver workers and batch jobs.
 #[derive(Debug, Clone)]
 pub struct FusionVariant {
+    /// The canonical statement partition this variant realizes.
     pub plan: FusionPlan,
+    /// The materialized fused-task graph (peels included).
     pub fg: FusedGraph,
+    /// The fusion-time geometry memo for `fg`.
     pub cache: GeometryCache,
 }
 
@@ -204,11 +297,14 @@ impl FusionVariant {
 }
 
 /// The kernel's explorable fusion space: every legal variant between
-/// full fission and max output-stationary fusion, variant 0 always the
-/// max-fusion plan. The solver's outer loop iterates these; the service
-/// layer builds one space per kernel and shares it across requests.
+/// full fission and max output-stationary fusion — including partial
+/// (loop-range) fusions with their peeled sub-tasks and cross-array
+/// merges of unifying sibling nests — variant 0 always the max-fusion
+/// plan. The solver's outer loop iterates these; the service layer
+/// builds one space per kernel and shares it across requests.
 #[derive(Debug, Clone)]
 pub struct FusionSpace {
+    /// The legal variants, variant 0 always the max-fusion plan.
     pub variants: Vec<FusionVariant>,
 }
 
@@ -263,7 +359,9 @@ pub struct ResolvedPlan {
     pub define_level: usize,
     /// Transfer level, clamped to `0..levels`.
     pub transfer_level: usize,
+    /// Selected burst width in bits (Eq 3).
     pub bitwidth: u64,
+    /// Number of ping-pong buffers (1 = no overlap, 2/3 = double/triple).
     pub buffers: u64,
     /// Data-tile extents at the define level (paper `f_{a,l}`).
     pub tile_dims: Vec<u64>,
@@ -306,10 +404,12 @@ pub struct ResolvedTask<'a> {
 }
 
 impl<'a> ResolvedTask<'a> {
+    /// The fusion-time statics this resolution reads from.
     pub fn statics(&self) -> &'a TaskStatics {
         self.geo.st
     }
 
+    /// The task configuration this resolution was built for.
     pub fn cfg(&self) -> &'a TaskConfig {
         self.geo.cfg
     }
@@ -420,8 +520,11 @@ pub fn resolve_task<'a>(
 /// `graph_latency`, `feasible`/`slr_usage`, `simulate`, `board_eval`
 /// and `generate_hls`.
 pub struct ResolvedDesign<'a> {
+    /// The kernel the design optimizes.
     pub k: &'a Kernel,
+    /// The fused-task graph of the design's own fusion variant.
     pub fg: &'a FusedGraph,
+    /// The design being resolved.
     pub design: &'a DesignConfig,
     /// Indexed by **task id** (`tasks[i].cfg().task == i`), regardless
     /// of the order `design.tasks` was stored in — graph-level
@@ -431,6 +534,7 @@ pub struct ResolvedDesign<'a> {
 }
 
 impl<'a> ResolvedDesign<'a> {
+    /// Resolve `design` against its fusion variant's graph and cache.
     pub fn new(
         k: &'a Kernel,
         fg: &'a FusedGraph,
@@ -516,7 +620,8 @@ mod tests {
         assert_eq!(e_in_ft2.fifo_producer, Some(0));
         assert_eq!(ft0.array("E").unwrap().fifo_producer, None);
         // FT0 emits E (180x190 elements) downstream
-        assert_eq!(ft0.fifo_out_total_elems, 180 * 190);
+        assert_eq!(ft0.fifo_out_total_elems(), 180 * 190);
+        assert_eq!(ft0.fifo_out_elems_by_array, vec![("E".to_string(), 180 * 190)]);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! The design-space solver — the reproduction's substitute for
 //! AMPL + Gurobi (paper §6.1).
+#![deny(missing_docs)]
 //!
 //! The paper's "NLP" is a nonconvex quadratic program over *discrete*
 //! decision variables (divisor-constrained tile factors, permutation
@@ -29,7 +30,7 @@
 //! passes (padded + padding-free restart) across a scoped worker pool
 //! sharing the read-only [`GeometryCache`] and one [`Deadline`], and
 //! stage 3 distributes the top of the DFS tree across the same pool
-//! with a shared atomic incumbent bound ([`SharedBest`]), so every
+//! with a shared atomic incumbent bound (`SharedBest`), so every
 //! worker prunes against the globally best design. Region-renamed
 //! duplicate assignments are never explored (SLR symmetry breaking:
 //! task *t* may reuse an open region or open exactly the next fresh
@@ -47,9 +48,14 @@
 //! dependence-legal statement partition between full fission and max
 //! output-stationary fusion ([`crate::analysis::fusion::enumerate_fusions`])
 //! becomes a *variant* with its own [`FusedGraph`] and
-//! [`GeometryCache`]. Stage-1 enumeration units are flattened across
+//! [`GeometryCache`]. The space covers the paper's §3.1 full
+//! generality: partial (loop-range) fusions materialize peeled
+//! prologue/epilogue sub-tasks that are solved like any other task
+//! (their geometry runs over the narrowed outer trip), and cross-array
+//! merges fold unifying sibling nests into one engine. Stage-1
+//! enumeration units are flattened across
 //! variants onto the same worker pool, and all variants share one
-//! [`SharedBest`] incumbent — a finished variant's simulated latency
+//! `SharedBest` incumbent — a finished variant's simulated latency
 //! prunes its siblings' DFS from the first node. The total order
 //! extends to `(latency, variant index, candidate index, assignment)`,
 //! so the result stays deterministic and thread-count independent, and
@@ -85,7 +91,12 @@ pub enum Scenario {
     /// every framework all U55C resources for RTL comparison).
     Rtl,
     /// On-board: `slrs` usable regions, each capped at `frac` utilization.
-    OnBoard { slrs: usize, frac: f64 },
+    OnBoard {
+        /// Number of usable SLR regions.
+        slrs: usize,
+        /// Per-region utilization cap in (0, 1].
+        frac: f64,
+    },
 }
 
 impl std::fmt::Display for Scenario {
@@ -144,7 +155,12 @@ pub enum SolverError {
     /// `task` names the first task with no individually-fitting
     /// candidate when the infeasibility is attributable to one task;
     /// `None` means every task fits alone but no global assembly does.
-    Infeasible { task: Option<usize>, detail: String },
+    Infeasible {
+        /// First task with no fitting candidate, when attributable.
+        task: Option<usize>,
+        /// Human-readable description of the violated budget.
+        detail: String,
+    },
 }
 
 impl std::fmt::Display for SolverError {
@@ -173,14 +189,17 @@ pub struct Deadline {
 }
 
 impl Deadline {
+    /// Start the deadline clock now, expiring after `timeout`.
     pub fn new(timeout: Duration) -> Deadline {
         Deadline { start: Instant::now(), timeout }
     }
 
+    /// Whether the deadline has passed.
     pub fn expired(&self) -> bool {
         self.start.elapsed() > self.timeout
     }
 
+    /// Wall time since the solve started.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
@@ -202,7 +221,9 @@ pub fn default_jobs() -> usize {
 /// Solver knobs. Baselines restrict this space to mimic each framework.
 #[derive(Debug, Clone)]
 pub struct SolverOptions {
+    /// Resource scenario the solve targets (RTL or on-board regions).
     pub scenario: Scenario,
+    /// Execution model of the generated design (dataflow/sequential).
     pub model: ExecutionModel,
     /// Computation/communication overlap (ping-pong buffering).
     pub overlap: bool,
@@ -264,6 +285,7 @@ impl Default for SolverOptions {
 /// Solver output.
 #[derive(Debug, Clone)]
 pub struct SolverResult {
+    /// The best feasible design found.
     pub design: DesignConfig,
     /// The fused-task graph of the **winning fusion variant** — the one
     /// `design.tasks` indexes. Downstream consumers (simulation, board
@@ -272,13 +294,17 @@ pub struct SolverResult {
     pub fused: FusedGraph,
     /// Fusion variants this solve considered (1 = fixed fusion).
     pub fusion_variants: usize,
+    /// Analytic DAG latency of the winning design.
     pub latency: GraphLatency,
+    /// Simulated throughput at the device's target clock.
     pub gflops: f64,
+    /// Wall time the solve took.
     pub solve_time: Duration,
     /// Design points evaluated. Deterministic for `jobs = 1`; with more
     /// workers the count varies slightly run to run (pruning races),
     /// while `design`/`latency` stay bit-identical.
     pub explored: u64,
+    /// Whether the anytime timeout cut the search short.
     pub timed_out: bool,
     /// Whether a usable `SolverOptions::incumbent` actually seeded the
     /// branch-and-bound bound (false when no incumbent was given *or*
@@ -290,8 +316,11 @@ pub struct SolverResult {
 /// can exercise [`pareto`] directly on synthetic fronts.
 #[derive(Debug, Clone)]
 pub struct Candidate {
+    /// The per-task configuration.
     pub cfg: TaskConfig,
+    /// Standalone task latency under the analytic model.
     pub latency: u64,
+    /// Resource usage of the configured task.
     pub res: ResourceVec,
 }
 
@@ -738,18 +767,22 @@ fn enumerate_task(
     let has_red = nest.iter().any(|l| l.reduction);
     let ii = if has_red { dev.fadd_latency } else { 1 };
 
-    // per-loop factor options
-    let per_loop: Vec<Vec<super::padding::FactorChoice>> = nest
+    // per-loop factor options, over the task's *effective* trips (a
+    // ranged/peeled task's outermost loop spans only its [lo, hi)
+    // slice — st.trips narrows position 0 accordingly, so every peel
+    // gets its own tiling geometry)
+    let per_loop: Vec<Vec<super::padding::FactorChoice>> = st
+        .trips
         .iter()
-        .map(|l| {
+        .map(|&trip| {
             if !opts.tiling {
                 // no tiling: intra = full loop (everything on-chip,
                 // Stream-HLS/ScaleHLS style) — but cap reductions to keep
                 // partitioning legal.
-                let f = legal_intra_factors(l.trip, 0, l.trip);
+                let f = legal_intra_factors(trip, 0, trip);
                 vec![*f.last().unwrap(), f[0]]
             } else {
-                legal_intra_factors(l.trip, opts.max_pad, opts.max_factor_per_loop)
+                legal_intra_factors(trip, opts.max_pad, opts.max_factor_per_loop)
             }
         })
         .collect();
@@ -818,7 +851,7 @@ fn enumerate_task(
     // always keep the trivial (untiled, unrolled-by-1) combo as a floor.
     if scored.is_empty() {
         let intra: Vec<u64> = vec![1; nest.len()];
-        let padded: Vec<u64> = nest.iter().map(|l| l.trip).collect();
+        let padded: Vec<u64> = st.trips.clone();
         combos.push((intra, padded));
         scored.push((u64::MAX, 1, (combos.len() - 1) as u32, 0));
     }
@@ -982,7 +1015,7 @@ const PARETO_KEEP: usize = 16;
 /// silently dropped those, starving stage-3 assembly on LUT-tight
 /// budgets).
 ///
-/// The front is then cut to [`PARETO_KEEP`] by latency, but the
+/// The front is then cut to `PARETO_KEEP` (16) by latency, but the
 /// cheapest-per-resource witnesses (min-LUT, min-BRAM18, min-FF,
 /// min-DSP) are never dropped: when stage 3 has to trade speed for
 /// resources, the extreme points are exactly the candidates it needs.

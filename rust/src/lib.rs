@@ -20,8 +20,11 @@
 //!   unrolled intra-tile tasks Prometheus generates, validated against a
 //!   pure-jnp oracle.
 //!
-//! See `DESIGN.md` for the full system inventory and the paper-experiment
-//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+//! See `ARCHITECTURE.md` for the request lifecycle (CLI → coordinator
+//! → fusion space → solver → simulator/board → codegen, with a worked
+//! example per stage), `DESIGN.md` for the full system inventory and
+//! the paper-experiment index, and `EXPERIMENTS.md` for
+//! measured-vs-paper results.
 
 pub mod analysis;
 pub mod baselines;

@@ -83,15 +83,17 @@ fn run() -> Result<()> {
             let variants = enumerate_fusions(&k);
             println!("legal fusion variants: {}", variants.len());
             for (vi, plan) in variants.iter().enumerate() {
-                let parts: Vec<String> = plan
-                    .parts()
-                    .iter()
-                    .map(|p| {
-                        let ss: Vec<String> = p.iter().map(|s| format!("S{s}")).collect();
-                        format!("{{{}}}", ss.join(", "))
-                    })
-                    .collect();
-                println!("  variant {vi}{}: {}", if vi == 0 { " (max fusion)" } else { "" }, parts.join(" "));
+                // ranged parts print as {Sj[lo:hi], ...}: the part fuses
+                // over that slice of the shared outer loop, the leftover
+                // iterations peel into prologue/epilogue tasks
+                let tag = if vi == 0 {
+                    " (max fusion)"
+                } else if plan.has_ranges() {
+                    " (partial/loop-range)"
+                } else {
+                    ""
+                };
+                println!("  variant {vi}{tag}: {}", plan.part_strings().join(" "));
             }
         }
         "optimize" => {
@@ -377,7 +379,8 @@ fn run() -> Result<()> {
                  \x20                                      --fixed-fusion pins max fusion\n\
                  \x20 report [--kernels K,..|all] [--onboard N --frac F] [--full] [--jobs N]\n\
                  \x20                                      chosen fusion partition per kernel\n\
-                 \x20                                      (paper Table 9 `FTi = {{Sj, ...}}` format)\n\
+                 \x20                                      (paper Table 9 `FTi = {{Sj, ...}}` format;\n\
+                 \x20                                      partial fusion prints `FTi = {{Sj[lo:hi], ...}}`)\n\
                  \x20 batch [--kernels K,..|all] [--scenarios rtl,onboard:N:F,..]\n\
                  \x20       [--models dataflow,sequential] [--db FILE] [--jobs N] [--quick]\n\
                  \x20                                      parallel batch service + QoR knowledge base\n\

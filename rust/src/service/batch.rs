@@ -17,7 +17,8 @@
 //!    inter-request pool and each solve's own intra-solve workers
 //!    (`SolverOptions::jobs`), so both a wide batch and a single heavy
 //!    miss saturate the machine. Each kernel's [`FusionSpace`] — every
-//!    legal fusion variant with its fused graph and geometry cache — is
+//!    legal fusion variant, partial (loop-range) and cross-array
+//!    variants included, with its fused graph and geometry cache — is
 //!    built **once** up front; every worker job for that kernel shares
 //!    the space, so parallel batch jobs skip both re-fusion and the
 //!    configuration-independent re-resolution;

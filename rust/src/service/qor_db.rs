@@ -1,5 +1,6 @@
 //! The QoR knowledge base: a persistent store of previously-solved
 //! designs and their quality-of-result metrics.
+#![deny(missing_docs)]
 //!
 //! CollectiveHLS-style amortization: the first time a (kernel, device,
 //! scenario, execution model, solver knobs) point is optimized, the
@@ -13,7 +14,7 @@
 //! On-disk format (JSON, written pretty so databases diff cleanly):
 //!
 //! ```text
-//! { "format_version": 1,
+//! { "format_version": 3,
 //!   "records": { "<canonical key>": { "design": {..}, "latency_cycles": .., .. }, .. } }
 //! ```
 //!
@@ -31,10 +32,17 @@ use std::path::Path;
 
 /// Version of the on-disk format. Bump on any incompatible change; old
 /// files then fall back to an empty database instead of misparsing.
-/// v2: designs carry their fusion variant (`DesignConfig::fusion`) and
-/// keys carry the `explore_fusion` solver knob — v1 records have
-/// neither, so they are evicted wholesale by the version check.
-pub const FORMAT_VERSION: u64 = 2;
+///
+/// * v2: designs carry their fusion variant (`DesignConfig::fusion`)
+///   and keys carry the `explore_fusion` solver knob — v1 records have
+///   neither, so they were evicted wholesale by the version check.
+/// * v3: fusion plans generalize to partial (loop-range) and
+///   cross-array fusion — a plan part may carry a `[lo, hi)` range
+///   whose peels materialize as extra tasks, and the explored space an
+///   `explore_fusion` key weighed is strictly larger. A v2 record's
+///   answer is therefore stale for the *same* canonical key, so v2
+///   databases are evicted wholesale, exactly as v2 evicted v1.
+pub const FORMAT_VERSION: u64 = 3;
 
 /// Everything that determines a solve's outcome, canonicalized.
 ///
@@ -46,17 +54,29 @@ pub const FORMAT_VERSION: u64 = 2;
 /// problem.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DesignKey {
+    /// Kernel name (the zoo is the namespace).
     pub kernel: String,
+    /// Device name the solve targeted.
     pub device: String,
+    /// Resource scenario (RTL or on-board regions).
     pub scenario: Scenario,
+    /// Execution model of the solved design.
     pub model: ExecutionModel,
+    /// Whether computation/communication overlap was enabled.
     pub overlap: bool,
+    /// Padding bound (Eq 2; 0 = padding disabled).
     pub max_pad: u64,
+    /// Whether loop permutation was explored.
     pub permute: bool,
+    /// Whether data tiling was explored.
     pub tiling: bool,
+    /// Cap on per-loop intra factors.
     pub max_factor_per_loop: u64,
+    /// Cap on the task unroll factor.
     pub max_unroll: u64,
+    /// Stage-1 beam width.
     pub beam: usize,
+    /// Anytime timeout in milliseconds.
     pub timeout_ms: u128,
     /// Whether fusion was explored as a design dimension. Part of the
     /// key (it changes the answer); which *variant* won is not — that
@@ -114,6 +134,7 @@ impl DesignKey {
 /// One stored answer: the winning design plus its QoR metrics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QorRecord {
+    /// The winning design (carries its own fusion plan).
     pub design: DesignConfig,
     /// Simulated total latency in cycles (the authoritative metric the
     /// solver selects by).
@@ -126,6 +147,7 @@ pub struct QorRecord {
     pub solve_time_ms: f64,
     /// Design points the original solve explored.
     pub explored: u64,
+    /// Whether the original solve hit its anytime timeout.
     pub timed_out: bool,
 }
 
@@ -218,14 +240,17 @@ pub struct QorDb {
 }
 
 impl QorDb {
+    /// An empty knowledge base.
     pub fn new() -> QorDb {
         QorDb::default()
     }
 
+    /// Number of stored records.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether the store holds no records.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }

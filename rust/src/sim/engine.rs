@@ -16,7 +16,7 @@
 //! For **Sequential** (shared-buffer) designs there is no cross-task
 //! concurrency to execute: each task's duration is the closed form of
 //! the shared per-task recursion (Eq 14), evaluated on the very same
-//! [`ResolvedTask`] the analytic model reads. This makes `simulate` and
+//! [`crate::dse::eval::ResolvedTask`] the analytic model reads. This makes `simulate` and
 //! `graph_latency` equal by construction for Sequential designs — the
 //! guard pinned by `tests/consistency_model_sim.rs`.
 
@@ -63,10 +63,11 @@ struct TaskSteps {
     ddr_out: u64,
     /// Cycles of level-0 preloading before the first step.
     preload: u64,
-    /// FIFO inputs: (producer task, elems needed per step).
-    fifo_in: Vec<(usize, u64)>,
-    /// FIFO outputs: elems emitted per step (per consumer edge).
-    fifo_out_elems: u64,
+    /// FIFO inputs: (producer task, elems needed per step, producer's
+    /// per-step emission rate of *this* array). One entry per
+    /// producing task — a range-peeled producer part contributes one
+    /// per peel, so the consumer waits on all of them.
+    fifo_in: Vec<(usize, u64, u64)>,
     /// Whether ping-pong overlap is active.
     overlap: bool,
 }
@@ -82,9 +83,50 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
     let mut fifo_in = Vec::new();
 
     for (a, rp) in rt.arrays() {
-        // FIFO input: array produced by another fused task
-        if let Some(p) = a.fifo_producer {
-            fifo_in.push((p, a.total_elems.div_ceil(steps)));
+        // FIFO input: array produced by another fused task. When the
+        // producer part was range-peeled, every peel is a producer
+        // (`fifo_producers`, precomputed at fusion time) — token-gate
+        // on each of them, so the consumer cannot be simulated
+        // starting ahead of an unfinished peel. The token rate is the
+        // producer's per-step emission of *this* array: a cross-array
+        // merged engine splits its bandwidth across its outputs, and a
+        // producer broadcasting one array to several consumers
+        // produces each element once (the pre-PR 5 model summed the
+        // footprint per edge, crediting broadcast consumers with a
+        // doubled rate). A peeled *consumer* likewise demands only its
+        // outer-range share of an array the ranged loop indexes.
+        if a.fifo_producer.is_some() {
+            // demand: the whole array, narrowed to this task's
+            // outer-range share when the ranged loop indexes it
+            let outer_indexed = a.access.iter().any(|p| *p == Some(0));
+            let demand = match rt.statics().outer_range {
+                Some((lo, hi)) if outer_indexed => {
+                    let full = rd.k.statements[rt.statics().rep]
+                        .loops
+                        .first()
+                        .map(|l| l.trip)
+                        .unwrap_or(0);
+                    if full > 0 {
+                        a.total_elems * (hi - lo).min(full) / full
+                    } else {
+                        a.total_elems
+                    }
+                }
+                _ => a.total_elems,
+            };
+            let per_step = demand.div_ceil(steps);
+            for &p in &a.fifo_producers {
+                let prt = rd.task(p);
+                let emitted = prt
+                    .statics()
+                    .fifo_out_elems_by_array
+                    .iter()
+                    .find(|(n, _)| n == &a.name)
+                    .map(|(_, e)| *e)
+                    .unwrap_or(0);
+                let rate = emitted.div_ceil(prt.steps.max(1));
+                fifo_in.push((p, per_step, rate));
+            }
             continue; // FIFO tiles don't hit DDR
         }
         let per_tile = dev.transfer_cycles(rp.tile_bytes, rp.bitwidth);
@@ -113,9 +155,6 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
         ddr_in_streams.iter().sum::<u64>().div_ceil(dev.mem_channels as u64)
     };
 
-    // does this task feed any FIFO?
-    let fifo_out_elems = rt.statics().fifo_out_total_elems.div_ceil(steps);
-
     TaskSteps {
         steps,
         compute,
@@ -123,7 +162,6 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
         ddr_out: ddr_out_total / steps,
         preload,
         fifo_in,
-        fifo_out_elems,
         overlap: rd.design.overlap,
     }
 }
@@ -215,9 +253,12 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
         let start_base = slr_pen;
 
         // cumulative FIFO availability: time when `e` elements of the
-        // producer's output have been emitted.
-        let avail = |p: usize, elems_needed: u64| -> u64 {
-            let per = specs[p].fifo_out_elems.max(1);
+        // producer's output of the consumed array have been emitted
+        // (`rate` = that producer's per-step emission of the array; a
+        // demand beyond what the producer emits clamps to its final
+        // emission, so a peel gates its consumer until it finishes).
+        let avail = |p: usize, elems_needed: u64, rate: u64| -> u64 {
+            let per = rate.max(1);
             let idx = elems_needed.div_ceil(per).max(1) as usize - 1;
             let times = &emit_times[p];
             if times.is_empty() {
@@ -240,9 +281,9 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
             total_steps += 1;
             // FIFO wait: cumulative elements needed through step i+1
             let mut in_ready = preload_done;
-            for &(p, per_step) in &spec.fifo_in {
+            for &(p, per_step, rate) in &spec.fifo_in {
                 let need = per_step * (i + 1);
-                in_ready = in_ready.max(avail(p, need));
+                in_ready = in_ready.max(avail(p, need, rate));
             }
             // load of tile i may begin once the previous tile's buffer is
             // free (ping-pong: after compute of i-1) and data is ready

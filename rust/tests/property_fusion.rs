@@ -1,24 +1,35 @@
-//! Fusion-space properties over the 15-kernel zoo (ISSUE 4):
+//! Fusion-space properties over the 15-kernel zoo (ISSUE 4, enlarged
+//! to partial/loop-range and cross-array fusion by ISSUE 5):
 //!
 //! * every enumerated fusion variant is **legal** — each statement in
-//!   exactly one task, dependence-preserving (cross-task flow deps
+//!   exactly one plan part, dependence-preserving (cross-task flow deps
 //!   respect the topological task numbering; last-writer deps carry a
 //!   FIFO edge), acyclic by a real topological check;
 //! * the **max-fusion variant reproduces `fuse()` bit-identically** —
 //!   same tasks, same memoized array info, same FIFO edges, and the
 //!   same Table 5 inter-task communication column;
+//! * **range fusion stays legal** — peeled prologue/epilogue tasks
+//!   never split an init/update pair, cover exactly the leftover
+//!   iterations, and the materialized graph (peels included) stays
+//!   acyclic; **cross-array merges** appear for unifying sibling nests
+//!   (mvt, gesummv, 3-madd, symm) and never for dependent or
+//!   non-unifying ones;
 //! * the **fusion-explored solve never returns a worse (latency)
 //!   design than the fixed-fusion solve** for any zoo kernel — the
 //!   explored space is a superset scored by the same simulator;
 //! * exploration stays **deterministic and thread-count independent**:
 //!   `jobs = 1` and `jobs = 8` return bit-identical designs (the PR 3
-//!   total-order contract, extended by the variant index).
+//!   total-order contract, extended by the variant index) over the
+//!   enlarged space.
 
 use prometheus::analysis::deps::{dependences, DepKind};
-use prometheus::analysis::fusion::{enumerate_fusions, fuse, fuse_with_plan, FusionPlan};
+use prometheus::analysis::fusion::{
+    enumerate_fusions, fuse, fuse_with_plan, FusionPlan, PeelRole,
+};
 use prometheus::dse::solver::{solve, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
+use prometheus::ir::StmtKind;
 use prometheus::sim::engine::simulate;
 use std::time::Duration;
 
@@ -47,12 +58,16 @@ fn every_enumerated_variant_is_legal() {
             for t in &fg.tasks {
                 assert!(!t.stmts.is_empty(), "{} variant {vi}: empty task", k.name);
                 for &s in &t.stmts {
-                    seen[s] += 1;
-                    assert_eq!(fg.task_of_stmt(s), t.id, "{} variant {vi}", k.name);
-                    assert_eq!(
-                        k.statements[s].write.array, t.output,
-                        "{} variant {vi}: mixed-output task",
-                        k.name
+                    if matches!(t.role, PeelRole::Whole | PeelRole::Main) {
+                        seen[s] += 1;
+                        assert_eq!(fg.task_of_stmt(s), t.id, "{} variant {vi}", k.name);
+                    }
+                    assert!(
+                        t.outputs.contains(&k.statements[s].write.array),
+                        "{} variant {vi}: task {} missing output `{}`",
+                        k.name,
+                        t.id,
+                        k.statements[s].write.array
                     );
                 }
             }
@@ -82,6 +97,98 @@ fn every_enumerated_variant_is_legal() {
             assert_eq!(&fg.plan(), plan, "{} variant {vi}", k.name);
         }
     }
+}
+
+#[test]
+fn cross_array_variants_appear_for_unifying_sibling_nests() {
+    // mvt, gesummv, 3-madd and symm carry independent sibling nests
+    // whose loop structures unify: each gains a merged-engine variant
+    // (a task writing >= 2 arrays). Kernels whose sibling nests are
+    // dependent (2-madd, atax, 2mm) or do not unify (bicg's reduction
+    // axes differ, 3mm's trips differ) gain none.
+    for name in ["mvt", "gesummv", "3-madd", "symm"] {
+        let k = polybench::by_name(name).unwrap();
+        let variants = enumerate_fusions(&k);
+        let merged = variants
+            .iter()
+            .find_map(|p| {
+                let fg = fuse_with_plan(&k, p).unwrap();
+                fg.tasks.iter().any(|t| t.outputs.len() >= 2).then_some(fg)
+            })
+            .unwrap_or_else(|| panic!("{name}: no cross-array variant"));
+        assert!(merged.is_acyclic(), "{name}");
+    }
+    for name in ["2-madd", "atax", "2mm", "bicg", "3mm", "gemm", "madd", "syrk", "syr2k"] {
+        let k = polybench::by_name(name).unwrap();
+        for p in enumerate_fusions(&k) {
+            let fg = fuse_with_plan(&k, &p).unwrap();
+            assert!(
+                fg.tasks.iter().all(|t| t.outputs.len() == 1),
+                "{name}: unexpected cross-array merge in {p:?}"
+            );
+        }
+    }
+    // dependent sibling nests must not merge: one engine cannot both
+    // produce and consume a tile in the same iteration
+    let k2 = polybench::two_madd();
+    assert!(FusionPlan::new(vec![vec![0, 1]]).validate(&k2).is_err());
+}
+
+#[test]
+fn range_fusion_is_legal_and_never_splits_init_update_pairs() {
+    // An explicitly ranged plan (the encoding the enumeration emits for
+    // unequal-trip merges, and that users can persist through the QoR
+    // DB): peels cover exactly the leftover iterations, init/update
+    // pairs stay together in every peel, and the graph is acyclic.
+    let k = polybench::gemm(); // C = {S0 init, S1 update}, i-trip 200
+    let plan = FusionPlan::new_with_ranges(vec![vec![0, 1]], vec![Some((0, 128))]);
+    plan.validate(&k).unwrap_or_else(|e| panic!("{e}"));
+    let fg = fuse_with_plan(&k, &plan).unwrap();
+    assert!(fg.is_acyclic());
+    // coverage: the outer-range spans tile the whole iteration space
+    let mut spans: Vec<(u64, u64)> = fg.tasks.iter().filter_map(|t| t.outer_range).collect();
+    spans.sort_unstable();
+    assert_eq!(spans, vec![(0, 128), (128, 200)]);
+    // init/update glue survives peeling: every task holding an update
+    // of C also holds C's init
+    for t in &fg.tasks {
+        let has_update = t
+            .stmts
+            .iter()
+            .any(|&s| k.statements[s].kind == StmtKind::Compute);
+        let has_init = t.stmts.iter().any(|&s| k.statements[s].kind == StmtKind::Init);
+        assert!(
+            !has_update || has_init,
+            "peel {:?} split gemm's init/update pair",
+            t.stmts
+        );
+    }
+    // a ranged part still refuses to split the pair across parts
+    let bad = FusionPlan::new_with_ranges(vec![vec![0], vec![1]], vec![None, Some((0, 128))]);
+    assert!(bad.validate(&k).is_err());
+    // and the solver handles the peeled geometry end to end: the ranged
+    // variant solves, validates against its own graph, and simulates
+    let dev = Device::u55c();
+    let gemver = polybench::gemver();
+    let ranged = FusionPlan::new_with_ranges(
+        vec![vec![0], vec![1, 2], vec![3]],
+        vec![None, Some((100, 300)), None],
+    );
+    ranged.validate(&gemver).unwrap_or_else(|e| panic!("{e}"));
+    let rg = fuse_with_plan(&gemver, &ranged).unwrap();
+    assert_eq!(rg.tasks.len(), 5, "prologue + main + epilogue + 2 whole parts");
+    let r = prometheus::dse::solver::solve_with_cache(
+        &gemver,
+        &rg,
+        &prometheus::dse::eval::GeometryCache::new(&gemver, &rg),
+        &dev,
+        &quick(1),
+    )
+    .unwrap_or_else(|e| panic!("ranged gemver solve failed: {e}"));
+    assert_eq!(r.design.fusion, ranged);
+    r.design.validate(&gemver, &r.fused, dev.slrs).unwrap_or_else(|e| panic!("{e}"));
+    let sim = simulate(&gemver, &r.fused, &r.design, &dev);
+    assert!(sim.cycles > 0);
 }
 
 #[test]
@@ -169,9 +276,11 @@ fn explored_solve_never_worse_than_fixed_fusion() {
 fn fusion_exploration_is_thread_count_independent() {
     // jobs changes solve speed, never the answer — including which
     // fusion variant wins. Pinned on the kernels with a real multi-
-    // variant space plus a multi-task single-variant control.
+    // variant space — the cross-array mergers (mvt, gesummv, 3-madd)
+    // and the split/merge mix (symm) included — plus a multi-task
+    // single-variant control (3mm, atax).
     let dev = Device::u55c();
-    for name in ["gemver", "trmm", "symm", "3mm", "atax"] {
+    for name in ["gemver", "trmm", "symm", "3mm", "atax", "mvt", "gesummv", "3-madd"] {
         let k = polybench::by_name(name).unwrap();
         let one = solve(&k, &dev, &quick(1)).unwrap();
         let eight = solve(&k, &dev, &quick(8)).unwrap();

@@ -127,6 +127,66 @@ fn corrupt_file_falls_back_to_empty() {
 }
 
 #[test]
+fn v2_databases_are_evicted_wholesale_round_trip() {
+    // The FORMAT_VERSION 2 -> 3 migration (fusion plans generalized to
+    // partial/loop-range + cross-array fusion): a v2 file loads as
+    // empty — its answers are stale for the same keys, because the
+    // explored space grew — and the next save round-trips as a valid
+    // v3 database. Mirrors the v1 -> v2 eviction of the previous bump.
+    assert_eq!(FORMAT_VERSION, 3, "bump this test with the next migration");
+    let dev = Device::u55c();
+    let mut db = QorDb::new();
+    db.insert(&DesignKey::new("gemm", &dev, &SolverOptions::default()), record("gemm", 4321));
+    let path = tmp_path("v2_evict");
+    db.save(&path).unwrap();
+    // rewrite the version stamp back to v2 — exactly what a database
+    // written before this migration looks like to the loader
+    let text = std::fs::read_to_string(&path).unwrap();
+    let downgraded = text.replace(
+        &format!("\"format_version\": {FORMAT_VERSION}"),
+        "\"format_version\": 2",
+    );
+    assert_ne!(text, downgraded);
+    std::fs::write(&path, &downgraded).unwrap();
+    let evicted = QorDb::load(&path);
+    assert!(evicted.is_empty(), "v2 records must be evicted wholesale");
+    // refill + save: the file is v3 again and round-trips
+    let mut refilled = evicted;
+    refilled
+        .insert(&DesignKey::new("gemm", &dev, &SolverOptions::default()), record("gemm", 1234));
+    refilled.save(&path).unwrap();
+    let back = QorDb::load(&path);
+    assert_eq!(back, refilled);
+    assert!(std::fs::read_to_string(&path).unwrap().contains("\"format_version\": 3"));
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&PathBuf::from(format!("{}.bak", path.display())));
+}
+
+#[test]
+fn ranged_fusion_plans_persist_through_the_db() {
+    // A design solved for a partial-fusion variant stores its ranged
+    // plan and comes back bit-identically (the `{"stmts", "range"}`
+    // part encoding added in v3).
+    let dev = Device::u55c();
+    let mut rec = record("gemver", 555);
+    rec.design.fusion = FusionPlan::new_with_ranges(
+        vec![vec![0], vec![1, 2], vec![3]],
+        vec![None, Some((100, 300)), None],
+    );
+    let key = DesignKey::new("gemver", &dev, &SolverOptions::default());
+    let mut db = QorDb::new();
+    db.insert(&key, rec.clone());
+    let path = tmp_path("ranged_plan");
+    db.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"range\""), "ranged part encoding missing: {text}");
+    let back = QorDb::load(&path);
+    assert_eq!(back.get(&key).unwrap().design.fusion, rec.design.fusion);
+    assert_eq!(back.get(&key).unwrap().design.fusion.range(1), Some((100, 300)));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn old_version_falls_back_to_empty() {
     let dev = Device::u55c();
     let mut db = QorDb::new();
