@@ -19,6 +19,7 @@ use crate::dse::eval::{FusionSpace, FusionVariant, GeometryCache, ResolvedDesign
 use crate::dse::solver::{solve_space, Scenario, SolverOptions, SolverResult};
 use crate::hw::Device;
 use crate::ir::Kernel;
+use crate::obs;
 use crate::sim::board::{board_eval_resolved, BoardReport};
 use crate::sim::engine::{simulate_resolved, SimReport};
 use anyhow::Result;
@@ -74,7 +75,7 @@ pub fn optimize_kernel(
     // 1. solve the design space — fusion jointly with everything else
     let mut solver = opts.solver.clone();
     solver.scenario = opts.scenario;
-    let mut space = FusionSpace::for_solver(&kernel, solver.explore_fusion);
+    let mut space = build_space(&kernel, solver.explore_fusion);
     let result = solve_validated(&kernel, &space, dev, &solver)?;
     let FusionVariant { fg: fused, cache, .. } = take_winning_variant(&mut space, &result)?;
 
@@ -91,6 +92,8 @@ fn solve_validated(
     dev: &Device,
     solver: &SolverOptions,
 ) -> Result<SolverResult> {
+    let _span = obs::span("flow", "flow.solve")
+        .map(|s| s.arg("kernel", obs::ArgVal::Str(kernel.name.clone())));
     let result = solve_space(kernel, space, dev, solver)
         .map_err(|e| anyhow::anyhow!("{}: {e}", kernel.name))?;
     result
@@ -110,6 +113,14 @@ fn take_winning_variant(space: &mut FusionSpace, result: &SolverResult) -> Resul
     Ok(space.take_variant(win))
 }
 
+/// [`FusionSpace::for_solver`] under a `flow.fusion_space` span, so the
+/// variant-enumeration + geometry-cache phase shows up in traces.
+fn build_space(kernel: &Kernel, explore_fusion: bool) -> FusionSpace {
+    let _span = obs::span("flow", "flow.fusion_space")
+        .map(|s| s.arg("kernel", obs::ArgVal::Str(kernel.name.clone())));
+    FusionSpace::for_solver(kernel, explore_fusion)
+}
+
 /// Stages 2–5 of the flow (simulate → board model → codegen → optional
 /// PJRT validation), shared by the solve path and the QoR-cache hit path
 /// so the two can never drift apart.
@@ -124,11 +135,37 @@ fn finish_flow(
     // 2. simulate (RTL-equivalent) + 3. board model where applicable,
     //    both reading the one resolved design
     let rd = ResolvedDesign::new(&kernel, &fused, &cache, &result.design);
-    let sim = simulate_resolved(&rd, dev);
-    let (board, gf) = scenario_eval_resolved(&rd, dev, opts.scenario, &sim);
+    let sim = {
+        let _span = obs::span("flow", "flow.sim");
+        simulate_resolved(&rd, dev)
+    };
+    trace_sim_stalls(&sim);
+    let (board, gf) = {
+        let _span = obs::span("flow", "flow.board");
+        scenario_eval_resolved(&rd, dev, opts.scenario, &sim)
+    };
     drop(rd);
 
     finish_flow_with(kernel, fused, &cache, result, sim, board, gf, opts)
+}
+
+/// Emit the final simulation's per-FIFO stall attribution as trace
+/// instant events (no-op unless tracing is on). Only the *winning*
+/// design's simulation is traced — the solver's leaf simulations never
+/// collect attribution in the first place.
+fn trace_sim_stalls(sim: &SimReport) {
+    for fs in &sim.fifo_stalls {
+        obs::instant(
+            "sim",
+            "sim.fifo_stall",
+            vec![
+                ("array".to_string(), obs::ArgVal::Str(fs.array.clone())),
+                ("producer".to_string(), obs::ArgVal::Int(fs.producer as i128)),
+                ("consumer".to_string(), obs::ArgVal::Int(fs.consumer as i128)),
+                ("cycles".to_string(), obs::ArgVal::Int(fs.cycles as i128)),
+            ],
+        );
+    }
 }
 
 /// Stages 4–5 with the evaluation products already computed — lets the
@@ -147,6 +184,7 @@ fn finish_flow_with(
 ) -> Result<OptimizedKernel> {
     // 4. codegen, off the same resolved design the evaluation used
     if let Some(dir) = &opts.emit_dir {
+        let _span = obs::span("flow", "flow.codegen");
         std::fs::create_dir_all(dir)?;
         let rd = ResolvedDesign::new(&kernel, &fused, cache, &result.design);
         let hls = generate_hls_resolved(&rd);
@@ -163,6 +201,7 @@ fn finish_flow_with(
         Some(root)
             if crate::runtime::Executor::available() && artifact_exists(root, &kernel.name) =>
         {
+            let _span = obs::span("flow", "flow.validate");
             let exe = crate::runtime::Executor::load(root, &kernel.name)?;
             Some(exe.validate()?)
         }
@@ -270,6 +309,8 @@ pub fn optimize_kernel_cached(
     // GeometryCache) — never the whole fusion space; enumerating and
     // caching every variant is solver work the cache exists to skip.
     let mut stale_hit = false;
+    let lookup_span = obs::span("flow", "flow.qor_db")
+        .map(|s| s.arg("op", obs::ArgVal::Str("lookup".to_string())));
     if let Some(rec) = db.get(&key) {
         // A record from an incompatible (older) code or resource model
         // (same on-disk version), or whose fusion partition is no
@@ -319,7 +360,9 @@ pub fn optimize_kernel_cached(
                     explored: 0,
                     timed_out: false,
                     warm_started: false,
+                    telemetry: obs::SolveTelemetry::default(),
                 };
+                drop(lookup_span);
                 let r = finish_flow(kernel, fused, cache, result, dev, opts)?;
                 return Ok((r, CacheStatus::Hit));
             }
@@ -328,9 +371,10 @@ pub fn optimize_kernel_cached(
     if stale_hit {
         db.remove_canonical(&key.canonical());
     }
+    drop(lookup_span);
 
     // Miss: build the full fusion space once, for the solve.
-    let mut space = FusionSpace::for_solver(&kernel, solver.explore_fusion);
+    let mut space = build_space(&kernel, solver.explore_fusion);
 
     // Miss: solve (warm-started when the KB has a related design whose
     // fusion plan is a variant of *this* solve's space — the solver
@@ -352,10 +396,21 @@ pub fn optimize_kernel_cached(
     // db even when this function errors.
     let FusionVariant { fg: fused, cache, .. } = take_winning_variant(&mut space, &result)?;
     let rd = ResolvedDesign::new(&kernel, &fused, &cache, &result.design);
-    let sim = simulate_resolved(&rd, dev);
-    let (board, gf) = scenario_eval_resolved(&rd, dev, opts.scenario, &sim);
+    let sim = {
+        let _span = obs::span("flow", "flow.sim");
+        simulate_resolved(&rd, dev)
+    };
+    trace_sim_stalls(&sim);
+    let (board, gf) = {
+        let _span = obs::span("flow", "flow.board");
+        scenario_eval_resolved(&rd, dev, opts.scenario, &sim)
+    };
     drop(rd);
-    db.insert(&key, crate::service::QorRecord::from_products(&result, &sim, gf));
+    {
+        let _span = obs::span("flow", "flow.qor_db")
+            .map(|s| s.arg("op", obs::ArgVal::Str("insert".to_string())));
+        db.insert(&key, crate::service::QorRecord::from_products(&result, &sim, gf));
+    }
     let r = finish_flow_with(kernel, fused, &cache, result, sim, board, gf, opts)?;
     Ok((r, status))
 }

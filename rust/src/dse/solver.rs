@@ -61,6 +61,16 @@
 //! so the result stays deterministic and thread-count independent, and
 //! latency ties prefer the max-fusion variant (variant 0).
 //!
+//! **Telemetry.** With [`SolverOptions::telemetry`] on, the solve
+//! threads a [`crate::obs::SolveCounters`] block through all three
+//! stages and returns it frozen as [`SolverResult::telemetry`]:
+//! per-variant enumeration/Pareto/prune counters, a DFS depth
+//! histogram, and the incumbent timeline (every [`SharedBest`]
+//! improvement as `(elapsed, latency, variant)`). Collection is
+//! observational only — it never changes search order, pruning or the
+//! returned design — and when off every hook is one predictable branch
+//! (bench-bounded in `benches/solver_eval.rs`).
+//!
 //! Infeasible budgets are a user input, not a bug: the solver returns
 //! [`SolverError::Infeasible`] instead of panicking, and the service
 //! layer surfaces it as a per-request error.
@@ -77,6 +87,7 @@ use crate::analysis::fusion::{FusedGraph, FusionPlan};
 use crate::hw::resources::ResourceVec;
 use crate::hw::{Device, SlrBudget};
 use crate::ir::Kernel;
+use crate::obs;
 use crate::par::run_indexed;
 use crate::sim::engine::simulate_resolved;
 use std::collections::BTreeMap;
@@ -260,6 +271,16 @@ pub struct SolverOptions {
     /// (the pre-fusion-DSE behaviour; every baseline restricts to it).
     /// Changes the answer, so it *is* part of the QoR cache key.
     pub explore_fusion: bool,
+    /// Collect structured telemetry for this solve
+    /// ([`SolverResult::telemetry`]): per-variant/per-stage counters,
+    /// the DFS depth histogram and the incumbent timeline.
+    /// Observational only — search order, pruning and the returned
+    /// design are bit-identical with it on or off (property-tested in
+    /// `tests/telemetry.rs`) — so, like `jobs`, it is excluded from
+    /// the QoR cache key. Defaults to whether tracing is active
+    /// ([`crate::obs::trace_enabled`]); the disabled per-hook cost is
+    /// bench-bounded in `benches/solver_eval.rs`.
+    pub telemetry: bool,
 }
 
 impl Default for SolverOptions {
@@ -278,6 +299,7 @@ impl Default for SolverOptions {
             incumbent: None,
             jobs: default_jobs(),
             explore_fusion: true,
+            telemetry: obs::trace_enabled(),
         }
     }
 }
@@ -310,6 +332,10 @@ pub struct SolverResult {
     /// branch-and-bound bound (false when no incumbent was given *or*
     /// the given one was rejected as structurally invalid/infeasible).
     pub warm_started: bool,
+    /// Structured solve telemetry: per-variant counters, DFS depth
+    /// histogram and incumbent timeline. All-empty unless
+    /// [`SolverOptions::telemetry`] was on.
+    pub telemetry: obs::SolveTelemetry,
 }
 
 /// One per-task candidate with its standalone metrics. Public so tests
@@ -449,8 +475,19 @@ impl SharedBest {
     /// Offer a complete design. Keeps the minimum under the total order
     /// `(latency, key)`; the fast path rejects anything strictly above
     /// the current bound without taking the lock (such a design can
-    /// neither win nor tie the final minimum).
-    fn offer(&self, lat: u64, key: Vec<(usize, usize)>, design: DesignConfig) {
+    /// neither win nor tie the final minimum). An accepted improvement
+    /// is appended to the incumbent timeline (`counters`) under the
+    /// lock, so the recorded `(latency, variant)` sequence is totally
+    /// ordered — telemetry observes the decision, never shapes it.
+    fn offer(
+        &self,
+        lat: u64,
+        key: Vec<(usize, usize)>,
+        design: DesignConfig,
+        variant: usize,
+        deadline: Deadline,
+        counters: &obs::SolveCounters,
+    ) {
         if lat > self.bound.load(Ordering::Relaxed) {
             return;
         }
@@ -462,6 +499,7 @@ impl SharedBest {
         if better {
             self.bound.store(lat, Ordering::Relaxed);
             *best = Some((lat, key, design));
+            counters.incumbent(deadline.elapsed().as_micros() as u64, lat, variant);
         }
     }
 }
@@ -496,6 +534,9 @@ fn solve_variants(
     let n_variants = variants.len();
     let (regions, budget) = region_budget(dev, opts.scenario);
     let plans: Vec<FusionPlan> = variants.iter().map(|(fg, _)| fg.plan()).collect();
+    // depth slots cover 0..=n_tasks: dfs_node fires at leaves too
+    let max_tasks = variants.iter().map(|(fg, _)| fg.tasks.len()).max().unwrap_or(0);
+    let counters = obs::SolveCounters::new(opts.telemetry, n_variants, max_tasks + 1);
 
     // ---- stage 1 + 2: per-variant, per-task Pareto candidates ----------
     // Tasks placed in the same region share its budget; enumerate each
@@ -530,6 +571,7 @@ fn solve_variants(
             budget.scaled(1.0 / per_region_tasks as f64)
         })
         .collect();
+    let stage1_span = obs::span("solver", "solve.enumerate");
     let unit_results = run_indexed(units.len(), jobs, |i| {
         let (vi, t, nopad) = units[i];
         let o = if nopad { &nopad_opts } else { opts };
@@ -541,11 +583,25 @@ fn solve_variants(
         variants.iter().map(|(fg, _)| vec![Vec::new(); fg.tasks.len()]).collect();
     for (&(vi, t, _), (cands, ex, to)) in units.iter().zip(unit_results) {
         per_variant[vi][t].extend(cands);
+        counters.enumerated(vi, ex);
         explored += ex;
         stage1_timed_out |= to;
     }
-    let per_variant: Vec<Vec<Vec<Candidate>>> =
-        per_variant.into_iter().map(|pt| pt.into_iter().map(pareto).collect()).collect();
+    let per_variant: Vec<Vec<Vec<Candidate>>> = per_variant
+        .into_iter()
+        .enumerate()
+        .map(|(vi, pt)| {
+            pt.into_iter()
+                .map(|raw| {
+                    let raw_len = raw.len() as u64;
+                    let front = pareto(raw);
+                    counters.pareto(vi, front.len() as u64, raw_len - front.len() as u64);
+                    front
+                })
+                .collect()
+        })
+        .collect();
+    drop(stage1_span);
 
     // ---- stage 3: global assembly over variants × candidates × SLRs ----
     // Warm start: a valid, feasible incumbent (e.g. a QoR-DB design
@@ -569,7 +625,7 @@ fn solve_variants(
                 let rd = ResolvedDesign::new(k, fg_v, cache_v, inc);
                 let lat = simulate_resolved(&rd, dev).cycles;
                 drop(rd);
-                shared.offer(lat, Vec::new(), inc.clone());
+                shared.offer(lat, Vec::new(), inc.clone(), vi, deadline, &counters);
                 warm_started = true;
                 inc_variant = Some(vi);
             }
@@ -637,6 +693,7 @@ fn solve_variants(
             timed_out: &timed_out_flag,
             vi,
             plan: &plans[vi],
+            counters: &counters,
         })
         .collect();
 
@@ -678,14 +735,47 @@ fn solve_variants(
         }
         frontier.extend(fr.into_iter().map(|p| (vi, p)));
     }
+    let dfs_span = obs::span("solver", "solve.dfs");
     let prefix_explored = run_indexed(frontier.len(), jobs, |i| {
         let (vi, prefix) = &frontier[i];
         let mut ex = 0u64;
         run_prefix(&ctxs[*vi], prefix, &mut ex);
         ex
     });
+    drop(dfs_span);
     explored += prefix_explored.into_iter().sum::<u64>();
     let timed_out = timed_out_flag.load(Ordering::Relaxed);
+    drop(ctxs);
+    let telemetry = counters.finish();
+    if obs::trace_enabled() {
+        for (vi, vc) in telemetry.variants.iter().enumerate() {
+            obs::counter(
+                "solver",
+                &format!("solve.variant{vi}"),
+                vec![
+                    ("enumerated".to_string(), obs::ArgVal::Int(vc.enumerated as i128)),
+                    ("dfs_nodes".to_string(), obs::ArgVal::Int(vc.dfs_nodes as i128)),
+                    (
+                        "leaves_simulated".to_string(),
+                        obs::ArgVal::Int(vc.leaves_simulated as i128),
+                    ),
+                    ("bound_pruned".to_string(), obs::ArgVal::Int(vc.bound_pruned as i128)),
+                    (
+                        "symmetry_pruned".to_string(),
+                        obs::ArgVal::Int(vc.symmetry_pruned as i128),
+                    ),
+                    (
+                        "resource_pruned".to_string(),
+                        obs::ArgVal::Int(vc.resource_pruned as i128),
+                    ),
+                    (
+                        "deadline_killed".to_string(),
+                        obs::ArgVal::Int(vc.deadline_killed as i128),
+                    ),
+                ],
+            );
+        }
+    }
 
     let best = shared.best.into_inner().unwrap();
     let Some((_, _, design)) = best else {
@@ -718,6 +808,7 @@ fn solve_variants(
         explored,
         timed_out,
         warm_started,
+        telemetry,
     })
 }
 
@@ -729,6 +820,7 @@ fn solve_variants(
 fn run_prefix(ctx: &DfsCtx<'_>, prefix: &[(usize, usize)], explored: &mut u64) {
     let bound = ctx.shared.bound();
     if prefix.iter().enumerate().any(|(ti, &(c, _))| ctx.per_task[ti][c].latency > bound) {
+        ctx.counters.bound_pruned(ctx.vi, 1);
         return;
     }
     let mut used = vec![ResourceVec::ZERO; ctx.regions];
@@ -736,6 +828,7 @@ fn run_prefix(ctx: &DfsCtx<'_>, prefix: &[(usize, usize)], explored: &mut u64) {
         used[slr] += ctx.per_task[ti][c].res;
     }
     if used.iter().any(|r| !r.fits(ctx.budget)) {
+        ctx.counters.resource_pruned(ctx.vi, 1);
         return;
     }
     let mut assign = prefix.to_vec();
@@ -1099,6 +1192,9 @@ struct DfsCtx<'a> {
     /// This variant's canonical fusion plan, stamped into every design
     /// the DFS assembles.
     plan: &'a FusionPlan,
+    /// The solve's shared telemetry counter block (no-op when
+    /// `SolverOptions::telemetry` is off).
+    counters: &'a obs::SolveCounters,
 }
 
 /// DFS over per-task candidate picks and SLR ids with branch-and-bound.
@@ -1112,6 +1208,7 @@ fn dfs_assign(
     explored: &mut u64,
 ) {
     let t = assign.len();
+    ctx.counters.dfs_node(ctx.vi, t);
     // Anytime gate, checked at node entry AND before the (expensive)
     // leaf simulation: once the deadline passed and *some* design is in
     // hand — a found leaf or the warm-start incumbent — stop scoring.
@@ -1122,11 +1219,13 @@ fn dfs_assign(
     if expired {
         ctx.timed_out.store(true, Ordering::Relaxed);
         if ctx.shared.has_best() {
+            ctx.counters.deadline_killed(ctx.vi);
             return;
         }
     }
     if t == ctx.per_task.len() {
         *explored += 1;
+        ctx.counters.leaf(ctx.vi);
         let design = DesignConfig {
             kernel: ctx.k.name.clone(),
             model: ctx.opts.model,
@@ -1152,22 +1251,30 @@ fn dfs_assign(
         let mut key = Vec::with_capacity(assign.len() + 1);
         key.push((ctx.vi, 0usize));
         key.extend_from_slice(assign);
-        ctx.shared.offer(lat, key, design);
+        ctx.shared.offer(lat, key, design, ctx.vi, ctx.deadline, ctx.counters);
         return;
     }
     let max_slr = open_regions(assign, ctx.regions);
+    if ctx.counters.enabled() && max_slr < ctx.regions {
+        // children in the renamed regions [max_slr, regions) are never
+        // generated — count them so prune totals partition the tree
+        ctx.counters
+            .symmetry_pruned(ctx.vi, ((ctx.regions - max_slr) * ctx.per_task[t].len()) as u64);
+    }
     for (c, cand) in ctx.per_task[t].iter().enumerate() {
         // bound: any task's standalone latency lower-bounds the total.
         // STRICTLY above the shared bound only — an equal-latency leaf
         // may still win the deterministic tie-break, so it must stay
         // reachable from every worker.
         if cand.latency > ctx.shared.bound() {
+            ctx.counters.bound_pruned(ctx.vi, 1);
             continue;
         }
         for slr in 0..max_slr {
             let prev = used[slr];
             let acc = prev + cand.res;
             if !acc.fits(ctx.budget) {
+                ctx.counters.resource_pruned(ctx.vi, 1);
                 continue;
             }
             used[slr] = acc;

@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod hw;
 pub mod ir;
+pub mod obs;
 mod par;
 pub mod report;
 pub mod runtime;

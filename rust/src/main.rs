@@ -6,14 +6,21 @@
 //! prometheus list                               list kernels (Table 5 data)
 //! prometheus analyze  <kernel>                  task graph + fusion variants
 //! prometheus optimize <kernel> [--onboard N --frac F] [--emit DIR] [--db FILE] [--jobs N]
-//!                     [--fixed-fusion]
-//! prometheus report   [--kernels K,..] [--full]  chosen fusion per kernel (Table 9 shape)
-//! prometheus batch    [--kernels K,..] [--scenarios S,..] [--db FILE] [--jobs N]
+//!                     [--fixed-fusion] [--quick] [--trace FILE]
+//! prometheus report   [--kernels K,..] [--full] [--telemetry]
+//!                                               chosen fusion per kernel (Table 9 shape)
+//! prometheus batch    [--kernels K,..] [--scenarios S,..] [--db FILE] [--jobs N] [--trace FILE]
+//! prometheus db       <FILE>                    QoR knowledge-base records + provenance
 //! prometheus compare  <kernel>                  all 6 frameworks (Table 3 shape)
 //! prometheus codegen  <kernel> <dir>            emit HLS-C++ + host
 //! prometheus validate <kernel> [--artifacts D]  PJRT functional check
 //! prometheus validate-all [--artifacts D]       every lowered kernel
 //! ```
+//!
+//! `--trace FILE` records the whole run — flow-phase spans, per-variant
+//! solver counters, incumbent instants, FIFO stall attribution — and
+//! writes Chrome trace-event JSON loadable in `chrome://tracing` /
+//! Perfetto. See DESIGN.md §10.
 
 use anyhow::{anyhow, Result};
 use prometheus::analysis::fusion::{enumerate_fusions, fuse};
@@ -108,10 +115,22 @@ fn run() -> Result<()> {
                 },
                 None => Scenario::Rtl,
             };
+            // --trace FILE: record the full lifecycle and write Chrome
+            // trace-event JSON. Tracing starts before the solver options
+            // are built so `SolverOptions::telemetry` defaults on.
+            let trace_path = flag_value(&args, "--trace").map(PathBuf::from);
+            if trace_path.is_some() {
+                prometheus::obs::start_trace();
+            }
             // Intra-solve worker threads: --jobs beats $PROMETHEUS_JOBS
             // beats 1 (the solver's default). The answer is identical
             // for any jobs value — only the solve time changes.
-            let mut solver = SolverOptions::default();
+            let mut solver = if args.iter().any(|a| a == "--quick") {
+                prometheus::coordinator::flow::quick_solver()
+            } else {
+                SolverOptions::default()
+            };
+            solver.telemetry = solver.telemetry || trace_path.is_some();
             if let Some(j) = flag_value(&args, "--jobs") {
                 solver.jobs = j.parse()?;
             }
@@ -177,6 +196,14 @@ fn run() -> Result<()> {
             if let Some(err) = r.validation_rel_err {
                 println!("  PJRT validation: max rel err {err:.2e}");
             }
+            if r.result.telemetry.enabled {
+                print!("{}", r.result.telemetry.render());
+            }
+            if let Some(path) = &trace_path {
+                let (events, dropped) = prometheus::obs::stop_trace();
+                prometheus::obs::write_chrome_trace(path, &events, dropped)?;
+                println!("wrote Chrome trace ({} events) to {}", events.len(), path.display());
+            }
         }
         "report" => {
             // Paper Table 9 shape: the fusion partition the solver
@@ -209,7 +236,21 @@ fn run() -> Result<()> {
             if let Some(j) = flag_value(&args, "--jobs") {
                 solver.jobs = j.parse()?;
             }
+            // --telemetry: collect per-solve counters and print a second,
+            // observability-shaped table next to the QoR one.
+            let want_telemetry = args.iter().any(|a| a == "--telemetry");
+            solver.telemetry = solver.telemetry || want_telemetry;
             let mut t = Table::new(&["Kernel", "Chosen fusion", "Variants", "GF/s"]);
+            let mut tt = Table::new(&[
+                "Kernel",
+                "Enumerated",
+                "DFS nodes",
+                "Leaves",
+                "Bound-pruned",
+                "Symmetry-pruned",
+                "Deadline-killed",
+                "Incumbents",
+            ]);
             for name in &kernels {
                 let k = polybench::by_name(name)
                     .ok_or_else(|| anyhow!("unknown kernel {name}"))?;
@@ -227,17 +268,48 @@ fn run() -> Result<()> {
                             r.fused.partition_string(),
                             r.fusion_variants.to_string(),
                             gfs(gf),
-                        ])
+                        ]);
+                        if want_telemetry {
+                            let c = r.telemetry.totals();
+                            tt.row(vec![
+                                name.clone(),
+                                c.enumerated.to_string(),
+                                c.dfs_nodes.to_string(),
+                                c.leaves_simulated.to_string(),
+                                c.bound_pruned.to_string(),
+                                c.symmetry_pruned.to_string(),
+                                c.deadline_killed.to_string(),
+                                r.telemetry.incumbents.len().to_string(),
+                            ]);
+                        }
                     }
-                    Err(e) => t.row(vec![
-                        name.clone(),
-                        format!("error: {e}"),
-                        "-".into(),
-                        "-".into(),
-                    ]),
+                    Err(e) => {
+                        t.row(vec![
+                            name.clone(),
+                            format!("error: {e}"),
+                            "-".into(),
+                            "-".into(),
+                        ]);
+                        if want_telemetry {
+                            tt.row(vec![
+                                name.clone(),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                                "-".into(),
+                            ]);
+                        }
+                    }
                 };
             }
             print!("{}", t.render());
+            if want_telemetry {
+                println!("solver telemetry (totals across fusion variants):");
+                print!("{}", tt.render());
+            }
         }
         "batch" => {
             // Request set = kernels × scenarios × models (the service
@@ -268,11 +340,16 @@ fn run() -> Result<()> {
                     }
                 }
             }
+            let trace_path = flag_value(&args, "--trace").map(PathBuf::from);
+            if trace_path.is_some() {
+                prometheus::obs::start_trace();
+            }
             let quick = args.iter().any(|a| a == "--quick");
             let mut opts = BatchOptions::default();
             if quick {
                 opts.solver = prometheus::coordinator::flow::quick_solver();
             }
+            opts.solver.telemetry = opts.solver.telemetry || trace_path.is_some();
             if let Some(j) = flag_value(&args, "--jobs") {
                 opts.jobs = j.parse()?;
             }
@@ -306,7 +383,65 @@ fn run() -> Result<()> {
             }
             let report = result?;
             print!("{}", report.render());
+            print!("{}", report.metrics());
+            if let Some(path) = &trace_path {
+                let (events, dropped) = prometheus::obs::stop_trace();
+                prometheus::obs::write_chrome_trace(path, &events, dropped)?;
+                println!("wrote Chrome trace ({} events) to {}", events.len(), path.display());
+            }
+            // The summary prints even for a partially-failed batch —
+            // completed solves were kept and reported above — but the
+            // exit code still flags the failures.
             println!("{}", report.summary());
+            if report.failed > 0 {
+                return Err(anyhow!(
+                    "{} of {} batch requests failed (see FAILED rows above)",
+                    report.failed,
+                    report.outcomes.len()
+                ));
+            }
+        }
+        "db" => {
+            // Knowledge-base introspection: every record with its QoR
+            // *and* its provenance (how trustworthy the stored answer
+            // is: explored points, fusion variants weighed, warm/cold,
+            // truncation).
+            let path = PathBuf::from(
+                args.get(1).map(String::as_str).ok_or_else(|| anyhow!("usage: db <FILE>"))?,
+            );
+            let db = QorDb::load(&path);
+            if db.is_empty() {
+                println!(
+                    "{}: no records (missing, corrupt, or pre-v{} file)",
+                    path.display(),
+                    prometheus::service::qor_db::FORMAT_VERSION
+                );
+            } else {
+                let mut t = Table::new(&[
+                    "Key",
+                    "Cycles",
+                    "GF/s",
+                    "Solve ms",
+                    "Explored",
+                    "Variants",
+                    "Start",
+                    "Truncated",
+                ]);
+                for (key, rec) in db.iter() {
+                    t.row(vec![
+                        key.to_string(),
+                        rec.latency_cycles.to_string(),
+                        gfs(rec.gflops),
+                        format!("{:.1}", rec.solve_time_ms),
+                        rec.explored.to_string(),
+                        rec.fusion_variants.to_string(),
+                        if rec.warm_started { "warm" } else { "cold" }.to_string(),
+                        if rec.timed_out { "yes" } else { "no" }.to_string(),
+                    ]);
+                }
+                print!("{}", t.render());
+                println!("{} records (format v{})", db.len(), prometheus::service::qor_db::FORMAT_VERSION);
+            }
         }
         "compare" => {
             let name = args.get(1).ok_or_else(|| anyhow!("usage: compare <kernel>"))?;
@@ -375,17 +510,23 @@ fn run() -> Result<()> {
                  \x20 list                                 kernel zoo (Table 5 data)\n\
                  \x20 analyze  <kernel>                    task graph + legal fusion variants\n\
                  \x20 optimize <kernel> [--onboard N --frac F] [--emit DIR] [--artifacts D] [--db FILE]\n\
-                 \x20          [--jobs N] [--fixed-fusion]  --jobs = intra-solve worker threads;\n\
-                 \x20                                      --fixed-fusion pins max fusion\n\
-                 \x20 report [--kernels K,..|all] [--onboard N --frac F] [--full] [--jobs N]\n\
+                 \x20          [--jobs N] [--fixed-fusion] [--quick] [--trace FILE]\n\
+                 \x20                                      --jobs = intra-solve worker threads;\n\
+                 \x20                                      --fixed-fusion pins max fusion;\n\
+                 \x20                                      --trace writes Chrome trace-event JSON\n\
+                 \x20 report [--kernels K,..|all] [--onboard N --frac F] [--full] [--jobs N] [--telemetry]\n\
                  \x20                                      chosen fusion partition per kernel\n\
                  \x20                                      (paper Table 9 `FTi = {{Sj, ...}}` format;\n\
-                 \x20                                      partial fusion prints `FTi = {{Sj[lo:hi], ...}}`)\n\
+                 \x20                                      partial fusion prints `FTi = {{Sj[lo:hi], ...}}`;\n\
+                 \x20                                      --telemetry adds solver counters per kernel)\n\
                  \x20 batch [--kernels K,..|all] [--scenarios rtl,onboard:N:F,..]\n\
-                 \x20       [--models dataflow,sequential] [--db FILE] [--jobs N] [--quick]\n\
+                 \x20       [--models dataflow,sequential] [--db FILE] [--jobs N] [--quick] [--trace FILE]\n\
                  \x20                                      parallel batch service + QoR knowledge base\n\
                  \x20                                      (--jobs = total cores, split between\n\
-                 \x20                                      requests and intra-solve workers)\n\
+                 \x20                                      requests and intra-solve workers);\n\
+                 \x20                                      prints a service-metrics table and fails\n\
+                 \x20                                      the exit code if any request failed\n\
+                 \x20 db <FILE>                            QoR knowledge-base records + solve provenance\n\
                  \x20 compare  <kernel>                    all frameworks (Table 3/6 shape)\n\
                  \x20 codegen  <kernel> <dir>              emit HLS-C++ + OpenCL host\n\
                  \x20 validate <kernel> [--artifacts D]    PJRT functional check\n\

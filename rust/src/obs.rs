@@ -1,0 +1,762 @@
+//! `prometheus::obs` — solve observability: spans, counters, incumbent
+//! timelines and a Chrome-trace exporter.
+//!
+//! Prometheus's value proposition is *explaining* where QoR comes from:
+//! which fusion variant won, where the solver spent its budget, and why
+//! candidates died. This module is the vendored, zero-dependency
+//! telemetry layer that makes those questions answerable end to end:
+//!
+//! * **Spans** — RAII [`Span`] guards record wall-clock phases
+//!   (`flow.fusion_space`, `flow.solve`, `flow.sim`, …) as Chrome
+//!   trace-event *complete* events (`ph: "X"`).
+//! * **Counters** — [`SolveCounters`] is the shared mutable counter
+//!   block one solve threads through its stages: candidates enumerated,
+//!   Pareto-truncated, bound-/resource-/symmetry-pruned,
+//!   deadline-killed, a DFS depth histogram, and the *incumbent
+//!   timeline* (every improvement of the shared branch-and-bound bound
+//!   as `(elapsed, latency, variant)`). It freezes into the plain-data
+//!   [`SolveTelemetry`] carried on `SolverResult`.
+//! * **Export** — [`chrome_trace_json`] renders collected events in the
+//!   Chrome trace-event JSON format (`{"traceEvents": [...]}`),
+//!   viewable in `chrome://tracing` or Perfetto; the CLI's `--trace
+//!   out.json` flag wires it up.
+//!
+//! Two independent switches control cost:
+//!
+//! * **Tracing** ([`trace_enabled`]) gates the global event sink. It is
+//!   on when `PROMETHEUS_TRACE=1` is set in the environment or after
+//!   [`start_trace`] (the CLI `--trace` path). When off, every span or
+//!   instant helper is a single relaxed atomic load.
+//! * **Telemetry** (`SolverOptions::telemetry`) gates the per-solve
+//!   counter block. When off, every [`SolveCounters`] method is one
+//!   predictable branch on a plain `bool` — `benches/solver_eval.rs`
+//!   asserts the projected overhead stays under 2% of a solve.
+//!
+//! Both switches are observational only: the solver's search order,
+//! pruning decisions and returned design are bit-identical with
+//! telemetry/tracing on or off (property-tested across the kernel zoo
+//! in `tests/telemetry.rs`).
+
+#![deny(missing_docs)]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---- global tracing switch and event sink ------------------------------
+
+/// Flipped by [`start_trace`] / [`stop_trace`] (the CLI `--trace` path).
+static TRACE_STARTED: AtomicBool = AtomicBool::new(false);
+
+/// `PROMETHEUS_TRACE` environment check, evaluated once per process.
+fn env_trace() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("PROMETHEUS_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}
+
+/// Whether trace events are being collected right now.
+///
+/// True when `PROMETHEUS_TRACE` is set (and not `0`/empty) or between
+/// [`start_trace`] and [`stop_trace`]. The disabled cost of every
+/// tracing helper bottoms out in this single relaxed load.
+pub fn trace_enabled() -> bool {
+    TRACE_STARTED.load(Ordering::Relaxed) || env_trace()
+}
+
+/// Process-wide trace epoch: all event timestamps are µs since the
+/// first call to any timestamping helper.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Small dense per-thread ids (Chrome traces want integer `tid`s; the
+/// OS thread id is not exposed as an integer on stable).
+fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// A trace-event argument value (shown in the viewer's detail pane).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgVal {
+    /// Exact integer argument.
+    Int(i128),
+    /// Floating-point argument.
+    Float(f64),
+    /// String argument.
+    Str(String),
+}
+
+impl ArgVal {
+    fn to_value(&self) -> serde::Value {
+        match self {
+            ArgVal::Int(i) => serde::Value::Int(*i),
+            ArgVal::Float(f) => serde::Value::Float(*f),
+            ArgVal::Str(s) => serde::Value::Str(s.clone()),
+        }
+    }
+}
+
+/// One collected event in the Chrome trace-event model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Event name (e.g. `flow.solve`, `incumbent`, `solve.variant0`).
+    pub name: String,
+    /// Category shown as a filterable group in the viewer.
+    pub cat: &'static str,
+    /// Phase: `X` complete (has `dur_us`), `i` instant, `C` counter.
+    pub ph: char,
+    /// Start timestamp, µs since the process trace epoch.
+    pub ts_us: u64,
+    /// Duration in µs — `Some` only for complete (`X`) events.
+    pub dur_us: Option<u64>,
+    /// Dense per-thread id (see the module docs; not an OS tid).
+    pub tid: u64,
+    /// Event arguments, rendered under `"args"`.
+    pub args: Vec<(String, ArgVal)>,
+}
+
+/// Hard cap on buffered events so a pathological run cannot exhaust
+/// memory; overflow is *counted*, never silent (see [`stop_trace`]).
+const MAX_TRACE_EVENTS: usize = 262_144;
+
+struct Sink {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+static SINK: Mutex<Sink> = Mutex::new(Sink { events: Vec::new(), dropped: 0 });
+
+/// Append one event to the global sink (no-op when tracing is off).
+pub fn record(ev: TraceEvent) {
+    if !trace_enabled() {
+        return;
+    }
+    let mut sink = SINK.lock().unwrap();
+    if sink.events.len() >= MAX_TRACE_EVENTS {
+        sink.dropped += 1;
+    } else {
+        sink.events.push(ev);
+    }
+}
+
+/// Start collecting trace events (clears anything previously buffered).
+pub fn start_trace() {
+    let mut sink = SINK.lock().unwrap();
+    sink.events.clear();
+    sink.dropped = 0;
+    TRACE_STARTED.store(true, Ordering::Relaxed);
+}
+
+/// Stop collecting and drain the sink: returns the buffered events and
+/// how many were dropped at the [`MAX_TRACE_EVENTS`] cap.
+///
+/// With `PROMETHEUS_TRACE` set in the environment, collection resumes
+/// immediately (the env switch cannot be un-set at runtime).
+pub fn stop_trace() -> (Vec<TraceEvent>, u64) {
+    TRACE_STARTED.store(false, Ordering::Relaxed);
+    let mut sink = SINK.lock().unwrap();
+    (std::mem::take(&mut sink.events), std::mem::replace(&mut sink.dropped, 0))
+}
+
+// ---- spans and event helpers -------------------------------------------
+
+/// RAII span: records a complete (`X`) event from creation to drop.
+///
+/// Construct through [`span`], which returns `None` when tracing is
+/// off so the disabled path never allocates.
+pub struct Span {
+    name: String,
+    cat: &'static str,
+    start_us: u64,
+    args: Vec<(String, ArgVal)>,
+}
+
+impl Span {
+    /// Attach an argument (builder-style, for use under `Option::map`).
+    pub fn arg(mut self, key: &str, val: ArgVal) -> Span {
+        self.args.push((key.to_string(), val));
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let start = self.start_us;
+        record(TraceEvent {
+            name: std::mem::take(&mut self.name),
+            cat: self.cat,
+            ph: 'X',
+            ts_us: start,
+            dur_us: Some(now_us().saturating_sub(start)),
+            tid: tid(),
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+/// Open a span covering the enclosing scope.
+///
+/// ```ignore
+/// let _s = obs::span("flow", "flow.solve");
+/// ```
+///
+/// Returns `None` when tracing is off — the disabled cost is one
+/// relaxed atomic load and no allocation.
+pub fn span(cat: &'static str, name: &str) -> Option<Span> {
+    if !trace_enabled() {
+        return None;
+    }
+    Some(Span { name: name.to_string(), cat, start_us: now_us(), args: Vec::new() })
+}
+
+/// Record an instant (`i`) event at the current time (process scope).
+pub fn instant(cat: &'static str, name: &str, args: Vec<(String, ArgVal)>) {
+    if !trace_enabled() {
+        return;
+    }
+    record(TraceEvent {
+        name: name.to_string(),
+        cat,
+        ph: 'i',
+        ts_us: now_us(),
+        dur_us: None,
+        tid: tid(),
+        args,
+    });
+}
+
+/// Record a counter (`C`) event; args should be numeric to plot.
+pub fn counter(cat: &'static str, name: &str, args: Vec<(String, ArgVal)>) {
+    if !trace_enabled() {
+        return;
+    }
+    record(TraceEvent {
+        name: name.to_string(),
+        cat,
+        ph: 'C',
+        ts_us: now_us(),
+        dur_us: None,
+        tid: tid(),
+        args,
+    });
+}
+
+// ---- Chrome trace-event export -----------------------------------------
+
+/// Render events as Chrome trace-event JSON: the `{"traceEvents":
+/// [...]}` object-envelope flavor understood by `chrome://tracing` and
+/// Perfetto. Dropped-event counts surface under `"otherData"` so a
+/// truncated trace is never mistaken for a complete one.
+pub fn chrome_trace_json(events: &[TraceEvent], dropped: u64) -> String {
+    use serde::Value;
+    let rendered: Vec<Value> = events
+        .iter()
+        .map(|e| {
+            let mut fields = vec![
+                ("name".to_string(), Value::Str(e.name.clone())),
+                ("cat".to_string(), Value::Str(e.cat.to_string())),
+                ("ph".to_string(), Value::Str(e.ph.to_string())),
+                ("ts".to_string(), Value::Int(e.ts_us as i128)),
+                ("pid".to_string(), Value::Int(1)),
+                ("tid".to_string(), Value::Int(e.tid as i128)),
+            ];
+            if let Some(dur) = e.dur_us {
+                fields.push(("dur".to_string(), Value::Int(dur as i128)));
+            }
+            if e.ph == 'i' {
+                // instant scope: "p" = process-wide line in the viewer
+                fields.push(("s".to_string(), Value::Str("p".to_string())));
+            }
+            if !e.args.is_empty() {
+                fields.push((
+                    "args".to_string(),
+                    Value::Obj(e.args.iter().map(|(k, v)| (k.clone(), v.to_value())).collect()),
+                ));
+            }
+            Value::Obj(fields)
+        })
+        .collect();
+    serde::to_string(&Value::Obj(vec![
+        ("traceEvents".to_string(), Value::Arr(rendered)),
+        ("displayTimeUnit".to_string(), Value::Str("ms".to_string())),
+        (
+            "otherData".to_string(),
+            Value::Obj(vec![("dropped_events".to_string(), Value::Int(dropped as i128))]),
+        ),
+    ]))
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(
+    path: &std::path::Path,
+    events: &[TraceEvent],
+    dropped: u64,
+) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(events, dropped))
+}
+
+// ---- structured solve telemetry ----------------------------------------
+
+/// Counter block for one fusion variant of one solve.
+///
+/// "Pruned" counters tally *candidates never expanded*: a
+/// `bound_pruned` of 1000 means 1000 `(candidate, region)` children
+/// were cut at their parent because the candidate's standalone latency
+/// already exceeded the shared incumbent bound.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct VariantCounters {
+    /// Stage-1/2 design points scored during per-task enumeration
+    /// (tile factors × permutations × transfer-plan refinements).
+    pub enumerated: u64,
+    /// Candidates surviving the per-task Pareto reduction.
+    pub pareto_kept: u64,
+    /// Candidates dropped by Pareto dominance or front truncation.
+    pub pareto_dropped: u64,
+    /// Stage-3 DFS nodes entered.
+    pub dfs_nodes: u64,
+    /// Complete assignments scored by the executing simulator.
+    pub leaves_simulated: u64,
+    /// Children cut because the candidate's standalone latency exceeded
+    /// the shared incumbent bound.
+    pub bound_pruned: u64,
+    /// Children cut by per-region resource overflow.
+    pub resource_pruned: u64,
+    /// Region-renamed duplicate children never generated (SLR symmetry
+    /// breaking: new regions open in index order).
+    pub symmetry_pruned: u64,
+    /// Subtrees abandoned after the anytime deadline expired with an
+    /// incumbent already in hand.
+    pub deadline_killed: u64,
+}
+
+impl VariantCounters {
+    /// Element-wise accumulate `other` into `self`.
+    pub fn add(&mut self, other: &VariantCounters) {
+        self.enumerated += other.enumerated;
+        self.pareto_kept += other.pareto_kept;
+        self.pareto_dropped += other.pareto_dropped;
+        self.dfs_nodes += other.dfs_nodes;
+        self.leaves_simulated += other.leaves_simulated;
+        self.bound_pruned += other.bound_pruned;
+        self.resource_pruned += other.resource_pruned;
+        self.symmetry_pruned += other.symmetry_pruned;
+        self.deadline_killed += other.deadline_killed;
+    }
+}
+
+/// One improvement of the shared branch-and-bound incumbent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IncumbentEvent {
+    /// Wall time since the solve started, µs. Timestamps are
+    /// wall-clock: deterministic runs repeat the `(latency, variant)`
+    /// sequence exactly but not these.
+    pub elapsed_us: u64,
+    /// The new best end-to-end simulated latency, cycles.
+    pub latency: u64,
+    /// Index of the fusion variant the improving design realizes.
+    pub variant: usize,
+}
+
+/// Structured telemetry of one solve, carried on `SolverResult`.
+///
+/// All-empty (`enabled: false`) when `SolverOptions::telemetry` was
+/// off or the result came straight from the QoR cache.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SolveTelemetry {
+    /// Whether collection was on for this solve.
+    pub enabled: bool,
+    /// Per-fusion-variant counters, indexed like the solve's variant
+    /// list (`SolverResult::fusion_variants` entries).
+    pub variants: Vec<VariantCounters>,
+    /// DFS nodes entered per depth; index = number of tasks already
+    /// assigned when the node was entered.
+    pub depth_hist: Vec<u64>,
+    /// Incumbent timeline: every improvement of the shared bound, in
+    /// discovery order.
+    pub incumbents: Vec<IncumbentEvent>,
+}
+
+impl SolveTelemetry {
+    /// Counters summed across all fusion variants.
+    pub fn totals(&self) -> VariantCounters {
+        let mut total = VariantCounters::default();
+        for v in &self.variants {
+            total.add(v);
+        }
+        total
+    }
+
+    /// Human-readable multi-line summary (the CLI `--telemetry` view).
+    /// Empty string when collection was off.
+    pub fn render(&self) -> String {
+        if !self.enabled {
+            return String::new();
+        }
+        let t = self.totals();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "solve telemetry: {} variant(s), {} points enumerated, {} DFS nodes, {} leaves simulated\n",
+            self.variants.len(),
+            t.enumerated,
+            t.dfs_nodes,
+            t.leaves_simulated
+        ));
+        out.push_str(&format!(
+            "  pareto kept/dropped: {}/{}; pruned: {} bound, {} symmetry, {} resource, {} deadline-killed\n",
+            t.pareto_kept,
+            t.pareto_dropped,
+            t.bound_pruned,
+            t.symmetry_pruned,
+            t.resource_pruned,
+            t.deadline_killed
+        ));
+        match (self.incumbents.first(), self.incumbents.last()) {
+            (Some(first), Some(last)) => out.push_str(&format!(
+                "  incumbents: {} improvement(s); first {} cyc (variant {}) @ {:.1} ms, best {} cyc (variant {}) @ {:.1} ms\n",
+                self.incumbents.len(),
+                first.latency,
+                first.variant,
+                first.elapsed_us as f64 / 1000.0,
+                last.latency,
+                last.variant,
+                last.elapsed_us as f64 / 1000.0
+            )),
+            _ => out.push_str("  incumbents: none recorded\n"),
+        }
+        let hist: Vec<String> = self.depth_hist.iter().map(|n| n.to_string()).collect();
+        out.push_str(&format!("  DFS depth histogram: [{}]\n", hist.join(", ")));
+        for (vi, v) in self.variants.iter().enumerate() {
+            out.push_str(&format!(
+                "  variant {vi}: {} points, {} nodes, {} leaves, pruned {}b/{}s/{}r\n",
+                v.enumerated,
+                v.dfs_nodes,
+                v.leaves_simulated,
+                v.bound_pruned,
+                v.symmetry_pruned,
+                v.resource_pruned
+            ));
+        }
+        out
+    }
+}
+
+// ---- live counter block (atomics) --------------------------------------
+
+#[derive(Default)]
+struct VariantAtomics {
+    enumerated: AtomicU64,
+    pareto_kept: AtomicU64,
+    pareto_dropped: AtomicU64,
+    dfs_nodes: AtomicU64,
+    leaves_simulated: AtomicU64,
+    bound_pruned: AtomicU64,
+    resource_pruned: AtomicU64,
+    symmetry_pruned: AtomicU64,
+    deadline_killed: AtomicU64,
+}
+
+impl VariantAtomics {
+    fn freeze(self) -> VariantCounters {
+        VariantCounters {
+            enumerated: self.enumerated.into_inner(),
+            pareto_kept: self.pareto_kept.into_inner(),
+            pareto_dropped: self.pareto_dropped.into_inner(),
+            dfs_nodes: self.dfs_nodes.into_inner(),
+            leaves_simulated: self.leaves_simulated.into_inner(),
+            bound_pruned: self.bound_pruned.into_inner(),
+            resource_pruned: self.resource_pruned.into_inner(),
+            symmetry_pruned: self.symmetry_pruned.into_inner(),
+            deadline_killed: self.deadline_killed.into_inner(),
+        }
+    }
+}
+
+/// Shared mutable counter state for one in-flight solve, threaded by
+/// reference through the solver's stages and worker threads.
+///
+/// Every recording method starts with `if !self.enabled { return; }` —
+/// a predictable branch on a plain `bool` — so a telemetry-off solve
+/// pays (and allocates) nearly nothing. The disabled per-call cost is
+/// bench-bounded in `benches/solver_eval.rs`.
+pub struct SolveCounters {
+    enabled: bool,
+    variants: Vec<VariantAtomics>,
+    depth: Vec<AtomicU64>,
+    incumbents: Mutex<Vec<IncumbentEvent>>,
+}
+
+impl SolveCounters {
+    /// Create a counter block for `n_variants` fusion variants and DFS
+    /// depths `0..depth_slots`. With `enabled: false` nothing is
+    /// allocated and every method is an early return.
+    pub fn new(enabled: bool, n_variants: usize, depth_slots: usize) -> SolveCounters {
+        SolveCounters {
+            enabled,
+            variants: if enabled {
+                (0..n_variants).map(|_| VariantAtomics::default()).collect()
+            } else {
+                Vec::new()
+            },
+            depth: if enabled {
+                (0..depth_slots.max(1)).map(|_| AtomicU64::new(0)).collect()
+            } else {
+                Vec::new()
+            },
+            incumbents: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Whether collection is on (pre-check before computing expensive
+    /// counter arguments).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Stage-1/2: `n` design points were scored for variant `vi`.
+    #[inline]
+    pub fn enumerated(&self, vi: usize, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].enumerated.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Pareto reduction for one task of variant `vi`: `kept` survived,
+    /// `dropped` were dominated or truncated away.
+    #[inline]
+    pub fn pareto(&self, vi: usize, kept: u64, dropped: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].pareto_kept.fetch_add(kept, Ordering::Relaxed);
+        self.variants[vi].pareto_dropped.fetch_add(dropped, Ordering::Relaxed);
+    }
+
+    /// A DFS node was entered at `depth` (tasks already assigned).
+    #[inline]
+    pub fn dfs_node(&self, vi: usize, depth: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].dfs_nodes.fetch_add(1, Ordering::Relaxed);
+        let slot = depth.min(self.depth.len() - 1);
+        self.depth[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A complete assignment was scored by the executing simulator.
+    #[inline]
+    pub fn leaf(&self, vi: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].leaves_simulated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` children were cut by the incumbent bound.
+    #[inline]
+    pub fn bound_pruned(&self, vi: usize, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].bound_pruned.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` children were cut by per-region resource overflow.
+    #[inline]
+    pub fn resource_pruned(&self, vi: usize, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].resource_pruned.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` region-renamed duplicate children were never generated.
+    #[inline]
+    pub fn symmetry_pruned(&self, vi: usize, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].symmetry_pruned.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A subtree was abandoned because the deadline expired with an
+    /// incumbent in hand.
+    #[inline]
+    pub fn deadline_killed(&self, vi: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].deadline_killed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The shared incumbent improved: record the timeline event (and an
+    /// instant trace event when tracing is on). Called under the
+    /// incumbent lock, so the timeline is totally ordered.
+    pub fn incumbent(&self, elapsed_us: u64, latency: u64, variant: usize) {
+        if self.enabled {
+            self.incumbents
+                .lock()
+                .unwrap()
+                .push(IncumbentEvent { elapsed_us, latency, variant });
+        }
+        if trace_enabled() {
+            instant(
+                "solver",
+                "incumbent",
+                vec![
+                    ("latency".to_string(), ArgVal::Int(latency as i128)),
+                    ("variant".to_string(), ArgVal::Int(variant as i128)),
+                ],
+            );
+        }
+    }
+
+    /// Freeze the live counters into plain-data [`SolveTelemetry`].
+    pub fn finish(self) -> SolveTelemetry {
+        if !self.enabled {
+            return SolveTelemetry::default();
+        }
+        SolveTelemetry {
+            enabled: true,
+            variants: self.variants.into_iter().map(VariantAtomics::freeze).collect(),
+            depth_hist: self.depth.into_iter().map(AtomicU64::into_inner).collect(),
+            incumbents: self.incumbents.into_inner().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_counters_freeze_to_default() {
+        let c = SolveCounters::new(false, 3, 8);
+        // indices that would be out of bounds if the early return failed
+        c.enumerated(2, 100);
+        c.dfs_node(1, 99);
+        c.leaf(0);
+        c.bound_pruned(0, 5);
+        c.incumbent(1, 2, 0);
+        assert_eq!(c.finish(), SolveTelemetry::default());
+    }
+
+    #[test]
+    fn enabled_counters_accumulate_and_freeze() {
+        let c = SolveCounters::new(true, 2, 4);
+        c.enumerated(0, 10);
+        c.enumerated(1, 5);
+        c.pareto(0, 3, 7);
+        c.dfs_node(0, 0);
+        c.dfs_node(0, 9); // clamps into the last depth slot
+        c.leaf(0);
+        c.bound_pruned(1, 2);
+        c.symmetry_pruned(1, 4);
+        c.incumbent(123, 456, 1);
+        let t = c.finish();
+        assert!(t.enabled);
+        assert_eq!(t.variants.len(), 2);
+        assert_eq!(t.variants[0].enumerated, 10);
+        assert_eq!(t.variants[0].pareto_kept, 3);
+        assert_eq!(t.variants[0].pareto_dropped, 7);
+        assert_eq!(t.variants[0].dfs_nodes, 2);
+        assert_eq!(t.variants[0].leaves_simulated, 1);
+        assert_eq!(t.variants[1].bound_pruned, 2);
+        assert_eq!(t.variants[1].symmetry_pruned, 4);
+        assert_eq!(t.depth_hist, vec![1, 0, 0, 1]);
+        assert_eq!(
+            t.incumbents,
+            vec![IncumbentEvent { elapsed_us: 123, latency: 456, variant: 1 }]
+        );
+        assert_eq!(t.totals().enumerated, 15);
+        let summary = t.render();
+        assert!(summary.contains("15 points enumerated"), "{summary}");
+        assert!(summary.contains("1 improvement(s)"), "{summary}");
+    }
+
+    #[test]
+    fn chrome_trace_json_is_valid_and_complete() {
+        let events = vec![
+            TraceEvent {
+                name: "flow.solve".to_string(),
+                cat: "flow",
+                ph: 'X',
+                ts_us: 10,
+                dur_us: Some(250),
+                tid: 1,
+                args: vec![("kernel".to_string(), ArgVal::Str("3mm".to_string()))],
+            },
+            TraceEvent {
+                name: "incumbent".to_string(),
+                cat: "solver",
+                ph: 'i',
+                ts_us: 42,
+                dur_us: None,
+                tid: 2,
+                args: vec![("latency".to_string(), ArgVal::Int(1234))],
+            },
+        ];
+        let json = chrome_trace_json(&events, 7);
+        let doc = serde::parse(&json).expect("exporter must emit valid JSON");
+        let evs = doc.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].field("name").unwrap().as_str(), Some("flow.solve"));
+        assert_eq!(evs[0].field("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].field("dur").unwrap().as_int(), Some(250));
+        assert_eq!(evs[0].field("args").unwrap().field("kernel").unwrap().as_str(), Some("3mm"));
+        assert_eq!(evs[1].field("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(evs[1].field("s").unwrap().as_str(), Some("p"));
+        for e in evs {
+            for req in ["name", "cat", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(req).is_some(), "event missing `{req}`: {json}");
+            }
+        }
+        assert_eq!(
+            doc.field("otherData").unwrap().field("dropped_events").unwrap().as_int(),
+            Some(7)
+        );
+    }
+
+    #[test]
+    fn sink_collects_only_between_start_and_stop() {
+        // NB: the sink is process-global; concurrent tests may add their
+        // own events while tracing is on, so assertions are "contains",
+        // never exact counts.
+        record(TraceEvent {
+            name: "before".to_string(),
+            cat: "test",
+            ph: 'i',
+            ts_us: 0,
+            dur_us: None,
+            tid: 0,
+            args: Vec::new(),
+        });
+        start_trace();
+        instant("test", "obs.sink.marker", Vec::new());
+        {
+            let _s = span("test", "obs.sink.span").map(|s| s.arg("k", ArgVal::Int(1)));
+        }
+        let (events, _dropped) = stop_trace();
+        if !env_trace() {
+            assert!(!events.iter().any(|e| e.name == "before"));
+        }
+        assert!(events.iter().any(|e| e.name == "obs.sink.marker" && e.ph == 'i'));
+        let sp = events.iter().find(|e| e.name == "obs.sink.span").unwrap();
+        assert_eq!(sp.ph, 'X');
+        assert!(sp.dur_us.is_some());
+        assert_eq!(sp.args, vec![("k".to_string(), ArgVal::Int(1))]);
+    }
+}

@@ -165,6 +165,10 @@ pub enum Source {
     ColdSolve,
     /// Collapsed onto an identical in-flight request's solve.
     Deduped,
+    /// The solve failed (infeasible budget or a solver bug); the error
+    /// text is on the outcome. Includes requests that deduped onto a
+    /// failed solve — they got no answer either.
+    Failed,
 }
 
 impl Source {
@@ -174,6 +178,7 @@ impl Source {
             Source::WarmSolve => "warm solve",
             Source::ColdSolve => "cold solve",
             Source::Deduped => "deduped",
+            Source::Failed => "FAILED",
         }
     }
 }
@@ -185,10 +190,17 @@ pub struct BatchOutcome {
     /// Canonical cache key the request mapped to.
     pub key: String,
     pub source: Source,
+    /// Zero when the request failed.
     pub gflops: f64,
+    /// Zero when the request failed.
     pub latency_cycles: u64,
-    /// Time the solve took (zero for cache/dedup answers).
+    /// Time the solve took (zero for cache/dedup/failed answers).
     pub solve_time: Duration,
+    /// Time from batch start until a worker picked the request's solve
+    /// up (zero for cache/dedup answers, which never queue).
+    pub queue_time: Duration,
+    /// The solver's error text when `source` is [`Source::Failed`].
+    pub error: Option<String>,
 }
 
 /// Aggregate result of one batch run.
@@ -197,7 +209,13 @@ pub struct BatchReport {
     pub outcomes: Vec<BatchOutcome>,
     pub cache_hits: usize,
     pub deduped: usize,
+    /// Requests answered by running the solver (warm + cold).
     pub solved: usize,
+    /// Solved requests that were warm-started from a related record.
+    pub warm_solves: usize,
+    /// Requests that got no answer (their own solve failed, or they
+    /// deduped onto one that did).
+    pub failed: usize,
     pub elapsed: Duration,
 }
 
@@ -214,23 +232,81 @@ impl BatchReport {
                 o.request.kernel.clone(),
                 o.request.scenario.to_string(),
                 model.to_string(),
-                gfs(o.gflops),
-                o.latency_cycles.to_string(),
+                if o.source == Source::Failed { "-".to_string() } else { gfs(o.gflops) },
+                if o.source == Source::Failed {
+                    o.error.clone().unwrap_or_default()
+                } else {
+                    o.latency_cycles.to_string()
+                },
                 o.source.as_str().to_string(),
             ]);
         }
         t.render()
     }
 
-    /// One-line summary for logs and the CLI footer.
+    /// Service-level metrics table: answer-source rates and queue/solve
+    /// wall-time aggregates. The observability counterpart of
+    /// [`BatchReport::render`] — about the *service*, not the designs.
+    pub fn metrics(&self) -> String {
+        let n = self.outcomes.len().max(1);
+        let pct = |k: usize| format!("{:.1}%", 100.0 * k as f64 / n as f64);
+        let solve_times: Vec<Duration> = self
+            .outcomes
+            .iter()
+            .filter(|o| matches!(o.source, Source::WarmSolve | Source::ColdSolve))
+            .map(|o| o.solve_time)
+            .collect();
+        let queue_times: Vec<Duration> = self
+            .outcomes
+            .iter()
+            .filter(|o| matches!(o.source, Source::WarmSolve | Source::ColdSolve))
+            .map(|o| o.queue_time)
+            .collect();
+        let stat = |ts: &[Duration]| {
+            if ts.is_empty() {
+                return "-".to_string();
+            }
+            let total: Duration = ts.iter().sum();
+            let max = ts.iter().max().copied().unwrap_or_default();
+            format!("avg {:.2?}, max {:.2?}", total / ts.len() as u32, max)
+        };
+        let reqs_per_s = self.outcomes.len() as f64 / self.elapsed.as_secs_f64().max(1e-9);
+        let mut t = Table::new(&["Metric", "Value"]);
+        t.row(vec!["requests".into(), self.outcomes.len().to_string()]);
+        t.row(vec!["db hit rate".into(), format!("{} ({})", self.cache_hits, pct(self.cache_hits))]);
+        t.row(vec!["dedup rate".into(), format!("{} ({})", self.deduped, pct(self.deduped))]);
+        t.row(vec![
+            "warm-start rate".into(),
+            format!(
+                "{} of {} solves ({:.1}%)",
+                self.warm_solves,
+                self.solved,
+                100.0 * self.warm_solves as f64 / self.solved.max(1) as f64
+            ),
+        ]);
+        t.row(vec!["failed".into(), format!("{} ({})", self.failed, pct(self.failed))]);
+        t.row(vec!["queue time".into(), stat(&queue_times)]);
+        t.row(vec!["solve time".into(), stat(&solve_times)]);
+        t.row(vec!["throughput".into(), format!("{reqs_per_s:.2} req/s")]);
+        t.render()
+    }
+
+    /// One-line summary for logs and the CLI footer. Printed even when
+    /// some requests failed — partial batches still report.
     pub fn summary(&self) -> String {
+        let ok = self.outcomes.len() - self.failed;
         format!(
-            "{} requests: {} cache hits, {} deduped, {} solved in {:.2?}",
+            "{} requests: {} ok ({} cache hits, {} deduped, {} solved, {} warm), \
+             {} failed in {:.2?} ({:.2} req/s)",
             self.outcomes.len(),
+            ok,
             self.cache_hits,
             self.deduped,
             self.solved,
+            self.warm_solves,
+            self.failed,
             self.elapsed,
+            self.outcomes.len() as f64 / self.elapsed.as_secs_f64().max(1e-9),
         )
     }
 }
@@ -241,6 +317,8 @@ struct SolvedJob {
     record: QorRecord,
     warm: bool,
     solve_time: Duration,
+    /// Batch-start → worker-pickup wall time for this miss.
+    queue_time: Duration,
 }
 
 /// Best-effort text of a worker panic payload.
@@ -257,6 +335,12 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// Run `requests` against the knowledge base, solving misses in
 /// parallel. New results are inserted into `db` (the caller decides
 /// when/where to persist it). Request order is preserved in the report.
+///
+/// A failed solve (infeasible budget, solver panic) fails *that
+/// request* — it lands in the report as [`Source::Failed`] with the
+/// error text, completed solves still reach the knowledge base, and
+/// the call returns `Ok`. `Err` is reserved for a malformed batch
+/// (an unknown kernel), detected before any solver time is spent.
 pub fn run_batch(
     requests: &[BatchRequest],
     dev: &Device,
@@ -355,6 +439,12 @@ pub fn run_batch(
     let results: Vec<Result<SolvedJob, String>> =
         crate::par::run_indexed(job_requests.len(), workers, |j| {
             let req = &requests[job_requests[j]];
+            let queue_time = t0.elapsed();
+            let span = crate::obs::span("service", "batch.solve").map(|s| {
+                s.arg("kernel", crate::obs::ArgVal::Str(req.kernel.clone()))
+                    .arg("scenario", crate::obs::ArgVal::Str(req.scenario.to_string()))
+                    .arg("queue_us", crate::obs::ArgVal::Int(queue_time.as_micros() as i128))
+            });
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                 || -> Result<SolvedJob, String> {
                     let mut sopts = req.solver_options(&opts.solver);
@@ -388,9 +478,11 @@ pub fn run_batch(
                         record,
                         warm: r.warm_started,
                         solve_time: r.solve_time,
+                        queue_time,
                     })
                 },
             ));
+            drop(span);
             match outcome {
                 Ok(res) => res,
                 Err(p) => Err(panic_message(&p)),
@@ -398,59 +490,64 @@ pub fn run_batch(
         });
 
     // Fold results back into the knowledge base (completed solves
-    // first, so they survive even when some requests failed), then
-    // report failures.
-    let mut solve_times: std::collections::BTreeMap<String, (Duration, bool)> =
+    // first, so they survive even when some requests failed). A failure
+    // is recorded per canonical key — every request that maps onto it,
+    // dedup riders included, got no answer.
+    let mut solve_times: std::collections::BTreeMap<String, (Duration, Duration, bool)> =
         std::collections::BTreeMap::new();
-    let mut failures: Vec<String> = Vec::new();
-    let mut failed_keys: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let mut failed_keys: std::collections::BTreeMap<String, String> =
+        std::collections::BTreeMap::new();
     for (outcome, &ri) in results.into_iter().zip(&job_requests) {
-        let req = &requests[ri];
         match outcome {
             Ok(job) => {
-                solve_times.insert(job.canonical.clone(), (job.solve_time, job.warm));
+                solve_times
+                    .insert(job.canonical.clone(), (job.solve_time, job.queue_time, job.warm));
                 db.insert_canonical(job.canonical, job.record);
             }
             Err(msg) => {
-                failed_keys.insert(canon[ri].clone());
-                failures.push(format!("{} @ {}: {msg}", req.kernel, req.scenario));
+                failed_keys.insert(canon[ri].clone(), msg);
             }
         }
     }
-    if !failures.is_empty() {
-        // Count every request that got no answer, including the ones
-        // that deduped onto a failed solve.
-        let affected = canon.iter().filter(|c| failed_keys.contains(c.as_str())).count();
-        bail!(
-            "{affected} of {} batch requests failed across {} solves \
-             (completed solves were kept in the db): {}",
-            requests.len(),
-            failures.len(),
-            failures.join("; ")
-        );
-    }
 
     let mut outcomes = Vec::with_capacity(requests.len());
-    let (mut cache_hits, mut deduped, mut solved) = (0usize, 0usize, 0usize);
+    let (mut cache_hits, mut deduped, mut solved, mut warm_solves, mut failed) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
     for (i, req) in requests.iter().enumerate() {
+        if let Some(msg) = failed_keys.get(&canon[i]) {
+            failed += 1;
+            outcomes.push(BatchOutcome {
+                request: req.clone(),
+                key: canon[i].clone(),
+                source: Source::Failed,
+                gflops: 0.0,
+                latency_cycles: 0,
+                solve_time: Duration::ZERO,
+                queue_time: Duration::ZERO,
+                error: Some(msg.clone()),
+            });
+            continue;
+        }
         let rec = db
             .get_canonical(&canon[i])
             .ok_or_else(|| anyhow!("request `{}` missing from db after batch", req.kernel))?;
-        let (source, solve_time) = match sources[i] {
+        let (source, solve_time, queue_time) = match sources[i] {
             Source::Cache => {
                 cache_hits += 1;
-                (Source::Cache, Duration::ZERO)
+                (Source::Cache, Duration::ZERO, Duration::ZERO)
             }
             Source::Deduped => {
                 deduped += 1;
-                (Source::Deduped, Duration::ZERO)
+                (Source::Deduped, Duration::ZERO, Duration::ZERO)
             }
             _ => {
                 solved += 1;
                 match solve_times.get(&canon[i]) {
-                    Some(&(t, true)) => (Source::WarmSolve, t),
-                    Some(&(t, false)) => (Source::ColdSolve, t),
-                    None => (Source::ColdSolve, Duration::ZERO),
+                    Some(&(t, q, warm)) => {
+                        warm_solves += usize::from(warm);
+                        (if warm { Source::WarmSolve } else { Source::ColdSolve }, t, q)
+                    }
+                    None => (Source::ColdSolve, Duration::ZERO, Duration::ZERO),
                 }
             }
         };
@@ -461,10 +558,35 @@ pub fn run_batch(
             gflops: rec.gflops,
             latency_cycles: rec.latency_cycles,
             solve_time,
+            queue_time,
+            error: None,
         });
     }
 
-    Ok(BatchReport { outcomes, cache_hits, deduped, solved, elapsed: t0.elapsed() })
+    let report = BatchReport {
+        outcomes,
+        cache_hits,
+        deduped,
+        solved,
+        warm_solves,
+        failed,
+        elapsed: t0.elapsed(),
+    };
+    if crate::obs::trace_enabled() {
+        crate::obs::counter(
+            "service",
+            "batch.summary",
+            vec![
+                ("requests".to_string(), crate::obs::ArgVal::Int(report.outcomes.len() as i128)),
+                ("cache_hits".to_string(), crate::obs::ArgVal::Int(report.cache_hits as i128)),
+                ("deduped".to_string(), crate::obs::ArgVal::Int(report.deduped as i128)),
+                ("solved".to_string(), crate::obs::ArgVal::Int(report.solved as i128)),
+                ("warm_solves".to_string(), crate::obs::ArgVal::Int(report.warm_solves as i128)),
+                ("failed".to_string(), crate::obs::ArgVal::Int(report.failed as i128)),
+            ],
+        );
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -532,14 +654,22 @@ mod tests {
             BatchRequest::new("madd", Scenario::Rtl),
             // a budget far too small for any design: the solver returns
             // `SolverError::Infeasible`; the batch must fail exactly
-            // that request, with the solver's message, not a panic's
+            // that request, with the solver's message, not a panic's —
+            // and still return `Ok` with the failure in the report
             BatchRequest::new("madd", Scenario::OnBoard { slrs: 1, frac: 1e-6 }),
         ];
         let mut db = QorDb::new();
-        let err = run_batch(&reqs, &dev, &mut db, &opts).unwrap_err();
-        let msg = format!("{err:#}");
-        assert!(msg.contains("1 of 2"), "{msg}");
+        let rep = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+        assert_eq!(rep.failed, 1);
+        assert_eq!(rep.solved, 1);
+        assert_eq!(rep.outcomes[1].source, Source::Failed);
+        let msg = rep.outcomes[1].error.as_deref().unwrap_or_default();
         assert!(msg.contains("infeasible"), "expected a clean solver error, got: {msg}");
+        assert!(rep.outcomes[0].error.is_none());
+        // the failure is visible in the renderings, not just the struct
+        assert!(rep.render().contains("FAILED"), "{}", rep.render());
+        assert!(rep.summary().contains("1 failed"), "{}", rep.summary());
+        assert!(rep.metrics().contains("failed"), "{}", rep.metrics());
         // the feasible request's solve survived into the knowledge base
         assert_eq!(db.len(), 1);
     }

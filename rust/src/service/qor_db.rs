@@ -14,7 +14,7 @@
 //! On-disk format (JSON, written pretty so databases diff cleanly):
 //!
 //! ```text
-//! { "format_version": 3,
+//! { "format_version": 4,
 //!   "records": { "<canonical key>": { "design": {..}, "latency_cycles": .., .. }, .. } }
 //! ```
 //!
@@ -42,7 +42,14 @@ use std::path::Path;
 ///   `explore_fusion` key weighed is strictly larger. A v2 record's
 ///   answer is therefore stale for the *same* canonical key, so v2
 ///   databases are evicted wholesale, exactly as v2 evicted v1.
-pub const FORMAT_VERSION: u64 = 3;
+/// * v4: records carry solve provenance — `warm_started` (did a prior
+///   record seed the branch-and-bound bound?) and `fusion_variants`
+///   (how many legal fusion variants the solve weighed). Provenance
+///   qualifies a record's trustworthiness (a timed-out cold solve over
+///   one variant is a weaker answer than an exhaustive warm one), so a
+///   v3 record without it is evicted rather than back-filled with
+///   guesses.
+pub const FORMAT_VERSION: u64 = 4;
 
 /// Everything that determines a solve's outcome, canonicalized.
 ///
@@ -149,6 +156,16 @@ pub struct QorRecord {
     pub explored: u64,
     /// Whether the original solve hit its anytime timeout.
     pub timed_out: bool,
+    /// Whether the original solve was warm-started: a prior record
+    /// (from this store or an explicit `SolverOptions::incumbent`)
+    /// actually seeded the branch-and-bound bound. A truncated
+    /// (`timed_out`) cold record is the weakest provenance in the
+    /// store; a warm, completed one the strongest.
+    pub warm_started: bool,
+    /// Legal fusion variants the original solve weighed (1 = fixed
+    /// fusion). Together with `explored`/`timed_out` this says how much
+    /// of the holistic space stands behind the stored answer.
+    pub fusion_variants: u64,
 }
 
 impl QorRecord {
@@ -203,6 +220,8 @@ impl QorRecord {
             solve_time_ms: result.solve_time.as_secs_f64() * 1e3,
             explored: result.explored,
             timed_out: result.timed_out,
+            warm_started: result.warm_started,
+            fusion_variants: result.fusion_variants as u64,
         }
     }
 }
@@ -216,6 +235,8 @@ impl Serialize for QorRecord {
             ("solve_time_ms".to_string(), self.solve_time_ms.serialize()),
             ("explored".to_string(), self.explored.serialize()),
             ("timed_out".to_string(), self.timed_out.serialize()),
+            ("warm_started".to_string(), self.warm_started.serialize()),
+            ("fusion_variants".to_string(), self.fusion_variants.serialize()),
         ])
     }
 }
@@ -229,6 +250,8 @@ impl Deserialize for QorRecord {
             solve_time_ms: f64::deserialize(v.field("solve_time_ms")?)?,
             explored: u64::deserialize(v.field("explored")?)?,
             timed_out: bool::deserialize(v.field("timed_out")?)?,
+            warm_started: bool::deserialize(v.field("warm_started")?)?,
+            fusion_variants: u64::deserialize(v.field("fusion_variants")?)?,
         })
     }
 }
@@ -455,6 +478,8 @@ mod tests {
             solve_time_ms: 45.5,
             explored: 10_000,
             timed_out: false,
+            warm_started: false,
+            fusion_variants: 1,
         }
     }
 

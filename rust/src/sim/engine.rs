@@ -27,6 +27,23 @@ use crate::dse::eval::{GeometryCache, ResolvedDesign};
 use crate::hw::Device;
 use crate::ir::Kernel;
 
+/// One FIFO edge's stall attribution: cycles the consumer spent gated
+/// on tokens from this producer. Telemetry only — collected when
+/// tracing is on ([`crate::obs::trace_enabled`]); empty otherwise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FifoStall {
+    /// Producing task id (a range-peeled part counts separately).
+    pub producer: usize,
+    /// Consuming (stalled) task id.
+    pub consumer: usize,
+    /// Name of the array streamed over this FIFO.
+    pub array: String,
+    /// Stall cycles charged to this edge: for each stalled step, the
+    /// full stall goes to the *binding* producer — the one whose token
+    /// availability set the step's ready time (first-wins on ties).
+    pub cycles: u64,
+}
+
 /// Simulation output for one design.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -40,6 +57,14 @@ pub struct SimReport {
     pub ddr_blocked_cycles: Vec<u64>,
     /// Total tile steps executed (simulator work measure).
     pub steps: u64,
+    /// Per-FIFO stall attribution (telemetry): which producer edge the
+    /// `fifo_stall_cycles` of each consumer are waiting on. Collected
+    /// only while tracing is enabled — the attribution bookkeeping
+    /// (array-name clones, per-edge tallies) is off the leaf-simulation
+    /// hot path otherwise — and always empty for Sequential designs,
+    /// which have no FIFOs. Sums to at most `fifo_stall_cycles[t]` per
+    /// consumer `t` (preload-bound steps stay unattributed).
+    pub fifo_stalls: Vec<FifoStall>,
 }
 
 impl SimReport {
@@ -68,11 +93,14 @@ struct TaskSteps {
     /// producing task — a range-peeled producer part contributes one
     /// per peel, so the consumer waits on all of them.
     fifo_in: Vec<(usize, u64, u64)>,
+    /// Array name per `fifo_in` entry — filled only when stall
+    /// attribution is on (`attr`), empty (and never read) otherwise.
+    fifo_arrays: Vec<String>,
     /// Whether ping-pong overlap is active.
     overlap: bool,
 }
 
-fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
+fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device, attr: bool) -> TaskSteps {
     let rt = rd.task(t);
     let steps = rt.steps;
     let compute = pipelined_compute_latency(rt, dev);
@@ -81,6 +109,7 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
     let mut ddr_in_streams: Vec<u64> = Vec::new(); // per-array totals
     let mut ddr_out_total = 0u64;
     let mut fifo_in = Vec::new();
+    let mut fifo_arrays: Vec<String> = Vec::new();
 
     for (a, rp) in rt.arrays() {
         // FIFO input: array produced by another fused task. When the
@@ -126,6 +155,9 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
                     .unwrap_or(0);
                 let rate = emitted.div_ceil(prt.steps.max(1));
                 fifo_in.push((p, per_step, rate));
+                if attr {
+                    fifo_arrays.push(a.name.clone());
+                }
             }
             continue; // FIFO tiles don't hit DDR
         }
@@ -162,6 +194,7 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device) -> TaskSteps {
         ddr_out: ddr_out_total / steps,
         preload,
         fifo_in,
+        fifo_arrays,
         overlap: rd.design.overlap,
     }
 }
@@ -223,13 +256,19 @@ fn simulate_sequential(rd: &ResolvedDesign, dev: &Device) -> SimReport {
         fifo_stall_cycles: vec![0; n],
         ddr_blocked_cycles: ddr_blocked,
         steps: total_steps,
+        fifo_stalls: Vec::new(),
     }
 }
 
 /// Dataflow execution: the tile-step pipeline with FIFO token waits.
 fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
     let n = rd.fg.tasks.len();
-    let specs: Vec<TaskSteps> = (0..n).map(|t| build_steps(rd, t, dev)).collect();
+    // Per-FIFO stall attribution rides on the tracing switch: leaf
+    // simulations inside a telemetry-off solve never pay for the
+    // array-name clones or per-edge tallies.
+    let attr_on = crate::obs::trace_enabled();
+    let specs: Vec<TaskSteps> = (0..n).map(|t| build_steps(rd, t, dev, attr_on)).collect();
+    let mut fifo_stalls: Vec<FifoStall> = Vec::new();
 
     // producer emission timestamps: per task, the time at which the i-th
     // step's outputs are emitted (filled in topological order).
@@ -272,6 +311,8 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
         let mut compute_done_prev = 0u64;
         let mut store_done_prev = 0u64;
         let mut emits = Vec::with_capacity(spec.steps as usize);
+        let mut edge_stall: Vec<u64> =
+            if attr_on { vec![0; spec.fifo_in.len()] } else { Vec::new() };
         let preload_done = start_base + spec.preload;
         if spec.preload > 0 {
             ddr_blocked[t] += spec.preload;
@@ -279,11 +320,19 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
 
         for i in 0..spec.steps {
             total_steps += 1;
-            // FIFO wait: cumulative elements needed through step i+1
+            // FIFO wait: cumulative elements needed through step i+1.
+            // `binding` tracks which edge set the ready time (strict
+            // improvement + in-order scan = first-wins on ties, so the
+            // attribution is deterministic); None = preload-bound.
             let mut in_ready = preload_done;
-            for &(p, per_step, rate) in &spec.fifo_in {
+            let mut binding: Option<usize> = None;
+            for (ei, &(p, per_step, rate)) in spec.fifo_in.iter().enumerate() {
                 let need = per_step * (i + 1);
-                in_ready = in_ready.max(avail(p, need, rate));
+                let ready = avail(p, need, rate);
+                if ready > in_ready {
+                    in_ready = ready;
+                    binding = Some(ei);
+                }
             }
             // load of tile i may begin once the previous tile's buffer is
             // free (ping-pong: after compute of i-1) and data is ready
@@ -295,6 +344,11 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
             let load_done = load_start + spec.ddr_in;
             let stall = in_ready.saturating_sub(load_done_prev.max(compute_done_prev));
             fifo_stall[t] += stall;
+            if attr_on && stall > 0 {
+                if let Some(ei) = binding {
+                    edge_stall[ei] += stall;
+                }
+            }
 
             let compute_start = load_done.max(compute_done_prev);
             let compute_done = compute_start + spec.compute;
@@ -313,6 +367,18 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
         }
         finish[t] = store_done_prev.max(preload_done);
         emit_times[t] = emits;
+        if attr_on {
+            for (ei, &(p, _, _)) in spec.fifo_in.iter().enumerate() {
+                if edge_stall[ei] > 0 {
+                    fifo_stalls.push(FifoStall {
+                        producer: p,
+                        consumer: t,
+                        array: spec.fifo_arrays[ei].clone(),
+                        cycles: edge_stall[ei],
+                    });
+                }
+            }
+        }
     }
 
     let cycles = rd
@@ -328,6 +394,7 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
         fifo_stall_cycles: fifo_stall,
         ddr_blocked_cycles: ddr_blocked,
         steps: total_steps,
+        fifo_stalls,
     }
 }
 

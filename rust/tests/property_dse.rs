@@ -289,9 +289,13 @@ fn infeasible_budget_errors_cleanly_through_batch() {
     };
     let reqs = vec![BatchRequest::new("gemm", Scenario::OnBoard { slrs: 1, frac: 1e-6 })];
     let mut db = QorDb::new();
-    let err = run_batch(&reqs, &dev, &mut db, &opts).unwrap_err();
-    let msg = format!("{err:#}");
-    // the solver's message, not a caught panic payload
+    // a failed solve fails that request inside an `Ok` report (the
+    // batch no longer errors wholesale), carrying the solver's message,
+    // not a caught panic payload
+    let rep = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+    assert_eq!(rep.failed, 1);
+    assert_eq!(rep.outcomes[0].source, prometheus::service::batch::Source::Failed);
+    let msg = rep.outcomes[0].error.clone().unwrap_or_default();
     assert!(msg.contains("infeasible"), "{msg}");
     assert!(db.is_empty(), "an infeasible request must not pollute the knowledge base");
 }

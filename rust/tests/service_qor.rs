@@ -54,6 +54,8 @@ fn record(kernel: &str, latency: u64) -> QorRecord {
         solve_time_ms: 2250.75,
         explored: 123_456,
         timed_out: false,
+        warm_started: true,
+        fusion_variants: 3,
     }
 }
 
@@ -127,37 +129,41 @@ fn corrupt_file_falls_back_to_empty() {
 }
 
 #[test]
-fn v2_databases_are_evicted_wholesale_round_trip() {
-    // The FORMAT_VERSION 2 -> 3 migration (fusion plans generalized to
-    // partial/loop-range + cross-array fusion): a v2 file loads as
-    // empty — its answers are stale for the same keys, because the
-    // explored space grew — and the next save round-trips as a valid
-    // v3 database. Mirrors the v1 -> v2 eviction of the previous bump.
-    assert_eq!(FORMAT_VERSION, 3, "bump this test with the next migration");
+fn v3_databases_are_evicted_wholesale_round_trip() {
+    // The FORMAT_VERSION 3 -> 4 migration (records gained solve
+    // provenance: `warm_started` + `fusion_variants`): a v3 file loads
+    // as empty — its records lack provenance, which v4 refuses to
+    // back-fill with guesses — and the next save round-trips as a valid
+    // v4 database. Mirrors the v2 -> v3 eviction of the previous bump.
+    assert_eq!(FORMAT_VERSION, 4, "bump this test with the next migration");
     let dev = Device::u55c();
     let mut db = QorDb::new();
     db.insert(&DesignKey::new("gemm", &dev, &SolverOptions::default()), record("gemm", 4321));
-    let path = tmp_path("v2_evict");
+    let path = tmp_path("v3_evict");
     db.save(&path).unwrap();
-    // rewrite the version stamp back to v2 — exactly what a database
+    // rewrite the version stamp back to v3 — exactly what a database
     // written before this migration looks like to the loader
     let text = std::fs::read_to_string(&path).unwrap();
     let downgraded = text.replace(
         &format!("\"format_version\": {FORMAT_VERSION}"),
-        "\"format_version\": 2",
+        "\"format_version\": 3",
     );
     assert_ne!(text, downgraded);
     std::fs::write(&path, &downgraded).unwrap();
     let evicted = QorDb::load(&path);
-    assert!(evicted.is_empty(), "v2 records must be evicted wholesale");
-    // refill + save: the file is v3 again and round-trips
+    assert!(evicted.is_empty(), "v3 records must be evicted wholesale");
+    // refill + save: the file is v4 again, round-trips, and carries the
+    // new provenance fields on disk
     let mut refilled = evicted;
     refilled
         .insert(&DesignKey::new("gemm", &dev, &SolverOptions::default()), record("gemm", 1234));
     refilled.save(&path).unwrap();
     let back = QorDb::load(&path);
     assert_eq!(back, refilled);
-    assert!(std::fs::read_to_string(&path).unwrap().contains("\"format_version\": 3"));
+    let saved = std::fs::read_to_string(&path).unwrap();
+    assert!(saved.contains("\"format_version\": 4"));
+    assert!(saved.contains("\"warm_started\""), "provenance missing on disk: {saved}");
+    assert!(saved.contains("\"fusion_variants\""), "provenance missing on disk: {saved}");
     let _ = std::fs::remove_file(&path);
     let _ = std::fs::remove_file(&PathBuf::from(format!("{}.bak", path.display())));
 }

@@ -1,0 +1,207 @@
+//! Observability acceptance tests: telemetry must be *inert* (tracing
+//! on/off and jobs=1/jobs=N cannot change any solver answer), counters
+//! must be deterministic at `jobs = 1`, and the Chrome trace-event
+//! export must be valid JSON carrying the span taxonomy DESIGN.md §10
+//! documents.
+//!
+//! The trace sink is process-global and the tests in this binary run
+//! concurrently, so sink-content assertions are `contains`-style: a
+//! concurrent solve adding *extra* events must never flake a test.
+
+use prometheus::coordinator::flow::{optimize_kernel, quick_solver, OptimizeOptions};
+use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use prometheus::obs;
+use serde::Value;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The two tests that start/stop the process-global sink serialize on
+/// this lock so neither steals the other's events mid-flight.
+static TRACE_MUX: Mutex<()> = Mutex::new(());
+
+/// Small-but-feasible knobs shared by the determinism tests (same
+/// shape as the other integration suites).
+fn small_solver() -> SolverOptions {
+    SolverOptions {
+        beam: 4,
+        max_factor_per_loop: 8,
+        max_unroll: 64,
+        max_pad: 4,
+        timeout: Duration::from_secs(30),
+        jobs: 1,
+        ..SolverOptions::default()
+    }
+}
+
+#[test]
+fn telemetry_is_inert_across_the_zoo() {
+    // The acceptance property: flipping `SolverOptions::telemetry` (and
+    // with it every counter hook on the solver hot path) changes *no*
+    // answer, for every kernel in the zoo.
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        let off = solve(&k, &dev, &SolverOptions { telemetry: false, ..small_solver() })
+            .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        let on = solve(&k, &dev, &SolverOptions { telemetry: true, ..small_solver() })
+            .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        assert_eq!(off.design, on.design, "{}: telemetry changed the design", k.name);
+        assert_eq!(
+            off.latency.total, on.latency.total,
+            "{}: telemetry changed the latency",
+            k.name
+        );
+        assert_eq!(off.explored, on.explored, "{}: telemetry changed exploration", k.name);
+        assert!(!off.telemetry.enabled, "{}: telemetry-off solve reported counters", k.name);
+        assert!(on.telemetry.enabled, "{}: telemetry-on solve reported none", k.name);
+        // sanity on the counters themselves: the solver really did
+        // enumerate and simulate something
+        let t = on.telemetry.totals();
+        assert!(t.enumerated > 0, "{}: no enumerations counted", k.name);
+        assert!(t.leaves_simulated > 0, "{}: no leaves counted", k.name);
+    }
+}
+
+#[test]
+fn telemetry_survives_parallel_solves_bit_identically() {
+    // jobs=1 vs jobs=8 with telemetry on: the answer (and its analytic
+    // latency) must stay bit-identical — counting must not perturb the
+    // parallel DFS's determinism contract.
+    let dev = Device::u55c();
+    for name in ["gemver", "3mm", "mvt"] {
+        let k = polybench::by_name(name).unwrap();
+        let base = SolverOptions { telemetry: true, ..small_solver() };
+        let serial = solve(&k, &dev, &base).unwrap();
+        let parallel = solve(&k, &dev, &SolverOptions { jobs: 8, ..base.clone() }).unwrap();
+        assert_eq!(serial.design, parallel.design, "{name}: jobs changed the design");
+        assert_eq!(serial.latency.total, parallel.latency.total);
+        // both carried telemetry; the *final* incumbent must agree even
+        // though the improvement paths legitimately differ across
+        // thread counts
+        let last = |r: &prometheus::dse::solver::SolverResult| {
+            r.telemetry.incumbents.last().map(|i| i.latency)
+        };
+        if let (Some(a), Some(b)) = (last(&serial), last(&parallel)) {
+            assert_eq!(a, b, "{name}: final incumbent latency diverged");
+        }
+    }
+}
+
+#[test]
+fn counters_are_deterministic_at_one_job() {
+    // Two identical jobs=1 solves must report identical counters, depth
+    // histograms, and (latency, variant) incumbent sequences. Wall
+    // clock (`elapsed_us`) is explicitly excluded — it is the one
+    // nondeterministic field.
+    let dev = Device::u55c();
+    let k = polybench::by_name("gemver").unwrap();
+    let opts = SolverOptions { telemetry: true, ..small_solver() };
+    let a = solve(&k, &dev, &opts).unwrap().telemetry;
+    let b = solve(&k, &dev, &opts).unwrap().telemetry;
+    assert_eq!(a.variants, b.variants, "per-variant counters diverged at jobs=1");
+    assert_eq!(a.depth_hist, b.depth_hist, "DFS depth histogram diverged at jobs=1");
+    let seq = |t: &obs::SolveTelemetry| {
+        t.incumbents.iter().map(|i| (i.latency, i.variant)).collect::<Vec<_>>()
+    };
+    assert_eq!(seq(&a), seq(&b), "incumbent timeline diverged at jobs=1");
+    assert!(!a.incumbents.is_empty(), "a successful solve must record >= 1 incumbent");
+    // the human rendering mentions the headline numbers
+    let rendered = a.render();
+    assert!(rendered.contains("enumerated"), "{rendered}");
+    assert!(rendered.contains("improvement"), "{rendered}");
+}
+
+/// Find events by name prefix in a parsed trace.
+fn events_named<'a>(events: &'a [Value], prefix: &str) -> Vec<&'a Value> {
+    events
+        .iter()
+        .filter(|e| e.get("name").and_then(|n| n.as_str()).is_some_and(|n| n.starts_with(prefix)))
+        .collect()
+}
+
+#[test]
+fn chrome_trace_export_covers_the_whole_lifecycle() {
+    // start → full flow on a zoo kernel → stop → export: the JSON must
+    // parse, carry the flow-phase spans, per-variant solver counters,
+    // and at least one incumbent instant, and every event must have the
+    // trace-event-format required fields.
+    let _mux = TRACE_MUX.lock().unwrap_or_else(|p| p.into_inner());
+    let dev = Device::u55c();
+    obs::start_trace();
+    let opts = OptimizeOptions {
+        scenario: Scenario::Rtl,
+        solver: SolverOptions { telemetry: true, ..quick_solver() },
+        ..OptimizeOptions::default()
+    };
+    let r = optimize_kernel("gemver", &dev, &opts).unwrap();
+    assert!(r.result.telemetry.enabled);
+    let (events, dropped) = obs::stop_trace();
+    assert!(!events.is_empty(), "a traced flow must record events");
+
+    let json = obs::chrome_trace_json(&events, dropped);
+    let v = serde::parse(&json).expect("exported trace must be valid JSON");
+    let trace_events = v.field("traceEvents").unwrap().as_arr().unwrap().to_vec();
+
+    // every event carries the required trace-event-format fields
+    for e in &trace_events {
+        for key in ["name", "cat", "ph", "ts", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "event missing `{key}`: {e:?}");
+        }
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap();
+        if ph == "X" {
+            assert!(e.get("dur").is_some(), "complete event missing `dur`: {e:?}");
+        }
+    }
+
+    // flow-phase spans (complete events)
+    for span in ["flow.fusion_space", "flow.solve", "flow.sim"] {
+        let found = events_named(&trace_events, span);
+        assert!(!found.is_empty(), "missing `{span}` span in: {json:.2000}");
+        assert!(found
+            .iter()
+            .any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")));
+    }
+
+    // per-variant solver counters with the documented args
+    let counters = events_named(&trace_events, "solve.variant");
+    assert!(!counters.is_empty(), "missing per-variant counter events");
+    assert!(counters.iter().all(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C")));
+    assert!(counters
+        .iter()
+        .any(|e| e.get("args").and_then(|a| a.get("enumerated")).and_then(|x| x.as_int())
+            > Some(0)));
+
+    // at least one incumbent instant
+    let incumbents = events_named(&trace_events, "incumbent");
+    assert!(!incumbents.is_empty(), "missing incumbent instants");
+    assert!(incumbents.iter().all(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i")));
+}
+
+#[test]
+fn write_chrome_trace_round_trips_through_disk() {
+    let _mux = TRACE_MUX.lock().unwrap_or_else(|p| p.into_inner());
+    obs::start_trace();
+    {
+        let _s = obs::span("test", "roundtrip.span")
+            .map(|s| s.arg("answer", obs::ArgVal::Int(42)));
+        obs::instant("test", "roundtrip.instant", Vec::new());
+    }
+    let (events, dropped) = obs::stop_trace();
+    let path = std::env::temp_dir()
+        .join(format!("prom_trace_roundtrip_{}.json", std::process::id()));
+    obs::write_chrome_trace(&path, &events, dropped).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = serde::parse(&text).expect("written trace must parse");
+    let names: Vec<&str> = v
+        .field("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .collect();
+    assert!(names.contains(&"roundtrip.span"), "{names:?}");
+    assert!(names.contains(&"roundtrip.instant"), "{names:?}");
+    let _ = std::fs::remove_file(&path);
+}
