@@ -43,6 +43,24 @@
 //! Projection, not paired wall-clock runs, because a 2% delta is far
 //! below run-to-run solve-time noise.
 //!
+//! **Part 4** (ISSUE 7 tentpole): the allocation-free leaf fast path
+//! and the shared fusion-aware beam. Every kernel in the polybench zoo
+//! is solved twice at identical knobs: once with `leaf_prefilter` and
+//! `shared_beam` forced off (the pre-fast-path cost structure — every
+//! DFS leaf assembles a `DesignConfig`, re-resolves all tasks and runs
+//! the allocating simulator; every fusion variant keeps its full beam)
+//! and once with both on. The bar is >= 5x aggregate solves/sec, with
+//! the winning designs asserted bit-identical per kernel — across
+//! prefilter on/off, shared-beam on/off, telemetry on/off and
+//! jobs=1 vs jobs=8 — plus the leaf-accounting invariant at jobs=1:
+//! every leaf the reference path simulates is either simulated or
+//! model-pruned by the fast path (`leaves_ref == leaves_fast +
+//! model_pruned_fast`). Under `PROMETHEUS_BENCH_QUICK=1` (the CI smoke
+//! run) the zoo shrinks to four kernels and every wall-clock bar in
+//! parts 1–4 is printed but not asserted — timing ratios are not
+//! meaningful on loaded CI hosts; every answer-shaped assert (design
+//! equality, leaf accounting, inertness) still runs.
+//!
 //! ```bash
 //! cargo bench --bench solver_eval
 //! ```
@@ -53,7 +71,7 @@ use prometheus::dse::constraints::task_resources;
 use prometheus::dse::cost::task_latency;
 use prometheus::dse::eval::{resolve_task, GeometryCache};
 use prometheus::dse::padding::legal_intra_factors;
-use prometheus::dse::solver::{solve_with_cache, SolverOptions};
+use prometheus::dse::solver::{solve, solve_with_cache, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
 use std::collections::BTreeMap;
@@ -93,6 +111,11 @@ fn candidate_batch(k: &prometheus::ir::Kernel, fg: &prometheus::analysis::fusion
 }
 
 fn main() {
+    // CI smoke mode: every answer-shaped assert (design equality, leaf
+    // accounting, inertness) still runs, but the wall-clock bars are
+    // printed instead of asserted — timing ratios are not meaningful on
+    // shared CI hosts — and the part-4 zoo shrinks to four kernels.
+    let quick = std::env::var("PROMETHEUS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let dev = Device::u55c();
     let k = polybench::three_mm(); // the 3-task fused kernel of the issue
     let fg = fuse(&k);
@@ -136,10 +159,12 @@ fn main() {
     println!("cold  (cache rebuilt per evaluation): {cold_evals:>12.0} evals/s");
     println!("warm  (shared GeometryCache):         {warm_evals:>12.0} evals/s");
     println!("speedup: {speedup:.2}x   (sink {sink})");
-    assert!(
-        speedup >= 2.0,
-        "GeometryCache must buy >= 2x candidate evaluations/sec (got {speedup:.2}x)"
-    );
+    if !quick {
+        assert!(
+            speedup >= 2.0,
+            "GeometryCache must buy >= 2x candidate evaluations/sec (got {speedup:.2}x)"
+        );
+    }
 
     // ---- part 2: whole solves/sec, 1 worker vs 4 -----------------------
     println!("\n== solver_eval: whole solves/sec, jobs=1 vs jobs=4 ==");
@@ -171,13 +196,13 @@ fn main() {
     let scaling = rates[1] / rates[0];
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("parallel scaling: {scaling:.2}x at 4 workers ({cores} cores available)");
-    if cores >= 4 {
+    if cores >= 4 && !quick {
         assert!(
             scaling >= 2.0,
             "intra-solve parallelism must buy >= 2x solves/sec at jobs=4 (got {scaling:.2}x)"
         );
     } else {
-        println!("(host has {cores} cores < 4 — scaling bar not asserted)");
+        println!("(quick mode or host has {cores} cores < 4 — scaling bar not asserted)");
     }
 
     // ---- part 3: disabled-telemetry overhead ---------------------------
@@ -218,9 +243,108 @@ fn main() {
         off_solve_secs,
         overhead * 100.0
     );
-    assert!(
-        overhead <= 0.02,
-        "disabled telemetry must cost <= 2% of solve time (projected {:.3}%)",
-        overhead * 100.0
+    if !quick {
+        assert!(
+            overhead <= 0.02,
+            "disabled telemetry must cost <= 2% of solve time (projected {:.3}%)",
+            overhead * 100.0
+        );
+    }
+
+    // ---- part 4: leaf fast path + shared fusion-aware beam -------------
+    println!("\n== solver_eval: fast-path solves/sec vs reference leaf path (zoo) ==");
+    let mut zoo = polybench::all_kernels();
+    if quick {
+        zoo.truncate(4);
+    }
+    let fast_opts = |jobs: usize, telemetry: bool| SolverOptions {
+        beam: 24,
+        max_factor_per_loop: 32,
+        max_unroll: 1024,
+        jobs,
+        telemetry,
+        ..SolverOptions::default()
+    };
+    // reference: the pre-fast-path cost structure — every DFS leaf
+    // builds a DesignConfig, re-resolves every task and runs the
+    // allocating simulator; every variant keeps its full beam
+    let base_opts = |jobs: usize, telemetry: bool| SolverOptions {
+        leaf_prefilter: false,
+        shared_beam: false,
+        ..fast_opts(jobs, telemetry)
+    };
+    let mut base_secs = 0.0f64;
+    let mut fast_secs = 0.0f64;
+    let mut model_pruned = 0u64;
+    let mut beam_starved = 0u64;
+    for kz in &zoo {
+        let t = Instant::now();
+        let base = solve(kz, &dev, &base_opts(1, true))
+            .expect("zoo RTL solve is feasible");
+        base_secs += t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let fast = solve(kz, &dev, &fast_opts(1, true))
+            .expect("zoo RTL solve is feasible");
+        fast_secs += t.elapsed().as_secs_f64();
+        assert_eq!(base.design, fast.design, "fast path changed the {} answer", kz.name);
+
+        // flags in isolation, plus thread-count independence of the
+        // fast path (telemetry off to also cross the inertness axis)
+        let pre_only = solve(
+            kz,
+            &dev,
+            &SolverOptions { shared_beam: false, ..fast_opts(1, false) },
+        )
+        .expect("zoo RTL solve is feasible");
+        assert_eq!(base.design, pre_only.design, "leaf prefilter changed the {} answer", kz.name);
+        let beam_only = solve(
+            kz,
+            &dev,
+            &SolverOptions { leaf_prefilter: false, ..fast_opts(1, true) },
+        )
+        .expect("zoo RTL solve is feasible");
+        assert_eq!(base.design, beam_only.design, "shared beam changed the {} answer", kz.name);
+        let fast_mt = solve(kz, &dev, &fast_opts(8, false))
+            .expect("zoo RTL solve is feasible");
+        assert_eq!(base.design, fast_mt.design, "fast path diverged at jobs=8 on {}", kz.name);
+
+        // leaf accounting at jobs=1, prefilter as the only delta: every
+        // leaf the reference path simulates is either simulated or
+        // model-pruned by the fast path — none silently vanish
+        let ref_leaves = beam_only.telemetry.totals().leaves_simulated;
+        let ft = fast.telemetry.totals();
+        assert_eq!(
+            ref_leaves,
+            ft.leaves_simulated + ft.model_pruned,
+            "{}: leaf partition broke (ref {} vs fast {} + model-pruned {})",
+            kz.name,
+            ref_leaves,
+            ft.leaves_simulated,
+            ft.model_pruned
+        );
+        model_pruned += ft.model_pruned;
+        beam_starved += ft.beam_starved;
+    }
+    let base_rate = zoo.len() as f64 / base_secs.max(1e-9);
+    let fast_rate = zoo.len() as f64 / fast_secs.max(1e-9);
+    let leaf_speedup = base_secs / fast_secs.max(1e-9);
+    println!("reference leaf path: {base_rate:>8.3} solves/s over {} kernels", zoo.len());
+    println!("fast path:           {fast_rate:>8.3} solves/s over {} kernels", zoo.len());
+    println!(
+        "speedup: {leaf_speedup:.2}x   ({model_pruned} leaves model-pruned, \
+         {beam_starved} candidates beam-starved)"
     );
+    assert!(
+        model_pruned > 0,
+        "the leaf pre-filter never fired across the zoo — the fast path is dead code"
+    );
+    if quick {
+        println!("(PROMETHEUS_BENCH_QUICK=1 — throughput bar printed, not asserted)");
+    } else {
+        assert!(
+            leaf_speedup >= 5.0,
+            "fast path must buy >= 5x solves/sec over the zoo (got {leaf_speedup:.2}x)"
+        );
+    }
 }

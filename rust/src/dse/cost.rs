@@ -141,6 +141,27 @@ pub fn graph_latency(
     graph_latency_resolved(&rd, dev)
 }
 
+/// Total latency of a Sequential (shared-buffer) schedule over
+/// standalone task durations indexed by task id: tasks run back-to-back
+/// in program order, so the total is the latest sink's prefix sum.
+///
+/// This *is* the Sequential execution semantics — `graph_latency_resolved`
+/// and the executing simulator both reduce to it, and the solver's leaf
+/// fast path scores Sequential leaves with it directly (no design
+/// resolution, no simulation), which keeps all three equal by
+/// construction.
+pub fn sequential_total(durations: &[u64], sinks: &[usize]) -> u64 {
+    let mut clock = 0u64;
+    let mut total = 0u64;
+    for (i, &d) in durations.iter().enumerate() {
+        clock += d;
+        if clock > total && sinks.contains(&i) {
+            total = clock;
+        }
+    }
+    total
+}
+
 /// Eqs 12–13 over a resolved design.
 pub fn graph_latency_resolved(rd: &ResolvedDesign, dev: &Device) -> GraphLatency {
     let n = rd.fg.tasks.len();

@@ -255,6 +255,19 @@ impl TaskStatics {
     pub fn fifo_out_total_elems(&self) -> u64 {
         self.fifo_out_elems_by_array.iter().map(|(_, e)| *e).sum()
     }
+
+    /// Elements this task emits of array `name` over its outgoing FIFO
+    /// edges (0 when it does not stream that array). The simulator's
+    /// step-spec builder reads producer emissions through this, both
+    /// when walking a full design and when the solver precomputes
+    /// per-candidate specs for its leaf fast path.
+    pub fn fifo_emitted(&self, name: &str) -> u64 {
+        self.fifo_out_elems_by_array
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, e)| *e)
+            .unwrap_or(0)
+    }
 }
 
 /// Fusion-time memo for every task of a kernel. Owns all its data

@@ -61,6 +61,26 @@
 //! so the result stays deterministic and thread-count independent, and
 //! latency ties prefer the max-fusion variant (variant 0).
 //!
+//! **Fast path.** The stage-3 inner loop is allocation-free: per-task
+//! candidates live in a flat arena and are referenced by index, the
+//! per-region `used` vectors update incrementally, and each DFS worker
+//! iterates a *profile-guided order* (standalone latency, then
+//! resource footprint) so the first dive lands near the optimum and
+//! the shared bound prunes early. Leaves are scored without building a
+//! `DesignConfig`: an analytic pre-filter (the same standalone-latency
+//! lower bound the branch pruning uses; the exact closed form for
+//! Sequential) drops leaves strictly above the shared bound before any
+//! assembly or simulation (`model_pruned`), and surviving dataflow
+//! leaves run the simulator's own step loop
+//! ([`crate::sim::engine::run_dataflow`]) over per-candidate step
+//! specs precomputed once per arena, on reusable scratch. A
+//! *fusion-aware shared beam* ([`SolverOptions::shared_beam`]) probes
+//! one greedy leaf per variant up front and then starves every
+//! candidate list against the resulting cross-variant bound, shrinking
+//! losing variants before their DFS starts (`beam_starved`). All of it
+//! is answer-preserving and property-pinned
+//! (`tests/solver_fastpath.rs`); see DESIGN.md §Solver fast path.
+//!
 //! **Telemetry.** With [`SolverOptions::telemetry`] on, the solve
 //! threads a [`crate::obs::SolveCounters`] block through all three
 //! stages and returns it frozen as [`SolverResult::telemetry`]:
@@ -80,7 +100,7 @@
 
 use super::config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
 use super::constraints::task_resources;
-use super::cost::{gflops, graph_latency_resolved, task_latency, GraphLatency};
+use super::cost::{gflops, graph_latency_resolved, sequential_total, task_latency, GraphLatency};
 use super::eval::{self, FusionSpace, GeometryCache, ResolvedDesign, TaskStatics};
 use super::padding::legal_intra_factors;
 use crate::analysis::fusion::{FusedGraph, FusionPlan};
@@ -89,7 +109,7 @@ use crate::hw::{Device, SlrBudget};
 use crate::ir::Kernel;
 use crate::obs;
 use crate::par::run_indexed;
-use crate::sim::engine::simulate_resolved;
+use crate::sim::engine::{candidate_steps, run_dataflow, simulate_resolved, DataflowScratch, TaskSteps};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -281,6 +301,33 @@ pub struct SolverOptions {
     /// ([`crate::obs::trace_enabled`]); the disabled per-hook cost is
     /// bench-bounded in `benches/solver_eval.rs`.
     pub telemetry: bool,
+    /// Leaf fast path (on by default): score complete assignments
+    /// through per-candidate step specs precomputed once per variant,
+    /// on reusable scratch, after an analytic pre-filter — a leaf
+    /// whose lower bound (max standalone candidate latency; for
+    /// Sequential the exact closed form) is strictly above the shared
+    /// bound is dropped before any `DesignConfig` assembly,
+    /// `ResolvedDesign::new` or simulation (counted as
+    /// `model_pruned`). Answer-preserving by the same lower-bound
+    /// invariant the DFS branch pruning relies on (property-pinned in
+    /// `tests/solver_fastpath.rs`), so — like `jobs` and `telemetry`
+    /// — it is excluded from the QoR cache key. `false` restores the
+    /// pre-fast-path leaf (full design assembly + resolve + simulate
+    /// per leaf), kept as the bench baseline and drift oracle.
+    pub leaf_prefilter: bool,
+    /// Fusion-aware shared stage-1 beam (on by default): before stage
+    /// 3, dive each variant to one greedy profile-ordered leaf (a
+    /// genuine DFS leaf, offered with its real tie-break key) to
+    /// tighten the cross-variant incumbent, then *starve* every
+    /// candidate list against the resulting bound — candidates whose
+    /// standalone latency already exceeds it cannot appear in any
+    /// winning or tying leaf and are dropped from the DFS iteration
+    /// order (`beam_starved`); a variant starved to an empty task
+    /// list skips its DFS entirely. Only strictly-worse leaves are
+    /// removed, so the `(latency, key)` minimum — the returned design
+    /// — is unchanged (property-pinned); excluded from the QoR cache
+    /// key.
+    pub shared_beam: bool,
 }
 
 impl Default for SolverOptions {
@@ -300,6 +347,8 @@ impl Default for SolverOptions {
             jobs: default_jobs(),
             explore_fusion: true,
             telemetry: obs::trace_enabled(),
+            leaf_prefilter: true,
+            shared_beam: true,
         }
     }
 }
@@ -675,6 +724,70 @@ fn solve_variants(
         return Err(SolverError::Infeasible { task: Some(task), detail });
     }
 
+    // ---- stage-3 fast-path arenas --------------------------------------
+    // Per variant: the leaf arena (sinks, predecessor lists, and — for
+    // the dataflow leaf fast path — one precomputed step spec per
+    // candidate, resolved once here instead of once per leaf) and the
+    // profile-guided DFS iteration order: each task's candidates sorted
+    // by standalone latency, then resource footprint, then original
+    // Pareto index. Tie-break keys keep using the original indices, so
+    // reordering the iteration permutes the DFS traversal but cannot
+    // change the `(latency, key)` minimum over the leaf set — only how
+    // fast the search reaches it.
+    let arenas: Vec<LeafArena> = variants
+        .iter()
+        .enumerate()
+        .map(|(vi, &(fg, cache))| {
+            let n_tasks = fg.tasks.len();
+            let want_specs = dfsable[vi]
+                && opts.leaf_prefilter
+                && opts.model == ExecutionModel::Dataflow;
+            LeafArena {
+                specs: if want_specs {
+                    per_variant[vi]
+                        .iter()
+                        .enumerate()
+                        .map(|(t, cands)| {
+                            cands
+                                .iter()
+                                .map(|c| {
+                                    let rt = eval::resolve_task(k, &cache.tasks[t], &c.cfg);
+                                    candidate_steps(k, cache, &rt, opts.overlap, dev)
+                                })
+                                .collect()
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                },
+                sinks: fg.sinks(),
+                preds: (0..n_tasks).map(|t| fg.predecessors(t)).collect(),
+            }
+        })
+        .collect();
+    let mut orders: Vec<Vec<Vec<u32>>> = per_variant
+        .iter()
+        .map(|per_task| {
+            per_task
+                .iter()
+                .map(|cands| {
+                    let mut ord: Vec<u32> = (0..cands.len() as u32).collect();
+                    ord.sort_by(|&x, &y| {
+                        let (a, b) = (&cands[x as usize], &cands[y as usize]);
+                        a.latency
+                            .cmp(&b.latency)
+                            .then(a.res.dsp.total_cmp(&b.res.dsp))
+                            .then(a.res.bram18.total_cmp(&b.res.bram18))
+                            .then(a.res.lut.total_cmp(&b.res.lut))
+                            .then(a.res.ff.total_cmp(&b.res.ff))
+                            .then(x.cmp(&y))
+                    });
+                    ord
+                })
+                .collect()
+        })
+        .collect();
+
     let timed_out_flag = AtomicBool::new(stage1_timed_out);
     let ctxs: Vec<DfsCtx> = variants
         .iter()
@@ -688,6 +801,7 @@ fn solve_variants(
             budget: &budget,
             regions,
             per_task: &per_variant[vi],
+            arena: &arenas[vi],
             deadline,
             shared: &shared,
             timed_out: &timed_out_flag,
@@ -696,6 +810,52 @@ fn solve_variants(
             counters: &counters,
         })
         .collect();
+
+    // ---- fusion-aware shared beam --------------------------------------
+    // One deterministic greedy probe per DFS-able variant — its first
+    // profile-ordered leaf, offered with its real tie-break key — runs
+    // sequentially in variant order, so the cross-variant bound is
+    // tight before any DFS work and identical for every thread count.
+    // Then each variant's candidate lists are starved against that
+    // bound: a candidate whose standalone latency is strictly above it
+    // cannot appear in any winning or tying leaf (the same lower-bound
+    // invariant the DFS branch pruning uses), so it is removed from
+    // the iteration order up front (`beam_starved`); losing variants
+    // shrink toward — possibly to — an empty list, which skips their
+    // DFS entirely. Only strictly-worse leaves are removed, so the
+    // `(latency, key)` minimum over the remaining forest — the
+    // returned design — is unchanged (shared-beam on/off bit-identity
+    // is pinned in `tests/solver_fastpath.rs`).
+    if opts.shared_beam {
+        let mut probe_scratch = DfsScratch::new();
+        for (vi, ctx) in ctxs.iter().enumerate() {
+            if dfsable[vi] {
+                probe_variant(ctx, &orders[vi], &mut probe_scratch, &mut explored);
+            }
+        }
+        let bound = shared.bound();
+        if bound != u64::MAX {
+            for (vi, per_task) in per_variant.iter().enumerate() {
+                if !dfsable[vi] {
+                    continue;
+                }
+                let mut starved = 0u64;
+                let mut emptied = false;
+                for (t, ord) in orders[vi].iter_mut().enumerate() {
+                    let before = ord.len();
+                    ord.retain(|&c| per_task[t][c as usize].latency <= bound);
+                    starved += (before - ord.len()) as u64;
+                    emptied |= ord.is_empty();
+                }
+                if starved > 0 {
+                    counters.beam_starved(vi, starved);
+                }
+                if emptied {
+                    dfsable[vi] = false;
+                }
+            }
+        }
+    }
 
     // Distribute the top of the DFS forest: per DFS-able variant,
     // expand prefixes breadth-first in lexicographic order until there
@@ -721,10 +881,10 @@ fn solve_variants(
                 let mut next = Vec::new();
                 for prefix in &fr {
                     let max_slr = open_regions(prefix, regions);
-                    for c in 0..ctx.per_task[depth].len() {
+                    for &c in &orders[vi][depth] {
                         for slr in 0..max_slr {
                             let mut p = prefix.clone();
-                            p.push((c, slr));
+                            p.push((c as usize, slr));
                             next.push(p);
                         }
                     }
@@ -739,7 +899,7 @@ fn solve_variants(
     let prefix_explored = run_indexed(frontier.len(), jobs, |i| {
         let (vi, prefix) = &frontier[i];
         let mut ex = 0u64;
-        run_prefix(&ctxs[*vi], prefix, &mut ex);
+        run_prefix(&ctxs[*vi], &orders[*vi], prefix, &mut ex);
         ex
     });
     drop(dfs_span);
@@ -768,6 +928,8 @@ fn solve_variants(
                         "resource_pruned".to_string(),
                         obs::ArgVal::Int(vc.resource_pruned as i128),
                     ),
+                    ("model_pruned".to_string(), obs::ArgVal::Int(vc.model_pruned as i128)),
+                    ("beam_starved".to_string(), obs::ArgVal::Int(vc.beam_starved as i128)),
                     (
                         "deadline_killed".to_string(),
                         obs::ArgVal::Int(vc.deadline_killed as i128),
@@ -816,8 +978,16 @@ fn solve_variants(
 /// in-tree DFS would have pruned before reaching it: per-region usage
 /// (sums only grow with depth, so an overfull prefix dooms the whole
 /// subtree) and the standalone-latency bound (strict, like
-/// [`dfs_assign`], so ties stay reachable).
-fn run_prefix(ctx: &DfsCtx<'_>, prefix: &[(usize, usize)], explored: &mut u64) {
+/// [`dfs_assign`], so ties stay reachable). Each prefix gets its own
+/// [`DfsScratch`] — the reusable sim buffers and the strided deadline
+/// state — seeded with one fresh deadline poll so an already-expired
+/// solve goes straight into the anytime greedy dive.
+fn run_prefix<'a>(
+    ctx: &DfsCtx<'a>,
+    order: &[Vec<u32>],
+    prefix: &[(usize, usize)],
+    explored: &mut u64,
+) {
     let bound = ctx.shared.bound();
     if prefix.iter().enumerate().any(|(ti, &(c, _))| ctx.per_task[ti][c].latency > bound) {
         ctx.counters.bound_pruned(ctx.vi, 1);
@@ -832,7 +1002,12 @@ fn run_prefix(ctx: &DfsCtx<'_>, prefix: &[(usize, usize)], explored: &mut u64) {
         return;
     }
     let mut assign = prefix.to_vec();
-    dfs_assign(ctx, &mut assign, &mut used, explored);
+    let mut scratch = DfsScratch::new();
+    if ctx.deadline.expired() {
+        scratch.expired = true;
+        ctx.timed_out.store(true, Ordering::Relaxed);
+    }
+    dfs_assign(ctx, order, &mut scratch, &mut assign, &mut used, explored);
 }
 
 /// Enumerate tile factors × permutations × transfer plans for one fused
@@ -919,7 +1094,11 @@ fn enumerate_task(
     };
     'outer: for (oi, ord) in orders.iter().enumerate() {
         for (ci, (intra, padded)) in combos.iter().enumerate() {
-            if deadline.expired() {
+            // strided deadline poll (`Instant::now` is not free at this
+            // rate): every DEADLINE_STRIDE combos, starting with the
+            // first. A late break leaves a longer — never shorter —
+            // candidate list, so the anytime contract is unaffected.
+            if explored % DEADLINE_STRIDE == 0 && deadline.expired() {
                 timed_out = true;
                 break 'outer;
             }
@@ -981,13 +1160,21 @@ fn enumerate_task(
             plans: BTreeMap::new(),
             slr: 0,
         };
-        let cfg = choose_transfer_plans(k, st, base, dev, opts, budget, &mut explored);
-        let rt = eval::resolve_task(k, st, &cfg);
-        let res = task_resources(&rt, dev);
+        let (cfg, stats) = choose_transfer_plans(k, st, base, dev, opts, budget, &mut explored);
+        // the descent already evaluated the final plan combination for
+        // most combos and returns its (resources, latency); only when it
+        // could not (e.g. no feasible option for the last array) is the
+        // final configuration re-resolved here
+        let (res, lat) = match stats {
+            Some(rl) => rl,
+            None => {
+                let rt = eval::resolve_task(k, st, &cfg);
+                (task_resources(&rt, dev), task_latency(&rt, dev, opts.overlap))
+            }
+        };
         if !res.fits(budget) {
             continue;
         }
-        let lat = task_latency(&rt, dev, opts.overlap);
         cands.push(Candidate { cfg, latency: lat, res });
     }
 
@@ -1044,6 +1231,14 @@ fn enum_factors(
 /// buffer-whole/stream-deep plan ([`eval::plan_options`]), choose
 /// per-array the one minimizing the task latency, then demote buffers
 /// greedily if BRAM overflows.
+///
+/// Also returns the final configuration's `(resources, latency)` when
+/// the descent provably evaluated it already — the last array's best
+/// option was scored with every other array at its final plan, so that
+/// evaluation *is* the final configuration's. `None` (the last array
+/// had no feasible option, or the task has no arrays) sends the caller
+/// down the old re-resolve path; either way the emitted candidate is
+/// bit-identical.
 fn choose_transfer_plans(
     k: &Kernel,
     st: &TaskStatics,
@@ -1052,7 +1247,7 @@ fn choose_transfer_plans(
     opts: &SolverOptions,
     budget: &SlrBudget,
     explored: &mut u64,
-) -> TaskConfig {
+) -> (TaskConfig, Option<(ResourceVec, u64)>) {
     // seed: everything at its deepest level (smallest buffers) — exactly
     // the defaults resolution applies to a plan-less config
     {
@@ -1067,6 +1262,7 @@ fn choose_transfer_plans(
 
     // coordinate descent, one array at a time (two sweeps converge for
     // the plan structures in this zoo)
+    let mut final_stats: Option<(ResourceVec, u64)> = None;
     for _sweep in 0..2 {
         for ai in 0..st.arrays.len() {
             let a_name = st.arrays[ai].name.clone();
@@ -1076,6 +1272,7 @@ fn choose_transfer_plans(
             };
             let mut best_plan = cfg.plans[&a_name];
             let mut best_lat = u64::MAX;
+            let mut best_stats: Option<(ResourceVec, u64)> = None;
             for p in options {
                 *explored += 1;
                 cfg.plans.insert(a_name.clone(), p);
@@ -1088,12 +1285,14 @@ fn choose_transfer_plans(
                 if lat < best_lat {
                     best_lat = lat;
                     best_plan = p;
+                    best_stats = Some((res, lat));
                 }
             }
             cfg.plans.insert(a_name, best_plan);
+            final_stats = best_stats;
         }
     }
-    cfg
+    (cfg, final_stats)
 }
 
 /// Latency-sorted front size kept per task after the Pareto reduction
@@ -1113,18 +1312,37 @@ const PARETO_KEEP: usize = 16;
 /// min-DSP) are never dropped: when stage 3 has to trade speed for
 /// resources, the extreme points are exactly the candidates it needs.
 /// Fully deterministic: stable latency sort, first-wins witnesses.
+///
+/// Dominance is sort-based: candidates are visited in latency order, so
+/// every front member already has `latency <= c.latency` and only the
+/// resource comparison remains. Running per-dimension minima over the
+/// front give an O(1) early accept — a candidate strictly below the
+/// front's minimum in *any* resource class cannot be dominated (a
+/// dominator would have to sit at or below it there, beating the
+/// minimum) — so the inner scan only runs for points inside the front's
+/// resource envelope, replacing the old always-quadratic loop with
+/// byte-identical output (acceptance decisions and order unchanged).
 pub fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
     cands.sort_by_key(|c| c.latency);
     let mut front: Vec<Candidate> = Vec::new();
+    let mut min = [f64::INFINITY; 4];
     for c in cands {
-        let dominated = front.iter().any(|f| {
-            f.latency <= c.latency
-                && f.res.dsp <= c.res.dsp
-                && f.res.bram18 <= c.res.bram18
-                && f.res.lut <= c.res.lut
-                && f.res.ff <= c.res.ff
-        });
+        let dims = [c.res.dsp, c.res.bram18, c.res.lut, c.res.ff];
+        let clear = dims.iter().zip(&min).any(|(d, m)| d < m);
+        let dominated = !clear
+            && front.iter().any(|f| {
+                f.latency <= c.latency
+                    && f.res.dsp <= c.res.dsp
+                    && f.res.bram18 <= c.res.bram18
+                    && f.res.lut <= c.res.lut
+                    && f.res.ff <= c.res.ff
+            });
         if !dominated {
+            for (m, d) in min.iter_mut().zip(dims) {
+                if d < *m {
+                    *m = d;
+                }
+            }
             front.push(c);
         }
     }
@@ -1183,6 +1401,9 @@ struct DfsCtx<'a> {
     budget: &'a SlrBudget,
     regions: usize,
     per_task: &'a [Vec<Candidate>],
+    /// This variant's immutable leaf arena (precomputed step specs,
+    /// sinks, predecessor lists) for the allocation-free leaf path.
+    arena: &'a LeafArena,
     deadline: Deadline,
     shared: &'a SharedBest,
     timed_out: &'a AtomicBool,
@@ -1197,54 +1418,137 @@ struct DfsCtx<'a> {
     counters: &'a obs::SolveCounters,
 }
 
-/// DFS over per-task candidate picks and SLR ids with branch-and-bound.
-/// `assign` holds the (candidate, region) prefix, `used` the prefix's
-/// per-region resource sums (kept incrementally — sums only grow, so an
-/// overfull region prunes the whole subtree).
-fn dfs_assign(
-    ctx: &DfsCtx<'_>,
-    assign: &mut Vec<(usize, usize)>,
-    used: &mut [ResourceVec],
+/// One fusion variant's immutable stage-3 arena, built once after the
+/// Pareto reduction. The DFS references candidates by `(task, index)`
+/// into `DfsCtx::per_task` and scores leaves entirely from this arena:
+/// no per-leaf `DesignConfig`, `ResolvedDesign` or graph traversal.
+struct LeafArena {
+    /// Per task, per candidate: the candidate's dataflow step spec
+    /// ([`candidate_steps`] — assignment-independent by construction),
+    /// resolved once here instead of once per leaf. Empty when the leaf
+    /// pre-filter is off or the model is Sequential (which needs no
+    /// specs: its closed form *is* the simulator).
+    specs: Vec<Vec<TaskSteps>>,
+    /// The variant graph's sink tasks ([`FusedGraph::sinks`]).
+    sinks: Vec<usize>,
+    /// Per task: its predecessor tasks ([`FusedGraph::predecessors`]),
+    /// for the leaf's inter-SLR penalty — both allocate per call, so
+    /// they are hoisted out of the leaf entirely.
+    preds: Vec<Vec<usize>>,
+}
+
+/// DFS deadline-poll stride: `Instant::now()` once per this many node
+/// entries (and stage-1 combos) instead of every one. Completed
+/// searches are unaffected — polling frequency only changes *when* a
+/// timeout is noticed, and the anytime contract (return the incumbent,
+/// greedy-dive if there is none) holds at whichever node notices it.
+const DEADLINE_STRIDE: u64 = 64;
+
+/// Per-worker mutable DFS state: the reusable leaf-scoring buffers and
+/// the strided deadline poll. One per distributed prefix — nothing in
+/// here is shared or observable across workers.
+struct DfsScratch<'a> {
+    /// Reusable buffers for the simulator's step loop.
+    sim: DataflowScratch,
+    /// Leaf spec view: the assigned candidates' step specs, task-indexed.
+    spec_view: Vec<&'a TaskSteps>,
+    /// Leaf inter-SLR penalties, task-indexed.
+    slr_pen: Vec<u64>,
+    /// Leaf standalone durations (Sequential closed form), task-indexed.
+    durations: Vec<u64>,
+    /// Node entries since the last deadline poll.
+    nodes_since_poll: u64,
+    /// Sticky deadline flag: set at the poll that notices expiry, never
+    /// cleared (the deadline cannot un-expire).
+    expired: bool,
+}
+
+impl<'a> DfsScratch<'a> {
+    fn new() -> DfsScratch<'a> {
+        DfsScratch {
+            sim: DataflowScratch::new(),
+            spec_view: Vec::new(),
+            slr_pen: Vec::new(),
+            durations: Vec::new(),
+            nodes_since_poll: 0,
+            expired: false,
+        }
+    }
+}
+
+/// The shared beam's deterministic probe: dive straight to this
+/// variant's first profile-ordered DFS leaf — first candidate in
+/// iteration order per task, lowest usable region, exactly the first
+/// leaf `dfs_assign` itself would reach — and offer it with its real
+/// tie-break key. Runs on the solve thread before any DFS fan-out, so
+/// every variant contributes an incumbent and the shared bound can
+/// starve losing variants' candidate lists up front. A greedy dive can
+/// dead-end where the backtracking DFS would not (then nothing is
+/// offered and the DFS decides feasibility as before).
+fn probe_variant<'a>(
+    ctx: &DfsCtx<'a>,
+    order: &[Vec<u32>],
+    scratch: &mut DfsScratch<'a>,
     explored: &mut u64,
 ) {
-    let t = assign.len();
-    ctx.counters.dfs_node(ctx.vi, t);
-    // Anytime gate, checked at node entry AND before the (expensive)
-    // leaf simulation: once the deadline passed and *some* design is in
-    // hand — a found leaf or the warm-start incumbent — stop scoring.
-    // With no design in hand yet, the search degrades to a greedy dive
-    // (see the bottom of the loop) instead of running the exponential
-    // tree arbitrarily far past the deadline.
-    let expired = ctx.deadline.expired();
-    if expired {
-        ctx.timed_out.store(true, Ordering::Relaxed);
-        if ctx.shared.has_best() {
-            ctx.counters.deadline_killed(ctx.vi);
+    let n_tasks = ctx.per_task.len();
+    let mut assign: Vec<(usize, usize)> = Vec::with_capacity(n_tasks);
+    let mut used = vec![ResourceVec::ZERO; ctx.regions];
+    for t in 0..n_tasks {
+        let max_slr = open_regions(&assign, ctx.regions);
+        let mut placed = false;
+        'cands: for &ci in &order[t] {
+            let cand = &ctx.per_task[t][ci as usize];
+            for slr in 0..max_slr {
+                let acc = used[slr] + cand.res;
+                if acc.fits(ctx.budget) {
+                    used[slr] = acc;
+                    assign.push((ci as usize, slr));
+                    placed = true;
+                    break 'cands;
+                }
+            }
+        }
+        if !placed {
             return;
         }
     }
-    if t == ctx.per_task.len() {
+    offer_leaf(ctx, scratch, &assign, explored);
+}
+
+/// Score one complete assignment and offer it to the shared incumbent.
+///
+/// Fast path ([`SolverOptions::leaf_prefilter`] on): the leaf is scored
+/// without assembling a `DesignConfig` — Sequential uses the exact
+/// closed form ([`sequential_total`], *the* simulator semantics by
+/// construction), Dataflow first applies the standalone-latency lower
+/// bound (a leaf strictly above the shared bound cannot win or tie;
+/// counted as `model_pruned`, nothing resolved or simulated) and then
+/// runs the simulator's own step loop ([`run_dataflow`]) over the
+/// arena's precomputed specs on reusable scratch — bit-identical cycles
+/// to `simulate_resolved` because it *is* the same loop over the same
+/// per-candidate inputs. The design is materialized only when its
+/// latency can actually improve or tie the incumbent (a worse offer was
+/// always rejected anyway).
+///
+/// Reference path (off): the pre-fast-path leaf — full design assembly,
+/// `ResolvedDesign::new`, `simulate_resolved`, unconditional offer —
+/// kept as the bench baseline and the fast path's drift oracle
+/// (bit-identity pinned in `tests/solver_fastpath.rs`).
+fn offer_leaf<'a>(
+    ctx: &DfsCtx<'a>,
+    scratch: &mut DfsScratch<'a>,
+    assign: &[(usize, usize)],
+    explored: &mut u64,
+) {
+    if !ctx.opts.leaf_prefilter {
         *explored += 1;
         ctx.counters.leaf(ctx.vi);
-        let design = DesignConfig {
-            kernel: ctx.k.name.clone(),
-            model: ctx.opts.model,
-            overlap: ctx.opts.overlap,
-            fusion: ctx.plan.clone(),
-            tasks: assign
-                .iter()
-                .enumerate()
-                .map(|(ti, &(c, slr))| {
-                    let mut cfg = ctx.per_task[ti][c].cfg.clone();
-                    cfg.slr = slr;
-                    cfg
-                })
-                .collect(),
-        };
         // Final selection is scored by the *executing* simulator, not the
         // analytic model: the model (Eqs 12–16) guides enumeration, but
         // picking the winner with the authoritative latency keeps
         // heuristic-beam local optima from inverting feature ablations.
+        let design = build_design(ctx, assign);
         let rd = ResolvedDesign::new(ctx.k, ctx.fg, ctx.cache, &design);
         let lat = simulate_resolved(&rd, ctx.dev).cycles;
         drop(rd);
@@ -1254,14 +1558,135 @@ fn dfs_assign(
         ctx.shared.offer(lat, key, design, ctx.vi, ctx.deadline, ctx.counters);
         return;
     }
+    let bound = ctx.shared.bound();
+    let lat = match ctx.opts.model {
+        ExecutionModel::Sequential => {
+            // the closed form is exact (cost::sequential_total IS the
+            // sequential simulator), so no pre-filter/simulate split
+            scratch.durations.clear();
+            scratch
+                .durations
+                .extend(assign.iter().enumerate().map(|(ti, &(c, _))| ctx.per_task[ti][c].latency));
+            let lat = sequential_total(&scratch.durations, &ctx.arena.sinks);
+            if lat > bound {
+                ctx.counters.model_pruned(ctx.vi);
+                return;
+            }
+            *explored += 1;
+            ctx.counters.leaf(ctx.vi);
+            lat
+        }
+        ExecutionModel::Dataflow => {
+            // pre-filter: any task's standalone latency lower-bounds the
+            // simulated total — the same invariant the branch pruning in
+            // dfs_assign relies on. Strictly above the bound ⇒ this leaf
+            // can neither win nor tie, so skip scoring it entirely.
+            let lb = assign
+                .iter()
+                .enumerate()
+                .map(|(ti, &(c, _))| ctx.per_task[ti][c].latency)
+                .max()
+                .unwrap_or(0);
+            if lb > bound {
+                ctx.counters.model_pruned(ctx.vi);
+                return;
+            }
+            *explored += 1;
+            ctx.counters.leaf(ctx.vi);
+            scratch.spec_view.clear();
+            scratch.slr_pen.clear();
+            for (ti, &(c, slr)) in assign.iter().enumerate() {
+                scratch.spec_view.push(&ctx.arena.specs[ti][c]);
+                let cut = ctx.arena.preds[ti].iter().filter(|&&p| assign[p].1 != slr).count();
+                scratch.slr_pen.push(cut as u64 * ctx.dev.inter_slr_latency);
+            }
+            run_dataflow(&scratch.spec_view, &scratch.slr_pen, &ctx.arena.sinks, false, &mut scratch.sim)
+        }
+    };
+    if lat > ctx.shared.bound() {
+        // cannot win or tie — the offer would be rejected, so the
+        // design is never materialized
+        return;
+    }
+    let design = build_design(ctx, assign);
+    let mut key = Vec::with_capacity(assign.len() + 1);
+    key.push((ctx.vi, 0usize));
+    key.extend_from_slice(assign);
+    ctx.shared.offer(lat, key, design, ctx.vi, ctx.deadline, ctx.counters);
+}
+
+/// Materialize a complete assignment as a `DesignConfig` (clones the
+/// chosen candidates' task configs and stamps the region ids).
+fn build_design(ctx: &DfsCtx<'_>, assign: &[(usize, usize)]) -> DesignConfig {
+    DesignConfig {
+        kernel: ctx.k.name.clone(),
+        model: ctx.opts.model,
+        overlap: ctx.opts.overlap,
+        fusion: ctx.plan.clone(),
+        tasks: assign
+            .iter()
+            .enumerate()
+            .map(|(ti, &(c, slr))| {
+                let mut cfg = ctx.per_task[ti][c].cfg.clone();
+                cfg.slr = slr;
+                cfg
+            })
+            .collect(),
+    }
+}
+
+/// DFS over per-task candidate picks and SLR ids with branch-and-bound.
+/// `assign` holds the (candidate, region) prefix, `used` the prefix's
+/// per-region resource sums (kept incrementally — sums only grow, so an
+/// overfull region prunes the whole subtree). Candidates are visited in
+/// the profile-guided `order` (tie-break keys keep the original
+/// indices, so the traversal permutation never changes the winner).
+fn dfs_assign<'a>(
+    ctx: &DfsCtx<'a>,
+    order: &[Vec<u32>],
+    scratch: &mut DfsScratch<'a>,
+    assign: &mut Vec<(usize, usize)>,
+    used: &mut [ResourceVec],
+    explored: &mut u64,
+) {
+    let t = assign.len();
+    ctx.counters.dfs_node(ctx.vi, t);
+    // Anytime gate: once the deadline passed and *some* design is in
+    // hand — a found leaf or the warm-start incumbent — stop scoring.
+    // With no design in hand yet, the search degrades to a greedy dive
+    // (see the bottom of the loop) instead of running the exponential
+    // tree arbitrarily far past the deadline. The poll itself is
+    // strided (`Instant::now()` every DEADLINE_STRIDE node entries) and
+    // sticky once expired.
+    if !scratch.expired {
+        scratch.nodes_since_poll += 1;
+        if scratch.nodes_since_poll >= DEADLINE_STRIDE {
+            scratch.nodes_since_poll = 0;
+            if ctx.deadline.expired() {
+                scratch.expired = true;
+                ctx.timed_out.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+    let expired = scratch.expired;
+    if expired && ctx.shared.has_best() {
+        ctx.counters.deadline_killed(ctx.vi);
+        return;
+    }
+    if t == ctx.per_task.len() {
+        offer_leaf(ctx, scratch, assign, explored);
+        return;
+    }
     let max_slr = open_regions(assign, ctx.regions);
     if ctx.counters.enabled() && max_slr < ctx.regions {
         // children in the renamed regions [max_slr, regions) are never
         // generated — count them so prune totals partition the tree
         ctx.counters
-            .symmetry_pruned(ctx.vi, ((ctx.regions - max_slr) * ctx.per_task[t].len()) as u64);
+            .symmetry_pruned(ctx.vi, ((ctx.regions - max_slr) * order[t].len()) as u64);
     }
-    for (c, cand) in ctx.per_task[t].iter().enumerate() {
+    for &ci in &order[t] {
+        let c = ci as usize;
+        let cand = &ctx.per_task[t][c];
         // bound: any task's standalone latency lower-bounds the total.
         // STRICTLY above the shared bound only — an equal-latency leaf
         // may still win the deterministic tie-break, so it must stay
@@ -1279,7 +1704,7 @@ fn dfs_assign(
             }
             used[slr] = acc;
             assign.push((c, slr));
-            dfs_assign(ctx, assign, used, explored);
+            dfs_assign(ctx, order, scratch, assign, used, explored);
             assign.pop();
             used[slr] = prev;
             // Post-deadline with no design yet: one greedy dive down

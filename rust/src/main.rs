@@ -248,9 +248,14 @@ fn run() -> Result<()> {
                 "Leaves",
                 "Bound-pruned",
                 "Symmetry-pruned",
+                "Model-pruned",
+                "Beam-starved",
+                "Prune rates b/s/r/m",
                 "Deadline-killed",
                 "Incumbents",
             ]);
+            // per-variant prune partition, printed under the totals table
+            let mut variant_lines: Vec<String> = Vec::new();
             for name in &kernels {
                 let k = polybench::by_name(name)
                     .ok_or_else(|| anyhow!("unknown kernel {name}"))?;
@@ -271,6 +276,7 @@ fn run() -> Result<()> {
                         ]);
                         if want_telemetry {
                             let c = r.telemetry.totals();
+                            let (b, s, rr, m) = c.prune_rates();
                             tt.row(vec![
                                 name.clone(),
                                 c.enumerated.to_string(),
@@ -278,9 +284,20 @@ fn run() -> Result<()> {
                                 c.leaves_simulated.to_string(),
                                 c.bound_pruned.to_string(),
                                 c.symmetry_pruned.to_string(),
+                                c.model_pruned.to_string(),
+                                c.beam_starved.to_string(),
+                                format!("{b:.0}/{s:.0}/{rr:.0}/{m:.0}%"),
                                 c.deadline_killed.to_string(),
                                 r.telemetry.incumbents.len().to_string(),
                             ]);
+                            for (vi, v) in r.telemetry.variants.iter().enumerate() {
+                                let (b, s, rr, m) = v.prune_rates();
+                                variant_lines.push(format!(
+                                    "  {name} variant {vi}: {b:.1}% bound / {s:.1}% symmetry / \
+                                     {rr:.1}% resource / {m:.1}% model pruned; {} beam-starved",
+                                    v.beam_starved
+                                ));
+                            }
                         }
                     }
                     Err(e) => {
@@ -291,16 +308,9 @@ fn run() -> Result<()> {
                             "-".into(),
                         ]);
                         if want_telemetry {
-                            tt.row(vec![
-                                name.clone(),
-                                "-".into(),
-                                "-".into(),
-                                "-".into(),
-                                "-".into(),
-                                "-".into(),
-                                "-".into(),
-                                "-".into(),
-                            ]);
+                            let mut row = vec![name.clone()];
+                            row.extend((0..10).map(|_| "-".to_string()));
+                            tt.row(row);
                         }
                     }
                 };
@@ -309,6 +319,10 @@ fn run() -> Result<()> {
             if want_telemetry {
                 println!("solver telemetry (totals across fusion variants):");
                 print!("{}", tt.render());
+                println!("prune partition per fusion variant:");
+                for line in &variant_lines {
+                    println!("{line}");
+                }
             }
         }
         "batch" => {

@@ -336,6 +336,15 @@ pub struct VariantCounters {
     /// Region-renamed duplicate children never generated (SLR symmetry
     /// breaking: new regions open in index order).
     pub symmetry_pruned: u64,
+    /// Complete assignments discarded by the leaf pre-filter: the
+    /// analytic lower bound already exceeded the shared incumbent, so
+    /// the executing simulation (and the design assembly feeding it)
+    /// was skipped entirely.
+    pub model_pruned: u64,
+    /// Pareto candidates removed from this variant's DFS lists by the
+    /// shared fusion-aware beam: their standalone latency exceeded the
+    /// cross-variant incumbent established before the DFS started.
+    pub beam_starved: u64,
     /// Subtrees abandoned after the anytime deadline expired with an
     /// incumbent already in hand.
     pub deadline_killed: u64,
@@ -352,7 +361,27 @@ impl VariantCounters {
         self.bound_pruned += other.bound_pruned;
         self.resource_pruned += other.resource_pruned;
         self.symmetry_pruned += other.symmetry_pruned;
+        self.model_pruned += other.model_pruned;
+        self.beam_starved += other.beam_starved;
         self.deadline_killed += other.deadline_killed;
+    }
+
+    /// Prune-partition rates: what fraction of all pruned work each
+    /// bucket accounts for, as percentages `(bound, symmetry, resource,
+    /// model)`. Zero across the board when nothing was pruned.
+    pub fn prune_rates(&self) -> (f64, f64, f64, f64) {
+        let total =
+            self.bound_pruned + self.symmetry_pruned + self.resource_pruned + self.model_pruned;
+        if total == 0 {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        let pct = |n: u64| n as f64 * 100.0 / total as f64;
+        (
+            pct(self.bound_pruned),
+            pct(self.symmetry_pruned),
+            pct(self.resource_pruned),
+            pct(self.model_pruned),
+        )
     }
 }
 
@@ -414,13 +443,19 @@ impl SolveTelemetry {
             t.leaves_simulated
         ));
         out.push_str(&format!(
-            "  pareto kept/dropped: {}/{}; pruned: {} bound, {} symmetry, {} resource, {} deadline-killed\n",
+            "  pareto kept/dropped: {}/{}; pruned: {} bound, {} symmetry, {} resource, {} model, {} deadline-killed\n",
             t.pareto_kept,
             t.pareto_dropped,
             t.bound_pruned,
             t.symmetry_pruned,
             t.resource_pruned,
+            t.model_pruned,
             t.deadline_killed
+        ));
+        let (b, s, r, m) = t.prune_rates();
+        out.push_str(&format!(
+            "  prune rates: {b:.1}% bound / {s:.1}% symmetry / {r:.1}% resource / {m:.1}% model; {} beam-starved\n",
+            t.beam_starved
         ));
         match (self.incumbents.first(), self.incumbents.last()) {
             (Some(first), Some(last)) => out.push_str(&format!(
@@ -439,13 +474,15 @@ impl SolveTelemetry {
         out.push_str(&format!("  DFS depth histogram: [{}]\n", hist.join(", ")));
         for (vi, v) in self.variants.iter().enumerate() {
             out.push_str(&format!(
-                "  variant {vi}: {} points, {} nodes, {} leaves, pruned {}b/{}s/{}r\n",
+                "  variant {vi}: {} points, {} nodes, {} leaves, pruned {}b/{}s/{}r/{}m, {} starved\n",
                 v.enumerated,
                 v.dfs_nodes,
                 v.leaves_simulated,
                 v.bound_pruned,
                 v.symmetry_pruned,
-                v.resource_pruned
+                v.resource_pruned,
+                v.model_pruned,
+                v.beam_starved
             ));
         }
         out
@@ -464,6 +501,8 @@ struct VariantAtomics {
     bound_pruned: AtomicU64,
     resource_pruned: AtomicU64,
     symmetry_pruned: AtomicU64,
+    model_pruned: AtomicU64,
+    beam_starved: AtomicU64,
     deadline_killed: AtomicU64,
 }
 
@@ -478,6 +517,8 @@ impl VariantAtomics {
             bound_pruned: self.bound_pruned.into_inner(),
             resource_pruned: self.resource_pruned.into_inner(),
             symmetry_pruned: self.symmetry_pruned.into_inner(),
+            model_pruned: self.model_pruned.into_inner(),
+            beam_starved: self.beam_starved.into_inner(),
             deadline_killed: self.deadline_killed.into_inner(),
         }
     }
@@ -590,6 +631,26 @@ impl SolveCounters {
             return;
         }
         self.variants[vi].symmetry_pruned.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A complete assignment was discarded by the analytic leaf
+    /// pre-filter — no design assembled, no simulation run.
+    #[inline]
+    pub fn model_pruned(&self, vi: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].model_pruned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` Pareto candidates were dropped from variant `vi`'s DFS lists
+    /// by the shared fusion-aware beam.
+    #[inline]
+    pub fn beam_starved(&self, vi: usize, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].beam_starved.fetch_add(n, Ordering::Relaxed);
     }
 
     /// A subtree was abandoned because the deadline expired with an

@@ -23,7 +23,7 @@
 use crate::analysis::fusion::FusedGraph;
 use crate::dse::config::{DesignConfig, ExecutionModel};
 use crate::dse::cost::{pipelined_compute_latency, task_latency};
-use crate::dse::eval::{GeometryCache, ResolvedDesign};
+use crate::dse::eval::{GeometryCache, ResolvedDesign, ResolvedTask, TaskStatics};
 use crate::hw::Device;
 use crate::ir::Kernel;
 
@@ -76,8 +76,18 @@ impl SimReport {
     }
 }
 
-/// Per-task tile-step cost description derived from the resolved design.
-struct TaskSteps {
+/// Per-task tile-step cost description derived from a resolved task.
+///
+/// Built once per design task by [`simulate_dataflow`], or once per
+/// *Pareto candidate* by the solver's leaf fast path (via
+/// [`candidate_steps`]) and reused across every DFS leaf that assigns
+/// the candidate. Everything in here is assignment-independent: SLR
+/// placement enters the simulation only through the `slr_pen` argument
+/// of [`run_dataflow`], and the FIFO entries carry the producer's
+/// *total* emission (a fusion-variant static) rather than a per-step
+/// rate, so a consumer candidate's spec does not depend on which
+/// candidate the producer task ends up assigned.
+pub(crate) struct TaskSteps {
     /// Number of output tile steps (product of non-reduction inter trips).
     steps: u64,
     /// Compute cycles per step (pipelined reduction + intra).
@@ -89,9 +99,13 @@ struct TaskSteps {
     /// Cycles of level-0 preloading before the first step.
     preload: u64,
     /// FIFO inputs: (producer task, elems needed per step, producer's
-    /// per-step emission rate of *this* array). One entry per
-    /// producing task — a range-peeled producer part contributes one
-    /// per peel, so the consumer waits on all of them.
+    /// *total* emission of this array). One entry per producing task —
+    /// a range-peeled producer part contributes one per peel, so the
+    /// consumer waits on all of them. The per-step token rate is
+    /// derived inside [`run_dataflow`] as
+    /// `emitted.div_ceil(specs[producer].steps)` — bit-identical to
+    /// computing it here, since the producer spec's `steps` is the
+    /// same resolved trip product either way.
     fifo_in: Vec<(usize, u64, u64)>,
     /// Array name per `fifo_in` entry — filled only when stall
     /// attribution is on (`attr`), empty (and never read) otherwise.
@@ -100,8 +114,19 @@ struct TaskSteps {
     overlap: bool,
 }
 
-fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device, attr: bool) -> TaskSteps {
-    let rt = rd.task(t);
+/// Build the step spec for one resolved task. Producer statics are
+/// looked up through `statics_of` so the same code serves both callers:
+/// a full [`ResolvedDesign`] (statics via the design's own tasks) and
+/// the solver's per-candidate path (statics via the `GeometryCache`) —
+/// the two lookups return the same fusion-time object.
+fn build_steps_from<'s>(
+    k: &Kernel,
+    rt: &ResolvedTask<'_>,
+    overlap: bool,
+    dev: &Device,
+    attr: bool,
+    statics_of: impl Fn(usize) -> &'s TaskStatics,
+) -> TaskSteps {
     let steps = rt.steps;
     let compute = pipelined_compute_latency(rt, dev);
 
@@ -130,7 +155,7 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device, attr: bool) -> TaskS
             let outer_indexed = a.access.iter().any(|p| *p == Some(0));
             let demand = match rt.statics().outer_range {
                 Some((lo, hi)) if outer_indexed => {
-                    let full = rd.k.statements[rt.statics().rep]
+                    let full = k.statements[rt.statics().rep]
                         .loops
                         .first()
                         .map(|l| l.trip)
@@ -145,16 +170,8 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device, attr: bool) -> TaskS
             };
             let per_step = demand.div_ceil(steps);
             for &p in &a.fifo_producers {
-                let prt = rd.task(p);
-                let emitted = prt
-                    .statics()
-                    .fifo_out_elems_by_array
-                    .iter()
-                    .find(|(n, _)| n == &a.name)
-                    .map(|(_, e)| *e)
-                    .unwrap_or(0);
-                let rate = emitted.div_ceil(prt.steps.max(1));
-                fifo_in.push((p, per_step, rate));
+                let emitted = statics_of(p).fifo_emitted(&a.name);
+                fifo_in.push((p, per_step, emitted));
                 if attr {
                     fifo_arrays.push(a.name.clone());
                 }
@@ -195,8 +212,211 @@ fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device, attr: bool) -> TaskS
         preload,
         fifo_in,
         fifo_arrays,
-        overlap: rd.design.overlap,
+        overlap,
     }
+}
+
+fn build_steps(rd: &ResolvedDesign, t: usize, dev: &Device, attr: bool) -> TaskSteps {
+    build_steps_from(rd.k, rd.task(t), rd.design.overlap, dev, attr, |p| rd.task(p).statics())
+}
+
+/// Build the step spec for one *candidate* resolution, without a
+/// [`ResolvedDesign`]: producer statics come straight from the
+/// fusion-variant `GeometryCache`. This is the solver's leaf-fast-path
+/// entry point — one call per (task, Pareto candidate) pair, amortized
+/// over every DFS leaf that assigns the candidate. Stall attribution is
+/// never collected here (the solver discards everything but cycles).
+pub(crate) fn candidate_steps(
+    k: &Kernel,
+    cache: &GeometryCache,
+    rt: &ResolvedTask<'_>,
+    overlap: bool,
+    dev: &Device,
+) -> TaskSteps {
+    build_steps_from(k, rt, overlap, dev, false, |p| &cache.tasks[p])
+}
+
+/// Reusable buffers for [`run_dataflow`]: one instance per DFS worker
+/// amortizes every per-leaf allocation of the dataflow simulation
+/// (emission timestamp vectors, per-task stats) across the whole
+/// search.
+pub(crate) struct DataflowScratch {
+    /// Per task: emission timestamp of each tile step's outputs.
+    emit_times: Vec<Vec<u64>>,
+    finish: Vec<u64>,
+    compute_cycles: Vec<u64>,
+    fifo_stall: Vec<u64>,
+    ddr_blocked: Vec<u64>,
+    /// Per-FIFO-edge token rate for the task being simulated.
+    rates: Vec<u64>,
+    /// Per-FIFO-edge stall tally (attribution only).
+    edge_stall: Vec<u64>,
+    fifo_stalls: Vec<FifoStall>,
+    total_steps: u64,
+}
+
+impl DataflowScratch {
+    pub(crate) fn new() -> Self {
+        DataflowScratch {
+            emit_times: Vec::new(),
+            finish: Vec::new(),
+            compute_cycles: Vec::new(),
+            fifo_stall: Vec::new(),
+            ddr_blocked: Vec::new(),
+            rates: Vec::new(),
+            edge_stall: Vec::new(),
+            fifo_stalls: Vec::new(),
+            total_steps: 0,
+        }
+    }
+
+    /// Reset for an `n`-task run, keeping every buffer's capacity.
+    fn reset(&mut self, n: usize) {
+        self.emit_times.truncate(n);
+        for v in &mut self.emit_times {
+            v.clear();
+        }
+        while self.emit_times.len() < n {
+            self.emit_times.push(Vec::new());
+        }
+        for v in [
+            &mut self.finish,
+            &mut self.compute_cycles,
+            &mut self.fifo_stall,
+            &mut self.ddr_blocked,
+        ] {
+            v.clear();
+            v.resize(n, 0);
+        }
+        self.fifo_stalls.clear();
+        self.total_steps = 0;
+    }
+}
+
+/// The dataflow step loop, shared verbatim between [`simulate_dataflow`]
+/// and the solver's DFS leaf scoring — there is exactly one copy of the
+/// timing recurrence, so the fast path cannot drift from the simulator.
+///
+/// `specs[t]` is task `t`'s step spec, `slr_pen[t]` its inter-SLR input
+/// penalty (the only assignment-dependent input), `sinks` the graph's
+/// output tasks. Returns total cycles; per-task stats stay in `scratch`
+/// for callers that want them.
+pub(crate) fn run_dataflow(
+    specs: &[&TaskSteps],
+    slr_pen: &[u64],
+    sinks: &[usize],
+    attr: bool,
+    scratch: &mut DataflowScratch,
+) -> u64 {
+    let n = specs.len();
+    scratch.reset(n);
+
+    for t in 0..n {
+        let spec = specs[t];
+        let start_base = slr_pen[t];
+
+        // token rates, derived once per edge from the producer's spec:
+        // a demand beyond what the producer emits clamps to its final
+        // emission, so a peel gates its consumer until it finishes
+        scratch.rates.clear();
+        for &(p, _, emitted) in &spec.fifo_in {
+            scratch.rates.push(emitted.div_ceil(specs[p].steps.max(1)));
+        }
+
+        // producers precede consumers in task-id order, so every
+        // emission vector this task reads is already filled
+        let (done, rest) = scratch.emit_times.split_at_mut(t);
+        let emits = &mut rest[0];
+
+        // cumulative FIFO availability: time when `e` elements of the
+        // producer's output of the consumed array have been emitted
+        let avail = |p: usize, elems_needed: u64, rate: u64| -> u64 {
+            let per = rate.max(1);
+            let idx = elems_needed.div_ceil(per).max(1) as usize - 1;
+            let times = &done[p];
+            if times.is_empty() {
+                0
+            } else {
+                times[idx.min(times.len() - 1)]
+            }
+        };
+
+        let mut load_done_prev = 0u64;
+        let mut compute_done_prev = 0u64;
+        let mut store_done_prev = 0u64;
+        emits.reserve(spec.steps as usize);
+        if attr {
+            scratch.edge_stall.clear();
+            scratch.edge_stall.resize(spec.fifo_in.len(), 0);
+        }
+        let preload_done = start_base + spec.preload;
+        if spec.preload > 0 {
+            scratch.ddr_blocked[t] += spec.preload;
+        }
+
+        for i in 0..spec.steps {
+            scratch.total_steps += 1;
+            // FIFO wait: cumulative elements needed through step i+1.
+            // `binding` tracks which edge set the ready time (strict
+            // improvement + in-order scan = first-wins on ties, so the
+            // attribution is deterministic); None = preload-bound.
+            let mut in_ready = preload_done;
+            let mut binding: Option<usize> = None;
+            for (ei, &(p, per_step, _)) in spec.fifo_in.iter().enumerate() {
+                let need = per_step * (i + 1);
+                let ready = avail(p, need, scratch.rates[ei]);
+                if ready > in_ready {
+                    in_ready = ready;
+                    binding = Some(ei);
+                }
+            }
+            // load of tile i may begin once the previous tile's buffer is
+            // free (ping-pong: after compute of i-1) and data is ready
+            let load_start = if spec.overlap {
+                load_done_prev.max(compute_done_prev.saturating_sub(spec.compute)).max(in_ready)
+            } else {
+                store_done_prev.max(in_ready)
+            };
+            let load_done = load_start + spec.ddr_in;
+            let stall = in_ready.saturating_sub(load_done_prev.max(compute_done_prev));
+            scratch.fifo_stall[t] += stall;
+            if attr && stall > 0 {
+                if let Some(ei) = binding {
+                    scratch.edge_stall[ei] += stall;
+                }
+            }
+
+            let compute_start = load_done.max(compute_done_prev);
+            let compute_done = compute_start + spec.compute;
+            scratch.compute_cycles[t] += spec.compute;
+
+            let store_start = compute_done.max(store_done_prev);
+            let store_done = store_start + spec.ddr_out;
+            if !spec.overlap {
+                scratch.ddr_blocked[t] += spec.ddr_in + spec.ddr_out;
+            }
+
+            emits.push(store_done);
+            load_done_prev = load_done;
+            compute_done_prev = compute_done;
+            store_done_prev = store_done;
+        }
+        scratch.finish[t] = store_done_prev.max(preload_done);
+        if attr {
+            for (ei, &(p, _, _)) in spec.fifo_in.iter().enumerate() {
+                if scratch.edge_stall[ei] > 0 {
+                    scratch.fifo_stalls.push(FifoStall {
+                        producer: p,
+                        consumer: t,
+                        array: spec.fifo_arrays[ei].clone(),
+                        cycles: scratch.edge_stall[ei],
+                    });
+                }
+            }
+        }
+    }
+
+    sinks.iter().map(|&s| scratch.finish[s]).max().unwrap_or(0)
 }
 
 /// Execute the design (cold-resolving wrapper over
@@ -222,7 +442,6 @@ pub fn simulate_resolved(rd: &ResolvedDesign, dev: &Device) -> SimReport {
 fn simulate_sequential(rd: &ResolvedDesign, dev: &Device) -> SimReport {
     let n = rd.fg.tasks.len();
     let mut duration = vec![0u64; n];
-    let mut finish = vec![0u64; n];
     let mut compute_cycles = vec![0u64; n];
     let mut ddr_blocked = vec![0u64; n];
     let mut total_steps = 0u64;
@@ -238,18 +457,9 @@ fn simulate_sequential(rd: &ResolvedDesign, dev: &Device) -> SimReport {
         ddr_blocked[t] = dur.saturating_sub(compute);
         total_steps += rt.steps;
     }
-    let mut clock = 0u64;
-    for t in 0..n {
-        clock += duration[t];
-        finish[t] = clock;
-    }
-    let cycles = rd
-        .fg
-        .sinks()
-        .into_iter()
-        .map(|s| finish[s])
-        .max()
-        .unwrap_or(0);
+    // the same closed form the analytic model and the solver's leaf
+    // fast path evaluate — equal by construction
+    let cycles = crate::dse::cost::sequential_total(&duration, &rd.fg.sinks());
     SimReport {
         cycles,
         compute_cycles,
@@ -260,7 +470,8 @@ fn simulate_sequential(rd: &ResolvedDesign, dev: &Device) -> SimReport {
     }
 }
 
-/// Dataflow execution: the tile-step pipeline with FIFO token waits.
+/// Dataflow execution: the tile-step pipeline with FIFO token waits,
+/// one [`run_dataflow`] pass over per-task specs.
 fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
     let n = rd.fg.tasks.len();
     // Per-FIFO stall attribution rides on the tracing switch: leaf
@@ -268,133 +479,28 @@ fn simulate_dataflow(rd: &ResolvedDesign, dev: &Device) -> SimReport {
     // array-name clones or per-edge tallies.
     let attr_on = crate::obs::trace_enabled();
     let specs: Vec<TaskSteps> = (0..n).map(|t| build_steps(rd, t, dev, attr_on)).collect();
-    let mut fifo_stalls: Vec<FifoStall> = Vec::new();
+    let spec_refs: Vec<&TaskSteps> = specs.iter().collect();
+    let slr_pen: Vec<u64> = (0..n)
+        .map(|t| {
+            rd.fg
+                .predecessors(t)
+                .iter()
+                .filter(|&&p| rd.task(p).cfg().slr != rd.task(t).cfg().slr)
+                .count() as u64
+                * dev.inter_slr_latency
+        })
+        .collect();
+    let sinks = rd.fg.sinks();
 
-    // producer emission timestamps: per task, the time at which the i-th
-    // step's outputs are emitted (filled in topological order).
-    let mut emit_times: Vec<Vec<u64>> = vec![Vec::new(); n];
-    let mut finish = vec![0u64; n];
-    let mut compute_cycles = vec![0u64; n];
-    let mut fifo_stall = vec![0u64; n];
-    let mut ddr_blocked = vec![0u64; n];
-    let mut total_steps = 0u64;
-
-    for t in 0..n {
-        let spec = &specs[t];
-        let slr_pen: u64 = rd
-            .fg
-            .predecessors(t)
-            .iter()
-            .filter(|&&p| rd.task(p).cfg().slr != rd.task(t).cfg().slr)
-            .count() as u64
-            * dev.inter_slr_latency;
-
-        let start_base = slr_pen;
-
-        // cumulative FIFO availability: time when `e` elements of the
-        // producer's output of the consumed array have been emitted
-        // (`rate` = that producer's per-step emission of the array; a
-        // demand beyond what the producer emits clamps to its final
-        // emission, so a peel gates its consumer until it finishes).
-        let avail = |p: usize, elems_needed: u64, rate: u64| -> u64 {
-            let per = rate.max(1);
-            let idx = elems_needed.div_ceil(per).max(1) as usize - 1;
-            let times = &emit_times[p];
-            if times.is_empty() {
-                0
-            } else {
-                times[idx.min(times.len() - 1)]
-            }
-        };
-
-        let mut load_done_prev = 0u64;
-        let mut compute_done_prev = 0u64;
-        let mut store_done_prev = 0u64;
-        let mut emits = Vec::with_capacity(spec.steps as usize);
-        let mut edge_stall: Vec<u64> =
-            if attr_on { vec![0; spec.fifo_in.len()] } else { Vec::new() };
-        let preload_done = start_base + spec.preload;
-        if spec.preload > 0 {
-            ddr_blocked[t] += spec.preload;
-        }
-
-        for i in 0..spec.steps {
-            total_steps += 1;
-            // FIFO wait: cumulative elements needed through step i+1.
-            // `binding` tracks which edge set the ready time (strict
-            // improvement + in-order scan = first-wins on ties, so the
-            // attribution is deterministic); None = preload-bound.
-            let mut in_ready = preload_done;
-            let mut binding: Option<usize> = None;
-            for (ei, &(p, per_step, rate)) in spec.fifo_in.iter().enumerate() {
-                let need = per_step * (i + 1);
-                let ready = avail(p, need, rate);
-                if ready > in_ready {
-                    in_ready = ready;
-                    binding = Some(ei);
-                }
-            }
-            // load of tile i may begin once the previous tile's buffer is
-            // free (ping-pong: after compute of i-1) and data is ready
-            let load_start = if spec.overlap {
-                load_done_prev.max(compute_done_prev.saturating_sub(spec.compute)).max(in_ready)
-            } else {
-                store_done_prev.max(in_ready)
-            };
-            let load_done = load_start + spec.ddr_in;
-            let stall = in_ready.saturating_sub(load_done_prev.max(compute_done_prev));
-            fifo_stall[t] += stall;
-            if attr_on && stall > 0 {
-                if let Some(ei) = binding {
-                    edge_stall[ei] += stall;
-                }
-            }
-
-            let compute_start = load_done.max(compute_done_prev);
-            let compute_done = compute_start + spec.compute;
-            compute_cycles[t] += spec.compute;
-
-            let store_start = compute_done.max(store_done_prev);
-            let store_done = store_start + spec.ddr_out;
-            if !spec.overlap {
-                ddr_blocked[t] += spec.ddr_in + spec.ddr_out;
-            }
-
-            emits.push(store_done);
-            load_done_prev = load_done;
-            compute_done_prev = compute_done;
-            store_done_prev = store_done;
-        }
-        finish[t] = store_done_prev.max(preload_done);
-        emit_times[t] = emits;
-        if attr_on {
-            for (ei, &(p, _, _)) in spec.fifo_in.iter().enumerate() {
-                if edge_stall[ei] > 0 {
-                    fifo_stalls.push(FifoStall {
-                        producer: p,
-                        consumer: t,
-                        array: spec.fifo_arrays[ei].clone(),
-                        cycles: edge_stall[ei],
-                    });
-                }
-            }
-        }
-    }
-
-    let cycles = rd
-        .fg
-        .sinks()
-        .into_iter()
-        .map(|s| finish[s])
-        .max()
-        .unwrap_or(0);
+    let mut scratch = DataflowScratch::new();
+    let cycles = run_dataflow(&spec_refs, &slr_pen, &sinks, attr_on, &mut scratch);
     SimReport {
         cycles,
-        compute_cycles,
-        fifo_stall_cycles: fifo_stall,
-        ddr_blocked_cycles: ddr_blocked,
-        steps: total_steps,
-        fifo_stalls,
+        compute_cycles: std::mem::take(&mut scratch.compute_cycles),
+        fifo_stall_cycles: std::mem::take(&mut scratch.fifo_stall),
+        ddr_blocked_cycles: std::mem::take(&mut scratch.ddr_blocked),
+        steps: scratch.total_steps,
+        fifo_stalls: std::mem::take(&mut scratch.fifo_stalls),
     }
 }
 

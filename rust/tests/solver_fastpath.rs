@@ -1,0 +1,144 @@
+//! Acceptance properties for the solver's allocation-free leaf fast
+//! path and the shared fusion-aware stage-1 beam (DESIGN.md §11).
+//!
+//! The contract under test: `SolverOptions::leaf_prefilter` and
+//! `SolverOptions::shared_beam` are pure *speed* knobs. Flipping either
+//! (or both, or the thread count, or telemetry) must return the
+//! bit-identical winning design on every kernel in the zoo — the leaf
+//! pre-filter may only skip simulations whose analytic lower bound
+//! already loses to the shared incumbent, and beam starvation may only
+//! drop candidates that cannot appear in any winning or tying leaf.
+//! The per-leaf accounting makes the first claim auditable: at jobs=1
+//! every leaf the reference path simulates is either simulated or
+//! `model_pruned` by the fast path, never silently lost.
+
+use prometheus::dse::solver::{solve, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use std::time::Duration;
+
+/// Small-but-feasible knobs shared by the suites (`jobs: 1` pinned so
+/// counter asserts are deterministic even when CI sets
+/// `PROMETHEUS_JOBS=4`; thread-count independence gets its own solve).
+fn small_solver() -> SolverOptions {
+    SolverOptions {
+        beam: 4,
+        max_factor_per_loop: 8,
+        max_unroll: 64,
+        max_pad: 4,
+        timeout: Duration::from_secs(30),
+        jobs: 1,
+        ..SolverOptions::default()
+    }
+}
+
+#[test]
+fn fast_path_is_answer_preserving_across_the_zoo() {
+    // Reference (both knobs off — the pre-fast-path leaf and the full
+    // per-variant beam) vs each knob alone vs both on, plus both-on at
+    // jobs=8: five solves per kernel, one answer.
+    let dev = Device::u55c();
+    let mut model_pruned_total = 0u64;
+    for k in polybench::all_kernels() {
+        let opts = |prefilter: bool, beam: bool, jobs: usize| SolverOptions {
+            leaf_prefilter: prefilter,
+            shared_beam: beam,
+            jobs,
+            telemetry: true,
+            ..small_solver()
+        };
+        let reference = solve(&k, &dev, &opts(false, false, 1))
+            .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        let prefilter_only = solve(&k, &dev, &opts(true, false, 1)).unwrap();
+        let beam_only = solve(&k, &dev, &opts(false, true, 1)).unwrap();
+        let fast = solve(&k, &dev, &opts(true, true, 1)).unwrap();
+        let fast_mt = solve(
+            &k,
+            &dev,
+            &SolverOptions { telemetry: false, ..opts(true, true, 8) },
+        )
+        .unwrap();
+
+        for (label, r) in [
+            ("leaf prefilter", &prefilter_only),
+            ("shared beam", &beam_only),
+            ("fast path", &fast),
+            ("fast path at jobs=8", &fast_mt),
+        ] {
+            assert_eq!(reference.design, r.design, "{}: {label} changed the design", k.name);
+            assert_eq!(
+                reference.latency.total, r.latency.total,
+                "{}: {label} changed the latency",
+                k.name
+            );
+        }
+
+        // Leaf accounting with the prefilter as the only delta (same
+        // shared-beam setting ⇒ identical traversal): every reference
+        // leaf is either simulated or model-pruned by the fast path.
+        let with_beam = beam_only.telemetry.totals();
+        let ft = fast.telemetry.totals();
+        assert_eq!(
+            with_beam.leaves_simulated,
+            ft.leaves_simulated + ft.model_pruned,
+            "{}: leaf partition broke (ref {} vs fast {} + model-pruned {})",
+            k.name,
+            with_beam.leaves_simulated,
+            ft.leaves_simulated,
+            ft.model_pruned
+        );
+        // the prefilter path still simulates something — the first
+        // probe (bound = +inf) is always scored
+        assert!(ft.leaves_simulated > 0, "{}: fast path simulated no leaves", k.name);
+        model_pruned_total += ft.model_pruned;
+    }
+    // across the whole zoo the pre-filter must actually fire, or the
+    // "fast path" is dead code wearing a flag
+    assert!(model_pruned_total > 0, "leaf pre-filter never pruned a single leaf");
+}
+
+#[test]
+fn shared_beam_starves_losing_fusion_variants() {
+    // On kernels with competing fusion variants (mvt, gesummv), an
+    // optimal incumbent makes the post-probe bound tight from the first
+    // node: candidates of losing variants whose standalone latency
+    // already exceeds the winner's total latency must be starved out of
+    // the DFS lists — and the answer must not move.
+    let dev = Device::u55c();
+    for name in ["mvt", "gesummv"] {
+        let k = polybench::by_name(name).unwrap();
+        let base = SolverOptions { telemetry: true, ..small_solver() };
+        let cold = solve(&k, &dev, &base).unwrap();
+        assert!(cold.fusion_variants > 1, "{name}: expected competing fusion variants");
+        let warm = solve(
+            &k,
+            &dev,
+            &SolverOptions { incumbent: Some(cold.design.clone()), ..base },
+        )
+        .unwrap();
+        assert!(warm.warm_started, "{name}: cold winner must seed the warm solve");
+        assert_eq!(cold.design, warm.design, "{name}: starvation changed the design");
+        let t = warm.telemetry.totals();
+        assert!(
+            t.beam_starved > 0,
+            "{name}: shared beam starved nothing despite an optimal incumbent"
+        );
+    }
+}
+
+#[test]
+fn fast_path_keeps_the_anytime_contract() {
+    // A near-zero deadline with the fast path on must still return a
+    // valid design (the anytime contract: first incumbent before any
+    // deadline kill can abandon the search).
+    let k = polybench::by_name("3mm").unwrap();
+    let dev = Device::u55c();
+    let r = solve(
+        &k,
+        &dev,
+        &SolverOptions { timeout: Duration::from_millis(50), ..small_solver() },
+    )
+    .unwrap();
+    assert!(r.latency.total > 0, "anytime solve returned an empty design");
+    r.design.validate(&k, &r.fused, dev.slrs).unwrap();
+}
