@@ -55,23 +55,35 @@
 //! jobs=1 vs jobs=8 — plus the leaf-accounting invariant at jobs=1:
 //! every leaf the reference path simulates is either simulated or
 //! model-pruned by the fast path (`leaves_ref == leaves_fast +
-//! model_pruned_fast`). Under `PROMETHEUS_BENCH_QUICK=1` (the CI smoke
+//! model_pruned_fast`).
+//!
+//! **Part 5** (ISSUE 8 satellite): static-audit overhead. The flow
+//! re-verifies every winning design with the independent auditor
+//! (DESIGN.md §12) before reporting it; that backstop must stay in the
+//! noise. Each zoo kernel is optimized end to end (which includes the
+//! flow's own audit), then the exact audit the flow ran is re-timed in
+//! isolation; the bar is audit time <= 5% of total `optimize` wall
+//! time across the zoo.
+//!
+//! Under `PROMETHEUS_BENCH_QUICK=1` (the CI smoke
 //! run) the zoo shrinks to four kernels and every wall-clock bar in
-//! parts 1–4 is printed but not asserted — timing ratios are not
+//! parts 1–5 is printed but not asserted — timing ratios are not
 //! meaningful on loaded CI hosts; every answer-shaped assert (design
-//! equality, leaf accounting, inertness) still runs.
+//! equality, leaf accounting, inertness, audit-clean) still runs.
 //!
 //! ```bash
 //! cargo bench --bench solver_eval
 //! ```
 
+use prometheus::analysis::audit::{audit_all, has_errors};
 use prometheus::analysis::fusion::fuse;
+use prometheus::coordinator::flow::{optimize_kernel, OptimizeOptions};
 use prometheus::dse::config::TaskConfig;
 use prometheus::dse::constraints::task_resources;
 use prometheus::dse::cost::task_latency;
 use prometheus::dse::eval::{resolve_task, GeometryCache};
 use prometheus::dse::padding::legal_intra_factors;
-use prometheus::dse::solver::{solve, solve_with_cache, SolverOptions};
+use prometheus::dse::solver::{solve, solve_with_cache, Scenario, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
 use std::collections::BTreeMap;
@@ -345,6 +357,49 @@ fn main() {
         assert!(
             leaf_speedup >= 5.0,
             "fast path must buy >= 5x solves/sec over the zoo (got {leaf_speedup:.2}x)"
+        );
+    }
+
+    // ---- part 5: static-audit share of end-to-end optimize -------------
+    println!("\n== solver_eval: static-audit share of end-to-end optimize (zoo) ==");
+    let flow_opts = OptimizeOptions {
+        solver: fast_opts(1, false),
+        ..OptimizeOptions::default()
+    };
+    let mut opt_secs = 0.0f64;
+    let mut audit_secs = 0.0f64;
+    for kz in &zoo {
+        // end to end, including the flow's own audit of the winner
+        let t = Instant::now();
+        let r = optimize_kernel(&kz.name, &dev, &flow_opts).expect("zoo RTL flow succeeds");
+        opt_secs += t.elapsed().as_secs_f64();
+
+        // the exact audit the flow ran, isolated and averaged over a
+        // few reps so the per-kernel share is stable
+        let cache = GeometryCache::new(kz, &r.fused);
+        let reps = 5u32;
+        let t = Instant::now();
+        for _ in 0..reps {
+            let diags =
+                audit_all(kz, &r.fused, &cache, &r.result.design, &dev, Scenario::Rtl);
+            assert!(!has_errors(&diags), "{} winner failed its audit: {diags:?}", kz.name);
+            std::hint::black_box(&diags);
+        }
+        audit_secs += t.elapsed().as_secs_f64() / reps as f64;
+    }
+    let share = audit_secs / opt_secs.max(1e-9);
+    println!(
+        "optimize total: {opt_secs:.3}s; audit total: {:.1}ms; audit share: {:.2}%",
+        audit_secs * 1e3,
+        share * 100.0
+    );
+    if quick {
+        println!("(PROMETHEUS_BENCH_QUICK=1 — audit-share bar printed, not asserted)");
+    } else {
+        assert!(
+            share <= 0.05,
+            "the flow-level audit must stay <= 5% of optimize wall time (got {:.2}%)",
+            share * 100.0
         );
     }
 }

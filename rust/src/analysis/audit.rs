@@ -1,0 +1,1178 @@
+//! Independent static design auditor (DESIGN.md §12): re-verifies any
+//! [`DesignConfig`] / [`ResolvedDesign`] from first principles, without
+//! trusting the code that enumerated it.
+//!
+//! The solver's legality is *by construction* — `legal_orders`,
+//! `FusionPlan::validate` and the stage-1/2 enumeration only ever
+//! generate designs they believe legal. A bug there silently ships an
+//! illegal design into the QoR DB and the bitstream. This module is the
+//! differential oracle: it re-derives every obligation from the kernel
+//! IR (`ir/access.rs` affine accesses) and the materialized fused graph,
+//! and reports violations as structured [`Diagnostic`] values. The
+//! flow runs it on every winning design (`flow.audit` span), the
+//! `prometheus lint` CLI runs it on demand, and `prometheus db FILE
+//! --verify` applies it to persisted QoR records.
+//!
+//! # Diagnostic taxonomy
+//!
+//! | Code  | Severity | Meaning |
+//! |-------|----------|---------|
+//! | PA001 | error    | config shape: task count/id coverage, vector lengths, kernel name, statement partition |
+//! | PA002 | error    | `perm` is not a permutation of the representative nest |
+//! | PA003 | error    | tiling: padded trip below the effective trip, or intra factor zero / not dividing padded |
+//! | PA004 | error    | malformed per-array transfer plan (levels, buffers, bitwidth) |
+//! | PA005 | error    | the design's fusion plan is not the plan the fused graph realizes |
+//! | PA011 | error    | a dependence-carrying (reduction) loop is permuted outside a parallel loop |
+//! | PA014 | error    | flow/anti dependence between same-part statements writing different arrays |
+//! | PA015 | error    | peel ranges of a statement do not exactly tile its outer iteration space |
+//! | PA020 | warning  | FIFO producer/consumer traverse the streamed array in different orders |
+//! | PA021 | error*   | FIFO rate imbalance: producers emit fewer tokens than the consumer demands (starvation/deadlock); over-production (undrained stream) is a warning |
+//! | PA030 | error    | FIFO edge set disagrees with re-derived last-writer flow semantics (missing or spurious edge) |
+//! | PA031 | error    | the FIFO wait graph over tasks has a cycle (dataflow deadlock) |
+//! | PA032 | error    | FIFO edge between peels of the same part (peels never exchange data) |
+//! | PA040 | error    | per-region resource sum exceeds the scenario budget |
+//! | PA041 | error    | task placed on an SLR outside the scenario's region count |
+//! | PA042 | error    | array partition factor above the device maximum |
+//! | PA050 | error    | emitted HLS FIFO stream declarations disagree with the fused graph edges |
+//! | PA051 | error    | fused engine definitions/calls, top function or SLR wrappers inconsistent with the design |
+//! | PA052 | error    | dataflow pragma or m_axi interface pragmas inconsistent with model/array roles |
+//! | PA053 | error    | a produced array is not written exactly once per producing engine |
+//! | PA054 | error    | intra-task engine names or `[lo:hi)` slice annotations disagree with the peel structure |
+//!
+//! PA020 is a *warning* by design: the stage-1 enumerator does not
+//! co-constrain producer and consumer traversal orders (the
+//! `fifo_compatible` predicate exists but is not wired into candidate
+//! generation), so legal solver output can pair a `j`-major producer
+//! with an `i`-major consumer. Until the enumerator enforces it, the
+//! re-derived check reports rather than rejects. Every other re-derived
+//! obligation is enforced by the solver stack, which is what makes the
+//! zoo-wide invariant — *every solver-emitted design audits with zero
+//! errors* — a meaningful differential property (pinned in
+//! `tests/audit_mutations.rs`).
+#![deny(missing_docs)]
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::analysis::fusion::{FusedGraph, FusedTask};
+use crate::codegen::generate_hls_resolved;
+use crate::dse::config::{DesignConfig, ExecutionModel, TaskConfig};
+use crate::dse::constraints::task_resources;
+use crate::dse::eval::{GeometryCache, ResolvedDesign};
+use crate::dse::solver::{region_budget, Scenario};
+use crate::hw::{Device, ResourceVec};
+use crate::ir::access::{Access, Index};
+use crate::ir::Kernel;
+
+/// How severe an audit finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but not provably illegal; reported, never fatal.
+    Warning,
+    /// A violated correctness obligation; the design must not ship.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One structured audit finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable taxonomy code (`PA0xx`, table in the module docs).
+    pub code: &'static str,
+    /// Whether this finding blocks the design.
+    pub severity: Severity,
+    /// Where the finding anchors (`kernel/FT2`, `kernel/FT0->FT2:E`, …).
+    pub location: String,
+    /// Human-readable statement of the violated obligation.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {} [{}]: {}",
+            self.code, self.severity, self.location, self.message
+        )
+    }
+}
+
+/// Whether any diagnostic in `diags` is an [`Severity::Error`].
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+fn push(
+    out: &mut Vec<Diagnostic>,
+    code: &'static str,
+    severity: Severity,
+    location: String,
+    message: String,
+) {
+    out.push(Diagnostic { code, severity, location, message });
+}
+
+/// Audit a design against its kernel, fused graph and geometry cache.
+///
+/// Runs every design-level pass (config shape, dependence legality,
+/// peel coverage, FIFO deadlock-freedom/rate balance, resource budget)
+/// and returns all findings, most severe obligations first violated
+/// reported in pass order. Shape errors (PA001–PA005) abort the deeper
+/// passes — a malformed config cannot be resolved safely.
+pub fn audit_design(
+    k: &Kernel,
+    fg: &FusedGraph,
+    cache: &GeometryCache,
+    design: &DesignConfig,
+    dev: &Device,
+    scenario: Scenario,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    audit_shape(k, fg, design, &mut out);
+    if has_errors(&out) {
+        return out;
+    }
+    audit_dependences(k, fg, design, &mut out);
+    audit_coverage(k, fg, &mut out);
+    audit_fifo(k, fg, cache, design, &mut out);
+    let rd = ResolvedDesign::new(k, fg, cache, design);
+    audit_resources(&rd, dev, scenario, &mut out);
+    out
+}
+
+/// Audit a design end to end: [`audit_design`] plus the structural lint
+/// of the HLS the code generator emits for it ([`lint_hls`]). The lint
+/// is skipped when the design-level passes already found errors.
+pub fn audit_all(
+    k: &Kernel,
+    fg: &FusedGraph,
+    cache: &GeometryCache,
+    design: &DesignConfig,
+    dev: &Device,
+    scenario: Scenario,
+) -> Vec<Diagnostic> {
+    let mut out = audit_design(k, fg, cache, design, dev, scenario);
+    if !has_errors(&out) {
+        let rd = ResolvedDesign::new(k, fg, cache, design);
+        let hls = generate_hls_resolved(&rd);
+        out.extend(lint_hls(&rd, &hls));
+    }
+    out
+}
+
+// ---- PA001..PA005: config shape -----------------------------------------
+
+fn audit_shape(k: &Kernel, fg: &FusedGraph, design: &DesignConfig, out: &mut Vec<Diagnostic>) {
+    let at = |t: usize| format!("{}/FT{}", k.name, t);
+    if design.kernel != k.name {
+        push(
+            out,
+            "PA001",
+            Severity::Error,
+            k.name.clone(),
+            format!("design targets kernel `{}`, audited against `{}`", design.kernel, k.name),
+        );
+    }
+    // Every statement must belong to exactly one fusion part.
+    for s in &k.statements {
+        let parts: BTreeSet<usize> = fg
+            .tasks
+            .iter()
+            .filter(|t| t.stmts.contains(&s.id))
+            .map(|t| t.part)
+            .collect();
+        if parts.len() != 1 {
+            push(
+                out,
+                "PA001",
+                Severity::Error,
+                format!("{}/S{}", k.name, s.id),
+                format!("statement belongs to {} fusion parts (expected exactly 1)", parts.len()),
+            );
+        }
+    }
+    if design.tasks.len() != fg.tasks.len() {
+        push(
+            out,
+            "PA001",
+            Severity::Error,
+            k.name.clone(),
+            format!(
+                "design configures {} tasks, fused graph has {}",
+                design.tasks.len(),
+                fg.tasks.len()
+            ),
+        );
+    }
+    let mut seen = vec![false; fg.tasks.len()];
+    for tc in &design.tasks {
+        if tc.task >= fg.tasks.len() {
+            push(
+                out,
+                "PA001",
+                Severity::Error,
+                at(tc.task),
+                format!("task id {} out of range (graph has {} tasks)", tc.task, fg.tasks.len()),
+            );
+            continue;
+        }
+        if seen[tc.task] {
+            push(
+                out,
+                "PA001",
+                Severity::Error,
+                at(tc.task),
+                format!("task id {} configured more than once", tc.task),
+            );
+            continue;
+        }
+        seen[tc.task] = true;
+        let fused = &fg.tasks[tc.task];
+        let rep = fused.representative(k);
+        let nl = k.statements[rep].loops.len();
+        if tc.perm.len() != nl || tc.padded_trip.len() != nl || tc.intra.len() != nl {
+            push(
+                out,
+                "PA001",
+                Severity::Error,
+                at(tc.task),
+                format!(
+                    "perm/padded/intra lengths {}/{}/{} disagree with the {}-deep representative nest",
+                    tc.perm.len(),
+                    tc.padded_trip.len(),
+                    tc.intra.len(),
+                    nl
+                ),
+            );
+            continue;
+        }
+        let mut mask = vec![false; nl];
+        let mut perm_ok = true;
+        for &p in &tc.perm {
+            if p >= nl || mask[p] {
+                perm_ok = false;
+                break;
+            }
+            mask[p] = true;
+        }
+        if !perm_ok {
+            push(
+                out,
+                "PA002",
+                Severity::Error,
+                at(tc.task),
+                format!("perm {:?} is not a permutation of 0..{}", tc.perm, nl),
+            );
+            continue;
+        }
+        for p in 0..nl {
+            let declared = k.statements[rep].loops[p].trip;
+            let eff = if p == 0 { fused.outer_span().unwrap_or(declared) } else { declared };
+            if tc.padded_trip[p] < eff {
+                push(
+                    out,
+                    "PA003",
+                    Severity::Error,
+                    at(tc.task),
+                    format!(
+                        "padded trip {} at loop {} below the effective trip {}",
+                        tc.padded_trip[p], p, eff
+                    ),
+                );
+            }
+            if tc.intra[p] == 0 || tc.padded_trip[p] % tc.intra[p].max(1) != 0 {
+                push(
+                    out,
+                    "PA003",
+                    Severity::Error,
+                    at(tc.task),
+                    format!(
+                        "intra factor {} at loop {} does not tile padded trip {}",
+                        tc.intra[p], p, tc.padded_trip[p]
+                    ),
+                );
+            }
+        }
+        for (a, plan) in &tc.plans {
+            if let Err(e) = plan.validate() {
+                push(
+                    out,
+                    "PA004",
+                    Severity::Error,
+                    format!("{}/FT{}:{}", k.name, tc.task, a),
+                    format!("malformed transfer plan: {e}"),
+                );
+            }
+        }
+    }
+    if design.tasks.len() == fg.tasks.len() {
+        for (t, covered) in seen.iter().enumerate() {
+            if !covered {
+                push(
+                    out,
+                    "PA001",
+                    Severity::Error,
+                    at(t),
+                    format!("task id {t} has no configuration"),
+                );
+            }
+        }
+    }
+    if design.fusion != fg.plan() {
+        push(
+            out,
+            "PA005",
+            Severity::Error,
+            k.name.clone(),
+            "design's fusion plan differs from the plan the fused graph realizes".into(),
+        );
+    }
+}
+
+// ---- PA011, PA014: dependence legality -----------------------------------
+
+/// The config of task `t`. Only called after the shape pass guaranteed
+/// id coverage, so the lookup cannot fail.
+fn cfg_of<'d>(design: &'d DesignConfig, t: usize) -> &'d TaskConfig {
+    design
+        .tasks
+        .iter()
+        .find(|tc| tc.task == t)
+        .expect("shape pass guarantees task id coverage")
+}
+
+/// Re-derive, per task, which representative-nest loop positions carry a
+/// dependence: a statement's local loop carries one exactly when the
+/// statement's write does **not** index it (successive iterations then
+/// read-modify-write the same element — distance vector `(0,…,+,…,0)`
+/// with the `+` at that loop). This is computed from the affine accesses
+/// alone, never from the IR's `reduction` flags.
+fn derived_carried(k: &Kernel, fused: &FusedTask) -> BTreeSet<usize> {
+    let rep = fused.representative(k);
+    let rep_loops = &k.statements[rep].loops;
+    let mut carried = BTreeSet::new();
+    for &sid in &fused.stmts {
+        let s = &k.statements[sid];
+        for (lp, l) in s.loops.iter().enumerate() {
+            let Some(rp) = rep_loops.iter().position(|rl| rl.name == l.name) else {
+                continue;
+            };
+            if !s.write.uses_loop(lp) {
+                carried.insert(rp);
+            }
+        }
+    }
+    carried
+}
+
+fn audit_dependences(
+    k: &Kernel,
+    fg: &FusedGraph,
+    design: &DesignConfig,
+    out: &mut Vec<Diagnostic>,
+) {
+    // PA011: in the executed loop order (the perm sequence), every
+    // carried loop must run inside every non-carried loop. Permuting a
+    // carried loop outward reorders the read-modify-write chain across
+    // tile rows, which the unrolled engine does not preserve.
+    for fused in &fg.tasks {
+        let tc = cfg_of(design, fused.id);
+        let rep = fused.representative(k);
+        let nl = k.statements[rep].loops.len();
+        let carried = derived_carried(k, fused);
+        let mut place = vec![0usize; nl];
+        for (i, &p) in tc.perm.iter().enumerate() {
+            place[p] = i;
+        }
+        for &c in &carried {
+            for n in (0..nl).filter(|p| !carried.contains(p)) {
+                if place[c] < place[n] {
+                    push(
+                        out,
+                        "PA011",
+                        Severity::Error,
+                        format!("{}/FT{}", k.name, fused.id),
+                        format!(
+                            "dependence-carrying loop `{}` permuted outside parallel loop `{}` (perm {:?})",
+                            k.statements[rep].loops[c].name,
+                            k.statements[rep].loops[n].name,
+                            tc.perm
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    // PA014: Bernstein pairs inside one fusion part. Statements fused
+    // into one engine execute under a single shared loop nest; a flow or
+    // anti dependence between them on an array that is not the shared
+    // output has no init/update glue and is not preserved.
+    let mut parts: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for t in &fg.tasks {
+        parts.entry(t.part).or_default().extend(t.stmts.iter().copied());
+    }
+    for (part, stmts) in &parts {
+        let v: Vec<usize> = stmts.iter().copied().collect();
+        for i in 0..v.len() {
+            for j in (i + 1)..v.len() {
+                let sa = &k.statements[v[i]];
+                let sb = &k.statements[v[j]];
+                if sa.write.array == sb.write.array {
+                    continue; // init/update glue on the shared output
+                }
+                if sb.reads.iter().any(|r| r.array == sa.write.array) {
+                    push(
+                        out,
+                        "PA014",
+                        Severity::Error,
+                        format!("{}/part{}", k.name, part),
+                        format!(
+                            "flow dependence S{} -> S{} on `{}` inside one fusion part",
+                            sa.id, sb.id, sa.write.array
+                        ),
+                    );
+                }
+                if sa.reads.iter().any(|r| r.array == sb.write.array) {
+                    push(
+                        out,
+                        "PA014",
+                        Severity::Error,
+                        format!("{}/part{}", k.name, part),
+                        format!(
+                            "anti dependence S{} -> S{} on `{}` inside one fusion part",
+                            sa.id, sb.id, sb.write.array
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- PA015: peel range coverage ------------------------------------------
+
+fn audit_coverage(k: &Kernel, fg: &FusedGraph, out: &mut Vec<Diagnostic>) {
+    for s in &k.statements {
+        let Some(l0) = s.loops.first() else { continue };
+        let trip = l0.trip;
+        let mut iv: Vec<(u64, u64)> = fg
+            .tasks
+            .iter()
+            .filter(|t| t.stmts.contains(&s.id))
+            .map(|t| t.outer_range.unwrap_or((0, trip)))
+            .collect();
+        iv.sort_unstable();
+        let mut cur = 0u64;
+        let mut ok = true;
+        for &(lo, hi) in &iv {
+            if lo != cur || hi < lo {
+                ok = false;
+                break;
+            }
+            cur = hi;
+        }
+        if cur != trip {
+            ok = false;
+        }
+        if !ok {
+            push(
+                out,
+                "PA015",
+                Severity::Error,
+                format!("{}/S{}", k.name, s.id),
+                format!(
+                    "task ranges {:?} do not exactly tile the outer iteration space [0:{})",
+                    iv, trip
+                ),
+            );
+        }
+    }
+}
+
+// ---- PA020, PA021, PA030..PA032: FIFO dataflow ---------------------------
+
+/// The elements task `t` emits of `a` over a FIFO: its outer-range share
+/// of the array footprint, scaled by the *writer statement's* outer
+/// trip. Recomputed from the kernel IR — the cached
+/// `fifo_out_elems_by_array` is the value under test.
+fn emitted_of(k: &Kernel, t: &FusedTask, a: &str) -> u64 {
+    let total = k.array(a).map(|x| x.elems()).unwrap_or(0);
+    match t.outer_range {
+        Some((lo, hi)) => {
+            let wtrip = t
+                .stmts
+                .iter()
+                .find(|&&s| k.statements[s].write.array == a)
+                .and_then(|&s| k.statements[s].loops.first().map(|l| l.trip))
+                .unwrap_or(0);
+            if wtrip > 0 {
+                total * (hi - lo).min(wtrip) / wtrip
+            } else {
+                total
+            }
+        }
+        None => total,
+    }
+}
+
+/// The order in which a task's engine visits the dimensions of `access`:
+/// dimension indices sorted by the place of their indexing loop in the
+/// executed loop order (non-reduction perm order, then reductions).
+/// `None` when a loop cannot be mapped onto the representative nest.
+fn traversal_sig(
+    k: &Kernel,
+    design: &DesignConfig,
+    fused: &FusedTask,
+    owner_sid: usize,
+    access: &Access,
+) -> Option<Vec<usize>> {
+    let tc = design.tasks.iter().find(|c| c.task == fused.id)?;
+    let rep = fused.representative(k);
+    let rep_loops = &k.statements[rep].loops;
+    let red: Vec<bool> = rep_loops.iter().map(|l| l.reduction).collect();
+    let mut ord = tc.nonred_order(&red);
+    ord.extend(tc.red_order(&red));
+    let s = &k.statements[owner_sid];
+    let mut dims: Vec<(usize, usize)> = Vec::new();
+    for (d, ix) in access.idx.iter().enumerate() {
+        if let Index::Iter(lp) = ix {
+            let name = &s.loops[*lp].name;
+            let rp = rep_loops.iter().position(|rl| &rl.name == name)?;
+            let pl = ord.iter().position(|&p| p == rp)?;
+            dims.push((pl, d));
+        }
+    }
+    dims.sort_unstable();
+    Some(dims.into_iter().map(|(_, d)| d).collect())
+}
+
+fn audit_fifo(
+    k: &Kernel,
+    fg: &FusedGraph,
+    cache: &GeometryCache,
+    design: &DesignConfig,
+    out: &mut Vec<Diagnostic>,
+) {
+    let n = fg.tasks.len();
+    let edge_at = |s: usize, d: usize, a: &str| format!("{}/FT{}->FT{}:{}", k.name, s, d, a);
+
+    // Reject out-of-range edges before anything indexes by task id.
+    let edges: Vec<&(usize, usize, String)> = fg
+        .edges
+        .iter()
+        .filter(|(s, d, a)| {
+            let ok = *s < n && *d < n;
+            if !ok {
+                push(
+                    out,
+                    "PA030",
+                    Severity::Error,
+                    edge_at(*s, *d, a),
+                    format!("edge endpoints out of range (graph has {n} tasks)"),
+                );
+            }
+            ok
+        })
+        .collect();
+
+    // PA030: the edge set, re-derived under last-writer flow semantics.
+    // A statement reading `a` consumes the latest program-order writer
+    // of `a`; every task of *another* part containing that writer must
+    // feed the reader's task. Peels of one part produce and consume
+    // their disjoint outer ranges locally and never exchange data.
+    let mut required: BTreeSet<(usize, usize, String)> = BTreeSet::new();
+    for t in &fg.tasks {
+        for &sid in &t.stmts {
+            for r in &k.statements[sid].reads {
+                let lw = k.statements[..sid]
+                    .iter()
+                    .rev()
+                    .find(|s| s.write.array == r.array)
+                    .map(|s| s.id);
+                if let Some(lw) = lw {
+                    for u in &fg.tasks {
+                        if u.part != t.part && u.stmts.contains(&lw) {
+                            required.insert((u.id, t.id, r.array.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let actual: BTreeSet<(usize, usize, String)> = edges.iter().map(|e| (*e).clone()).collect();
+    for (s, d, a) in required.difference(&actual) {
+        push(
+            out,
+            "PA030",
+            Severity::Error,
+            edge_at(*s, *d, a),
+            "required FIFO edge missing from the fused graph (consumer would read a stream nobody writes)".into(),
+        );
+    }
+    for (s, d, a) in actual.difference(&required) {
+        push(
+            out,
+            "PA030",
+            Severity::Error,
+            edge_at(*s, *d, a),
+            "FIFO edge not derivable from last-writer flow semantics".into(),
+        );
+    }
+
+    // PA032: peels of one part never exchange FIFO data.
+    for &(s, d, ref a) in &actual {
+        if fg.tasks[s].part == fg.tasks[d].part {
+            push(
+                out,
+                "PA032",
+                Severity::Error,
+                edge_at(s, d, a),
+                format!("FIFO edge between peels of part {}", fg.tasks[s].part),
+            );
+        }
+    }
+
+    // PA031: the wait graph over tasks must be acyclic, otherwise every
+    // task on the cycle blocks on a token its predecessor never emits.
+    let mut indeg = vec![0usize; n];
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut pairs = BTreeSet::new();
+    for &(s, d, _) in &actual {
+        if pairs.insert((s, d)) {
+            adj[s].push(d);
+            indeg[d] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&t| indeg[t] == 0).collect();
+    let mut popped = 0usize;
+    while let Some(t) = queue.pop() {
+        popped += 1;
+        for &d in &adj[t] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                queue.push(d);
+            }
+        }
+    }
+    if popped != n {
+        let stuck: Vec<String> = (0..n)
+            .filter(|&t| indeg[t] > 0)
+            .map(|t| format!("FT{t}"))
+            .collect();
+        push(
+            out,
+            "PA031",
+            Severity::Error,
+            k.name.clone(),
+            format!("FIFO wait graph has a cycle through {}", stuck.join(", ")),
+        );
+    }
+
+    // PA021 (differential half): the cached per-edge emission must match
+    // the recomputation from the kernel IR.
+    for (t, st) in cache.tasks.iter().enumerate() {
+        if t >= n {
+            break;
+        }
+        for (a, cached) in &st.fifo_out_elems_by_array {
+            let recomputed = emitted_of(k, &fg.tasks[t], a);
+            if *cached != recomputed {
+                push(
+                    out,
+                    "PA021",
+                    Severity::Error,
+                    format!("{}/FT{}:{}", k.name, t, a),
+                    format!(
+                        "cached FIFO emission {cached} disagrees with the recomputed {recomputed}"
+                    ),
+                );
+            }
+        }
+    }
+
+    // PA021 (balance half) + PA020 per consumer/array.
+    let consumers: BTreeSet<(usize, String)> =
+        actual.iter().map(|(_, d, a)| (*d, a.clone())).collect();
+    for (d, a) in &consumers {
+        let at = format!("{}/FT{}:{}", k.name, d, a);
+        let producers: BTreeSet<usize> = actual
+            .iter()
+            .filter(|(_, dd, aa)| dd == d && aa == a)
+            .map(|(s, _, _)| *s)
+            .collect();
+        let st = &cache.tasks[*d];
+        let Some(ast) = st.array(a) else {
+            push(
+                out,
+                "PA021",
+                Severity::Error,
+                at,
+                "consumer task has no statics for the streamed array".into(),
+            );
+            continue;
+        };
+        let cached_prods: BTreeSet<usize> = ast.fifo_producers.iter().copied().collect();
+        if cached_prods != producers {
+            push(
+                out,
+                "PA021",
+                Severity::Error,
+                at.clone(),
+                format!(
+                    "cached producer set {:?} disagrees with the graph's {:?}",
+                    cached_prods, producers
+                ),
+            );
+        }
+        // Consumer demand, exactly as the simulator gates tokens: the
+        // whole footprint, narrowed to the task's outer-range share when
+        // the ranged loop indexes the array.
+        let outer_indexed = ast.access.iter().any(|p| *p == Some(0));
+        let demand = match st.outer_range {
+            Some((lo, hi)) if outer_indexed => {
+                let full = k.statements[st.rep]
+                    .loops
+                    .first()
+                    .map(|l| l.trip)
+                    .unwrap_or(0);
+                if full > 0 {
+                    ast.total_elems * (hi - lo).min(full) / full
+                } else {
+                    ast.total_elems
+                }
+            }
+            _ => ast.total_elems,
+        };
+        let produced: u64 = producers.iter().map(|&s| emitted_of(k, &fg.tasks[s], a)).sum();
+        if produced < demand {
+            push(
+                out,
+                "PA021",
+                Severity::Error,
+                at.clone(),
+                format!(
+                    "producers emit {produced} tokens, consumer demands {demand}: the consumer starves (deadlock)"
+                ),
+            );
+        } else if produced > demand {
+            push(
+                out,
+                "PA021",
+                Severity::Warning,
+                at.clone(),
+                format!(
+                    "producers emit {produced} tokens, consumer demands {demand}: the stream is never drained"
+                ),
+            );
+        }
+        // PA020: element traversal order, re-derived from the accesses
+        // and the executed loop order on both sides.
+        for &s in &producers {
+            let prod = &fg.tasks[s];
+            let Some(&wsid) = prod
+                .stmts
+                .iter()
+                .find(|&&sid| k.statements[sid].write.array == *a)
+            else {
+                continue;
+            };
+            let psig = traversal_sig(k, design, prod, wsid, &k.statements[wsid].write);
+            let cons = &fg.tasks[*d];
+            let Some((rsid, raccess)) = cons.stmts.iter().find_map(|&sid| {
+                k.statements[sid]
+                    .reads
+                    .iter()
+                    .find(|r| r.array == *a)
+                    .map(|r| (sid, r))
+            }) else {
+                continue;
+            };
+            let csig = traversal_sig(k, design, cons, rsid, raccess);
+            if let (Some(p), Some(c)) = (psig, csig) {
+                if !p.is_empty() && !c.is_empty() && p != c {
+                    push(
+                        out,
+                        "PA020",
+                        Severity::Warning,
+                        edge_at(s, *d, a),
+                        format!(
+                            "producer streams dims in order {:?}, consumer reads in order {:?}",
+                            p, c
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- PA040..PA042: resources ---------------------------------------------
+
+fn audit_resources(
+    rd: &ResolvedDesign,
+    dev: &Device,
+    scenario: Scenario,
+    out: &mut Vec<Diagnostic>,
+) {
+    let (regions, budget) = region_budget(dev, scenario);
+    for rt in &rd.tasks {
+        let t = rt.cfg().task;
+        if rt.cfg().slr >= regions {
+            push(
+                out,
+                "PA041",
+                Severity::Error,
+                format!("{}/FT{}", rd.k.name, t),
+                format!(
+                    "task placed on SLR{} but scenario {} has {} region(s)",
+                    rt.cfg().slr,
+                    scenario,
+                    regions
+                ),
+            );
+        }
+        for (ast, rp) in rt.arrays() {
+            if rp.partitions > dev.max_partition {
+                push(
+                    out,
+                    "PA042",
+                    Severity::Error,
+                    format!("{}/FT{}:{}", rd.k.name, t, ast.name),
+                    format!(
+                        "partition factor {} above the device maximum {}",
+                        rp.partitions, dev.max_partition
+                    ),
+                );
+            }
+        }
+    }
+    let mut usage = vec![ResourceVec::ZERO; dev.slrs];
+    for rt in &rd.tasks {
+        usage[rt.cfg().slr.min(dev.slrs - 1)] += task_resources(rt, dev);
+    }
+    for (region, u) in usage.iter().enumerate() {
+        if !u.fits(&budget) {
+            push(
+                out,
+                "PA040",
+                Severity::Error,
+                format!("{}/SLR{}", rd.k.name, region),
+                format!(
+                    "region resource sum exceeds the scenario budget (peak utilization {:.2}x)",
+                    u.utilization(&budget)
+                ),
+            );
+        }
+    }
+}
+
+// ---- PA050..PA054: structural HLS lint -----------------------------------
+
+/// Structurally lint emitted HLS against the resolved design it was
+/// generated from: stream declarations vs. graph edges, engine
+/// definitions/calls, interface pragmas, per-output write calls and the
+/// peeled engine names/slice annotations.
+pub fn lint_hls(rd: &ResolvedDesign, hls: &str) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let k = rd.k;
+    let fg = rd.fg;
+    let design = rd.design;
+    let at = |t: usize| format!("{}/FT{}", k.name, t);
+
+    // PA050: one static stream per graph edge, no extras.
+    for (s, d, a) in &fg.edges {
+        let needle = format!("static hls::stream<float16> fifo_{a}_FT{s}_to_FT{d};");
+        if !hls.contains(&needle) {
+            push(
+                &mut out,
+                "PA050",
+                Severity::Error,
+                format!("{}/FT{}->FT{}:{}", k.name, s, d, a),
+                "FIFO edge has no stream declaration in the emitted top".into(),
+            );
+        }
+    }
+    let decls = hls.matches("static hls::stream<").count();
+    if decls != fg.edges.len() {
+        push(
+            &mut out,
+            "PA050",
+            Severity::Error,
+            k.name.clone(),
+            format!("top declares {} streams, fused graph has {} edges", decls, fg.edges.len()),
+        );
+    }
+
+    // PA051: engines, calls, top and SLR wrappers.
+    for t in &fg.tasks {
+        let def = format!("void fused_task_{}(/* streams */)", t.id);
+        let n = hls.matches(def.as_str()).count();
+        if n != 1 {
+            push(
+                &mut out,
+                "PA051",
+                Severity::Error,
+                at(t.id),
+                format!("expected exactly one engine definition, found {n}"),
+            );
+        }
+        if let Some(tc) = design.tasks.iter().find(|c| c.task == t.id) {
+            let call = format!("fused_task_{}(/* SLR{} */);", t.id, tc.slr);
+            if !hls.contains(&call) {
+                push(
+                    &mut out,
+                    "PA051",
+                    Severity::Error,
+                    at(t.id),
+                    format!("top does not invoke the engine on SLR{}", tc.slr),
+                );
+            }
+        }
+    }
+    if !hls.contains(&format!("extern \"C\" void {}_top(", k.name)) {
+        push(
+            &mut out,
+            "PA051",
+            Severity::Error,
+            k.name.clone(),
+            "top function missing".into(),
+        );
+    }
+    let slrs: BTreeSet<usize> = design.tasks.iter().map(|t| t.slr).collect();
+    let want_wrappers = slrs.len() > 1;
+    for &slr in &slrs {
+        let wrapper = format!("extern \"C\" void {}_slr{}(", k.name, slr);
+        if want_wrappers != hls.contains(&wrapper) {
+            push(
+                &mut out,
+                "PA051",
+                Severity::Error,
+                format!("{}/SLR{}", k.name, slr),
+                if want_wrappers {
+                    "multi-SLR design lacks its per-SLR wrapper".into()
+                } else {
+                    "single-SLR design emits a spurious SLR wrapper".into()
+                },
+            );
+        }
+    }
+
+    // PA052: dataflow pragma iff the dataflow model; m_axi iff external.
+    let has_dataflow = hls.contains("#pragma HLS dataflow");
+    if (design.model == ExecutionModel::Dataflow) != has_dataflow {
+        push(
+            &mut out,
+            "PA052",
+            Severity::Error,
+            k.name.clone(),
+            format!(
+                "dataflow pragma {} under the {:?} execution model",
+                if has_dataflow { "present" } else { "absent" },
+                design.model
+            ),
+        );
+    }
+    for a in &k.arrays {
+        let needle = format!(
+            "#pragma HLS interface m_axi port={} offset=slave bundle=gmem_{}",
+            a.name, a.name
+        );
+        let external = a.is_input || a.is_output;
+        if external != hls.contains(&needle) {
+            push(
+                &mut out,
+                "PA052",
+                Severity::Error,
+                format!("{}/{}", k.name, a.name),
+                if external {
+                    "external array has no m_axi interface pragma".into()
+                } else {
+                    "on-chip intermediate array exposes an m_axi interface".into()
+                },
+            );
+        }
+    }
+
+    // PA053: exactly one write call per produced array per engine.
+    for rt in &rd.tasks {
+        let t = rt.cfg().task;
+        for a in &rt.statics().outputs {
+            let call = format!("write_{a}_FT{t}(/*store|send*/);");
+            let n = hls.matches(call.as_str()).count();
+            if n != 1 {
+                push(
+                    &mut out,
+                    "PA053",
+                    Severity::Error,
+                    format!("{}/FT{}:{}", k.name, t, a),
+                    format!("produced array written {n} times (expected exactly 1)"),
+                );
+            }
+        }
+    }
+
+    // PA054: peeled engine names and outer-slice annotations.
+    for rt in &rd.tasks {
+        let st = rt.statics();
+        for &sid in &st.stmts {
+            let name = match st.outer_range {
+                Some((lo, hi)) => format!("task{sid}_r{lo}_{hi}"),
+                None => format!("task{sid}"),
+            };
+            let def = format!("void {name}(/* partitioned tile buffers */)");
+            let n = hls.matches(def.as_str()).count();
+            if n != 1 {
+                push(
+                    &mut out,
+                    "PA054",
+                    Severity::Error,
+                    format!("{}/FT{}/S{}", k.name, st.task, sid),
+                    format!("expected exactly one intra engine `{name}`, found {n}"),
+                );
+            }
+        }
+        if let Some((lo, hi)) = st.outer_range {
+            if !st.red_mask.first().copied().unwrap_or(false) {
+                if let Some(l0) = rd.k.statements[st.rep].loops.first() {
+                    let ann = format!(" over {} in [{}:{})", l0.name, lo, hi);
+                    if !hls.contains(&ann) {
+                        push(
+                            &mut out,
+                            "PA054",
+                            Severity::Error,
+                            at(st.task),
+                            format!(
+                                "ranged engine lacks its `[{lo}:{hi})` outer-slice annotation"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fusion::fuse;
+    use crate::dse::solver::{solve, SolverOptions};
+    use crate::ir::polybench;
+    use crate::ir::{Access, ArrayDecl, Loop, OpCounts, Statement, StmtKind};
+
+    fn quick() -> SolverOptions {
+        SolverOptions {
+            max_factor_per_loop: 16,
+            max_unroll: 256,
+            beam: 4,
+            ..SolverOptions::default()
+        }
+    }
+
+    #[test]
+    fn gemm_winning_design_audits_clean() {
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let r = solve(&k, &dev, &quick()).expect("solve");
+        let cache = GeometryCache::new(&k, &r.fused);
+        let diags =
+            audit_all(&k, &r.fused, &cache, &r.design, &dev, Scenario::Rtl);
+        let errs: Vec<String> =
+            diags.iter().filter(|d| d.severity == Severity::Error).map(|d| d.to_string()).collect();
+        assert!(errs.is_empty(), "gemm winner should audit clean: {errs:?}");
+    }
+
+    #[test]
+    fn reduction_loop_permuted_outward_fires_pa011() {
+        let k = polybench::gemm();
+        let dev = Device::u55c();
+        let r = solve(&k, &dev, &quick()).expect("solve");
+        let cache = GeometryCache::new(&k, &r.fused);
+        let mut design = r.design.clone();
+        // gemm's representative nest is (i, j, k-reduction): putting k
+        // first is exactly the "swap a reduction loop outward" mutation.
+        design.tasks[0].perm = vec![2, 0, 1];
+        let diags = audit_design(&k, &r.fused, &cache, &design, &dev, Scenario::Rtl);
+        assert!(
+            diags.iter().any(|d| d.code == "PA011" && d.severity == Severity::Error),
+            "expected PA011, got {diags:?}"
+        );
+    }
+
+    #[test]
+    fn transposed_consumer_fires_pa020_warning_only() {
+        // Producer writes T[i][j] row-major; the consumer reads T[j][i]
+        // under the same loop order — a transposed stream traversal. The
+        // enumerator does not co-constrain the two orders, so the audit
+        // reports a warning, not an error.
+        let mk = |id: usize, kind: StmtKind, write: Access, reads: Vec<Access>| Statement {
+            id,
+            kind,
+            loops: vec![Loop::new("i", 8, false), Loop::new("j", 8, false)],
+            write,
+            reads,
+            ops: OpCounts::new(1, 0),
+        };
+        let k = Kernel {
+            name: "synth_transpose".into(),
+            description: String::new(),
+            arrays: vec![
+                ArrayDecl::new("A", &[8, 8], true, false),
+                ArrayDecl::new("T", &[8, 8], false, false),
+                ArrayDecl::new("O", &[8, 8], false, true),
+            ],
+            statements: vec![
+                mk(0, StmtKind::Compute, Access::new("T", &[0, 1]), vec![Access::new("A", &[0, 1])]),
+                mk(1, StmtKind::Compute, Access::new("O", &[0, 1]), vec![Access::new("T", &[1, 0])]),
+            ],
+        };
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let tasks = (0..fg.tasks.len())
+            .map(|t| TaskConfig {
+                task: t,
+                perm: vec![0, 1],
+                padded_trip: vec![8, 8],
+                intra: vec![1, 1],
+                ii: 1,
+                plans: Default::default(),
+                slr: 0,
+            })
+            .collect();
+        let design = DesignConfig {
+            kernel: k.name.clone(),
+            model: ExecutionModel::Dataflow,
+            overlap: false,
+            fusion: fg.plan(),
+            tasks,
+        };
+        let dev = Device::u55c();
+        let diags = audit_design(&k, &fg, &cache, &design, &dev, Scenario::Rtl);
+        assert!(
+            diags.iter().any(|d| d.code == "PA020" && d.severity == Severity::Warning),
+            "expected a PA020 warning, got {diags:?}"
+        );
+        assert!(!has_errors(&diags), "transposed traversal must not be an error: {diags:?}");
+    }
+
+    #[test]
+    fn severity_and_display_are_stable() {
+        assert!(Severity::Error > Severity::Warning);
+        let d = Diagnostic {
+            code: "PA001",
+            severity: Severity::Error,
+            location: "gemm/FT0".into(),
+            message: "boom".into(),
+        };
+        assert_eq!(d.to_string(), "PA001 error [gemm/FT0]: boom");
+    }
+}

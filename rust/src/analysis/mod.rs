@@ -1,11 +1,15 @@
 //! Program analysis: dependences, task-graph construction, fusion and
-//! reuse classification (paper §3.1, Fig 3, Table 5's last two columns).
+//! reuse classification (paper §3.1, Fig 3, Table 5's last two columns),
+//! plus the independent static design auditor (`audit`, DESIGN.md §12)
+//! that re-verifies solver output without trusting the enumerators.
 
+pub mod audit;
 pub mod deps;
 pub mod fusion;
 pub mod reuse;
 pub mod taskgraph;
 
+pub use audit::{audit_all, audit_design, lint_hls, Diagnostic, Severity};
 pub use deps::{DepEdge, DepKind};
 pub use fusion::{
     enumerate_fusions, fuse, fuse_with_plan, FusedGraph, FusedTask, FusionPlan, PeelRole,

@@ -11,6 +11,7 @@
 //! variant through `fuse_with_plan`, so ranged designs replay their
 //! peels bit-identically.
 
+use crate::analysis::audit;
 use crate::analysis::fusion::FusedGraph;
 use crate::codegen::{generate_hls_resolved, generate_host};
 use crate::dse::config::DesignConfig;
@@ -132,6 +133,8 @@ fn finish_flow(
     dev: &Device,
     opts: &OptimizeOptions,
 ) -> Result<OptimizedKernel> {
+    audit_winner(&kernel, &fused, &cache, &result.design, dev, opts.scenario)?;
+
     // 2. simulate (RTL-equivalent) + 3. board model where applicable,
     //    both reading the one resolved design
     let rd = ResolvedDesign::new(&kernel, &fused, &cache, &result.design);
@@ -147,6 +150,44 @@ fn finish_flow(
     drop(rd);
 
     finish_flow_with(kernel, fused, &cache, result, sim, board, gf, opts)
+}
+
+/// Independent static audit of a winning design (DESIGN.md §12,
+/// `analysis/audit.rs`): every design the flow is about to ship —
+/// freshly solved, cache-hit, or about to be recorded — is re-verified
+/// from first principles, and audit *errors* abort the flow. Warnings
+/// (e.g. the PA020 traversal-order note) are emitted as trace instants
+/// and never fatal.
+fn audit_winner(
+    kernel: &Kernel,
+    fused: &FusedGraph,
+    cache: &GeometryCache,
+    design: &DesignConfig,
+    dev: &Device,
+    scenario: Scenario,
+) -> Result<()> {
+    let _span = obs::span("flow", "flow.audit")
+        .map(|s| s.arg("kernel", obs::ArgVal::Str(kernel.name.clone())));
+    let diags = audit::audit_all(kernel, fused, cache, design, dev, scenario);
+    let mut errors = Vec::new();
+    for d in &diags {
+        match d.severity {
+            audit::Severity::Error => errors.push(d.to_string()),
+            audit::Severity::Warning => obs::instant(
+                "flow",
+                "flow.audit.warning",
+                vec![("diag".to_string(), obs::ArgVal::Str(d.to_string()))],
+            ),
+        }
+    }
+    if !errors.is_empty() {
+        return Err(anyhow::anyhow!(
+            "{}: winning design failed the static audit: {}",
+            kernel.name,
+            errors.join("; ")
+        ));
+    }
+    Ok(())
 }
 
 /// Emit the final simulation's per-FIFO stall attribution as trace
@@ -395,6 +436,9 @@ pub fn optimize_kernel_cached(
     // never be lost to an unwritable emit dir. The caller persists the
     // db even when this function errors.
     let FusionVariant { fg: fused, cache, .. } = take_winning_variant(&mut space, &result)?;
+    // Audit before the record is inserted: an illegal design must never
+    // enter the knowledge base, where it would warm-start future solves.
+    audit_winner(&kernel, &fused, &cache, &result.design, dev, opts.scenario)?;
     let rd = ResolvedDesign::new(&kernel, &fused, &cache, &result.design);
     let sim = {
         let _span = obs::span("flow", "flow.sim");

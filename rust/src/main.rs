@@ -10,7 +10,10 @@
 //! prometheus report   [--kernels K,..] [--full] [--telemetry]
 //!                                               chosen fusion per kernel (Table 9 shape)
 //! prometheus batch    [--kernels K,..] [--scenarios S,..] [--db FILE] [--jobs N] [--trace FILE]
-//! prometheus db       <FILE>                    QoR knowledge-base records + provenance
+//! prometheus lint     [<kernel>|all] [--onboard N --frac F] [--full] [--jobs N] [--fixed-fusion]
+//!                                               solve + independent static audit (DESIGN.md §12)
+//! prometheus db       <FILE> [--verify]         QoR knowledge-base records + provenance
+//!                                               (--verify re-audits every stored design)
 //! prometheus compare  <kernel>                  all 6 frameworks (Table 3 shape)
 //! prometheus codegen  <kernel> <dir>            emit HLS-C++ + host
 //! prometheus validate <kernel> [--artifacts D]  PJRT functional check
@@ -23,10 +26,12 @@
 //! Perfetto. See DESIGN.md §10.
 
 use anyhow::{anyhow, Result};
-use prometheus::analysis::fusion::{enumerate_fusions, fuse};
+use prometheus::analysis::audit;
+use prometheus::analysis::fusion::{enumerate_fusions, fuse, fuse_with_plan};
 use prometheus::analysis::reuse;
 use prometheus::baselines::Framework;
 use prometheus::coordinator::flow::{optimize_kernel, optimize_kernel_cached, OptimizeOptions};
+use prometheus::dse::eval::GeometryCache;
 use prometheus::dse::solver::{Scenario, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::ir::{oracle, polybench};
@@ -48,6 +53,42 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter()
         .position(|a| a == flag)
         .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Re-audit one stored QoR record from first principles (`db --verify`).
+///
+/// Returns the audit-column cell text and whether the record is illegal
+/// (and should fail the exit code). Canonical keys are
+/// `kernel|device|scenario|model|...`, so the scenario is re-parsed from
+/// the key to audit under the same resource budget the record was
+/// solved for.
+fn audit_record(
+    key: &str,
+    rec: &prometheus::service::qor_db::QorRecord,
+    dev: &Device,
+) -> (String, bool) {
+    let Some(k) = polybench::by_name(&rec.design.kernel) else {
+        return ("unknown kernel".into(), true);
+    };
+    let scenario = match key.split('|').nth(2).map(parse_scenario) {
+        Some(Ok(s)) => s,
+        _ => return ("unparsable key".into(), true),
+    };
+    // A fusion plan the current analyzer rejects means the record
+    // predates a legality fix — stale, never warm-start from it.
+    let fg = match fuse_with_plan(&k, &rec.design.fusion) {
+        Ok(fg) => fg,
+        Err(e) => return (format!("stale plan: {e}"), true),
+    };
+    let cache = GeometryCache::new(&k, &fg);
+    let diags = audit::audit_design(&k, &fg, &cache, &rec.design, dev, scenario);
+    let errors = diags.iter().filter(|d| d.severity == audit::Severity::Error).count();
+    let warnings = diags.len() - errors;
+    match (errors, warnings) {
+        (0, 0) => ("clean".into(), false),
+        (0, w) => (format!("clean ({w} warning(s))"), false),
+        (e, _) => (format!("{e} error(s)"), true),
+    }
 }
 
 fn run() -> Result<()> {
@@ -415,14 +456,122 @@ fn run() -> Result<()> {
                 ));
             }
         }
+        "lint" => {
+            // Independent static audit (DESIGN.md §12): solve each
+            // kernel, then re-verify the winning design from first
+            // principles — dependence preservation under the chosen
+            // permutation/tiling/fusion, FIFO deadlock-freedom and
+            // rate balance, resource budgets, and a structural lint
+            // of the emitted HLS. The exit code fails iff any
+            // Error-severity diagnostic fires; warnings are reported
+            // but do not fail the run.
+            let kernels: Vec<String> = match args.get(1).map(String::as_str) {
+                None | Some("all") => {
+                    polybench::all_kernels().iter().map(|k| k.name.clone()).collect()
+                }
+                // `lint --jobs 4` etc: flags in kernel position mean "all"
+                Some(s) if s.starts_with("--") => {
+                    polybench::all_kernels().iter().map(|k| k.name.clone()).collect()
+                }
+                Some(name) => vec![name.to_string()],
+            };
+            let scenario = match flag_value(&args, "--onboard") {
+                Some(n) => Scenario::OnBoard {
+                    slrs: n.parse()?,
+                    frac: flag_value(&args, "--frac")
+                        .map(|f| f.parse())
+                        .transpose()?
+                        .unwrap_or(0.6),
+                },
+                None => Scenario::Rtl,
+            };
+            // Quick solver knobs by default (same space, smaller
+            // beam) — the audit verdict is about the *emitted*
+            // design, whichever strength found it. --full for the
+            // default-strength search.
+            let mut solver = if args.iter().any(|a| a == "--full") {
+                SolverOptions::default()
+            } else {
+                prometheus::coordinator::flow::quick_solver()
+            };
+            solver.scenario = scenario;
+            if let Some(j) = flag_value(&args, "--jobs") {
+                solver.jobs = j.parse()?;
+            }
+            if args.iter().any(|a| a == "--fixed-fusion") {
+                solver.explore_fusion = false;
+            }
+            let mut t = Table::new(&["Kernel", "Code", "Severity", "Location", "Message"]);
+            let (mut errors, mut warnings) = (0usize, 0usize);
+            for name in &kernels {
+                let k = polybench::by_name(name)
+                    .ok_or_else(|| anyhow!("unknown kernel {name}"))?;
+                match prometheus::dse::solver::solve(&k, &dev, &solver) {
+                    Ok(r) => {
+                        let cache = GeometryCache::new(&k, &r.fused);
+                        let diags =
+                            audit::audit_all(&k, &r.fused, &cache, &r.design, &dev, scenario);
+                        let e =
+                            diags.iter().filter(|d| d.severity == audit::Severity::Error).count();
+                        let w = diags.len() - e;
+                        errors += e;
+                        warnings += w;
+                        println!(
+                            "{name}: {} ({e} error(s), {w} warning(s))",
+                            if e == 0 { "clean" } else { "ILLEGAL" }
+                        );
+                        for d in &diags {
+                            t.row(vec![
+                                name.clone(),
+                                d.code.to_string(),
+                                d.severity.to_string(),
+                                d.location.clone(),
+                                d.message.clone(),
+                            ]);
+                        }
+                    }
+                    Err(e) => {
+                        errors += 1;
+                        println!("{name}: SOLVE FAILED");
+                        t.row(vec![
+                            name.clone(),
+                            "-".into(),
+                            "error".into(),
+                            "solver".into(),
+                            format!("solve failed: {e}"),
+                        ]);
+                    }
+                }
+            }
+            if errors + warnings > 0 {
+                print!("{}", t.render());
+            }
+            println!("lint: {} kernel(s), {errors} error(s), {warnings} warning(s)", kernels.len());
+            if errors > 0 {
+                return Err(anyhow!(
+                    "{errors} audit error(s) across {} kernel(s)",
+                    kernels.len()
+                ));
+            }
+        }
         "db" => {
             // Knowledge-base introspection: every record with its QoR
             // *and* its provenance (how trustworthy the stored answer
             // is: explored points, fusion variants weighed, warm/cold,
             // truncation).
+            //
+            // `--verify` additionally re-audits every record's stored
+            // design from first principles (DESIGN.md §12): unknown
+            // kernels, stale fusion plans, and designs failing
+            // `audit_design` count as illegal and fail the exit code,
+            // so a corrupt knowledge base is caught before it
+            // warm-starts future solves.
             let path = PathBuf::from(
-                args.get(1).map(String::as_str).ok_or_else(|| anyhow!("usage: db <FILE>"))?,
+                args.get(1)
+                    .map(String::as_str)
+                    .ok_or_else(|| anyhow!("usage: db <FILE> [--verify]"))?,
             );
+            let verify = args.iter().any(|a| a == "--verify");
             let db = QorDb::load(&path);
             if db.is_empty() {
                 println!(
@@ -431,7 +580,7 @@ fn run() -> Result<()> {
                     prometheus::service::qor_db::FORMAT_VERSION
                 );
             } else {
-                let mut t = Table::new(&[
+                let mut headers = vec![
                     "Key",
                     "Cycles",
                     "GF/s",
@@ -440,9 +589,14 @@ fn run() -> Result<()> {
                     "Variants",
                     "Start",
                     "Truncated",
-                ]);
+                ];
+                if verify {
+                    headers.push("Audit");
+                }
+                let mut t = Table::new(&headers);
+                let mut illegal = 0usize;
                 for (key, rec) in db.iter() {
-                    t.row(vec![
+                    let mut row = vec![
                         key.to_string(),
                         rec.latency_cycles.to_string(),
                         gfs(rec.gflops),
@@ -451,10 +605,36 @@ fn run() -> Result<()> {
                         rec.fusion_variants.to_string(),
                         if rec.warm_started { "warm" } else { "cold" }.to_string(),
                         if rec.timed_out { "yes" } else { "no" }.to_string(),
-                    ]);
+                    ];
+                    if verify {
+                        let (cell, bad) = audit_record(key, rec, &dev);
+                        if bad {
+                            illegal += 1;
+                        }
+                        row.push(cell);
+                    }
+                    t.row(row);
                 }
                 print!("{}", t.render());
-                println!("{} records (format v{})", db.len(), prometheus::service::qor_db::FORMAT_VERSION);
+                if verify {
+                    println!(
+                        "{} records (format v{}), {illegal} illegal",
+                        db.len(),
+                        prometheus::service::qor_db::FORMAT_VERSION
+                    );
+                    if illegal > 0 {
+                        return Err(anyhow!(
+                            "{illegal} of {} records failed the static audit",
+                            db.len()
+                        ));
+                    }
+                } else {
+                    println!(
+                        "{} records (format v{})",
+                        db.len(),
+                        prometheus::service::qor_db::FORMAT_VERSION
+                    );
+                }
             }
         }
         "compare" => {
@@ -540,7 +720,15 @@ fn run() -> Result<()> {
                  \x20                                      requests and intra-solve workers);\n\
                  \x20                                      prints a service-metrics table and fails\n\
                  \x20                                      the exit code if any request failed\n\
-                 \x20 db <FILE>                            QoR knowledge-base records + solve provenance\n\
+                 \x20 lint [<kernel>|all] [--onboard N --frac F] [--full] [--jobs N] [--fixed-fusion]\n\
+                 \x20                                      solve, then independently re-verify the\n\
+                 \x20                                      winning design: dependences, FIFO\n\
+                 \x20                                      deadlock-freedom, budgets, HLS structure\n\
+                 \x20                                      (PA0xx diagnostics, DESIGN.md §12);\n\
+                 \x20                                      nonzero exit on any error-severity finding\n\
+                 \x20 db <FILE> [--verify]                 QoR knowledge-base records + solve provenance;\n\
+                 \x20                                      --verify re-audits every stored design and\n\
+                 \x20                                      fails the exit code on illegal records\n\
                  \x20 compare  <kernel>                    all frameworks (Table 3/6 shape)\n\
                  \x20 codegen  <kernel> <dir>              emit HLS-C++ + OpenCL host\n\
                  \x20 validate <kernel> [--artifacts D]    PJRT functional check\n\

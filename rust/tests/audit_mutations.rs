@@ -1,0 +1,194 @@
+//! Seeded-mutation tests for the independent static auditor
+//! (DESIGN.md §12): take legal zoo designs, apply known-illegal
+//! mutations, and assert the *specific* `PA0xx` diagnostic fires — no
+//! false negatives. The unmutated zoo (every kernel, every fusion
+//! variant, jobs=1 and jobs=8) must audit clean — no false positives.
+//! This pins the differential-oracle invariant: the auditor agrees
+//! with the enumerators on every design the solver actually emits, and
+//! disagrees the moment a design is corrupted.
+
+use prometheus::analysis::audit::{audit_all, audit_design, Diagnostic, Severity};
+use prometheus::analysis::fusion::{fuse_with_plan, FusionPlan, PeelRole};
+use prometheus::dse::config::{DesignConfig, ExecutionModel, TaskConfig};
+use prometheus::dse::eval::{FusionSpace, GeometryCache};
+use prometheus::dse::solver::{solve, solve_space, Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn quick() -> SolverOptions {
+    SolverOptions {
+        max_factor_per_loop: 16,
+        max_unroll: 256,
+        beam: 4,
+        timeout: Duration::from_secs(60),
+        ..SolverOptions::default()
+    }
+}
+
+fn errors_of(diags: &[Diagnostic]) -> Vec<String> {
+    diags
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .map(|d| d.to_string())
+        .collect()
+}
+
+fn assert_fires(diags: &[Diagnostic], code: &str) {
+    assert!(
+        diags.iter().any(|d| d.code == code && d.severity == Severity::Error),
+        "expected an error-severity {code}, got {diags:?}"
+    );
+}
+
+/// Mutation class 1 — swap a reduction loop outward. gemm's winning
+/// task runs (i, j, k-reduction); forcing the carried k loop outermost
+/// reorders the read-modify-write chain on C and must fire PA011.
+#[test]
+fn mutation_reduction_loop_outward_fires_pa011() {
+    let k = polybench::by_name("gemm").unwrap();
+    let dev = Device::u55c();
+    let r = solve(&k, &dev, &quick()).unwrap();
+    let cache = GeometryCache::new(&k, &r.fused);
+    let mut design = r.design.clone();
+    let tc = design
+        .tasks
+        .iter_mut()
+        .find(|tc| tc.perm.len() == 3)
+        .expect("gemm has a 3-deep fused task");
+    tc.perm = vec![2, 0, 1];
+    let diags = audit_design(&k, &r.fused, &cache, &design, &dev, Scenario::Rtl);
+    assert_fires(&diags, "PA011");
+}
+
+/// Mutation class 2 — break a fusion range's trip match. A ranged gemm
+/// fuses {S0, S1} over i in [0:100) with an epilogue peel covering
+/// [100:200); shrinking the main slice to [0:99) leaves iteration 99
+/// executed by no task, which must fire PA015 (coverage gap).
+#[test]
+fn mutation_fusion_range_gap_fires_pa015() {
+    let k = polybench::by_name("gemm").unwrap();
+    let dev = Device::u55c();
+    let plan = FusionPlan::new_with_ranges(vec![vec![0, 1]], vec![Some((0, 100))]);
+    let mut fg = fuse_with_plan(&k, &plan).expect("ranged gemm plan is legal");
+    let main = fg
+        .tasks
+        .iter()
+        .position(|t| matches!(t.role, PeelRole::Main))
+        .expect("ranged plan materializes a Main peel");
+    fg.tasks[main].outer_range = Some((0, 99));
+    // Rebuild the geometry memo and the design against the *mutated*
+    // graph so only the coverage obligation is violated (the shape
+    // pass would otherwise mask PA015 behind PA005).
+    let cache = GeometryCache::new(&k, &fg);
+    let tasks: Vec<TaskConfig> = fg
+        .tasks
+        .iter()
+        .map(|t| {
+            let rep = t.representative(&k);
+            let nest = &k.statements[rep].loops;
+            TaskConfig {
+                task: t.id,
+                perm: (0..nest.len()).collect(),
+                padded_trip: nest.iter().map(|l| l.trip).collect(),
+                intra: vec![1; nest.len()],
+                ii: 1,
+                plans: BTreeMap::new(),
+                slr: 0,
+            }
+        })
+        .collect();
+    let design = DesignConfig {
+        kernel: k.name.clone(),
+        model: ExecutionModel::Dataflow,
+        overlap: false,
+        fusion: fg.plan(),
+        tasks,
+    };
+    let diags = audit_design(&k, &fg, &cache, &design, &dev, Scenario::Rtl);
+    assert_fires(&diags, "PA015");
+}
+
+/// Mutation class 3 — drop a FIFO edge. 3mm's fused graph streams E
+/// and F into the final G task; deleting any producer→consumer edge
+/// breaks the re-derived required-edge set and must fire PA030.
+#[test]
+fn mutation_dropped_fifo_edge_fires_pa030() {
+    let k = polybench::by_name("3mm").unwrap();
+    let dev = Device::u55c();
+    let opts = SolverOptions { explore_fusion: false, ..quick() };
+    let r = solve(&k, &dev, &opts).unwrap();
+    let mut fg = r.fused.clone();
+    assert!(!fg.edges.is_empty(), "3mm max fusion must have FIFO edges");
+    fg.edges.pop();
+    let cache = GeometryCache::new(&k, &fg);
+    let diags = audit_design(&k, &fg, &cache, &r.design, &dev, Scenario::Rtl);
+    assert_fires(&diags, "PA030");
+}
+
+/// Mutation class 4 — oversubscribe a region. Fully unrolling gemm's
+/// fused nest (intra = padded trip on every loop) explodes DSP/BRAM
+/// far past even the whole-device RTL budget and must fire PA040.
+#[test]
+fn mutation_oversubscribed_region_fires_pa040() {
+    let k = polybench::by_name("gemm").unwrap();
+    let dev = Device::u55c();
+    let r = solve(&k, &dev, &quick()).unwrap();
+    let cache = GeometryCache::new(&k, &r.fused);
+    let mut design = r.design.clone();
+    let tc = design
+        .tasks
+        .iter_mut()
+        .find(|tc| tc.perm.len() == 3)
+        .expect("gemm has a 3-deep fused task");
+    tc.intra = tc.padded_trip.clone();
+    let diags = audit_design(&k, &r.fused, &cache, &design, &dev, Scenario::Rtl);
+    assert_fires(&diags, "PA040");
+}
+
+/// Pinned property (no false positives): every solver-emitted design
+/// across the zoo audits with zero error-severity diagnostics — the
+/// full fusion space at jobs=1 and jobs=8, and every fusion variant
+/// individually (the solver's per-variant winners, not just the
+/// global one), end to end through HLS emission (`audit_all`).
+#[test]
+fn zoo_winners_audit_clean_across_variants_and_jobs() {
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        for jobs in [1usize, 8] {
+            let opts = SolverOptions { jobs, ..quick() };
+            let r = solve(&k, &dev, &opts).unwrap();
+            let cache = GeometryCache::new(&k, &r.fused);
+            let diags = audit_all(&k, &r.fused, &cache, &r.design, &dev, Scenario::Rtl);
+            let errs = errors_of(&diags);
+            assert!(errs.is_empty(), "{} (jobs={jobs}): {errs:?}", k.name);
+        }
+        for (vi, v) in FusionSpace::enumerate(&k).variants.iter().enumerate() {
+            let single = FusionSpace { variants: vec![v.clone()] };
+            let r = solve_space(&k, &single, &dev, &quick()).unwrap();
+            let cache = GeometryCache::new(&k, &r.fused);
+            let diags = audit_all(&k, &r.fused, &cache, &r.design, &dev, Scenario::Rtl);
+            let errs = errors_of(&diags);
+            assert!(errs.is_empty(), "{} variant {vi}: {errs:?}", k.name);
+        }
+    }
+}
+
+/// The on-board scenario (SLR-partitioned budget, wrapper emission)
+/// must audit clean too — it exercises the region-budget and
+/// per-SLR-wrapper lint paths the RTL scenario never reaches.
+#[test]
+fn onboard_winners_audit_clean() {
+    let dev = Device::u55c();
+    let scenario = Scenario::OnBoard { slrs: 2, frac: 0.6 };
+    for name in ["gemm", "2mm", "bicg"] {
+        let k = polybench::by_name(name).unwrap();
+        let opts = SolverOptions { scenario, ..quick() };
+        let r = solve(&k, &dev, &opts).unwrap();
+        let cache = GeometryCache::new(&k, &r.fused);
+        let diags = audit_all(&k, &r.fused, &cache, &r.design, &dev, scenario);
+        let errs = errors_of(&diags);
+        assert!(errs.is_empty(), "{name} on-board: {errs:?}");
+    }
+}
