@@ -65,11 +65,24 @@
 //! isolation; the bar is audit time <= 5% of total `optimize` wall
 //! time across the zoo.
 //!
+//! **Part 6** (ISSUE 9 tentpole): the allocation-free stage-1/2
+//! enumeration (DESIGN.md §13). Every zoo kernel is solved cold and
+//! warm (the cold winner re-offered as incumbent, which arms the
+//! bound-driven enumeration starvation) under two knob sets: the PR-7
+//! reference (`resolve_arena`, `pareto_bitsets` and `enum_starvation`
+//! forced off — per-point allocating resolution, quadratic Pareto
+//! scans, every legal factor combo resolved) and the stage-1/2 fast
+//! path (all three on). The bar is >= 3x aggregate solves/sec, with
+//! every winning design asserted bit-identical per kernel and the
+//! warm-solve stage-1 accounting partition asserted at jobs=1:
+//! `stage1_points_on + enum_pruned_on == stage1_points_off`.
+//!
 //! Under `PROMETHEUS_BENCH_QUICK=1` (the CI smoke
 //! run) the zoo shrinks to four kernels and every wall-clock bar in
-//! parts 1–5 is printed but not asserted — timing ratios are not
+//! parts 1–6 is printed but not asserted — timing ratios are not
 //! meaningful on loaded CI hosts; every answer-shaped assert (design
-//! equality, leaf accounting, inertness, audit-clean) still runs.
+//! equality, leaf/stage-1 accounting, inertness, audit-clean) still
+//! runs.
 //!
 //! ```bash
 //! cargo bench --bench solver_eval
@@ -400,6 +413,103 @@ fn main() {
             share <= 0.05,
             "the flow-level audit must stay <= 5% of optimize wall time (got {:.2}%)",
             share * 100.0
+        );
+    }
+
+    // ---- part 6: allocation-free stage-1/2 enumeration -----------------
+    println!("\n== solver_eval: stage-1/2 fast path vs per-point allocation (zoo) ==");
+    // reference: the PR-7 cost structure — fresh resolve_task allocation
+    // per stage-1/2 point, quadratic Pareto scans, and every legal
+    // factor combo resolved even when an incumbent already beats its
+    // analytic floor (the leaf fast path and shared beam stay ON, so
+    // the delta is exactly the stage-1/2 work)
+    let s12_base = |telemetry: bool| SolverOptions {
+        resolve_arena: false,
+        pareto_bitsets: false,
+        enum_starvation: false,
+        ..fast_opts(1, telemetry)
+    };
+    let mut s12_base_secs = 0.0f64;
+    let mut s12_fast_secs = 0.0f64;
+    let mut enum_pruned = 0u64;
+    for kz in &zoo {
+        // cold solves: no incumbent, so starvation is unarmed and the
+        // comparison isolates the arena + bitset wins
+        let t = Instant::now();
+        let cold_base = solve(kz, &dev, &s12_base(true)).expect("zoo RTL solve is feasible");
+        s12_base_secs += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let cold_fast = solve(kz, &dev, &fast_opts(1, true)).expect("zoo RTL solve is feasible");
+        s12_fast_secs += t.elapsed().as_secs_f64();
+        assert_eq!(
+            cold_base.design, cold_fast.design,
+            "stage-1/2 fast path changed the {} answer",
+            kz.name
+        );
+
+        // warm solves: the cold winner as incumbent arms the
+        // enumeration floor from the first stage-1 point
+        let warm = |opts: &SolverOptions| SolverOptions {
+            incumbent: Some(cold_fast.design.clone()),
+            ..opts.clone()
+        };
+        let t = Instant::now();
+        let warm_base =
+            solve(kz, &dev, &warm(&s12_base(true))).expect("zoo RTL solve is feasible");
+        s12_base_secs += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let warm_fast =
+            solve(kz, &dev, &warm(&fast_opts(1, true))).expect("zoo RTL solve is feasible");
+        s12_fast_secs += t.elapsed().as_secs_f64();
+        assert_eq!(
+            cold_base.design, warm_fast.design,
+            "warm stage-1/2 fast path changed the {} answer",
+            kz.name
+        );
+        assert_eq!(
+            cold_base.design, warm_base.design,
+            "warm reference solve changed the {} answer",
+            kz.name
+        );
+
+        // stage-1 accounting at jobs=1: every point the reference path
+        // resolves is either resolved or enum-pruned by the starved
+        // path — none silently vanish
+        let t_on = warm_fast.telemetry.totals();
+        let t_off = warm_base.telemetry.totals();
+        assert_eq!(
+            t_on.stage1_points + t_on.enum_pruned,
+            t_off.stage1_points,
+            "{}: stage-1 point partition broke (starved {} + pruned {} vs reference {})",
+            kz.name,
+            t_on.stage1_points,
+            t_on.enum_pruned,
+            t_off.stage1_points
+        );
+        enum_pruned += t_on.enum_pruned;
+    }
+    let s12_speedup = s12_base_secs / s12_fast_secs.max(1e-9);
+    println!(
+        "per-point allocation: {:>8.3} solves/s over {} kernels (cold + warm)",
+        2.0 * zoo.len() as f64 / s12_base_secs.max(1e-9),
+        zoo.len()
+    );
+    println!(
+        "stage-1/2 fast path:  {:>8.3} solves/s over {} kernels (cold + warm)",
+        2.0 * zoo.len() as f64 / s12_fast_secs.max(1e-9),
+        zoo.len()
+    );
+    println!("speedup: {s12_speedup:.2}x   ({enum_pruned} stage-1 points enum-pruned)");
+    assert!(
+        enum_pruned > 0,
+        "enumeration starvation never fired across the zoo — the floor is dead code"
+    );
+    if quick {
+        println!("(PROMETHEUS_BENCH_QUICK=1 — throughput bar printed, not asserted)");
+    } else {
+        assert!(
+            s12_speedup >= 3.0,
+            "stage-1/2 fast path must buy >= 3x solves/sec over the zoo (got {s12_speedup:.2}x)"
         );
     }
 }

@@ -131,6 +131,10 @@ pub struct TaskStatics {
     /// this, so a cross-array merged engine is not credited with
     /// emitting every array at its combined rate.
     pub fifo_out_elems_by_array: Vec<(String, u64)>,
+    // Name → `arrays` index, sorted by name: by-name lookups
+    // (`array`/`array_pos`, `ResolvedTask::plan_for`) binary-search
+    // this instead of linear string-scanning `arrays` per call.
+    array_index: Vec<(String, usize)>,
 }
 
 impl TaskStatics {
@@ -216,6 +220,9 @@ impl TaskStatics {
             .stmts
             .iter()
             .any(|&s| k.statements[s].kind == StmtKind::Init);
+        let mut array_index: Vec<(String, usize)> =
+            arrays.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
+        array_index.sort();
         let trips: Vec<u64> = rep_stmt
             .loops
             .iter()
@@ -242,12 +249,23 @@ impl TaskStatics {
             arrays,
             stmt_rep_pos,
             fifo_out_elems_by_array,
+            array_index,
         }
+    }
+
+    /// Index of array `name` in [`TaskStatics::arrays`], resolved
+    /// through the fusion-time sorted name index (no per-call linear
+    /// string scan).
+    pub fn array_pos(&self, name: &str) -> Option<usize> {
+        self.array_index
+            .binary_search_by(|(n, _)| n.as_str().cmp(name))
+            .ok()
+            .map(|i| self.array_index[i].1)
     }
 
     /// The statics of array `name`, if this task touches it.
     pub fn array(&self, name: &str) -> Option<&ArrayStatics> {
-        self.arrays.iter().find(|a| a.name == name)
+        self.array_pos(name).map(|i| &self.arrays[i])
     }
 
     /// Total elements this task emits over outgoing FIFO edges (the
@@ -439,12 +457,7 @@ impl<'a> ResolvedTask<'a> {
 
     /// The (statics, resolved plan) pair of array `name`.
     pub fn plan_for(&self, name: &str) -> Option<(&ArrayStatics, &ResolvedPlan)> {
-        self.geo
-            .st
-            .arrays
-            .iter()
-            .position(|a| a.name == name)
-            .map(|i| (&self.geo.st.arrays[i], &self.plans[i]))
+        self.geo.st.array_pos(name).map(|i| (&self.geo.st.arrays[i], &self.plans[i]))
     }
 }
 
@@ -525,6 +538,186 @@ pub fn resolve_task<'a>(
         })
         .collect();
     ResolvedTask { geo, plans, steps, transfer_counts }
+}
+
+/// Reusable resolution buffers for one (fusion variant, task) of the
+/// solver's stage-1/2 enumeration: everything [`resolve_task`] would
+/// allocate per candidate — the permuted order vectors, the per-level
+/// transfer counts, and one [`ResolvedPlan`] (tile-dims buffer
+/// included) per array — allocated once and rewritten in place, with
+/// **incremental** recomputation keyed on what actually changed since
+/// the previously resolved point.
+///
+/// Protocol (enforced by the borrow checker where possible):
+///
+/// 1. [`ResolveArena::resolve`] lends the buffers to the returned
+///    [`ResolvedTask`] (no copy); while it is alive the config cannot
+///    be mutated.
+/// 2. [`ResolveArena::reclaim`] takes the buffers back and marks them
+///    as reflecting the config as of that resolve. Skipping `reclaim`
+///    is safe — the next `resolve` falls back to a full rebuild.
+/// 3. `changed_from` is the first representative-nest position whose
+///    `(intra, padded_trip)` pair differs from the previously resolved
+///    config (the nest length when no factor changed): positions before
+///    it MUST be unchanged, positions at or after it may have changed
+///    arbitrarily. The solver's Cartesian scan varies the deepest
+///    position fastest, so consecutive points share a long unchanged
+///    prefix and only downstream geometry is recomputed. Transfer-plan
+///    changes need no signalling — they are detected by comparing the
+///    stored resolution against the config's current plans.
+/// 4. Any **permutation** change (or pointing the arena at a different
+///    task) must call [`ResolveArena::invalidate`] first: `nonred`/
+///    `red` and every per-array depth decision are retained across the
+///    points of one permutation.
+///
+/// Resolution through the arena is byte-identical to [`resolve_task`]:
+/// `tests/solver_stage12.rs` pins incremental-vs-fresh equality over a
+/// sampled config grid for every (kernel, variant, task) of the zoo.
+#[derive(Debug, Default)]
+pub struct ResolveArena {
+    ready: bool,
+    nonred: Vec<usize>,
+    red: Vec<usize>,
+    transfer_counts: Vec<u64>,
+    plans: Vec<ResolvedPlan>,
+    // Whether each array's stored resolution came from an explicit
+    // config plan (vs the defaulting path): an explicit→default flip
+    // with an unchanged define level would otherwise retain the
+    // explicit bit width where the default path derives the natural
+    // one. Stays in the arena (not lent out with the ResolvedTask).
+    was_explicit: Vec<bool>,
+}
+
+impl ResolveArena {
+    /// Empty arena; buffers grow on first use.
+    pub fn new() -> ResolveArena {
+        ResolveArena::default()
+    }
+
+    /// Forget the retained geometry: the next [`ResolveArena::resolve`]
+    /// rebuilds everything (required after a permutation change or a
+    /// task switch).
+    pub fn invalidate(&mut self) {
+        self.ready = false;
+    }
+
+    /// Resolve `cfg` against `st`, reusing the retained buffers and
+    /// recomputing only geometry downstream of `changed_from` (plus any
+    /// array whose transfer plan differs from the stored resolution).
+    pub fn resolve<'a>(
+        &mut self,
+        k: &'a Kernel,
+        st: &'a TaskStatics,
+        cfg: &'a TaskConfig,
+        changed_from: usize,
+    ) -> ResolvedTask<'a> {
+        let full = !self.ready || self.plans.len() != st.arrays.len();
+        self.ready = false;
+        let mut nonred = std::mem::take(&mut self.nonred);
+        let mut red = std::mem::take(&mut self.red);
+        if full {
+            nonred.clear();
+            red.clear();
+            for &p in &cfg.perm {
+                if st.red_mask[p] {
+                    red.push(p);
+                } else {
+                    nonred.push(p);
+                }
+            }
+        }
+        let geo = TaskGeometry { k, st, cfg, nonred, red };
+        let levels = geo.levels();
+        // Transfer counts are a running product over ≤ nest-depth
+        // levels: always recomputed (cheap scalars), never reallocated.
+        let mut transfer_counts = std::mem::take(&mut self.transfer_counts);
+        transfer_counts.clear();
+        let mut running = 1u64;
+        transfer_counts.push(1);
+        for &p in &geo.nonred {
+            running *= cfg.inter_trip(p);
+            transfer_counts.push(running);
+        }
+        debug_assert_eq!(transfer_counts.len(), levels);
+        let steps = transfer_counts[levels - 1].max(1);
+        let mut plans = std::mem::take(&mut self.plans);
+        if full {
+            // Keep existing per-array entries (their tile-dims buffers
+            // are reusable); add stale placeholders as needed.
+            plans.truncate(st.arrays.len());
+            while plans.len() < st.arrays.len() {
+                plans.push(ResolvedPlan {
+                    define_level: usize::MAX,
+                    transfer_level: 0,
+                    bitwidth: 0,
+                    buffers: 0,
+                    tile_dims: Vec::new(),
+                    tile_elems: 0,
+                    tile_bytes: 0,
+                    transfer_count: 0,
+                    partitions: 0,
+                });
+            }
+        }
+        self.was_explicit.resize(st.arrays.len(), true);
+        for (ai, (a, rp)) in st.arrays.iter().zip(plans.iter_mut()).enumerate() {
+            let explicit = cfg.plans.get(a.name.as_str()).copied();
+            let (d, t) = match &explicit {
+                Some(p) => (p.define_level.min(levels - 1), p.transfer_level.min(levels - 1)),
+                None => (levels - 1, levels - 1),
+            };
+            // The expensive part — tile extents and the partition
+            // product — is stale iff the define level moved, any
+            // accessed position sits at/after the first changed one, or
+            // the plan source flipped between explicit and defaulted.
+            let stale = full
+                || rp.define_level != d
+                || self.was_explicit[ai] != explicit.is_some()
+                || a.access.iter().flatten().any(|&p| p >= changed_from);
+            if stale {
+                geo.tile_dims_into(a, d, &mut rp.tile_dims);
+                rp.tile_elems = rp.tile_dims.iter().product();
+                rp.tile_bytes =
+                    if rp.tile_dims.is_empty() { 0 } else { rp.tile_elems * a.elem_bytes };
+                rp.partitions = a
+                    .access
+                    .iter()
+                    .map(|p| p.map(|p| cfg.intra[p]).unwrap_or(1))
+                    .product();
+            }
+            match explicit {
+                Some(p) => {
+                    rp.bitwidth = p.bitwidth;
+                    rp.buffers = p.buffers;
+                }
+                None => {
+                    // Defaulted plan (Eq 3 natural width): its input is
+                    // the deepest tile's last extent, which only moves
+                    // when the tile itself did.
+                    if stale {
+                        rp.bitwidth = geo.natural_bitwidth_at(a, d);
+                    }
+                    rp.buffers = if a.writes && a.reads { 3 } else { 2 };
+                }
+            }
+            rp.define_level = d;
+            rp.transfer_level = t;
+            rp.transfer_count = transfer_counts[d];
+            self.was_explicit[ai] = explicit.is_some();
+        }
+        ResolvedTask { geo, plans, steps, transfer_counts }
+    }
+
+    /// Take the buffers back from a finished [`ResolvedTask`] and mark
+    /// them as reflecting the config it was resolved for.
+    pub fn reclaim(&mut self, rt: ResolvedTask<'_>) {
+        let TaskGeometry { nonred, red, .. } = rt.geo;
+        self.nonred = nonred;
+        self.red = red;
+        self.transfer_counts = rt.transfer_counts;
+        self.plans = rt.plans;
+        self.ready = true;
+    }
 }
 
 /// A complete design resolved against one kernel: one [`ResolvedTask`]
@@ -781,5 +974,71 @@ mod tests {
         assert_eq!(v.cache.tasks.len(), v.fg.tasks.len());
         assert_eq!(FusionSpace::for_solver(&gemver, false).variants.len(), 1);
         assert_eq!(FusionSpace::for_solver(&gemver, true).variants.len(), 2);
+    }
+
+    /// One resolved view compared field-wise (ResolvedTask itself is
+    /// borrow-laden and deliberately not PartialEq).
+    fn assert_same(inc: &ResolvedTask, fresh: &ResolvedTask) {
+        assert_eq!(inc.plans, fresh.plans);
+        assert_eq!(inc.transfer_counts, fresh.transfer_counts);
+        assert_eq!(inc.steps, fresh.steps);
+        assert_eq!(inc.geo.nonred, fresh.geo.nonred);
+        assert_eq!(inc.geo.red, fresh.geo.red);
+    }
+
+    #[test]
+    fn arena_matches_fresh_resolution_incrementally() {
+        let k = polybench::three_mm();
+        let fg = fuse(&k);
+        let cache = GeometryCache::new(&k, &fg);
+        let st = &cache.tasks[0];
+        let mut arena = ResolveArena::new();
+        let mut cfg = ft0_cfg();
+        // Walk a small factor grid under one permutation, deepest
+        // position varying fastest like the solver's enum_factors, with
+        // changed_from computed by comparison like the solver does.
+        let mut prev: Option<Vec<u64>> = None;
+        for i in [1u64, 2, 10] {
+            for j in [1u64, 32] {
+                for kk in [2u64, 4] {
+                    cfg.intra = vec![i, j, kk];
+                    let changed = match &prev {
+                        Some(pi) => {
+                            (0..3).find(|&x| cfg.intra[x] != pi[x]).unwrap_or(3)
+                        }
+                        None => 0,
+                    };
+                    let fresh = resolve_task(&k, st, &cfg);
+                    let inc = arena.resolve(&k, st, &cfg, changed);
+                    assert_same(&inc, &fresh);
+                    arena.reclaim(inc);
+                    prev = Some(cfg.intra.clone());
+                }
+            }
+        }
+        // A permutation change requires invalidation.
+        cfg.perm = vec![1, 0, 2];
+        arena.invalidate();
+        let fresh = resolve_task(&k, st, &cfg);
+        let inc = arena.resolve(&k, st, &cfg, 0);
+        assert_same(&inc, &fresh);
+        arena.reclaim(inc);
+        // Stage-2-style plan switch with no factor change: detected by
+        // comparing stored resolutions, no changed_from signal needed.
+        cfg.plans.insert(
+            "A".into(),
+            TransferPlan { define_level: 0, transfer_level: 2, bitwidth: 128, buffers: 2 },
+        );
+        let fresh = resolve_task(&k, st, &cfg);
+        let inc = arena.resolve(&k, st, &cfg, 3);
+        assert_same(&inc, &fresh);
+        arena.reclaim(inc);
+        // Explicit → defaulted flip with an unchanged define level must
+        // re-derive the natural bit width (the was_explicit guard).
+        cfg.plans.clear();
+        let fresh = resolve_task(&k, st, &cfg);
+        let inc = arena.resolve(&k, st, &cfg, 3);
+        assert_same(&inc, &fresh);
+        arena.reclaim(inc);
     }
 }

@@ -81,6 +81,27 @@
 //! is answer-preserving and property-pinned
 //! (`tests/solver_fastpath.rs`); see DESIGN.md §Solver fast path.
 //!
+//! **Stage-1/2 fast path.** The same playbook one stage earlier, so
+//! enumeration is allocation-free per point too. An
+//! [`eval::ResolveArena`] ([`SolverOptions::resolve_arena`]) retains
+//! the permuted orders, transfer counts and per-array resolution
+//! buffers across the Cartesian walk and re-resolves only the arrays
+//! whose geometry the step actually changed (`enum_factors` varies the
+//! deepest position fastest; a transfer-plan flip in the stage-2
+//! descent re-resolves exactly the flipped array). The per-task Pareto
+//! reduction dispatches to rank-bitset acceptance
+//! ([`SolverOptions::pareto_bitsets`]): word-parallel prefix-mask
+//! intersection instead of a per-candidate scan over the front. And
+//! the warm-start incumbent — seeded *before* the stage-1 fan-out —
+//! starves enumeration itself ([`SolverOptions::enum_starvation`]): an
+//! analytic per-subtree latency floor lets `enum_factors` skip whole
+//! factor subtrees (and with them every permutation of those combos)
+//! that provably cannot beat the incumbent, exactly counted in
+//! `enum_pruned` against the invariant `stage1_points + enum_pruned ==`
+//! the reference run's `stage1_points`. All three knobs are
+//! answer-preserving and property-pinned (`tests/solver_stage12.rs`);
+//! see DESIGN.md §13.
+//!
 //! **Telemetry.** With [`SolverOptions::telemetry`] on, the solve
 //! threads a [`crate::obs::SolveCounters`] block through all three
 //! stages and returns it frozen as [`SolverResult::telemetry`]:
@@ -328,6 +349,46 @@ pub struct SolverOptions {
     /// — is unchanged (property-pinned); excluded from the QoR cache
     /// key.
     pub shared_beam: bool,
+    /// Stage-1/2 arena resolution (on by default): per-(variant, task)
+    /// enumeration resolves candidates through a reusable
+    /// [`eval::ResolveArena`] — permuted orders, transfer counts and
+    /// per-array plan/tile buffers allocated once and rewritten in
+    /// place, recomputing only geometry downstream of the factor
+    /// position that changed between consecutive Cartesian points.
+    /// Byte-identical to fresh [`eval::resolve_task`] resolution
+    /// (pinned per (kernel, variant, task) in
+    /// `tests/solver_stage12.rs`), so — like `jobs` and `telemetry` —
+    /// it is excluded from the QoR cache key. `false` restores the
+    /// per-point fresh resolution, kept as the bench baseline and
+    /// drift oracle.
+    pub resolve_arena: bool,
+    /// Dominance bitsets for the stage-2 Pareto reduction (on by
+    /// default): per-resource-dimension rank bitsets make each
+    /// acceptance test a word-parallel mask intersection instead of a
+    /// scan over the kept front. Acceptance, front order and
+    /// truncation are byte-identical to the reference scan
+    /// (property-pinned), so it is excluded from the QoR cache key.
+    pub pareto_bitsets: bool,
+    /// Bound-driven enumeration starvation (on by default): the
+    /// cross-variant incumbent established *before* stage 1 (the
+    /// warm-start gate) starves enumeration itself — an analytic
+    /// per-subtree latency floor (the product of inter-tile trips, the
+    /// best achievable latency at unbounded unroll given the remaining
+    /// budget; the same invariant the DFS branch pruning relies on)
+    /// lets `enum_factors` skip whole factor subtrees and
+    /// `enumerate_task` skip whole permutations that provably lose,
+    /// counted as `enum_pruned`. Only points whose standalone floor
+    /// is *strictly* above the incumbent bound are skipped — none of
+    /// them can appear in any winning or tying design — and the floor
+    /// *filter* itself applies under either setting whenever an
+    /// incumbent exists: with the knob off, every point is resolved
+    /// first (counted in `stage1_points`) and then dropped by the
+    /// identical per-point test, so the emitted candidate set — and
+    /// the returned design — is unchanged (property-pinned) and the
+    /// knob is excluded from the QoR cache key. The bound is fixed
+    /// before the stage-1 fan-out, keeping results thread-count
+    /// independent.
+    pub enum_starvation: bool,
 }
 
 impl Default for SolverOptions {
@@ -349,6 +410,9 @@ impl Default for SolverOptions {
             telemetry: obs::trace_enabled(),
             leaf_prefilter: true,
             shared_beam: true,
+            resolve_arena: true,
+            pareto_bitsets: true,
+            enum_starvation: true,
         }
     }
 }
@@ -587,6 +651,49 @@ fn solve_variants(
     let max_tasks = variants.iter().map(|(fg, _)| fg.tasks.len()).max().unwrap_or(0);
     let counters = obs::SolveCounters::new(opts.telemetry, n_variants, max_tasks + 1);
 
+    // Warm start: a valid, feasible incumbent (e.g. a QoR-DB design
+    // from a previous run) becomes the initial bound, so every
+    // variant's DFS prunes against it immediately and the anytime
+    // result can never be worse. The incumbent binds only to the
+    // variant realizing its own fusion plan — a design from an
+    // incompatible partition is rejected by the same usability gate the
+    // QoR cache uses (`design.validate` checks fusion == fg.plan()).
+    // Seeded *before* the stage-1 fan-out so the enumeration-starvation
+    // floor (below) sees the same bound on every worker regardless of
+    // thread count.
+    let shared = SharedBest::new();
+    let mut warm_started = false;
+    let mut inc_variant: Option<usize> = None;
+    if let Some(inc) = &opts.incumbent {
+        if let Some(vi) = plans.iter().position(|p| p == &inc.fusion) {
+            let (fg_v, cache_v) = variants[vi];
+            let usable = inc.kernel == k.name
+                && inc.model == opts.model
+                && inc.overlap == opts.overlap
+                && design_usable_with_cache(k, fg_v, cache_v, inc, dev, opts.scenario);
+            if usable {
+                let rd = ResolvedDesign::new(k, fg_v, cache_v, inc);
+                let lat = simulate_resolved(&rd, dev).cycles;
+                drop(rd);
+                shared.offer(lat, Vec::new(), inc.clone(), vi, deadline, &counters);
+                warm_started = true;
+                inc_variant = Some(vi);
+            }
+        }
+    }
+    // Enumeration-starvation bound: a full-design incumbent latency is
+    // an upper bound on the winner's total, and every task of the
+    // winner has standalone latency <= that total under both execution
+    // models, so any stage-1 point whose analytic latency floor already
+    // exceeds it can never appear in the winning design. Fixed here,
+    // before the fan-out, so the pruned set is identical for any
+    // `jobs` value. Armed regardless of the `enum_starvation` knob —
+    // the floor *filter* is part of the algorithm whenever an incumbent
+    // exists (see `enumerate_task`); the knob only decides whether it
+    // runs before resolution (subtree skipping) or after (the oracle
+    // baseline), which is what keeps it answer-preserving.
+    let enum_bound = shared.bound();
+
     // ---- stage 1 + 2: per-variant, per-task Pareto candidates ----------
     // Tasks placed in the same region share its budget; enumerate each
     // task against a fair share (regions spread tasks, so the share is
@@ -624,17 +731,19 @@ fn solve_variants(
     let unit_results = run_indexed(units.len(), jobs, |i| {
         let (vi, t, nopad) = units[i];
         let o = if nopad { &nopad_opts } else { opts };
-        enumerate_task(k, variants[vi].1, t, dev, o, &shares[vi], deadline)
+        enumerate_task(k, variants[vi].1, t, dev, o, &shares[vi], enum_bound, deadline)
     });
     let mut explored = 0u64;
     let mut stage1_timed_out = false;
     let mut per_variant: Vec<Vec<Vec<Candidate>>> =
         variants.iter().map(|(fg, _)| vec![Vec::new(); fg.tasks.len()]).collect();
-    for (&(vi, t, _), (cands, ex, to)) in units.iter().zip(unit_results) {
-        per_variant[vi][t].extend(cands);
-        counters.enumerated(vi, ex);
-        explored += ex;
-        stage1_timed_out |= to;
+    for (&(vi, t, _), out) in units.iter().zip(unit_results) {
+        per_variant[vi][t].extend(out.cands);
+        counters.enumerated(vi, out.explored);
+        counters.stage1_points(vi, out.stage1_points);
+        counters.enum_pruned(vi, out.enum_pruned);
+        explored += out.explored;
+        stage1_timed_out |= out.timed_out;
     }
     let per_variant: Vec<Vec<Vec<Candidate>>> = per_variant
         .into_iter()
@@ -643,7 +752,7 @@ fn solve_variants(
             pt.into_iter()
                 .map(|raw| {
                     let raw_len = raw.len() as u64;
-                    let front = pareto(raw);
+                    let front = pareto_with(raw, opts.pareto_bitsets);
                     counters.pareto(vi, front.len() as u64, raw_len - front.len() as u64);
                     front
                 })
@@ -653,33 +762,9 @@ fn solve_variants(
     drop(stage1_span);
 
     // ---- stage 3: global assembly over variants × candidates × SLRs ----
-    // Warm start: a valid, feasible incumbent (e.g. a QoR-DB design
-    // from a previous run) becomes the initial bound, so every
-    // variant's DFS prunes against it immediately and the anytime
-    // result can never be worse. The incumbent binds only to the
-    // variant realizing its own fusion plan — a design from an
-    // incompatible partition is rejected by the same usability gate the
-    // QoR cache uses (`design.validate` checks fusion == fg.plan()).
-    let shared = SharedBest::new();
-    let mut warm_started = false;
-    let mut inc_variant: Option<usize> = None;
-    if let Some(inc) = &opts.incumbent {
-        if let Some(vi) = plans.iter().position(|p| p == &inc.fusion) {
-            let (fg_v, cache_v) = variants[vi];
-            let usable = inc.kernel == k.name
-                && inc.model == opts.model
-                && inc.overlap == opts.overlap
-                && design_usable_with_cache(k, fg_v, cache_v, inc, dev, opts.scenario);
-            if usable {
-                let rd = ResolvedDesign::new(k, fg_v, cache_v, inc);
-                let lat = simulate_resolved(&rd, dev).cycles;
-                drop(rd);
-                shared.offer(lat, Vec::new(), inc.clone(), vi, deadline, &counters);
-                warm_started = true;
-                inc_variant = Some(vi);
-            }
-        }
-    }
+    // (The warm-start incumbent was already offered to `shared` above,
+    // before the stage-1 fan-out, so the DFS bound below starts from
+    // it exactly as before.)
 
     // Per-variant feasibility gate. An empty candidate list would be a
     // solver bug, not an infeasible input: enumerate_task's anytime
@@ -914,6 +999,11 @@ fn solve_variants(
                 &format!("solve.variant{vi}"),
                 vec![
                     ("enumerated".to_string(), obs::ArgVal::Int(vc.enumerated as i128)),
+                    (
+                        "stage1_points".to_string(),
+                        obs::ArgVal::Int(vc.stage1_points as i128),
+                    ),
+                    ("enum_pruned".to_string(), obs::ArgVal::Int(vc.enum_pruned as i128)),
                     ("dfs_nodes".to_string(), obs::ArgVal::Int(vc.dfs_nodes as i128)),
                     (
                         "leaves_simulated".to_string(),
@@ -1010,14 +1100,44 @@ fn run_prefix<'a>(
     dfs_assign(ctx, order, &mut scratch, &mut assign, &mut used, explored);
 }
 
+/// One stage-1/2 work unit's result: the raw (un-Pareto'd) candidates
+/// plus the telemetry the merge loop folds into the per-variant
+/// counters.
+struct EnumOut {
+    /// Raw candidates (the caller merges passes in a fixed order and
+    /// Pareto-reduces once, so the result is identical however the
+    /// units were scheduled).
+    cands: Vec<Candidate>,
+    /// Every resolution performed, stage 1 and stage 2 — the historical
+    /// explored stream.
+    explored: u64,
+    /// The stage-1 subset of `explored` (see
+    /// [`obs::VariantCounters::stage1_points`]).
+    stage1_points: u64,
+    /// Stage-1 points starved by the enumeration floor before being
+    /// resolved at all.
+    enum_pruned: u64,
+    /// Whether this unit hit the shared deadline.
+    timed_out: bool,
+}
+
 /// Enumerate tile factors × permutations × transfer plans for one fused
 /// task. All configuration-independent inputs (representative nest,
 /// legal orders, array statics) come from the [`GeometryCache`]; per
 /// candidate, only the resolution of the changed configuration is
-/// recomputed. Returns the raw (un-Pareto'd) candidates plus this
-/// unit's explored count and whether it hit the deadline — the caller
-/// merges passes in a fixed order and Pareto-reduces once, so the
-/// result is identical however the units were scheduled.
+/// recomputed — under `opts.resolve_arena` via an [`eval::ResolveArena`]
+/// that rewrites retained buffers in place and re-resolves only the
+/// arrays whose geometry a point actually changed.
+///
+/// `enum_bound` is the enumeration-floor bound (`u64::MAX` when no
+/// incumbent exists): points whose analytic latency floor exceeds it
+/// are dropped under either `enum_starvation` setting; with the knob
+/// on, whole factor subtrees are skipped before resolution and counted
+/// in `enum_pruned`. The floor is permutation-independent (a product
+/// over loop positions), so a starved combo is starved for *every*
+/// permutation — skipped permutations ride the same counter via the
+/// combos × orders product.
+#[allow(clippy::too_many_arguments)]
 fn enumerate_task(
     k: &Kernel,
     cache: &GeometryCache,
@@ -1025,9 +1145,11 @@ fn enumerate_task(
     dev: &Device,
     opts: &SolverOptions,
     budget: &SlrBudget,
+    enum_bound: u64,
     deadline: Deadline,
-) -> (Vec<Candidate>, u64, bool) {
+) -> EnumOut {
     let mut explored = 0u64;
+    let mut stage1_points = 0u64;
     let mut timed_out = false;
     let st = &cache.tasks[t];
     let rep_stmt = &k.statements[st.rep];
@@ -1065,24 +1187,81 @@ fn enumerate_task(
         &pinned
     };
 
+    // ---- enumeration starvation: analytic per-subtree latency floor ----
+    // Lower bound on `task_latency` of any point: the pipelined compute
+    // body is >= Π_red inter_trip (Eq 16 at II = fadd_latency >= 1) and
+    // every non-reduction level multiplies the body by its inter trip
+    // (both the overlapped and the serial recursion in `task_latency`
+    // scale by at least T_l), so latency >= Π_p contrib(p) with
+    // contrib(p) = inter_trip(p) for counted positions. Reduction
+    // positions stop counting on a zero-latency adder (Eq 16
+    // collapses), and a device with fmul + fadd < 1 invalidates the
+    // compute floor entirely, so starvation is disabled there. A point
+    // whose floor exceeds the incumbent bound cannot be a task of any
+    // design that beats (or ties) it — each task's standalone latency
+    // is <= the design total — so the whole factor subtree is skipped
+    // before resolution, exactly counted in `enum_pruned`.
+    let floor = (enum_bound < u64::MAX && dev.fmul_latency + dev.fadd_latency >= 1).then(|| {
+        let counted: Vec<bool> =
+            nest.iter().map(|l| !l.reduction || dev.fadd_latency >= 1).collect();
+        let n = nest.len();
+        let mut trip_suffix = vec![1u128; n + 1];
+        let mut max_intra_suffix = vec![1u128; n + 1];
+        for p in (0..n).rev() {
+            let contrib = if counted[p] { u128::from(st.trips[p].max(1)) } else { 1 };
+            trip_suffix[p] = trip_suffix[p + 1].saturating_mul(contrib);
+            let mx = per_loop[p].iter().map(|c| c.intra).max().unwrap_or(1);
+            max_intra_suffix[p] = max_intra_suffix[p + 1].saturating_mul(u128::from(mx));
+        }
+        EnumFloor { bound: enum_bound, counted, trip_suffix, max_intra_suffix }
+    });
+
+    // The floor *filter* is part of the algorithm whenever an incumbent
+    // exists: points that provably cannot beat it never enter the
+    // stage-1 beam (they could only waste beam slots on dead-end
+    // refinements). The `enum_starvation` knob decides only *where* the
+    // filter runs — on (fast path), `enum_factors` skips whole factor
+    // subtrees before any resolution; off (the oracle baseline), every
+    // point is resolved first and then dropped by the identical
+    // point-floor test. The leaf-level subtree check *is* the
+    // point-floor test (suffix trip product 1, unroll headroom >= 1),
+    // so both settings drop exactly the same set and the winning
+    // designs stay bit-identical.
+    let starve = opts.enum_starvation;
+
     // ---- stage 1: factor combos scored with a default transfer plan ----
-    let mut combos: Vec<(Vec<u64>, Vec<u64>)> = Vec::new(); // (intra, padded)
-    let mut stack_intra = vec![0u64; nest.len()];
-    let mut stack_pad = vec![0u64; nest.len()];
+    let mut scratch = EnumScratch {
+        intra: vec![0u64; nest.len()],
+        padded: vec![0u64; nest.len()],
+        combos: Vec::new(),
+        pruned: 0,
+    };
     enum_factors(
         &per_loop,
+        if starve { floor.as_ref() } else { None },
+        opts.max_unroll,
         0,
         1,
-        opts.max_unroll,
-        &mut stack_intra,
-        &mut stack_pad,
-        &mut combos,
+        1,
+        &mut scratch,
     );
+    let EnumScratch { mut combos, pruned, .. } = scratch;
+    // a starved combo is starved under every permutation (the floor is
+    // permutation-independent), so the skipped stage-1 points are the
+    // pruned combos times the permutation count
+    let enum_pruned = pruned * orders.len() as u64;
 
     // Compact stage-1 scoring: (latency, unroll, combo idx, order idx).
     // A reusable TaskConfig avoids per-point allocations; sort keys stay
-    // 24 bytes so the beam sort doesn't shuffle fat tuples.
+    // 24 bytes so the beam sort doesn't shuffle fat tuples. Under
+    // `opts.resolve_arena` the resolution itself is allocation-free
+    // too: the arena rewrites its retained buffers in place and
+    // re-resolves only the arrays touching nest positions at or below
+    // the first one that differs from the previous combo (enum_factors
+    // varies the deepest position fastest, so that prefix is long).
     let mut scored: Vec<(u64, u64, u32, u32)> = Vec::new();
+    let mut arena = eval::ResolveArena::new();
+    let use_arena = opts.resolve_arena;
     let mut cfg = TaskConfig {
         task: t,
         perm: Vec::new(),
@@ -1093,6 +1272,10 @@ fn enumerate_task(
         slr: 0,
     };
     'outer: for (oi, ord) in orders.iter().enumerate() {
+        // a new permutation invalidates every retained order/tile buffer
+        arena.invalidate();
+        cfg.perm.clone_from(ord);
+        let mut prev_ci: Option<usize> = None;
         for (ci, (intra, padded)) in combos.iter().enumerate() {
             // strided deadline poll (`Instant::now` is not free at this
             // rate): every DEADLINE_STRIDE combos, starting with the
@@ -1103,19 +1286,44 @@ fn enumerate_task(
                 break 'outer;
             }
             explored += 1;
-            cfg.perm.clone_from(ord);
+            stage1_points += 1;
+            // first nest position whose (intra, padded) differs from
+            // the previous combo: geometry above it is untouched
+            let changed = match prev_ci {
+                Some(pci) => {
+                    let (pi, pp) = &combos[pci];
+                    (0..nest.len())
+                        .find(|&x| intra[x] != pi[x] || padded[x] != pp[x])
+                        .unwrap_or(nest.len())
+                }
+                None => 0,
+            };
+            prev_ci = Some(ci);
             cfg.padded_trip.clone_from(padded);
             cfg.intra.clone_from(intra);
-            let rt = eval::resolve_task(k, st, &cfg);
-            // partition constraint (Eq 8)
-            if rt.plans.iter().any(|rp| rp.partitions > dev.max_partition) {
+            let (ok, res, lat) = if use_arena {
+                let rt = arena.resolve(k, st, &cfg, changed);
+                let out = score_point(&rt, dev, opts);
+                arena.reclaim(rt);
+                out
+            } else {
+                score_point(&eval::resolve_task(k, st, &cfg), dev, opts)
+            };
+            if !ok || !res.fits(budget) {
                 continue;
             }
-            let res = task_resources(&rt, dev);
-            if !res.fits(budget) {
+            // knob-off oracle path of the floor filter: the point was
+            // resolved (and counted) like the reference demands, and is
+            // dropped by exactly the test the subtree walk applies at
+            // its leaves, keeping the scored sets — and the winners —
+            // bit-identical across the knob
+            if !starve
+                && floor.as_ref().is_some_and(|fl| {
+                    combo_floor(intra, padded, &fl.counted) > u128::from(fl.bound)
+                })
+            {
                 continue;
             }
-            let lat = task_latency(&rt, dev, opts.overlap);
             scored.push((lat, intra.iter().product(), ci as u32, oi as u32));
         }
     }
@@ -1132,35 +1340,55 @@ fn enumerate_task(
     // misrank high-unroll combos whose refined plans win in stage 2, so
     // keep the top-`beam` by proxy latency PLUS the largest-unroll combos
     // (compute-bound kernels are DSP-limited — UF/II is the steady-state
-    // throughput bound).
-    let mut kept: Vec<(u64, u64, u32, u32)> = scored.iter().take(opts.beam).copied().collect();
-    let mut by_uf = scored.clone();
-    by_uf.sort_unstable_by_key(|&(_, uf, ..)| std::cmp::Reverse(uf));
-    for cand in by_uf.into_iter().take(opts.beam / 3) {
-        if !kept.iter().any(|&(_, _, ci, oi)| ci == cand.2 && oi == cand.3) {
-            kept.push(cand);
+    // throughput bound). Sorting an index vector by (unroll desc,
+    // latency rank asc) replaces the old full tuple clone + O(beam²)
+    // (ci, oi) dedup: (ci, oi) pairs are unique across `scored`, so
+    // "already kept" is exactly the index test `i < cut`.
+    let cut = scored.len().min(opts.beam);
+    let mut kept: Vec<(u64, u64, u32, u32)> = scored[..cut].to_vec();
+    let mut by_uf: Vec<usize> = (0..scored.len()).collect();
+    by_uf.sort_unstable_by_key(|&i| (std::cmp::Reverse(scored[i].1), i));
+    for &i in by_uf.iter().take(opts.beam / 3) {
+        if i >= cut {
+            kept.push(scored[i]);
         }
     }
     let scored = kept;
 
     // ---- stage 2: refine transfer plans for surviving combos -----------
+    // One scratch TaskConfig serves every survivor: perm/padded/intra
+    // are rewritten in place (clone_from reuses the buffers) and the
+    // emitted candidate clones the scratch exactly once, instead of the
+    // old fresh-TaskConfig-per-survivor construction.
     let mut cands: Vec<Candidate> = Vec::new();
+    let mut stage2 = TaskConfig {
+        task: t,
+        perm: Vec::new(),
+        padded_trip: Vec::new(),
+        intra: Vec::new(),
+        ii,
+        plans: BTreeMap::new(),
+        slr: 0,
+    };
     for &(_, _, ci, oi) in &scored {
         if deadline.expired() {
             timed_out = true;
             break;
         }
         let (intra, padded) = &combos[ci as usize];
-        let base = TaskConfig {
-            task: t,
-            perm: orders[oi as usize].clone(),
-            padded_trip: padded.clone(),
-            intra: intra.clone(),
-            ii,
-            plans: BTreeMap::new(),
-            slr: 0,
-        };
-        let (cfg, stats) = choose_transfer_plans(k, st, base, dev, opts, budget, &mut explored);
+        stage2.perm.clone_from(&orders[oi as usize]);
+        stage2.padded_trip.clone_from(padded);
+        stage2.intra.clone_from(intra);
+        let stats = choose_transfer_plans(
+            k,
+            st,
+            &mut stage2,
+            dev,
+            opts,
+            budget,
+            &mut arena,
+            &mut explored,
+        );
         // the descent already evaluated the final plan combination for
         // most combos and returns its (resources, latency); only when it
         // could not (e.g. no feasible option for the last array) is the
@@ -1168,14 +1396,14 @@ fn enumerate_task(
         let (res, lat) = match stats {
             Some(rl) => rl,
             None => {
-                let rt = eval::resolve_task(k, st, &cfg);
+                let rt = eval::resolve_task(k, st, &stage2);
                 (task_resources(&rt, dev), task_latency(&rt, dev, opts.overlap))
             }
         };
         if !res.fits(budget) {
             continue;
         }
-        cands.push(Candidate { cfg, latency: lat, res });
+        cands.push(Candidate { cfg: stage2.clone(), latency: lat, res });
     }
 
     // anytime guarantee, stage 2: fall back to the best stage-1 combo
@@ -1199,31 +1427,142 @@ fn enumerate_task(
         }
     }
 
-    (cands, explored, timed_out)
+    EnumOut { cands, explored, stage1_points, enum_pruned, timed_out }
+}
+
+/// Score one resolved stage-1 point: partition legality (Eq 8), then
+/// resources and the default-plan proxy latency. One body shared by
+/// the arena and fresh-resolution paths so the two stay byte-identical
+/// by construction.
+fn score_point(
+    rt: &eval::ResolvedTask<'_>,
+    dev: &Device,
+    opts: &SolverOptions,
+) -> (bool, ResourceVec, u64) {
+    if rt.plans.iter().any(|rp| rp.partitions > dev.max_partition) {
+        return (false, ResourceVec::ZERO, 0);
+    }
+    (true, task_resources(rt, dev), task_latency(rt, dev, opts.overlap))
+}
+
+/// The enumeration-starvation floor state, precomputed once per task
+/// (see the derivation at its construction site in [`enumerate_task`]).
+/// All products are u128 with saturation — a saturated floor only ever
+/// *over*-states a latency that already exceeds `u64::MAX` cycles, so
+/// pruning on it stays sound.
+struct EnumFloor {
+    /// The incumbent bound fixed before the stage-1 fan-out.
+    bound: u64,
+    /// Whether position `p` contributes its inter trip to the floor
+    /// (non-reduction always; reduction only when `fadd_latency >= 1`).
+    counted: Vec<bool>,
+    /// `trip_suffix[d]` = Π over counted positions `p >= d` of the
+    /// effective trip — a lower bound on the suffix's inter-trip
+    /// product before dividing out the intra factors.
+    trip_suffix: Vec<u128>,
+    /// `max_intra_suffix[d]` = Π over positions `p >= d` of the largest
+    /// legal intra factor — caps how much unrolling the suffix can
+    /// still divide out of `trip_suffix[d]`.
+    max_intra_suffix: Vec<u128>,
+}
+
+/// Mutable state threaded through [`enum_factors`]: the per-position
+/// choice stacks, the emitted combos, and the starved-combo count.
+struct EnumScratch {
+    intra: Vec<u64>,
+    padded: Vec<u64>,
+    combos: Vec<(Vec<u64>, Vec<u64>)>,
+    pruned: u64,
 }
 
 /// Cartesian enumeration of per-loop factor choices with an unroll cap.
+///
+/// With a floor, a choice is pruned when even the best completion of
+/// its subtree provably exceeds the bound: `a` is the running product
+/// of the assigned positions' exact inter trips (counted positions
+/// only), the suffix contributes at least `trip_suffix / B` where `B`
+/// bounds the remaining unroll (the tighter of the unroll budget left
+/// and the suffix's max intra product), so the subtree is dead iff
+/// `a · trip_suffix > bound · B`. Pruned subtrees are counted by their
+/// exact number of unroll-legal completions, keeping the `enum_pruned`
+/// accounting invariant (`stage1_points + enum_pruned` == the
+/// reference run's `stage1_points`) exact rather than approximate.
 fn enum_factors(
     per_loop: &[Vec<super::padding::FactorChoice>],
+    floor: Option<&EnumFloor>,
+    max_unroll: u64,
     depth: usize,
     product: u64,
-    max_unroll: u64,
-    intra: &mut Vec<u64>,
-    padded: &mut Vec<u64>,
-    out: &mut Vec<(Vec<u64>, Vec<u64>)>,
+    a: u128,
+    s: &mut EnumScratch,
 ) {
     if depth == per_loop.len() {
-        out.push((intra.clone(), padded.clone()));
+        s.combos.push((s.intra.clone(), s.padded.clone()));
         return;
     }
     for c in &per_loop[depth] {
         if product * c.intra > max_unroll {
             continue;
         }
-        intra[depth] = c.intra;
-        padded[depth] = c.padded;
-        enum_factors(per_loop, depth + 1, product * c.intra, max_unroll, intra, padded, out);
+        let product2 = product * c.intra;
+        let mut a2 = a;
+        if let Some(fl) = floor {
+            if fl.counted[depth] {
+                a2 = a.saturating_mul(u128::from(c.padded / c.intra));
+            }
+            let lhs = a2.saturating_mul(fl.trip_suffix[depth + 1]);
+            let b = u128::from(max_unroll / product2).min(fl.max_intra_suffix[depth + 1]);
+            // strict (`>`): a point tying the bound exactly stays
+            // reachable, mirroring dfs_assign's strictly-above pruning
+            let dead = match u128::from(fl.bound).checked_mul(b) {
+                Some(rhs) => lhs > rhs,
+                None => false,
+            };
+            if dead {
+                s.pruned += count_unroll_legal(per_loop, depth + 1, max_unroll / product2);
+                continue;
+            }
+        }
+        s.intra[depth] = c.intra;
+        s.padded[depth] = c.padded;
+        enum_factors(per_loop, floor, max_unroll, depth + 1, product2, a2, s);
     }
+}
+
+/// Exact number of unroll-legal completions of a factor subtree: how
+/// many combos the un-starved enumeration would emit from
+/// `per_loop[depth..]` with `budget` unroll headroom left (nested floor
+/// division chains exactly, so the count matches the reference's
+/// `product * intra <= max_unroll` test choice for choice). A pure
+/// integer walk — no geometry — so even a depth-0 starvation pays
+/// nanoseconds per skipped point instead of a full resolution.
+fn count_unroll_legal(
+    per_loop: &[Vec<super::padding::FactorChoice>],
+    depth: usize,
+    budget: u64,
+) -> u64 {
+    if depth == per_loop.len() {
+        return 1;
+    }
+    per_loop[depth]
+        .iter()
+        .filter(|c| c.intra <= budget)
+        .map(|c| count_unroll_legal(per_loop, depth + 1, budget / c.intra))
+        .sum()
+}
+
+/// Exact enumeration floor of one complete factor point: the product
+/// over counted positions of the inter trip `padded / intra` — the
+/// same fold (saturation included) the subtree walk accumulates into
+/// `a`, used by the knob-off oracle path to drop exactly the points
+/// the fast path starves.
+fn combo_floor(intra: &[u64], padded: &[u64], counted: &[bool]) -> u128 {
+    counted
+        .iter()
+        .zip(intra.iter().zip(padded))
+        .filter(|(c, _)| **c)
+        .map(|(_, (i, p))| u128::from(p / i))
+        .fold(1u128, u128::saturating_mul)
 }
 
 /// Pick the (define, transfer) level and bit width per array: enumerate
@@ -1239,60 +1578,93 @@ fn enum_factors(
 /// had no feasible option, or the task has no arrays) sends the caller
 /// down the old re-resolve path; either way the emitted candidate is
 /// bit-identical.
+///
+/// `cfg` is the caller's reusable stage-2 scratch: its factor fields
+/// must already describe the survivor, and any plans left from a
+/// previous survivor are cleared here before reseeding. The descent
+/// itself evaluates plan options in place through the shared arena
+/// (under `opts.resolve_arena`): a plan flip changes no factor
+/// geometry, so the arena re-resolves only the flipped array.
+#[allow(clippy::too_many_arguments)]
 fn choose_transfer_plans(
     k: &Kernel,
     st: &TaskStatics,
-    mut cfg: TaskConfig,
+    cfg: &mut TaskConfig,
     dev: &Device,
     opts: &SolverOptions,
     budget: &SlrBudget,
+    arena: &mut eval::ResolveArena,
     explored: &mut u64,
-) -> (TaskConfig, Option<(ResourceVec, u64)>) {
+) -> Option<(ResourceVec, u64)> {
+    let use_arena = opts.resolve_arena;
     // seed: everything at its deepest level (smallest buffers) — exactly
     // the defaults resolution applies to a plan-less config
+    cfg.plans.clear();
+    arena.invalidate();
     {
-        let rt = eval::resolve_task(k, st, &cfg);
-        let seeded: Vec<(String, TransferPlan)> =
-            rt.arrays().map(|(a, rp)| (a.name.clone(), rp.as_plan())).collect();
-        drop(rt);
+        let seeded: Vec<(String, TransferPlan)> = if use_arena {
+            let rt = arena.resolve(k, st, cfg, 0);
+            let s = rt.arrays().map(|(a, rp)| (a.name.clone(), rp.as_plan())).collect();
+            arena.reclaim(rt);
+            s
+        } else {
+            let rt = eval::resolve_task(k, st, cfg);
+            rt.arrays().map(|(a, rp)| (a.name.clone(), rp.as_plan())).collect()
+        };
         for (a, p) in seeded {
             cfg.plans.insert(a, p);
         }
     }
+    // the plan inserts above changed no factor geometry, but the arena
+    // snapshotted a plan-less config — re-resolve everything once
+    arena.invalidate();
 
     // coordinate descent, one array at a time (two sweeps converge for
-    // the plan structures in this zoo)
+    // the plan structures in this zoo). The per-array option lists
+    // depend only on the factor geometry (`plan_options` never reads
+    // `cfg.plans`), so they are computed once per survivor rather than
+    // once per (sweep, array).
+    let all_options: Vec<Vec<TransferPlan>> = {
+        let geo = super::space::TaskGeometry::new(k, st, cfg);
+        st.arrays.iter().map(|a| eval::plan_options(&geo, a)).collect()
+    };
+    let n = k.statements[st.rep].loops.len();
     let mut final_stats: Option<(ResourceVec, u64)> = None;
     for _sweep in 0..2 {
-        for ai in 0..st.arrays.len() {
-            let a_name = st.arrays[ai].name.clone();
-            let options: Vec<TransferPlan> = {
-                let geo = super::space::TaskGeometry::new(k, st, &cfg);
-                eval::plan_options(&geo, &st.arrays[ai])
-            };
-            let mut best_plan = cfg.plans[&a_name];
+        for (ai, options) in all_options.iter().enumerate() {
+            let a_name = &st.arrays[ai].name;
+            let mut best_plan = cfg.plans[a_name];
             let mut best_lat = u64::MAX;
             let mut best_stats: Option<(ResourceVec, u64)> = None;
-            for p in options {
+            for &p in options {
                 *explored += 1;
-                cfg.plans.insert(a_name.clone(), p);
-                let rt = eval::resolve_task(k, st, &cfg);
-                let res = task_resources(&rt, dev);
+                *cfg.plans.get_mut(a_name).expect("seeded above") = p;
+                let (res, lat) = if use_arena {
+                    // changed_from = n: no nest position changed, only
+                    // the one explicit plan — the arena re-resolves
+                    // exactly the flipped array
+                    let rt = arena.resolve(k, st, cfg, n);
+                    let out = (task_resources(&rt, dev), task_latency(&rt, dev, opts.overlap));
+                    arena.reclaim(rt);
+                    out
+                } else {
+                    let rt = eval::resolve_task(k, st, cfg);
+                    (task_resources(&rt, dev), task_latency(&rt, dev, opts.overlap))
+                };
                 if !res.fits(budget) {
                     continue;
                 }
-                let lat = task_latency(&rt, dev, opts.overlap);
                 if lat < best_lat {
                     best_lat = lat;
                     best_plan = p;
                     best_stats = Some((res, lat));
                 }
             }
-            cfg.plans.insert(a_name, best_plan);
+            *cfg.plans.get_mut(a_name).expect("seeded above") = best_plan;
             final_stats = best_stats;
         }
     }
-    (cfg, final_stats)
+    final_stats
 }
 
 /// Latency-sorted front size kept per task after the Pareto reduction
@@ -1346,6 +1718,12 @@ pub fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
             front.push(c);
         }
     }
+    truncate_front(front)
+}
+
+/// The `PARETO_KEEP` cut with resource-diversity witnesses, shared by
+/// the scan and bitset acceptance paths so the two can never drift.
+fn truncate_front(mut front: Vec<Candidate>) -> Vec<Candidate> {
     if front.len() > PARETO_KEEP {
         let min_idx = |key: fn(&Candidate) -> f64| {
             let mut best = 0usize;
@@ -1373,6 +1751,75 @@ pub fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
         front.extend(tail);
     }
     front
+}
+
+/// Knob dispatch for the per-task Pareto reduction: the reference scan
+/// ([`pareto`]) or the rank-bitset acceptance ([`pareto_bitsets`]).
+/// Byte-identical output either way — acceptance decisions, front
+/// order and truncation are pinned against each other by the stage-1/2
+/// property tests.
+pub fn pareto_with(cands: Vec<Candidate>, bitsets: bool) -> Vec<Candidate> {
+    if bitsets {
+        pareto_bitsets(cands)
+    } else {
+        pareto(cands)
+    }
+}
+
+/// Rank-bitset Pareto acceptance (the `pareto_bitsets` knob). Front
+/// members are numbered by acceptance order; for each resource
+/// dimension the front is kept sorted by value alongside *prefix
+/// masks* — `prefix[j]` is the bit-OR of the `j` smallest members in
+/// that dimension. Candidates arrive latency-sorted (every front
+/// member already satisfies `f.latency <= c.latency`), so the
+/// dominator set of a candidate is exactly
+/// `∩_d prefix_d[#(members ≤ c in d)]`: four `partition_point`s and a
+/// word-parallel AND replace the per-candidate scan over the front,
+/// with acceptance decisions — and therefore the emitted front —
+/// byte-identical to [`pareto`].
+fn pareto_bitsets(mut cands: Vec<Candidate>) -> Vec<Candidate> {
+    cands.sort_by_key(|c| c.latency);
+    let words = cands.len().div_ceil(64).max(1);
+    let mut front: Vec<Candidate> = Vec::new();
+    let mut vals: [Vec<f64>; 4] = Default::default();
+    let mut members: [Vec<usize>; 4] = Default::default();
+    let mut prefix: [Vec<Vec<u64>>; 4] = std::array::from_fn(|_| vec![vec![0u64; words]]);
+    let mut meet = vec![0u64; words];
+    for c in cands {
+        let dims = [c.res.dsp, c.res.bram18, c.res.lut, c.res.ff];
+        meet.fill(u64::MAX);
+        let mut nonempty = !front.is_empty();
+        for (d, v) in dims.iter().enumerate() {
+            let cnt = vals[d].partition_point(|x| x <= v);
+            if cnt == 0 {
+                nonempty = false;
+                break;
+            }
+            for (m, p) in meet.iter_mut().zip(&prefix[d][cnt]) {
+                *m &= p;
+            }
+        }
+        if nonempty && meet.iter().any(|&w| w != 0) {
+            continue; // dominated
+        }
+        // accept: insert into each dimension's sorted column and
+        // rebuild the prefix masks from the insertion point down
+        let bit = front.len();
+        for (d, v) in dims.iter().enumerate() {
+            let pos = vals[d].partition_point(|x| x <= v);
+            vals[d].insert(pos, *v);
+            members[d].insert(pos, bit);
+            prefix[d].truncate(pos + 1);
+            for j in pos..vals[d].len() {
+                let mut row = prefix[d][j].clone();
+                let b = members[d][j];
+                row[b / 64] |= 1u64 << (b % 64);
+                prefix[d].push(row);
+            }
+        }
+        front.push(c);
+    }
+    truncate_front(front)
 }
 
 /// SLR symmetry breaking — the one child-generation rule, shared by

@@ -66,8 +66,10 @@ impl<'a> TaskGeometry<'a> {
     /// Depth of loop position `p` in the generated structure: place in
     /// the permuted non-reduction order (1-based level), or
     /// `nonred.len() + 1 + rank` for reduction loops (they sit inside all
-    /// non-reduction levels).
-    fn depth_of(&self, p: usize) -> usize {
+    /// non-reduction levels). Public so the evaluation core's arena can
+    /// answer single-dimension geometry questions without materializing
+    /// a tile vector.
+    pub fn depth_of(&self, p: usize) -> usize {
         if let Some(place) = self.nonred.iter().position(|&q| q == p) {
             place + 1
         } else {
@@ -82,22 +84,46 @@ impl<'a> TaskGeometry<'a> {
     /// dimensions whose loop is at or outside the transfer point span
     /// only the intra-tile factor. Unindexed dims span fully.
     pub fn tile_dims_at(&self, a: &ArrayStatics, level: usize) -> Vec<u64> {
-        a.access
-            .iter()
-            .enumerate()
-            .map(|(d, rep_pos)| match rep_pos {
-                Some(p) => {
-                    if self.depth_of(*p) > level {
-                        // loop iterates inside the transfer point: tile
-                        // spans the whole (padded) extent of this dim
-                        self.cfg.padded_trip[*p]
-                    } else {
-                        self.cfg.intra[*p]
-                    }
+        let mut dims = Vec::with_capacity(a.access.len());
+        self.tile_dims_into(a, level, &mut dims);
+        dims
+    }
+
+    /// In-place variant of [`Self::tile_dims_at`]: clears `out` and
+    /// fills it with the tile extents, so the evaluation core's arena
+    /// can rewrite a retained buffer instead of allocating per point.
+    pub fn tile_dims_into(&self, a: &ArrayStatics, level: usize, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(a.access.iter().enumerate().map(|(d, rep_pos)| match rep_pos {
+            Some(p) => {
+                if self.depth_of(*p) > level {
+                    // loop iterates inside the transfer point: tile
+                    // spans the whole (padded) extent of this dim
+                    self.cfg.padded_trip[*p]
+                } else {
+                    self.cfg.intra[*p]
                 }
-                None => a.dims[d],
-            })
-            .collect()
+            }
+            None => a.dims[d],
+        }));
+    }
+
+    /// The last entry of [`Self::tile_dims_at`] without materializing
+    /// the vector — the only tile fact the natural-bit-width selection
+    /// (Eq 3) needs, and the scalar the arena's incremental default-plan
+    /// path recomputes per point.
+    pub fn last_tile_dim(&self, a: &ArrayStatics, level: usize) -> Option<u64> {
+        let d = a.access.len().checked_sub(1)?;
+        Some(match a.access[d] {
+            Some(p) => {
+                if self.depth_of(p) > level {
+                    self.cfg.padded_trip[p]
+                } else {
+                    self.cfg.intra[p]
+                }
+            }
+            None => a.dims[d],
+        })
     }
 
     /// Bytes of one data tile of `a` at `level`.
@@ -123,8 +149,7 @@ impl<'a> TaskGeometry<'a> {
     /// power-of-two burst whose element count divides the tile's last
     /// dimension.
     pub fn natural_bitwidth_at(&self, a: &ArrayStatics, level: usize) -> u64 {
-        let dims = self.tile_dims_at(a, level);
-        let Some(&last) = dims.last() else { return 32 };
+        let Some(last) = self.last_tile_dim(a, level) else { return 32 };
         best_bitwidth(last, a.elem_bits, 512)
     }
 

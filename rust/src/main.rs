@@ -285,6 +285,7 @@ fn run() -> Result<()> {
             let mut tt = Table::new(&[
                 "Kernel",
                 "Enumerated",
+                "Enum-pruned",
                 "DFS nodes",
                 "Leaves",
                 "Bound-pruned",
@@ -292,6 +293,7 @@ fn run() -> Result<()> {
                 "Model-pruned",
                 "Beam-starved",
                 "Prune rates b/s/r/m",
+                "Stage-1 starved",
                 "Deadline-killed",
                 "Incumbents",
             ]);
@@ -321,6 +323,7 @@ fn run() -> Result<()> {
                             tt.row(vec![
                                 name.clone(),
                                 c.enumerated.to_string(),
+                                c.enum_pruned.to_string(),
                                 c.dfs_nodes.to_string(),
                                 c.leaves_simulated.to_string(),
                                 c.bound_pruned.to_string(),
@@ -328,6 +331,7 @@ fn run() -> Result<()> {
                                 c.model_pruned.to_string(),
                                 c.beam_starved.to_string(),
                                 format!("{b:.0}/{s:.0}/{rr:.0}/{m:.0}%"),
+                                format!("{:.0}%", c.stage1_prune_rate()),
                                 c.deadline_killed.to_string(),
                                 r.telemetry.incumbents.len().to_string(),
                             ]);
@@ -335,8 +339,11 @@ fn run() -> Result<()> {
                                 let (b, s, rr, m) = v.prune_rates();
                                 variant_lines.push(format!(
                                     "  {name} variant {vi}: {b:.1}% bound / {s:.1}% symmetry / \
-                                     {rr:.1}% resource / {m:.1}% model pruned; {} beam-starved",
-                                    v.beam_starved
+                                     {rr:.1}% resource / {m:.1}% model pruned; {} beam-starved; \
+                                     {} enum-pruned ({:.1}% of stage 1)",
+                                    v.beam_starved,
+                                    v.enum_pruned,
+                                    v.stage1_prune_rate()
                                 ));
                             }
                         }
@@ -350,7 +357,7 @@ fn run() -> Result<()> {
                         ]);
                         if want_telemetry {
                             let mut row = vec![name.clone()];
-                            row.extend((0..10).map(|_| "-".to_string()));
+                            row.extend((0..12).map(|_| "-".to_string()));
                             tt.row(row);
                         }
                     }

@@ -320,6 +320,12 @@ pub struct VariantCounters {
     /// Stage-1/2 design points scored during per-task enumeration
     /// (tile factors × permutations × transfer-plan refinements).
     pub enumerated: u64,
+    /// The stage-1 subset of [`VariantCounters::enumerated`]: tile-factor ×
+    /// permutation points actually resolved and scored, excluding the
+    /// stage-2 transfer-plan refinements (whose count is *not* invariant
+    /// under starvation — the survivor set shifts). This is the counter
+    /// the `enum_pruned` accounting invariant is stated against.
+    pub stage1_points: u64,
     /// Candidates surviving the per-task Pareto reduction.
     pub pareto_kept: u64,
     /// Candidates dropped by Pareto dominance or front truncation.
@@ -345,6 +351,13 @@ pub struct VariantCounters {
     /// shared fusion-aware beam: their standalone latency exceeded the
     /// cross-variant incumbent established before the DFS started.
     pub beam_starved: u64,
+    /// Stage-1 enumeration points never resolved: the analytic
+    /// per-subtree latency floor (best achievable `UF/II` given the
+    /// remaining unroll budget) already exceeded the pre-enumeration
+    /// incumbent bound, so whole factor subtrees / permutations were
+    /// skipped. Counted in *points* — `enum_pruned + stage1_points`
+    /// equals the reference enumeration's `stage1_points`.
+    pub enum_pruned: u64,
     /// Subtrees abandoned after the anytime deadline expired with an
     /// incumbent already in hand.
     pub deadline_killed: u64,
@@ -354,6 +367,7 @@ impl VariantCounters {
     /// Element-wise accumulate `other` into `self`.
     pub fn add(&mut self, other: &VariantCounters) {
         self.enumerated += other.enumerated;
+        self.stage1_points += other.stage1_points;
         self.pareto_kept += other.pareto_kept;
         self.pareto_dropped += other.pareto_dropped;
         self.dfs_nodes += other.dfs_nodes;
@@ -363,6 +377,7 @@ impl VariantCounters {
         self.symmetry_pruned += other.symmetry_pruned;
         self.model_pruned += other.model_pruned;
         self.beam_starved += other.beam_starved;
+        self.enum_pruned += other.enum_pruned;
         self.deadline_killed += other.deadline_killed;
     }
 
@@ -382,6 +397,18 @@ impl VariantCounters {
             pct(self.resource_pruned),
             pct(self.model_pruned),
         )
+    }
+
+    /// Stage-1 prune rate: the percentage of all stage-1 enumeration
+    /// points that bound-driven starvation skipped before resolution,
+    /// `enum_pruned / (stage1_points + enum_pruned)`. Zero when nothing
+    /// was enumerated (or nothing skipped).
+    pub fn stage1_prune_rate(&self) -> f64 {
+        let total = self.stage1_points + self.enum_pruned;
+        if total == 0 {
+            return 0.0;
+        }
+        self.enum_pruned as f64 * 100.0 / total as f64
     }
 }
 
@@ -457,6 +484,12 @@ impl SolveTelemetry {
             "  prune rates: {b:.1}% bound / {s:.1}% symmetry / {r:.1}% resource / {m:.1}% model; {} beam-starved\n",
             t.beam_starved
         ));
+        out.push_str(&format!(
+            "  stage-1: {} of {} points starved before resolution ({:.1}% of the stage-1 space)\n",
+            t.enum_pruned,
+            t.stage1_points + t.enum_pruned,
+            t.stage1_prune_rate()
+        ));
         match (self.incumbents.first(), self.incumbents.last()) {
             (Some(first), Some(last)) => out.push_str(&format!(
                 "  incumbents: {} improvement(s); first {} cyc (variant {}) @ {:.1} ms, best {} cyc (variant {}) @ {:.1} ms\n",
@@ -474,8 +507,9 @@ impl SolveTelemetry {
         out.push_str(&format!("  DFS depth histogram: [{}]\n", hist.join(", ")));
         for (vi, v) in self.variants.iter().enumerate() {
             out.push_str(&format!(
-                "  variant {vi}: {} points, {} nodes, {} leaves, pruned {}b/{}s/{}r/{}m, {} starved\n",
+                "  variant {vi}: {} points (+{} enum-pruned), {} nodes, {} leaves, pruned {}b/{}s/{}r/{}m, {} starved\n",
                 v.enumerated,
+                v.enum_pruned,
                 v.dfs_nodes,
                 v.leaves_simulated,
                 v.bound_pruned,
@@ -494,6 +528,7 @@ impl SolveTelemetry {
 #[derive(Default)]
 struct VariantAtomics {
     enumerated: AtomicU64,
+    stage1_points: AtomicU64,
     pareto_kept: AtomicU64,
     pareto_dropped: AtomicU64,
     dfs_nodes: AtomicU64,
@@ -503,6 +538,7 @@ struct VariantAtomics {
     symmetry_pruned: AtomicU64,
     model_pruned: AtomicU64,
     beam_starved: AtomicU64,
+    enum_pruned: AtomicU64,
     deadline_killed: AtomicU64,
 }
 
@@ -510,6 +546,7 @@ impl VariantAtomics {
     fn freeze(self) -> VariantCounters {
         VariantCounters {
             enumerated: self.enumerated.into_inner(),
+            stage1_points: self.stage1_points.into_inner(),
             pareto_kept: self.pareto_kept.into_inner(),
             pareto_dropped: self.pareto_dropped.into_inner(),
             dfs_nodes: self.dfs_nodes.into_inner(),
@@ -519,6 +556,7 @@ impl VariantAtomics {
             symmetry_pruned: self.symmetry_pruned.into_inner(),
             model_pruned: self.model_pruned.into_inner(),
             beam_starved: self.beam_starved.into_inner(),
+            enum_pruned: self.enum_pruned.into_inner(),
             deadline_killed: self.deadline_killed.into_inner(),
         }
     }
@@ -573,6 +611,16 @@ impl SolveCounters {
             return;
         }
         self.variants[vi].enumerated.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Stage-1 only: `n` tile-factor × permutation points were resolved
+    /// and scored for variant `vi` (a subset of [`SolveCounters::enumerated`]).
+    #[inline]
+    pub fn stage1_points(&self, vi: usize, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].stage1_points.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Pareto reduction for one task of variant `vi`: `kept` survived,
@@ -653,6 +701,17 @@ impl SolveCounters {
         self.variants[vi].beam_starved.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// `n` stage-1 enumeration points were skipped before resolution
+    /// because their subtree's analytic latency floor already exceeded
+    /// the pre-enumeration incumbent bound.
+    #[inline]
+    pub fn enum_pruned(&self, vi: usize, n: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.variants[vi].enum_pruned.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// A subtree was abandoned because the deadline expired with an
     /// incumbent in hand.
     #[inline]
@@ -711,6 +770,8 @@ mod tests {
         c.dfs_node(1, 99);
         c.leaf(0);
         c.bound_pruned(0, 5);
+        c.enum_pruned(1, 17);
+        c.stage1_points(2, 8);
         c.incumbent(1, 2, 0);
         assert_eq!(c.finish(), SolveTelemetry::default());
     }
@@ -726,6 +787,9 @@ mod tests {
         c.leaf(0);
         c.bound_pruned(1, 2);
         c.symmetry_pruned(1, 4);
+        c.enum_pruned(0, 30);
+        c.stage1_points(0, 8);
+        c.stage1_points(1, 2);
         c.incumbent(123, 456, 1);
         let t = c.finish();
         assert!(t.enabled);
@@ -737,6 +801,10 @@ mod tests {
         assert_eq!(t.variants[0].leaves_simulated, 1);
         assert_eq!(t.variants[1].bound_pruned, 2);
         assert_eq!(t.variants[1].symmetry_pruned, 4);
+        assert_eq!(t.variants[0].enum_pruned, 30);
+        assert_eq!(t.variants[0].stage1_points, 8);
+        // stage-1 rate: 30 pruned of (8 + 2) resolved + 30 = 40 total points
+        assert!((t.totals().stage1_prune_rate() - 30.0 * 100.0 / 40.0).abs() < 1e-9);
         assert_eq!(t.depth_hist, vec![1, 0, 0, 1]);
         assert_eq!(
             t.incumbents,

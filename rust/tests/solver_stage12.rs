@@ -1,0 +1,302 @@
+//! Acceptance properties for the solver's allocation-free stage-1/2
+//! enumeration (DESIGN.md §13): the incremental [`ResolveArena`], the
+//! dominance-bitset Pareto reduction, and bound-driven enumeration
+//! starvation.
+//!
+//! The contract under test: `SolverOptions::resolve_arena`,
+//! `SolverOptions::pareto_bitsets` and `SolverOptions::enum_starvation`
+//! are pure *speed* knobs. Flipping any of them (or the thread count,
+//! or telemetry) must return the bit-identical winning design on every
+//! kernel in the zoo. The arena's incremental resolution is pinned
+//! against the fresh [`resolve_task`] path field-by-field over a
+//! sampled config grid, and the starvation accounting makes the pruning
+//! auditable: at jobs=1 every point the oracle path resolves is either
+//! resolved or `enum_pruned` by the starved path, never silently lost.
+//!
+//! [`ResolveArena`]: prometheus::dse::eval::ResolveArena
+//! [`resolve_task`]: prometheus::dse::eval::resolve_task
+
+use prometheus::analysis::audit::{audit_all, Severity};
+use prometheus::dse::config::{TaskConfig, TransferPlan};
+use prometheus::dse::eval::{resolve_task, FusionSpace, GeometryCache, ResolveArena, ResolvedTask};
+use prometheus::dse::padding::{legal_intra_factors, FactorChoice};
+use prometheus::dse::solver::{solve, Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::ir::polybench;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Small-but-feasible knobs shared by the suites (`jobs: 1` pinned so
+/// counter asserts are deterministic even when CI sets
+/// `PROMETHEUS_JOBS=4`; thread-count independence gets its own solve).
+fn small_solver() -> SolverOptions {
+    SolverOptions {
+        beam: 4,
+        max_factor_per_loop: 8,
+        max_unroll: 64,
+        max_pad: 4,
+        timeout: Duration::from_secs(30),
+        jobs: 1,
+        ..SolverOptions::default()
+    }
+}
+
+/// Field-by-field equality of an arena resolution against the fresh
+/// reference path ([`ResolvedTask`] holds borrows, so no derived `Eq`).
+fn assert_same(kernel: &str, task: usize, inc: &ResolvedTask<'_>, fresh: &ResolvedTask<'_>) {
+    let at = format!("{kernel}/FT{task}");
+    assert_eq!(inc.geo.nonred, fresh.geo.nonred, "{at}: nonred order diverged");
+    assert_eq!(inc.geo.red, fresh.geo.red, "{at}: red order diverged");
+    assert_eq!(inc.steps, fresh.steps, "{at}: steps diverged");
+    assert_eq!(inc.transfer_counts, fresh.transfer_counts, "{at}: transfer counts diverged");
+    assert_eq!(inc.plans, fresh.plans, "{at}: resolved plans diverged");
+}
+
+/// Up to three factor choices per loop spanning the legal range:
+/// smallest, middle, largest — enough to move every array's tile and
+/// bit-width decision without a combinatorial grid.
+fn sampled_choices(trip: u64) -> Vec<FactorChoice> {
+    let f = legal_intra_factors(trip, 4, 8);
+    let mut picks = vec![f[0]];
+    if f.len() > 2 {
+        picks.push(f[f.len() / 2]);
+    }
+    if f.len() > 1 {
+        picks.push(*f.last().unwrap());
+    }
+    picks
+}
+
+#[test]
+fn arena_matches_fresh_resolution_over_the_zoo() {
+    // For every (kernel, fusion variant, task): walk a sampled factor
+    // grid deepest-position-fastest (the solver's scan order, so
+    // consecutive points share long unchanged prefixes), resolving each
+    // point incrementally through one retained arena and from scratch,
+    // and pin every resolved field. Then flip each array between an
+    // explicit plan and the defaulting path to exercise the
+    // plan-comparison staleness detection.
+    for k in polybench::all_kernels() {
+        let space = FusionSpace::enumerate(&k);
+        for v in &space.variants {
+            for st in &v.cache.tasks {
+                let per_loop: Vec<Vec<FactorChoice>> =
+                    st.trips.iter().map(|&t| sampled_choices(t)).collect();
+                if per_loop.is_empty() {
+                    continue;
+                }
+                // Cartesian product, deepest position fastest, capped.
+                let mut combos: Vec<(Vec<u64>, Vec<u64>)> = Vec::new();
+                let mut idx = vec![0usize; per_loop.len()];
+                loop {
+                    let intra: Vec<u64> =
+                        idx.iter().zip(&per_loop).map(|(&i, c)| c[i].intra).collect();
+                    let padded: Vec<u64> =
+                        idx.iter().zip(&per_loop).map(|(&i, c)| c[i].padded).collect();
+                    combos.push((intra, padded));
+                    if combos.len() >= 24 {
+                        break;
+                    }
+                    let mut p = per_loop.len();
+                    loop {
+                        if p == 0 {
+                            break;
+                        }
+                        p -= 1;
+                        idx[p] += 1;
+                        if idx[p] < per_loop[p].len() {
+                            break;
+                        }
+                        idx[p] = 0;
+                    }
+                    if idx.iter().all(|&i| i == 0) {
+                        break;
+                    }
+                }
+
+                let mut arena = ResolveArena::new();
+                for perm in &st.orders {
+                    arena.invalidate(); // permutation change: full rebuild
+                    let mut cfg = TaskConfig {
+                        task: st.task,
+                        perm: perm.clone(),
+                        padded_trip: combos[0].1.clone(),
+                        intra: combos[0].0.clone(),
+                        ii: 1,
+                        plans: BTreeMap::new(),
+                        slr: 0,
+                    };
+                    let mut prev: Option<&(Vec<u64>, Vec<u64>)> = None;
+                    for combo in &combos {
+                        let (intra, padded) = combo;
+                        let changed = match prev {
+                            Some((pi, pp)) => (0..intra.len())
+                                .find(|&x| intra[x] != pi[x] || padded[x] != pp[x])
+                                .unwrap_or(intra.len()),
+                            None => 0,
+                        };
+                        cfg.intra.clone_from(intra);
+                        cfg.padded_trip.clone_from(padded);
+                        let inc = arena.resolve(&k, st, &cfg, changed);
+                        let fresh = resolve_task(&k, st, &cfg);
+                        assert_same(&k.name, st.task, &inc, &fresh);
+                        arena.reclaim(inc);
+                        prev = Some(combo);
+                    }
+                    // Plan flips on the final factor point: explicit
+                    // plans appear one array at a time (no factor
+                    // change, so changed_from = nest length), then all
+                    // revert to defaults at once.
+                    let n = cfg.intra.len();
+                    for a in &st.arrays {
+                        cfg.plans.insert(
+                            a.name.clone(),
+                            TransferPlan {
+                                define_level: 0,
+                                transfer_level: 0,
+                                bitwidth: 64,
+                                buffers: 2,
+                            },
+                        );
+                        let inc = arena.resolve(&k, st, &cfg, n);
+                        let fresh = resolve_task(&k, st, &cfg);
+                        assert_same(&k.name, st.task, &inc, &fresh);
+                        arena.reclaim(inc);
+                    }
+                    cfg.plans.clear();
+                    let inc = arena.resolve(&k, st, &cfg, n);
+                    let fresh = resolve_task(&k, st, &cfg);
+                    assert_same(&k.name, st.task, &inc, &fresh);
+                    arena.reclaim(inc);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stage12_knobs_preserve_winners_across_the_zoo() {
+    // Reference (all three knobs off — fresh resolution, scan Pareto,
+    // oracle post-resolution filtering) vs each knob alone vs all on,
+    // plus all-on at jobs=8 with telemetry off: six solves per kernel,
+    // one answer. The all-on winner must also pass the static design
+    // audit clean — the fast path may not smuggle in an illegal design.
+    let dev = Device::u55c();
+    for k in polybench::all_kernels() {
+        let opts = |arena: bool, bitsets: bool, starve: bool, jobs: usize| SolverOptions {
+            resolve_arena: arena,
+            pareto_bitsets: bitsets,
+            enum_starvation: starve,
+            jobs,
+            telemetry: true,
+            ..small_solver()
+        };
+        let reference = solve(&k, &dev, &opts(false, false, false, 1))
+            .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        let arena_only = solve(&k, &dev, &opts(true, false, false, 1)).unwrap();
+        let bitsets_only = solve(&k, &dev, &opts(false, true, false, 1)).unwrap();
+        let starve_only = solve(&k, &dev, &opts(false, false, true, 1)).unwrap();
+        let fast = solve(&k, &dev, &opts(true, true, true, 1)).unwrap();
+        let fast_mt = solve(
+            &k,
+            &dev,
+            &SolverOptions { telemetry: false, ..opts(true, true, true, 8) },
+        )
+        .unwrap();
+
+        for (label, r) in [
+            ("resolve arena", &arena_only),
+            ("pareto bitsets", &bitsets_only),
+            ("enum starvation", &starve_only),
+            ("stage-1/2 fast path", &fast),
+            ("stage-1/2 fast path at jobs=8", &fast_mt),
+        ] {
+            assert_eq!(reference.design, r.design, "{}: {label} changed the design", k.name);
+            assert_eq!(
+                reference.latency.total, r.latency.total,
+                "{}: {label} changed the latency",
+                k.name
+            );
+        }
+
+        let cache = GeometryCache::new(&k, &fast.fused);
+        let errors: Vec<_> =
+            audit_all(&k, &fast.fused, &cache, &fast.design, &dev, Scenario::Rtl)
+                .into_iter()
+                .filter(|d| d.severity == Severity::Error)
+                .collect();
+        assert!(errors.is_empty(), "{}: fast-path winner failed the audit: {errors:?}", k.name);
+    }
+}
+
+#[test]
+fn enum_starvation_accounting_with_a_warm_incumbent() {
+    // A cold optimal winner seeds a warm solve, making the enumeration
+    // bound tight before stage 1 starts. With starvation ON, whole
+    // factor subtrees are skipped pre-resolution; with it OFF, the same
+    // points are resolved and then dropped by the identical per-point
+    // floor test. Both must return the incumbent's answer, and at
+    // jobs=1 the accounting must partition exactly:
+    //   stage1_points(on) + enum_pruned(on) == stage1_points(off).
+    let dev = Device::u55c();
+    let mut pruned_total = 0u64;
+    for k in polybench::all_kernels() {
+        let base = SolverOptions { telemetry: true, ..small_solver() };
+        let cold = solve(&k, &dev, &base).unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        let warm = |starve: bool| {
+            solve(
+                &k,
+                &dev,
+                &SolverOptions {
+                    incumbent: Some(cold.design.clone()),
+                    enum_starvation: starve,
+                    ..base.clone()
+                },
+            )
+            .unwrap()
+        };
+        let on = warm(true);
+        let off = warm(false);
+        for (label, r) in [("starved", &on), ("oracle", &off)] {
+            assert!(r.warm_started, "{}: {label} warm solve did not seed", k.name);
+            assert_eq!(cold.design, r.design, "{}: {label} warm solve changed the design", k.name);
+            assert_eq!(
+                cold.latency.total, r.latency.total,
+                "{}: {label} warm solve changed the latency",
+                k.name
+            );
+        }
+        let t_on = on.telemetry.totals();
+        let t_off = off.telemetry.totals();
+        assert_eq!(
+            t_on.stage1_points + t_on.enum_pruned,
+            t_off.stage1_points,
+            "{}: stage-1 point partition broke (starved {} + pruned {} vs oracle {})",
+            k.name,
+            t_on.stage1_points,
+            t_on.enum_pruned,
+            t_off.stage1_points
+        );
+        assert_eq!(t_off.enum_pruned, 0, "{}: oracle path reported pruned points", k.name);
+        pruned_total += t_on.enum_pruned;
+    }
+    // across the whole zoo the floor must actually starve something, or
+    // bound-driven starvation is dead code wearing a flag
+    assert!(pruned_total > 0, "enumeration starvation never pruned a single point");
+}
+
+#[test]
+fn stage12_fast_path_keeps_the_anytime_contract() {
+    // A near-zero deadline with every stage-1/2 knob on (the default)
+    // must still return a valid design.
+    let k = polybench::by_name("3mm").unwrap();
+    let dev = Device::u55c();
+    let r = solve(
+        &k,
+        &dev,
+        &SolverOptions { timeout: Duration::from_millis(50), ..small_solver() },
+    )
+    .unwrap();
+    assert!(r.latency.total > 0, "anytime solve returned an empty design");
+    r.design.validate(&k, &r.fused, dev.slrs).unwrap();
+}
