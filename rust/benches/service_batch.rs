@@ -12,7 +12,7 @@ use prometheus::dse::solver::{solve, Scenario, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::ir::polybench;
 use prometheus::service::batch::{run_batch, BatchOptions, BatchRequest};
-use prometheus::service::QorDb;
+use prometheus::service::QorStore;
 use std::time::Instant;
 
 fn requests() -> Vec<BatchRequest> {
@@ -43,9 +43,9 @@ fn main() {
 
     // 1. serial vs parallel cold batch (fan-out scaling)
     let serial_opts = BatchOptions { solver: quick_solver(), jobs: 1 };
-    let mut db_serial = QorDb::new();
+    let db_serial = QorStore::in_memory();
     let t0 = Instant::now();
-    run_batch(&reqs, &dev, &mut db_serial, &serial_opts).unwrap();
+    run_batch(&reqs, &dev, &db_serial, &serial_opts).unwrap();
     let serial = t0.elapsed();
     println!(
         "cold batch, 1 worker:   {serial:>10.2?}  ({:.2} req/s)",
@@ -53,9 +53,9 @@ fn main() {
     );
 
     let par_opts = BatchOptions { solver: quick_solver(), jobs: nproc };
-    let mut db = QorDb::new();
+    let db = QorStore::in_memory();
     let t1 = Instant::now();
-    let cold = run_batch(&reqs, &dev, &mut db, &par_opts).unwrap();
+    let cold = run_batch(&reqs, &dev, &db, &par_opts).unwrap();
     let cold_t = t1.elapsed();
     println!(
         "cold batch, {nproc} workers: {cold_t:>10.2?}  ({:.2} req/s, {:.2}x vs serial)",
@@ -65,7 +65,7 @@ fn main() {
 
     // 2. warm batch: every request a knowledge-base hit
     let t2 = Instant::now();
-    let warm = run_batch(&reqs, &dev, &mut db, &par_opts).unwrap();
+    let warm = run_batch(&reqs, &dev, &db, &par_opts).unwrap();
     let warm_t = t2.elapsed();
     println!(
         "warm batch (all hits):  {warm_t:>10.2?}  ({:.0} req/s, {:.0}x vs cold)\n",

@@ -322,6 +322,83 @@ impl CacheStatus {
     }
 }
 
+/// Knowledge-base polymorphism for the cached flow: the same hit/miss
+/// logic runs over the legacy in-memory [`crate::service::QorDb`]
+/// (infallible, caller-persisted) and the concurrent, durable
+/// [`crate::service::QorStore`] (fsync'd log; evict/record can fail
+/// with I/O errors). Private — callers pick a backend through
+/// [`optimize_kernel_cached`] or [`optimize_kernel_stored`].
+trait QorBackend {
+    /// Exact-hit lookup by canonical key.
+    fn lookup(&self, canon: &str) -> Option<crate::service::QorRecord>;
+    /// Drop a stale record (tombstone it, for durable backends).
+    fn evict(&mut self, canon: &str) -> Result<()>;
+    /// Best related record's design for warm-starting, restricted to
+    /// fusion plans `usable` accepts.
+    fn incumbent(
+        &self,
+        kernel: &str,
+        model: crate::dse::config::ExecutionModel,
+        overlap: bool,
+        usable: &dyn Fn(&crate::analysis::fusion::FusionPlan) -> bool,
+    ) -> Option<DesignConfig>;
+    /// Record a completed solve (never-worse merge on both backends).
+    fn record(&mut self, canon: String, rec: crate::service::QorRecord) -> Result<()>;
+}
+
+impl QorBackend for crate::service::QorDb {
+    fn lookup(&self, canon: &str) -> Option<crate::service::QorRecord> {
+        self.get_canonical(canon).cloned()
+    }
+
+    fn evict(&mut self, canon: &str) -> Result<()> {
+        self.remove_canonical(canon);
+        Ok(())
+    }
+
+    fn incumbent(
+        &self,
+        kernel: &str,
+        model: crate::dse::config::ExecutionModel,
+        overlap: bool,
+        usable: &dyn Fn(&crate::analysis::fusion::FusionPlan) -> bool,
+    ) -> Option<DesignConfig> {
+        self.incumbent_for_space(kernel, model, overlap, |p| usable(p))
+            .map(|rec| rec.design.clone())
+    }
+
+    fn record(&mut self, canon: String, rec: crate::service::QorRecord) -> Result<()> {
+        self.insert_canonical(canon, rec);
+        Ok(())
+    }
+}
+
+impl QorBackend for &crate::service::QorStore {
+    fn lookup(&self, canon: &str) -> Option<crate::service::QorRecord> {
+        self.get_canonical(canon)
+    }
+
+    fn evict(&mut self, canon: &str) -> Result<()> {
+        self.remove_canonical(canon)?;
+        Ok(())
+    }
+
+    fn incumbent(
+        &self,
+        kernel: &str,
+        model: crate::dse::config::ExecutionModel,
+        overlap: bool,
+        usable: &dyn Fn(&crate::analysis::fusion::FusionPlan) -> bool,
+    ) -> Option<DesignConfig> {
+        self.incumbent_for_space(kernel, model, overlap, |p| usable(p)).map(|rec| rec.design)
+    }
+
+    fn record(&mut self, canon: String, rec: crate::service::QorRecord) -> Result<()> {
+        self.insert_canonical(&canon, rec)?;
+        Ok(())
+    }
+}
+
 /// The flow, fronted by the QoR knowledge base (service layer).
 ///
 /// On an exact key hit the solver is skipped: the cached design is
@@ -337,10 +414,37 @@ pub fn optimize_kernel_cached(
     opts: &OptimizeOptions,
     db: &mut crate::service::QorDb,
 ) -> Result<(OptimizedKernel, CacheStatus)> {
+    optimize_kernel_backend(kernel_name, dev, opts, db)
+}
+
+/// [`optimize_kernel_cached`] against the concurrent, durable
+/// [`crate::service::QorStore`]: a cache hit, a stale-record eviction
+/// and a recorded solve all go through the store's fsync'd append log,
+/// so a completed solve survives the process (no save step to forget,
+/// no whole-file lost-update window). This is the backend `prometheus
+/// optimize --db` and `prometheus batch` use; the serve daemon holds
+/// the same store for its whole lifetime.
+pub fn optimize_kernel_stored(
+    kernel_name: &str,
+    dev: &Device,
+    opts: &OptimizeOptions,
+    store: &crate::service::QorStore,
+) -> Result<(OptimizedKernel, CacheStatus)> {
+    let mut backend = store;
+    optimize_kernel_backend(kernel_name, dev, opts, &mut backend)
+}
+
+fn optimize_kernel_backend(
+    kernel_name: &str,
+    dev: &Device,
+    opts: &OptimizeOptions,
+    db: &mut dyn QorBackend,
+) -> Result<(OptimizedKernel, CacheStatus)> {
     let mut solver = opts.solver.clone();
     solver.scenario = opts.scenario;
     solver.incumbent = None;
     let key = crate::service::DesignKey::new(kernel_name, dev, &solver);
+    let canon = key.canonical();
     let kernel = crate::ir::polybench::by_name(kernel_name)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel {kernel_name}"))?;
 
@@ -352,7 +456,7 @@ pub fn optimize_kernel_cached(
     let mut stale_hit = false;
     let lookup_span = obs::span("flow", "flow.qor_db")
         .map(|s| s.arg("op", obs::ArgVal::Str("lookup".to_string())));
-    if let Some(rec) = db.get(&key) {
+    if let Some(rec) = db.lookup(&canon) {
         // A record from an incompatible (older) code or resource model
         // (same on-disk version), or whose fusion partition is no
         // longer legal for the kernel, is a miss, not an error: drop
@@ -410,7 +514,7 @@ pub fn optimize_kernel_cached(
         }
     }
     if stale_hit {
-        db.remove_canonical(&key.canonical());
+        db.evict(&canon)?;
     }
     drop(lookup_span);
 
@@ -423,11 +527,8 @@ pub fn optimize_kernel_cached(
     // warm start can never cross incompatible partitions).
     // `warm_started` comes from the solver, the only party that knows
     // whether the incumbent was actually usable under this scenario.
-    solver.incumbent = db
-        .incumbent_for_space(kernel_name, solver.model, solver.overlap, |p| {
-            space.variant_of(p).is_some()
-        })
-        .map(|rec| rec.design.clone());
+    solver.incumbent =
+        db.incumbent(kernel_name, solver.model, solver.overlap, &|p| space.variant_of(p).is_some());
     let result = solve_validated(&kernel, &space, dev, &solver)?;
     let status =
         if result.warm_started { CacheStatus::WarmMiss } else { CacheStatus::ColdMiss };
@@ -453,7 +554,7 @@ pub fn optimize_kernel_cached(
     {
         let _span = obs::span("flow", "flow.qor_db")
             .map(|s| s.arg("op", obs::ArgVal::Str("insert".to_string())));
-        db.insert(&key, crate::service::QorRecord::from_products(&result, &sim, gf));
+        db.record(canon, crate::service::QorRecord::from_products(&result, &sim, gf))?;
     }
     let r = finish_flow_with(kernel, fused, &cache, result, sim, board, gf, opts)?;
     Ok((r, status))
@@ -537,5 +638,23 @@ mod tests {
         let (_, st3) = optimize_kernel_cached("madd", &dev, &onboard, &mut db).unwrap();
         assert_ne!(st3, CacheStatus::Hit);
         assert_eq!(db.len(), 2);
+    }
+
+    #[test]
+    fn stored_flow_matches_cached_flow() {
+        let dev = Device::u55c();
+        let opts = OptimizeOptions { solver: quick_solver(), ..OptimizeOptions::default() };
+        let store = crate::service::QorStore::in_memory();
+        let (first, st1) = optimize_kernel_stored("madd", &dev, &opts, &store).unwrap();
+        assert_eq!(st1, CacheStatus::ColdMiss);
+        assert_eq!(store.len(), 1);
+        let (second, st2) = optimize_kernel_stored("madd", &dev, &opts, &store).unwrap();
+        assert_eq!(st2, CacheStatus::Hit);
+        assert_eq!(second.result.design, first.result.design);
+        // both backends run the identical flow, so they agree bit-for-bit
+        let mut db = crate::service::QorDb::new();
+        let (legacy, _) = optimize_kernel_cached("madd", &dev, &opts, &mut db).unwrap();
+        assert_eq!(legacy.result.design, first.result.design);
+        assert_eq!(legacy.sim.cycles, first.sim.cycles);
     }
 }

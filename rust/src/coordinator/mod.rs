@@ -6,6 +6,7 @@ pub mod flow;
 pub mod regen;
 
 pub use flow::{
-    optimize_kernel, optimize_kernel_cached, CacheStatus, OptimizeOptions, OptimizedKernel,
+    optimize_kernel, optimize_kernel_cached, optimize_kernel_stored, CacheStatus, OptimizeOptions,
+    OptimizedKernel,
 };
 pub use regen::regenerate_until_feasible;

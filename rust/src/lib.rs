@@ -41,7 +41,12 @@ pub mod service;
 pub mod sim;
 pub mod testutil;
 
-pub use coordinator::flow::{optimize_kernel, optimize_kernel_cached, OptimizeOptions};
+pub use coordinator::flow::{
+    optimize_kernel, optimize_kernel_cached, optimize_kernel_stored, OptimizeOptions,
+};
 pub use dse::config::DesignConfig;
 pub use ir::kernel::Kernel;
-pub use service::{run_batch, BatchOptions, BatchRequest, DesignKey, QorDb};
+pub use service::{
+    run_batch, serve_lines, BatchOptions, BatchRequest, Daemon, DesignKey, QorDb, QorStore,
+    ServeOptions,
+};

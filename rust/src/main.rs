@@ -10,6 +10,10 @@
 //! prometheus report   [--kernels K,..] [--full] [--telemetry]
 //!                                               chosen fusion per kernel (Table 9 shape)
 //! prometheus batch    [--kernels K,..] [--scenarios S,..] [--db FILE] [--jobs N] [--trace FILE]
+//! prometheus serve    [--db FILE] [--workers N] [--jobs N] [--queue N] [--quick]
+//!                     [--metrics-every N] [--trace FILE]
+//!                                               persistent daemon: NDJSON requests on stdin,
+//!                                               responses on stdout, metrics on stderr
 //! prometheus lint     [<kernel>|all] [--onboard N --frac F] [--full] [--jobs N] [--fixed-fusion]
 //!                                               solve + independent static audit (DESIGN.md §12)
 //! prometheus db       <FILE> [--verify]         QoR knowledge-base records + provenance
@@ -30,7 +34,7 @@ use prometheus::analysis::audit;
 use prometheus::analysis::fusion::{enumerate_fusions, fuse, fuse_with_plan};
 use prometheus::analysis::reuse;
 use prometheus::baselines::Framework;
-use prometheus::coordinator::flow::{optimize_kernel, optimize_kernel_cached, OptimizeOptions};
+use prometheus::coordinator::flow::{optimize_kernel, optimize_kernel_stored, OptimizeOptions};
 use prometheus::dse::eval::GeometryCache;
 use prometheus::dse::solver::{Scenario, SolverOptions};
 use prometheus::hw::Device;
@@ -39,7 +43,8 @@ use prometheus::report::{gfs, Table};
 use prometheus::service::batch::{
     parse_model, parse_scenario, run_batch, BatchOptions, BatchRequest,
 };
-use prometheus::service::QorDb;
+use prometheus::service::serve::{serve_lines, Daemon, ServeOptions};
+use prometheus::service::{QorDb, QorStore};
 use std::path::PathBuf;
 
 fn main() {
@@ -188,18 +193,16 @@ fn run() -> Result<()> {
             };
             let r = match flag_value(&args, "--db").map(PathBuf::from) {
                 Some(db_path) => {
-                    let mut db = QorDb::load(&db_path);
-                    // Persist the db before propagating any flow error:
-                    // a completed solve survives e.g. an unwritable
-                    // --emit dir.
-                    let outcome = optimize_kernel_cached(name, &dev, &opts, &mut db);
-                    db.save(&db_path)?;
-                    let (r, status) = outcome?;
+                    // Append-only store: a completed solve is fsync'd
+                    // the moment it is recorded, so it survives e.g. an
+                    // unwritable --emit dir without a save step.
+                    let store = QorStore::open(&db_path)?;
+                    let (r, status) = optimize_kernel_stored(name, &dev, &opts, &store)?;
                     println!(
                         "QoR DB {}: {} ({} records)",
                         db_path.display(),
                         status.as_str(),
-                        db.len()
+                        store.len()
                     );
                     r
                 }
@@ -416,31 +419,30 @@ fn run() -> Result<()> {
                 opts.jobs = j.parse()?;
             }
             let db_path = flag_value(&args, "--db").map(PathBuf::from);
-            let mut db = match &db_path {
-                Some(p) => QorDb::load(p),
-                None => QorDb::new(),
+            let store = match &db_path {
+                Some(p) => QorStore::open(p)?,
+                None => QorStore::in_memory(),
             };
-            let preloaded = db.len();
-            let result = run_batch(&requests, &dev, &mut db, &opts);
-            // Persist whatever completed before reporting success or
-            // failure: a partially-failed batch keeps its finished
-            // solves.
+            let preloaded = store.len();
+            // Each worker appends its record (fsync'd) as it completes,
+            // so a partially-failed batch keeps its finished solves
+            // with no save step to reach.
+            let result = run_batch(&requests, &dev, &store, &opts);
             match &db_path {
                 Some(p) => {
-                    db.save(p)?;
                     println!(
                         "QoR DB {}: {} records ({} loaded, {} new)",
                         p.display(),
-                        db.len(),
+                        store.len(),
                         preloaded,
                         // saturating: evicted-then-failed stale records
                         // can shrink the db below its loaded size
-                        db.len().saturating_sub(preloaded)
+                        store.len().saturating_sub(preloaded)
                     );
                 }
                 None => println!(
                     "QoR DB: in-memory only ({} records) — pass --db FILE to persist",
-                    db.len()
+                    store.len()
                 ),
             }
             let report = result?;
@@ -460,6 +462,58 @@ fn run() -> Result<()> {
                     "{} of {} batch requests failed (see FAILED rows above)",
                     report.failed,
                     report.outcomes.len()
+                ));
+            }
+        }
+        "serve" => {
+            // Long-running daemon: newline-delimited JSON requests on
+            // stdin, one JSON response line per request on stdout (in
+            // submission order), periodic metrics tables on stderr.
+            // State — fusion spaces, geometry caches, the QoR store —
+            // persists for the process lifetime, so repeated and
+            // related requests get cheaper over time.
+            let trace_path = flag_value(&args, "--trace").map(PathBuf::from);
+            if trace_path.is_some() {
+                prometheus::obs::start_trace();
+            }
+            let mut sopts = ServeOptions::default();
+            if args.iter().any(|a| a == "--quick") {
+                sopts.solver = prometheus::coordinator::flow::quick_solver();
+            }
+            sopts.solver.telemetry = sopts.solver.telemetry || trace_path.is_some();
+            if let Some(j) = flag_value(&args, "--jobs") {
+                sopts.jobs = j.parse()?;
+            }
+            if let Some(w) = flag_value(&args, "--workers") {
+                sopts.workers = w.parse()?;
+            }
+            if let Some(q) = flag_value(&args, "--queue") {
+                sopts.queue_capacity = q.parse()?;
+            }
+            if let Some(m) = flag_value(&args, "--metrics-every") {
+                sopts.metrics_every = m.parse()?;
+            }
+            let store = match flag_value(&args, "--db").map(PathBuf::from) {
+                Some(p) => QorStore::open(&p)?,
+                None => QorStore::in_memory(),
+            };
+            let daemon = Daemon::new(dev.clone(), store, sopts);
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let metrics = serve_lines(daemon, stdin.lock(), &mut stdout.lock())?;
+            if let Some(path) = &trace_path {
+                let (events, dropped) = prometheus::obs::stop_trace();
+                prometheus::obs::write_chrome_trace(path, &events, dropped)?;
+                eprintln!(
+                    "wrote Chrome trace ({} events) to {}",
+                    events.len(),
+                    path.display()
+                );
+            }
+            if metrics.failed > 0 {
+                return Err(anyhow!(
+                    "{} request(s) failed (see the response stream)",
+                    metrics.failed
                 ));
             }
         }
@@ -727,6 +781,15 @@ fn run() -> Result<()> {
                  \x20                                      requests and intra-solve workers);\n\
                  \x20                                      prints a service-metrics table and fails\n\
                  \x20                                      the exit code if any request failed\n\
+                 \x20 serve [--db FILE] [--workers N] [--jobs N] [--queue N] [--quick]\n\
+                 \x20       [--metrics-every N] [--trace FILE]\n\
+                 \x20                                      persistent optimization daemon: NDJSON\n\
+                 \x20                                      requests on stdin ({{\"kernel\":\"gemm\",\n\
+                 \x20                                      \"scenario\":\"onboard:3:0.6\"}}), one JSON\n\
+                 \x20                                      response line per request on stdout,\n\
+                 \x20                                      metrics tables on stderr; dedups identical\n\
+                 \x20                                      in-flight requests, answers repeats from\n\
+                 \x20                                      the store, sheds load when the queue fills\n\
                  \x20 lint [<kernel>|all] [--onboard N --frac F] [--full] [--jobs N] [--fixed-fusion]\n\
                  \x20                                      solve, then independently re-verify the\n\
                  \x20                                      winning design: dependences, FIFO\n\

@@ -307,6 +307,21 @@ pub fn write_chrome_trace(
     std::fs::write(path, chrome_trace_json(events, dropped))
 }
 
+// ---- latency summaries -------------------------------------------------
+
+/// Nearest-rank percentile over an **ascending-sorted** sample slice
+/// (microseconds in the serve metrics, but unit-agnostic). `pct` in
+/// `[0, 100]`; an empty slice yields 0. Nearest-rank (ceil(p/100·N)-th
+/// order statistic) rather than interpolation: every reported value is
+/// a latency that actually occurred.
+pub fn percentile(sorted: &[u64], pct: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((pct / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 // ---- structured solve telemetry ----------------------------------------
 
 /// Counter block for one fusion variant of one solve.
@@ -761,6 +776,20 @@ impl SolveCounters {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0);
+        assert_eq!(percentile(&[7], 50.0), 7);
+        assert_eq!(percentile(&[7], 99.0), 7);
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 50.0), 50);
+        assert_eq!(percentile(&s, 99.0), 99);
+        assert_eq!(percentile(&s, 100.0), 100);
+        assert_eq!(percentile(&s, 0.0), 1);
+        assert_eq!(percentile(&[10, 20, 30], 50.0), 20);
+        assert_eq!(percentile(&[10, 20, 30], 99.0), 30);
+    }
 
     #[test]
     fn disabled_counters_freeze_to_default() {

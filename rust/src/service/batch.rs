@@ -5,8 +5,8 @@
 //! production-shaped traffic:
 //!
 //! 1. **cache lookup** — every request is canonicalized to a
-//!    [`DesignKey`]; exact hits are answered from the [`QorDb`] without
-//!    touching the solver;
+//!    [`DesignKey`]; exact hits are answered from the
+//!    [`QorStore`](super::store::QorStore) without touching the solver;
 //! 2. **deduplication** — identical in-flight requests collapse to one
 //!    solve (a batch of `N` equal requests costs one solve, not `N`);
 //! 3. **parallel fan-out** — the remaining unique misses are solved on a
@@ -23,12 +23,20 @@
 //!    the space, so parallel batch jobs skip both re-fusion and the
 //!    configuration-independent re-resolution;
 //! 4. **warm start** — each miss seeds the solver with the best related
-//!    record ([`QorDb::incumbent_for`]), so even cold-ish solves prune
-//!    against a known-good bound;
+//!    record ([`QorStore::incumbent_for_space`]), so even cold-ish
+//!    solves prune against a known-good bound;
 //! 5. **aggregate QoR report** — results render as a paper-shaped table
 //!    through [`crate::report::Table`].
+//!
+//! Since the concurrent store landed, workers write each completed
+//! solve straight into the [`QorStore`] (fsync'd append) instead of
+//! handing records back for a caller-side whole-file save: a batch
+//! interrupted halfway keeps every solve it finished, and two batches
+//! against the same store file cannot lose each other's updates the
+//! way the legacy load → merge → `QorDb::save` cycle could.
 
-use super::qor_db::{DesignKey, QorDb, QorRecord};
+use super::qor_db::{DesignKey, QorRecord};
+use super::store::QorStore;
 use crate::dse::config::ExecutionModel;
 use crate::dse::eval::FusionSpace;
 use crate::dse::solver::{solve_space, Scenario, SolverOptions};
@@ -311,18 +319,20 @@ impl BatchReport {
     }
 }
 
-/// What one worker produced for one unique miss.
+/// What one worker produced for one unique miss. The record itself is
+/// already in the store (inserted, durably, by the worker); this
+/// carries only the reporting metadata.
 struct SolvedJob {
     canonical: String,
-    record: QorRecord,
     warm: bool,
     solve_time: Duration,
     /// Batch-start → worker-pickup wall time for this miss.
     queue_time: Duration,
 }
 
-/// Best-effort text of a worker panic payload.
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// Best-effort text of a worker panic payload (shared with the serve
+/// daemon's workers).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -333,8 +343,10 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Run `requests` against the knowledge base, solving misses in
-/// parallel. New results are inserted into `db` (the caller decides
-/// when/where to persist it). Request order is preserved in the report.
+/// parallel. Each completed solve is inserted into `store` *by the
+/// worker that produced it* — durably (fsync'd append) when the store
+/// is file-backed, so an interrupted batch keeps every finished solve.
+/// Request order is preserved in the report.
 ///
 /// A failed solve (infeasible budget, solver panic) fails *that
 /// request* — it lands in the report as [`Source::Failed`] with the
@@ -344,7 +356,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 pub fn run_batch(
     requests: &[BatchRequest],
     dev: &Device,
-    db: &mut QorDb,
+    store: &QorStore,
     opts: &BatchOptions,
 ) -> Result<BatchReport> {
     let t0 = Instant::now();
@@ -375,7 +387,7 @@ pub fn run_batch(
     let mut sources: Vec<Source> = Vec::with_capacity(requests.len());
     let mut job_requests: Vec<usize> = Vec::new(); // request index per unique miss
     for (i, key) in canon.iter().enumerate() {
-        let cached_valid = db.get_canonical(key).map(|rec| {
+        let cached_valid = store.get_canonical(key).map(|rec| {
             let ctx = &ctxs[&requests[i].kernel];
             // the record is judged against its *own* fusion variant; a
             // partition that is no longer in the kernel's legal space
@@ -390,7 +402,7 @@ pub fn run_batch(
             .is_some()
         });
         if cached_valid == Some(false) {
-            db.remove_canonical(key);
+            store.remove_canonical(key)?;
         }
         if cached_valid == Some(true) {
             sources.push(Source::Cache);
@@ -402,19 +414,20 @@ pub fn run_batch(
         }
     }
 
-    // Warm-start incumbents resolved on this thread (the db is not
-    // shared with workers), restricted to designs whose fusion plan is
-    // in the request kernel's solve space so a compatible record is
-    // never shadowed by an incompatible faster one.
+    // Warm-start incumbents resolved up front (one consistent view per
+    // miss), restricted to designs whose fusion plan is in the request
+    // kernel's solve space so a compatible record is never shadowed by
+    // an incompatible faster one.
     let incumbents: Vec<Option<crate::dse::config::DesignConfig>> = job_requests
         .iter()
         .map(|&ri| {
             let r = &requests[ri];
             let space = &ctxs[&r.kernel].space;
-            db.incumbent_for_space(&r.kernel, r.model, r.overlap, |p| {
-                space.variant_of(p).is_some()
-            })
-            .map(|rec| rec.design.clone())
+            store
+                .incumbent_for_space(&r.kernel, r.model, r.overlap, |p| {
+                    space.variant_of(p).is_some()
+                })
+                .map(|rec| rec.design)
         })
         .collect();
 
@@ -473,9 +486,15 @@ pub fn run_batch(
                         req.scenario,
                         dev,
                     );
+                    // Durable the moment the solve completes: a batch
+                    // killed after this line keeps this answer. The
+                    // store's never-worse merge makes concurrent
+                    // writers safe; an append error fails the request.
+                    store
+                        .insert_canonical(&canon[job_requests[j]], record)
+                        .map_err(|e| format!("storing result: {e:#}"))?;
                     Ok(SolvedJob {
                         canonical: canon[job_requests[j]].clone(),
-                        record,
                         warm: r.warm_started,
                         solve_time: r.solve_time,
                         queue_time,
@@ -489,10 +508,10 @@ pub fn run_batch(
             }
         });
 
-    // Fold results back into the knowledge base (completed solves
-    // first, so they survive even when some requests failed). A failure
-    // is recorded per canonical key — every request that maps onto it,
-    // dedup riders included, got no answer.
+    // Fold the reporting metadata (the records themselves were already
+    // inserted, durably, by the workers). A failure is recorded per
+    // canonical key — every request that maps onto it, dedup riders
+    // included, got no answer.
     let mut solve_times: std::collections::BTreeMap<String, (Duration, Duration, bool)> =
         std::collections::BTreeMap::new();
     let mut failed_keys: std::collections::BTreeMap<String, String> =
@@ -500,9 +519,7 @@ pub fn run_batch(
     for (outcome, &ri) in results.into_iter().zip(&job_requests) {
         match outcome {
             Ok(job) => {
-                solve_times
-                    .insert(job.canonical.clone(), (job.solve_time, job.queue_time, job.warm));
-                db.insert_canonical(job.canonical, job.record);
+                solve_times.insert(job.canonical, (job.solve_time, job.queue_time, job.warm));
             }
             Err(msg) => {
                 failed_keys.insert(canon[ri].clone(), msg);
@@ -528,9 +545,9 @@ pub fn run_batch(
             });
             continue;
         }
-        let rec = db
+        let rec = store
             .get_canonical(&canon[i])
-            .ok_or_else(|| anyhow!("request `{}` missing from db after batch", req.kernel))?;
+            .ok_or_else(|| anyhow!("request `{}` missing from store after batch", req.kernel))?;
         let (source, solve_time, queue_time) = match sources[i] {
             Source::Cache => {
                 cache_hits += 1;
@@ -631,10 +648,10 @@ mod tests {
     #[test]
     fn unknown_kernel_fails_fast() {
         let reqs = vec![BatchRequest::new("not-a-kernel", Scenario::Rtl)];
-        let mut db = QorDb::new();
-        let err = run_batch(&reqs, &Device::u55c(), &mut db, &BatchOptions::default());
+        let store = QorStore::in_memory();
+        let err = run_batch(&reqs, &Device::u55c(), &store, &BatchOptions::default());
         assert!(err.is_err());
-        assert!(db.is_empty(), "failed batch must not pollute the db");
+        assert!(store.is_empty(), "failed batch must not pollute the store");
     }
 
     #[test]
@@ -658,8 +675,8 @@ mod tests {
             // and still return `Ok` with the failure in the report
             BatchRequest::new("madd", Scenario::OnBoard { slrs: 1, frac: 1e-6 }),
         ];
-        let mut db = QorDb::new();
-        let rep = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+        let store = QorStore::in_memory();
+        let rep = run_batch(&reqs, &dev, &store, &opts).unwrap();
         assert_eq!(rep.failed, 1);
         assert_eq!(rep.solved, 1);
         assert_eq!(rep.outcomes[1].source, Source::Failed);
@@ -671,7 +688,7 @@ mod tests {
         assert!(rep.summary().contains("1 failed"), "{}", rep.summary());
         assert!(rep.metrics().contains("failed"), "{}", rep.metrics());
         // the feasible request's solve survived into the knowledge base
-        assert_eq!(db.len(), 1);
+        assert_eq!(store.len(), 1);
     }
 
     #[test]
@@ -692,15 +709,15 @@ mod tests {
             BatchRequest::new("madd", Scenario::Rtl),
             BatchRequest::new("madd", Scenario::Rtl),
         ];
-        let mut db = QorDb::new();
-        let rep = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+        let store = QorStore::in_memory();
+        let rep = run_batch(&reqs, &dev, &store, &opts).unwrap();
         assert_eq!(rep.solved, 1, "identical requests must collapse to one solve");
         assert_eq!(rep.deduped, 1);
         assert_eq!(rep.cache_hits, 0);
-        assert_eq!(db.len(), 1);
+        assert_eq!(store.len(), 1);
         assert_eq!(rep.outcomes[0].latency_cycles, rep.outcomes[1].latency_cycles);
 
-        let rep2 = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+        let rep2 = run_batch(&reqs, &dev, &store, &opts).unwrap();
         assert_eq!(rep2.solved, 0, "second run must be all cache hits");
         assert_eq!(rep2.cache_hits, 2);
         let table = rep2.render();

@@ -3,27 +3,40 @@
 //!
 //! The paper's Prometheus flow optimizes a single kernel per invocation
 //! and re-runs the full branch-and-bound every time. This module turns
-//! that into a batch-optimization service in the CollectiveHLS /
+//! that into a persistent optimization service in the CollectiveHLS /
 //! AutoDSE-amortization mold:
 //!
-//! * [`qor_db`] — a persistent **QoR knowledge base**: winning
+//! * [`qor_db`] — the **QoR knowledge base** schema: winning
 //!   [`crate::dse::DesignConfig`]s plus their quality-of-result metrics,
 //!   keyed by a canonical [`qor_db::DesignKey`] (kernel × device ×
-//!   scenario × execution model × solver knobs), JSON-persisted with a
-//!   versioned on-disk format. Repeat queries skip the solver entirely;
+//!   scenario × execution model × solver knobs), with a versioned
+//!   on-disk record format. Repeat queries skip the solver entirely;
 //!   related queries warm-start it (`SolverOptions::incumbent`).
+//! * [`store`] — the **concurrent, durable store** for that schema: a
+//!   sharded in-memory index over an append-only, fsync'd record log
+//!   with crash-safe replay and background compaction. Many threads
+//!   insert records concurrently without lost updates (the legacy
+//!   whole-file `QorDb::save` is read-modify-write and racy).
 //! * [`batch`] — a **parallel batch orchestrator**: fans a request set
 //!   (kernel × scenario × model) out over a worker pool, deduplicates
-//!   identical in-flight requests, consults the knowledge base before
-//!   solving, and renders an aggregate QoR report through
-//!   [`crate::report`].
+//!   identical in-flight requests, consults the store before solving,
+//!   and renders an aggregate QoR report through [`crate::report`].
+//! * [`serve`] — the **long-running daemon**: a bounded admission
+//!   queue feeding a worker pool, cross-request in-flight dedup,
+//!   process-lifetime warm state (fusion spaces, geometry caches,
+//!   store incumbents), and periodic metrics — driven over
+//!   newline-delimited JSON by `prometheus serve`.
 //!
-//! The CLI exposes this as `prometheus batch` (and `prometheus optimize
-//! --db`); `benches/service_batch.rs` measures cold vs. warm batch
-//! throughput.
+//! The CLI exposes this as `prometheus batch`, `prometheus serve` (and
+//! `prometheus optimize --db`); `benches/service_batch.rs` measures
+//! cold vs. warm batch throughput.
 
 pub mod batch;
 pub mod qor_db;
+pub mod serve;
+pub mod store;
 
 pub use batch::{run_batch, BatchOptions, BatchReport, BatchRequest};
 pub use qor_db::{DesignKey, QorDb, QorRecord};
+pub use serve::{serve_lines, Daemon, ServeMetrics, ServeOptions, SubmitError, Ticket};
+pub use store::QorStore;

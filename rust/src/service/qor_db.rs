@@ -388,17 +388,29 @@ impl QorDb {
 
     /// Load from `path`. Missing, corrupt, or wrong-version files yield
     /// an empty database — the cache simply refills.
+    ///
+    /// Reads **both** on-disk layouts: the legacy whole-file JSON this
+    /// module writes and the append-only log layout of
+    /// [`super::store::QorStore`] (replayed read-only — the file is
+    /// never modified, torn tail or not). The `db` subcommand and every
+    /// other read-only consumer therefore work unchanged against either
+    /// format.
     pub fn load(path: &Path) -> QorDb {
-        let Ok(text) = std::fs::read_to_string(path) else {
+        let Ok(bytes) = std::fs::read(path) else {
             return QorDb::new();
         };
-        match serde::parse(&text).and_then(|v| QorDb::from_value(&v)) {
-            Ok(db) => db,
-            Err(_) => QorDb::new(),
-        }
+        super::store::read_any_layout(&bytes).unwrap_or_default()
     }
 
     /// Persist to `path` (pretty JSON, atomic via a sibling temp file).
+    ///
+    /// **Legacy writer** — whole-file save is last-writer-wins: two
+    /// writers that load, mutate, and save will silently drop each
+    /// other's records. Every concurrent path (daemon, batch) writes
+    /// through [`super::store::QorStore`] instead, whose append-only
+    /// log has no such hazard; this method remains for single-writer
+    /// tools and tests, and *refuses* to overwrite a log-layout store
+    /// (that would downgrade it back onto the hazard).
     ///
     /// Never clobbers a file that [`QorDb::load`] could not have read:
     /// `load` maps corrupt or newer-format files to an empty database,
@@ -411,8 +423,18 @@ impl QorDb {
                     .with_context(|| format!("creating {}", parent.display()))?;
             }
         }
-        if let Ok(existing) = std::fs::read_to_string(path) {
-            let readable = serde::parse(&existing).and_then(|v| QorDb::from_value(&v)).is_ok();
+        if let Ok(existing) = std::fs::read(path) {
+            if super::store::is_log_layout(&existing) {
+                anyhow::bail!(
+                    "{} is an append-only QoR store (log layout); refusing to overwrite it \
+                     with the legacy whole-file format — open it with QorStore instead",
+                    path.display()
+                );
+            }
+            let readable = std::str::from_utf8(&existing)
+                .ok()
+                .and_then(|t| serde::parse(t).and_then(|v| QorDb::from_value(&v)).ok())
+                .is_some();
             if !readable {
                 let bak = sibling(path, ".bak");
                 std::fs::rename(path, &bak)
@@ -434,8 +456,9 @@ impl QorDb {
 
 /// `<path>.suffix` with the *full* file name kept (unlike
 /// `Path::with_extension`, which would make `a.db` and `a.json` collide
-/// on the same sibling).
-fn sibling(path: &Path, suffix: &str) -> std::path::PathBuf {
+/// on the same sibling). Shared with [`super::store`] for its
+/// `.compact` temp files and `.bak` evictions.
+pub(crate) fn sibling(path: &Path, suffix: &str) -> std::path::PathBuf {
     let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
     name.push(suffix);
     path.with_file_name(name)

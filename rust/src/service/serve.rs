@@ -1,0 +1,1023 @@
+//! `prometheus serve`: the long-running optimization daemon.
+#![deny(missing_docs)]
+//!
+//! Where [`super::batch`] answers one fixed request set and exits, the
+//! daemon accepts a *stream* of requests for the lifetime of the
+//! process and amortizes everything it learns across them:
+//!
+//! * **bounded admission queue** — requests pass through a
+//!   fixed-capacity queue consumed by a worker pool; a full queue
+//!   *rejects* the request with a structured [`SubmitError::QueueFull`]
+//!   (shed, don't stall — the client can retry; an unbounded queue
+//!   would hide overload until memory ran out);
+//! * **cross-request in-flight dedup** — a request for a `DesignKey`
+//!   that is already solving joins the in-flight solve's waiters and
+//!   receives the *identical* answer (same [`QorRecord`], bit-identical
+//!   design) instead of re-solving;
+//! * **persistent warm state** — per-kernel fusion spaces with their
+//!   geometry caches ([`crate::dse::eval::FusionSpace`]) are built once
+//!   and kept for the process lifetime, and every solve warm-starts
+//!   from the best compatible record in the [`QorStore`];
+//! * **durable results** — every completed solve is appended (fsync'd)
+//!   to the store before its waiters are released;
+//! * **metrics** — req/s, queue depth, p50/p99 queue and solve
+//!   latency, and db-hit/dedup/warm-start rates, built on the same
+//!   [`crate::obs`] spans/counters as the rest of the system (visible
+//!   in `--trace` output).
+//!
+//! Request lifecycle: `submit` → store hit? → in-flight dedup? →
+//! admission queue → worker solve (warm-started) → store append →
+//! waiters released → metrics. The transport ([`serve_lines`]) is a
+//! newline-delimited-JSON loop over any `BufRead`/`Write` pair — the
+//! CLI wires it to stdin/stdout, so `prometheus serve` composes with
+//! pipes, sockets via `nc`/`socat`, and the smoke test alike.
+
+use super::batch::{panic_message, BatchRequest, Source};
+use super::qor_db::QorRecord;
+use super::store::QorStore;
+use crate::dse::config::{DesignConfig, ExecutionModel};
+use crate::dse::eval::FusionSpace;
+use crate::dse::solver::{solve_space, usable_variant_in_space, Scenario, SolverOptions};
+use crate::hw::Device;
+use crate::ir::polybench;
+use crate::ir::Kernel;
+use crate::obs::ArgVal;
+use crate::report::Table;
+use anyhow::{anyhow, bail, Context, Result};
+use serde::Value;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Base solver knobs; each request overrides scenario/model/overlap
+    /// (and, with the solver's determinism contract, `jobs` never
+    /// changes an answer).
+    pub solver: SolverOptions,
+    /// Queue-consumer worker threads (concurrent solves). `0` is legal
+    /// and means nothing is ever solved — submissions queue until
+    /// shutdown fails them; the admission-control tests use this to
+    /// fill the queue deterministically.
+    pub workers: usize,
+    /// Total core budget, split evenly across workers into each
+    /// solve's own `SolverOptions::jobs`.
+    pub jobs: usize,
+    /// Admission queue capacity; a submit beyond it is rejected with
+    /// [`SubmitError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Emit a metrics report to stderr every N responses in
+    /// [`serve_lines`] (0 = only the final report).
+    pub metrics_every: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            solver: SolverOptions::default(),
+            workers: 2,
+            jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            queue_capacity: 64,
+            metrics_every: 16,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Worker threads each solve runs on (the per-solve share of the
+    /// core budget).
+    fn intra_jobs(&self) -> usize {
+        (self.jobs.max(1) / self.workers.max(1)).max(1)
+    }
+}
+
+/// Why a submission was not accepted. Structured (not a string) so
+/// transports can map each case to a distinct client-visible status.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The request names a kernel the zoo does not have.
+    UnknownKernel(String),
+    /// The admission queue is at capacity: the daemon sheds the
+    /// request instead of blocking the submitter. Retry later.
+    QueueFull {
+        /// Configured queue capacity.
+        capacity: usize,
+        /// Queue depth observed at rejection (== capacity).
+        depth: usize,
+    },
+    /// The daemon is shutting down and accepts no new work.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownKernel(k) => write!(f, "unknown kernel `{k}`"),
+            SubmitError::QueueFull { capacity, depth } => {
+                write!(f, "admission queue full (capacity {capacity}, depth {depth})")
+            }
+            SubmitError::ShuttingDown => write!(f, "daemon is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Per-kernel state kept warm for the process lifetime: the kernel and
+/// its full fusion space (every legal variant's fused graph + geometry
+/// cache). Built on first request for the kernel, then shared
+/// read-only by every subsequent solve.
+struct KernelCtx {
+    kernel: Kernel,
+    space: FusionSpace,
+}
+
+/// What one solve produced, shared verbatim (same allocation) with
+/// every deduped waiter — bit-identical answers by construction.
+struct Solved {
+    record: QorRecord,
+    warm: bool,
+    solve_time: Duration,
+    queue_time: Duration,
+}
+
+type Answer = Result<Arc<Solved>, String>;
+
+/// Rendezvous between one in-flight solve and its waiters.
+struct InFlight {
+    slot: Mutex<Option<Answer>>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    fn new() -> InFlight {
+        InFlight { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+}
+
+/// One queued unit of work.
+struct Job {
+    key: String,
+    request: BatchRequest,
+    inflight: Arc<InFlight>,
+    enqueued: Instant,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+#[derive(Default)]
+struct MetricsState {
+    received: AtomicU64,
+    cache_hits: AtomicU64,
+    deduped: AtomicU64,
+    solved: AtomicU64,
+    warm_solves: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    queue_us: Mutex<Vec<u64>>,
+    solve_us: Mutex<Vec<u64>>,
+    /// Solves *started* per canonical key — the dedup oracle: a key
+    /// never has two concurrent solves, so under a burst of identical
+    /// requests this stays at 1.
+    per_key_solves: Mutex<BTreeMap<String, u64>>,
+}
+
+struct ServeState {
+    dev: Device,
+    opts: ServeOptions,
+    store: QorStore,
+    ctxs: Mutex<BTreeMap<String, Arc<KernelCtx>>>,
+    inflight: Mutex<BTreeMap<String, Arc<InFlight>>>,
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    metrics: MetricsState,
+    started: Instant,
+}
+
+/// The daemon: worker pool + shared state. Create with [`Daemon::new`],
+/// feed it with [`Daemon::submit`], stop it with [`Daemon::shutdown`].
+pub struct Daemon {
+    state: Arc<ServeState>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// A claim on a submitted request's eventual answer.
+///
+/// Cache hits are born ready; queued and deduped submissions become
+/// ready when the (shared) solve finishes. [`Ticket::wait`] blocks;
+/// [`Ticket::ready`] polls.
+pub struct Ticket {
+    request: BatchRequest,
+    key: String,
+    kind: TicketKind,
+}
+
+enum TicketKind {
+    Ready(Box<ServeOutcome>),
+    Waiter { inflight: Arc<InFlight>, rider: bool },
+}
+
+impl Ticket {
+    /// Canonical `DesignKey` string the request mapped to.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Whether [`Ticket::wait`] would return without blocking.
+    pub fn ready(&self) -> bool {
+        match &self.kind {
+            TicketKind::Ready(_) => true,
+            TicketKind::Waiter { inflight, .. } => inflight.slot.lock().unwrap().is_some(),
+        }
+    }
+
+    /// Block until the answer is available and return it. Idempotent —
+    /// deduped waiters all receive clones of the same shared record.
+    pub fn wait(&self) -> ServeOutcome {
+        let (inflight, rider) = match &self.kind {
+            TicketKind::Ready(o) => return (**o).clone(),
+            TicketKind::Waiter { inflight, rider } => (inflight, *rider),
+        };
+        let mut slot = inflight.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = inflight.cv.wait(slot).unwrap();
+        }
+        match slot.as_ref().expect("slot filled") {
+            Ok(s) => ServeOutcome {
+                request: self.request.clone(),
+                key: self.key.clone(),
+                source: if rider {
+                    Source::Deduped
+                } else if s.warm {
+                    Source::WarmSolve
+                } else {
+                    Source::ColdSolve
+                },
+                gflops: s.record.gflops,
+                latency_cycles: s.record.latency_cycles,
+                solve_time: if rider { Duration::ZERO } else { s.solve_time },
+                queue_time: if rider { Duration::ZERO } else { s.queue_time },
+                design: Some(s.record.design.clone()),
+                error: None,
+            },
+            Err(msg) => ServeOutcome {
+                request: self.request.clone(),
+                key: self.key.clone(),
+                source: Source::Failed,
+                gflops: 0.0,
+                latency_cycles: 0,
+                solve_time: Duration::ZERO,
+                queue_time: Duration::ZERO,
+                design: None,
+                error: Some(msg.clone()),
+            },
+        }
+    }
+}
+
+/// One answered request.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// The request as submitted.
+    pub request: BatchRequest,
+    /// Canonical `DesignKey` string.
+    pub key: String,
+    /// How the request was answered (same taxonomy as batch).
+    pub source: Source,
+    /// Scenario-consistent GF/s (0 on failure).
+    pub gflops: f64,
+    /// Simulated latency in cycles (0 on failure).
+    pub latency_cycles: u64,
+    /// Solve wall time (zero for cache/dedup answers).
+    pub solve_time: Duration,
+    /// Enqueue → worker-pickup wall time (zero for cache/dedup).
+    pub queue_time: Duration,
+    /// The winning design (deduped waiters see the bit-identical
+    /// design their primary's solve produced). `None` on failure.
+    pub design: Option<DesignConfig>,
+    /// Error text when `source` is [`Source::Failed`].
+    pub error: Option<String>,
+}
+
+impl Daemon {
+    /// Start the daemon: spawn `opts.workers` queue consumers over
+    /// `store`.
+    pub fn new(dev: Device, store: QorStore, opts: ServeOptions) -> Daemon {
+        let n = opts.workers;
+        let state = Arc::new(ServeState {
+            dev,
+            opts,
+            store,
+            ctxs: Mutex::new(BTreeMap::new()),
+            inflight: Mutex::new(BTreeMap::new()),
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            queue_cv: Condvar::new(),
+            metrics: MetricsState::default(),
+            started: Instant::now(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let st = Arc::clone(&state);
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&st))
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        Daemon { state, workers }
+    }
+
+    /// The daemon's store (e.g. to compact or snapshot it from the
+    /// transport layer).
+    pub fn store(&self) -> &QorStore {
+        &self.state.store
+    }
+
+    /// Submit one request. Non-blocking: a store hit returns a ready
+    /// [`Ticket`]; a key already in flight joins its waiters; otherwise
+    /// the request is enqueued — or rejected, never silently stalled,
+    /// when the queue is at capacity.
+    pub fn submit(&self, request: BatchRequest) -> Result<Ticket, SubmitError> {
+        submit(&self.state, request)
+    }
+
+    /// Point-in-time metrics snapshot.
+    pub fn metrics(&self) -> ServeMetrics {
+        snapshot(&self.state)
+    }
+
+    /// Stop accepting work, let the workers drain the queue, fail
+    /// whatever never ran (only possible with `workers == 0`), and
+    /// return the final metrics.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        {
+            let mut q = self.state.queue.lock().unwrap();
+            q.closed = true;
+        }
+        self.state.queue_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        let leftovers: Vec<Job> = {
+            let mut q = self.state.queue.lock().unwrap();
+            q.jobs.drain(..).collect()
+        };
+        for job in leftovers {
+            self.state.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            finish(&self.state, &job, Err("daemon shut down before the solve ran".to_string()));
+        }
+        snapshot(&self.state)
+    }
+}
+
+/// Look up (or build, once) the warm per-kernel context.
+fn ctx_for(state: &ServeState, name: &str) -> Result<Arc<KernelCtx>, SubmitError> {
+    if let Some(c) = state.ctxs.lock().unwrap().get(name) {
+        return Ok(Arc::clone(c));
+    }
+    let Some(kernel) = polybench::by_name(name) else {
+        return Err(SubmitError::UnknownKernel(name.to_string()));
+    };
+    // Built outside the lock (fusion-space construction is the
+    // expensive part); a racing builder is harmless — first insert
+    // wins and the loser's space is dropped.
+    let space = FusionSpace::for_solver(&kernel, state.opts.solver.explore_fusion);
+    let ctx = Arc::new(KernelCtx { kernel, space });
+    let mut ctxs = state.ctxs.lock().unwrap();
+    Ok(Arc::clone(ctxs.entry(name.to_string()).or_insert(ctx)))
+}
+
+fn submit(state: &Arc<ServeState>, request: BatchRequest) -> Result<Ticket, SubmitError> {
+    state.metrics.received.fetch_add(1, Ordering::Relaxed);
+    let ctx = ctx_for(state, &request.kernel)?;
+    let key = request.key(&state.dev, &state.opts.solver).canonical();
+
+    // Store hit, gated on the record still validating against the
+    // current zoo (same staleness rule as batch / the cached flow).
+    if let Some(rec) = state.store.get_canonical(&key) {
+        let valid = usable_variant_in_space(
+            &ctx.kernel,
+            &ctx.space,
+            &rec.design,
+            &state.dev,
+            request.scenario,
+        )
+        .is_some();
+        if valid {
+            state.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::instant(
+                "service",
+                "serve.cache_hit",
+                vec![("key".to_string(), ArgVal::Str(key.clone()))],
+            );
+            return Ok(ready_ticket(request, key, &rec, Source::Cache, None));
+        }
+        // Stale: evict with a tombstone before re-solving. No solve for
+        // this key can be in flight (it would have produced a valid
+        // record), so the tombstone cannot race an insert.
+        if let Err(e) = state.store.remove_canonical(&key) {
+            let err = format!("evicting stale record: {e:#}");
+            return Ok(failed_ticket(request, key, err));
+        }
+    }
+
+    let mut inflight = state.inflight.lock().unwrap();
+    if let Some(arc) = inflight.get(&key) {
+        state.metrics.deduped.fetch_add(1, Ordering::Relaxed);
+        crate::obs::instant(
+            "service",
+            "serve.dedup",
+            vec![("key".to_string(), ArgVal::Str(key.clone()))],
+        );
+        let inflight = Arc::clone(arc);
+        return Ok(Ticket { request, key, kind: TicketKind::Waiter { inflight, rider: true } });
+    }
+    // Re-check the store *under the in-flight lock*: a solve for this
+    // key may have finished between the lookup above and taking the
+    // lock. The worker inserts into the store before removing the
+    // in-flight entry, so one of the two checks must see it. A record
+    // found here was just produced by this process — no staleness gate
+    // needed.
+    if let Some(rec) = state.store.get_canonical(&key) {
+        state.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(ready_ticket(request, key, &rec, Source::Cache, None));
+    }
+
+    let mut q = state.queue.lock().unwrap();
+    if q.closed {
+        return Err(SubmitError::ShuttingDown);
+    }
+    if q.jobs.len() >= state.opts.queue_capacity {
+        state.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        crate::obs::instant(
+            "service",
+            "serve.reject",
+            vec![("depth".to_string(), ArgVal::Int(q.jobs.len() as i128))],
+        );
+        return Err(SubmitError::QueueFull {
+            capacity: state.opts.queue_capacity,
+            depth: q.jobs.len(),
+        });
+    }
+    let arc = Arc::new(InFlight::new());
+    inflight.insert(key.clone(), Arc::clone(&arc));
+    q.jobs.push_back(Job {
+        key: key.clone(),
+        request: request.clone(),
+        inflight: Arc::clone(&arc),
+        enqueued: Instant::now(),
+    });
+    drop(q);
+    drop(inflight);
+    state.queue_cv.notify_one();
+    Ok(Ticket { request, key, kind: TicketKind::Waiter { inflight: arc, rider: false } })
+}
+
+fn ready_ticket(
+    request: BatchRequest,
+    key: String,
+    rec: &QorRecord,
+    source: Source,
+    error: Option<String>,
+) -> Ticket {
+    let outcome = ServeOutcome {
+        request: request.clone(),
+        key: key.clone(),
+        source,
+        gflops: rec.gflops,
+        latency_cycles: rec.latency_cycles,
+        solve_time: Duration::ZERO,
+        queue_time: Duration::ZERO,
+        design: Some(rec.design.clone()),
+        error,
+    };
+    Ticket { request, key, kind: TicketKind::Ready(Box::new(outcome)) }
+}
+
+fn failed_ticket(request: BatchRequest, key: String, error: String) -> Ticket {
+    let outcome = ServeOutcome {
+        request: request.clone(),
+        key: key.clone(),
+        source: Source::Failed,
+        gflops: 0.0,
+        latency_cycles: 0,
+        solve_time: Duration::ZERO,
+        queue_time: Duration::ZERO,
+        design: None,
+        error: Some(error),
+    };
+    Ticket { request, key, kind: TicketKind::Ready(Box::new(outcome)) }
+}
+
+fn worker_loop(state: &ServeState) {
+    loop {
+        let job = {
+            let mut q = state.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.closed {
+                    return;
+                }
+                q = state.queue_cv.wait(q).unwrap();
+            }
+        };
+        process_job(state, job);
+    }
+}
+
+fn process_job(state: &ServeState, job: Job) {
+    let queue_time = job.enqueued.elapsed();
+    push_sample(&state.metrics.queue_us, queue_time);
+    {
+        let mut per = state.metrics.per_key_solves.lock().unwrap();
+        *per.entry(job.key.clone()).or_insert(0) += 1;
+    }
+    let span = crate::obs::span("service", "serve.solve").map(|s| {
+        s.arg("kernel", ArgVal::Str(job.request.kernel.clone()))
+            .arg("scenario", ArgVal::Str(job.request.scenario.to_string()))
+            .arg("queue_us", ArgVal::Int(queue_time.as_micros() as i128))
+    });
+    let answer = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        solve_job(state, &job, queue_time)
+    }));
+    drop(span);
+    let answer: Answer = match answer {
+        Ok(a) => a,
+        Err(p) => Err(panic_message(&p)),
+    };
+    match &answer {
+        Ok(s) => {
+            state.metrics.solved.fetch_add(1, Ordering::Relaxed);
+            if s.warm {
+                state.metrics.warm_solves.fetch_add(1, Ordering::Relaxed);
+            }
+            push_sample(&state.metrics.solve_us, s.solve_time);
+        }
+        Err(_) => {
+            state.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    finish(state, &job, answer);
+}
+
+fn solve_job(state: &ServeState, job: &Job, queue_time: Duration) -> Answer {
+    let ctx = ctx_for(state, &job.request.kernel).map_err(|e| e.to_string())?;
+    let mut sopts = job.request.solver_options(&state.opts.solver);
+    sopts.incumbent = state
+        .store
+        .incumbent_for_space(&job.request.kernel, job.request.model, job.request.overlap, |p| {
+            ctx.space.variant_of(p).is_some()
+        })
+        .map(|rec| rec.design);
+    sopts.jobs = state.opts.intra_jobs();
+    let r = solve_space(&ctx.kernel, &ctx.space, &state.dev, &sopts).map_err(|e| e.to_string())?;
+    let win = ctx
+        .space
+        .variant_of(&r.design.fusion)
+        .expect("winning design realizes a space variant");
+    let v = &ctx.space.variants[win];
+    let record = QorRecord::from_solve_with_cache(
+        &ctx.kernel,
+        &v.fg,
+        &v.cache,
+        &r,
+        job.request.scenario,
+        &state.dev,
+    );
+    // Durable before any waiter is released: append + fsync, then
+    // publish. A daemon killed after this line answers the same key
+    // from the store on restart.
+    state
+        .store
+        .insert_canonical(&job.key, record.clone())
+        .map_err(|e| format!("storing result: {e:#}"))?;
+    Ok(Arc::new(Solved { record, warm: r.warm_started, solve_time: r.solve_time, queue_time }))
+}
+
+/// Publish `answer` to the job's waiters. Order matters: the store
+/// insert already happened (success path), so the in-flight entry is
+/// removed *after* it — a racing submit sees the record or the entry,
+/// never neither.
+fn finish(state: &ServeState, job: &Job, answer: Answer) {
+    state.inflight.lock().unwrap().remove(&job.key);
+    let mut slot = job.inflight.slot.lock().unwrap();
+    *slot = Some(answer);
+    job.inflight.cv.notify_all();
+}
+
+fn push_sample(samples: &Mutex<Vec<u64>>, d: Duration) {
+    samples.lock().unwrap().push(d.as_micros() as u64);
+}
+
+// ---- metrics -----------------------------------------------------------
+
+/// Point-in-time daemon metrics.
+#[derive(Debug, Clone)]
+pub struct ServeMetrics {
+    /// Requests submitted (accepted or not).
+    pub received: u64,
+    /// Answered from the store without solving.
+    pub cache_hits: u64,
+    /// Joined an in-flight solve's waiters.
+    pub deduped: u64,
+    /// Solves completed.
+    pub solved: u64,
+    /// Completed solves that were warm-started.
+    pub warm_solves: u64,
+    /// Solves that failed (plus jobs failed at shutdown).
+    pub failed: u64,
+    /// Submissions rejected by admission control.
+    pub rejected: u64,
+    /// Jobs waiting in the queue right now.
+    pub queue_depth: usize,
+    /// Median enqueue → pickup latency.
+    pub p50_queue: Duration,
+    /// 99th-percentile enqueue → pickup latency.
+    pub p99_queue: Duration,
+    /// Median solve wall time.
+    pub p50_solve: Duration,
+    /// 99th-percentile solve wall time.
+    pub p99_solve: Duration,
+    /// Daemon uptime at snapshot.
+    pub elapsed: Duration,
+    /// Live records in the store.
+    pub store_records: usize,
+    /// Ops in the store's log file (`None` for in-memory stores).
+    pub store_log_ops: Option<u64>,
+    /// Log compactions since open.
+    pub store_compactions: u64,
+    /// Solves *started* per canonical key. The dedup oracle: in-flight
+    /// dedup guarantees at most one concurrent solve per key, so a
+    /// burst of identical requests leaves the key's count at 1.
+    pub per_key_solves: BTreeMap<String, u64>,
+}
+
+impl ServeMetrics {
+    /// Requests per second of uptime.
+    pub fn reqs_per_s(&self) -> f64 {
+        self.received as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Human-readable metrics table (the periodic stderr report).
+    pub fn render(&self) -> String {
+        let pct = |k: u64| format!("{:.1}%", 100.0 * k as f64 / self.received.max(1) as f64);
+        let mut t = Table::new(&["Serve metric", "Value"]);
+        t.row(vec!["uptime".into(), format!("{:.2?}", self.elapsed)]);
+        t.row(vec!["requests received".into(), self.received.to_string()]);
+        t.row(vec!["throughput".into(), format!("{:.2} req/s", self.reqs_per_s())]);
+        t.row(vec!["queue depth".into(), self.queue_depth.to_string()]);
+        t.row(vec![
+            "db hit rate".into(),
+            format!("{} ({})", self.cache_hits, pct(self.cache_hits)),
+        ]);
+        t.row(vec!["dedup rate".into(), format!("{} ({})", self.deduped, pct(self.deduped))]);
+        t.row(vec![
+            "warm-start rate".into(),
+            format!(
+                "{} of {} solves ({:.1}%)",
+                self.warm_solves,
+                self.solved,
+                100.0 * self.warm_solves as f64 / self.solved.max(1) as f64
+            ),
+        ]);
+        t.row(vec!["failed".into(), self.failed.to_string()]);
+        t.row(vec!["rejected (queue full)".into(), self.rejected.to_string()]);
+        t.row(vec![
+            "queue latency".into(),
+            format!("p50 {:.2?}, p99 {:.2?}", self.p50_queue, self.p99_queue),
+        ]);
+        t.row(vec![
+            "solve latency".into(),
+            format!("p50 {:.2?}, p99 {:.2?}", self.p50_solve, self.p99_solve),
+        ]);
+        let log = match self.store_log_ops {
+            Some(ops) => format!(
+                "{} records, {} log ops, {} compactions",
+                self.store_records, ops, self.store_compactions
+            ),
+            None => format!("{} records (in-memory)", self.store_records),
+        };
+        t.row(vec!["store".into(), log]);
+        t.render()
+    }
+
+    /// The snapshot as a JSON value (the `{"cmd":"metrics"}` response).
+    pub fn to_value(&self) -> Value {
+        let dur_ms = |d: Duration| Value::Float(d.as_secs_f64() * 1e3);
+        Value::Obj(vec![
+            ("received".to_string(), Value::Int(self.received as i128)),
+            ("cache_hits".to_string(), Value::Int(self.cache_hits as i128)),
+            ("deduped".to_string(), Value::Int(self.deduped as i128)),
+            ("solved".to_string(), Value::Int(self.solved as i128)),
+            ("warm_solves".to_string(), Value::Int(self.warm_solves as i128)),
+            ("failed".to_string(), Value::Int(self.failed as i128)),
+            ("rejected".to_string(), Value::Int(self.rejected as i128)),
+            ("queue_depth".to_string(), Value::Int(self.queue_depth as i128)),
+            ("reqs_per_s".to_string(), Value::Float(self.reqs_per_s())),
+            ("p50_queue_ms".to_string(), dur_ms(self.p50_queue)),
+            ("p99_queue_ms".to_string(), dur_ms(self.p99_queue)),
+            ("p50_solve_ms".to_string(), dur_ms(self.p50_solve)),
+            ("p99_solve_ms".to_string(), dur_ms(self.p99_solve)),
+            ("store_records".to_string(), Value::Int(self.store_records as i128)),
+        ])
+    }
+}
+
+fn snapshot(state: &ServeState) -> ServeMetrics {
+    let percentiles = |m: &Mutex<Vec<u64>>| {
+        let mut v = m.lock().unwrap().clone();
+        v.sort_unstable();
+        (
+            Duration::from_micros(crate::obs::percentile(&v, 50.0)),
+            Duration::from_micros(crate::obs::percentile(&v, 99.0)),
+        )
+    };
+    let (p50_queue, p99_queue) = percentiles(&state.metrics.queue_us);
+    let (p50_solve, p99_solve) = percentiles(&state.metrics.solve_us);
+    let m = ServeMetrics {
+        received: state.metrics.received.load(Ordering::Relaxed),
+        cache_hits: state.metrics.cache_hits.load(Ordering::Relaxed),
+        deduped: state.metrics.deduped.load(Ordering::Relaxed),
+        solved: state.metrics.solved.load(Ordering::Relaxed),
+        warm_solves: state.metrics.warm_solves.load(Ordering::Relaxed),
+        failed: state.metrics.failed.load(Ordering::Relaxed),
+        rejected: state.metrics.rejected.load(Ordering::Relaxed),
+        queue_depth: state.queue.lock().unwrap().jobs.len(),
+        p50_queue,
+        p99_queue,
+        p50_solve,
+        p99_solve,
+        elapsed: state.started.elapsed(),
+        store_records: state.store.len(),
+        store_log_ops: state.store.log_ops(),
+        store_compactions: state.store.compactions(),
+        per_key_solves: state.metrics.per_key_solves.lock().unwrap().clone(),
+    };
+    if crate::obs::trace_enabled() {
+        crate::obs::counter(
+            "service",
+            "serve.metrics",
+            vec![
+                ("received".to_string(), ArgVal::Int(m.received as i128)),
+                ("cache_hits".to_string(), ArgVal::Int(m.cache_hits as i128)),
+                ("deduped".to_string(), ArgVal::Int(m.deduped as i128)),
+                ("solved".to_string(), ArgVal::Int(m.solved as i128)),
+                ("queue_depth".to_string(), ArgVal::Int(m.queue_depth as i128)),
+                ("rejected".to_string(), ArgVal::Int(m.rejected as i128)),
+            ],
+        );
+    }
+    m
+}
+
+// ---- NDJSON transport --------------------------------------------------
+
+/// One parsed input line.
+enum Line {
+    Request(BatchRequest),
+    Metrics,
+    Shutdown,
+}
+
+/// Parse one NDJSON input line: a request object
+/// `{"kernel":"gemm","scenario":"onboard:3:0.6","model":"dataflow","overlap":true}`
+/// (scenario/model/overlap optional, defaulting to `rtl`/`dataflow`/
+/// `true`) or a command `{"cmd":"metrics"}` / `{"cmd":"shutdown"}`.
+fn parse_line(line: &str) -> Result<Line> {
+    let v = serde::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+    if let Some(cmd) = v.get("cmd") {
+        let cmd = cmd.as_str().ok_or_else(|| anyhow!("`cmd` must be a string"))?;
+        return match cmd {
+            "metrics" => Ok(Line::Metrics),
+            "shutdown" => Ok(Line::Shutdown),
+            other => bail!("unknown cmd `{other}` (expected `metrics` or `shutdown`)"),
+        };
+    }
+    let kernel = v
+        .field("kernel")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_str()
+        .ok_or_else(|| anyhow!("`kernel` must be a string"))?
+        .to_string();
+    let scenario = match v.get("scenario") {
+        Some(s) => super::batch::parse_scenario(
+            s.as_str().ok_or_else(|| anyhow!("`scenario` must be a string"))?,
+        )?,
+        None => Scenario::Rtl,
+    };
+    let model = match v.get("model") {
+        Some(s) => super::batch::parse_model(
+            s.as_str().ok_or_else(|| anyhow!("`model` must be a string"))?,
+        )?,
+        None => ExecutionModel::Dataflow,
+    };
+    let overlap = match v.get("overlap") {
+        Some(b) => b.as_bool().ok_or_else(|| anyhow!("`overlap` must be a bool"))?,
+        None => true,
+    };
+    Ok(Line::Request(BatchRequest { kernel, scenario, model, overlap }))
+}
+
+fn outcome_json(id: u64, o: &ServeOutcome) -> String {
+    let status = if o.source == Source::Failed { "failed" } else { "ok" };
+    let mut fields = vec![
+        ("id".to_string(), Value::Int(id as i128)),
+        ("kernel".to_string(), Value::Str(o.request.kernel.clone())),
+        ("scenario".to_string(), Value::Str(o.request.scenario.to_string())),
+        ("status".to_string(), Value::Str(status.to_string())),
+        ("source".to_string(), Value::Str(o.source.as_str().to_string())),
+    ];
+    if o.source == Source::Failed {
+        fields.push((
+            "error".to_string(),
+            Value::Str(o.error.clone().unwrap_or_else(|| "unknown error".to_string())),
+        ));
+    } else {
+        fields.push(("gflops".to_string(), Value::Float(o.gflops)));
+        fields.push(("latency_cycles".to_string(), Value::Int(o.latency_cycles as i128)));
+        fields.push((
+            "solve_ms".to_string(),
+            Value::Float(o.solve_time.as_secs_f64() * 1e3),
+        ));
+        fields.push((
+            "queue_ms".to_string(),
+            Value::Float(o.queue_time.as_secs_f64() * 1e3),
+        ));
+    }
+    serde::to_string(&Value::Obj(fields))
+}
+
+fn error_json(id: u64, kernel: Option<&str>, status: &str, error: &str) -> String {
+    let mut fields = vec![("id".to_string(), Value::Int(id as i128))];
+    if let Some(k) = kernel {
+        fields.push(("kernel".to_string(), Value::Str(k.to_string())));
+    }
+    fields.push(("status".to_string(), Value::Str(status.to_string())));
+    fields.push(("error".to_string(), Value::Str(error.to_string())));
+    serde::to_string(&Value::Obj(fields))
+}
+
+/// Answer every ticket at the front of `pending` that is already done
+/// (responses stay in submission order; solves still overlap freely
+/// behind the queue).
+fn drain_ready<W: Write>(
+    pending: &mut VecDeque<(u64, Ticket)>,
+    out: &mut W,
+    responded: &mut u64,
+) -> Result<()> {
+    while pending.front().is_some_and(|(_, t)| t.ready()) {
+        let (id, t) = pending.pop_front().expect("front checked");
+        let o = t.wait();
+        writeln!(out, "{}", outcome_json(id, &o)).context("writing response")?;
+        *responded += 1;
+    }
+    out.flush().context("flushing responses")
+}
+
+/// Drive a [`Daemon`] from a newline-delimited-JSON request stream.
+///
+/// Reads request lines from `input` (see [`parse_line`] for the
+/// format; blank lines and `#` comments are skipped), writes one JSON
+/// response line per request to `out` *in submission order*, emits a
+/// metrics table to stderr every `metrics_every` responses and at
+/// shutdown, and consumes the daemon on EOF or `{"cmd":"shutdown"}`.
+/// Rejected submissions (queue full, unknown kernel) and unparseable
+/// lines get immediate `"rejected"`/`"failed"` response lines; they
+/// never stall the stream.
+pub fn serve_lines<R: BufRead, W: Write>(
+    daemon: Daemon,
+    input: R,
+    out: &mut W,
+) -> Result<ServeMetrics> {
+    let metrics_every = daemon.state.opts.metrics_every as u64;
+    let mut pending: VecDeque<(u64, Ticket)> = VecDeque::new();
+    let mut next_id = 0u64;
+    let mut responded = 0u64;
+    let mut last_report = 0u64;
+    for line in input.lines() {
+        let line = line.context("reading request stream")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_line(line) {
+            Ok(Line::Shutdown) => break,
+            Ok(Line::Metrics) => {
+                drain_ready(&mut pending, out, &mut responded)?;
+                writeln!(out, "{}", serde::to_string(&daemon.metrics().to_value()))
+                    .context("writing metrics")?;
+                out.flush().context("flushing metrics")?;
+            }
+            Ok(Line::Request(req)) => {
+                let id = next_id;
+                next_id += 1;
+                match daemon.submit(req.clone()) {
+                    Ok(t) => pending.push_back((id, t)),
+                    Err(e) => {
+                        let status = match e {
+                            SubmitError::QueueFull { .. } => "rejected",
+                            _ => "failed",
+                        };
+                        writeln!(
+                            out,
+                            "{}",
+                            error_json(id, Some(&req.kernel), status, &e.to_string())
+                        )
+                        .context("writing rejection")?;
+                        out.flush().context("flushing rejection")?;
+                        responded += 1;
+                    }
+                }
+            }
+            Err(e) => {
+                let id = next_id;
+                next_id += 1;
+                writeln!(out, "{}", error_json(id, None, "failed", &format!("{e:#}")))
+                    .context("writing parse error")?;
+                out.flush().context("flushing parse error")?;
+                responded += 1;
+            }
+        }
+        drain_ready(&mut pending, out, &mut responded)?;
+        if metrics_every > 0 && responded.saturating_sub(last_report) >= metrics_every {
+            eprintln!("{}", daemon.metrics().render());
+            last_report = responded;
+        }
+    }
+    // EOF (or shutdown command): answer the backlog in order.
+    while let Some((id, t)) = pending.pop_front() {
+        let o = t.wait();
+        writeln!(out, "{}", outcome_json(id, &o)).context("writing response")?;
+        responded += 1;
+    }
+    out.flush().context("flushing responses")?;
+    let metrics = daemon.shutdown();
+    eprintln!("{}", metrics.render());
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_request_defaults() {
+        let Line::Request(r) = parse_line(r#"{"kernel":"gemm"}"#).unwrap() else {
+            panic!("expected a request");
+        };
+        assert_eq!(r.kernel, "gemm");
+        assert_eq!(r.scenario, Scenario::Rtl);
+        assert_eq!(r.model, ExecutionModel::Dataflow);
+        assert!(r.overlap);
+    }
+
+    #[test]
+    fn parse_line_full_request_and_cmds() {
+        let line =
+            r#"{"kernel":"bicg","scenario":"onboard:2:0.6","model":"sequential","overlap":false}"#;
+        let Line::Request(r) = parse_line(line).unwrap() else {
+            panic!("expected a request");
+        };
+        assert_eq!(r.scenario, Scenario::OnBoard { slrs: 2, frac: 0.6 });
+        assert_eq!(r.model, ExecutionModel::Sequential);
+        assert!(!r.overlap);
+        assert!(matches!(parse_line(r#"{"cmd":"metrics"}"#).unwrap(), Line::Metrics));
+        assert!(matches!(parse_line(r#"{"cmd":"shutdown"}"#).unwrap(), Line::Shutdown));
+        assert!(parse_line(r#"{"cmd":"reboot"}"#).is_err());
+        assert!(parse_line("not json").is_err());
+        assert!(parse_line(r#"{"scenario":"rtl"}"#).is_err(), "kernel is required");
+        assert!(parse_line(r#"{"kernel":"gemm","scenario":"mars"}"#).is_err());
+    }
+
+    #[test]
+    fn submit_error_display_is_structured() {
+        let e = SubmitError::QueueFull { capacity: 4, depth: 4 };
+        assert_eq!(e.to_string(), "admission queue full (capacity 4, depth 4)");
+        assert_eq!(
+            SubmitError::UnknownKernel("nope".into()).to_string(),
+            "unknown kernel `nope`"
+        );
+    }
+
+    #[test]
+    fn unknown_kernel_is_rejected_at_submit() {
+        let daemon = Daemon::new(
+            Device::u55c(),
+            QorStore::in_memory(),
+            ServeOptions { workers: 0, ..ServeOptions::default() },
+        );
+        let err = daemon.submit(BatchRequest::new("not-a-kernel", Scenario::Rtl)).unwrap_err();
+        assert_eq!(err, SubmitError::UnknownKernel("not-a-kernel".to_string()));
+        let m = daemon.shutdown();
+        assert_eq!(m.received, 1);
+        assert_eq!(m.solved, 0);
+    }
+}

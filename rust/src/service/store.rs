@@ -1,0 +1,777 @@
+//! Concurrent, crash-safe QoR store: a sharded in-memory index over an
+//! append-only record log.
+#![deny(missing_docs)]
+//!
+//! The legacy [`QorDb`] persistence (`load` → mutate → `save` of one
+//! whole-file JSON document) is a serialization bottleneck and a
+//! lost-update hazard under concurrent writers: two processes (or two
+//! threads sharing a `&mut QorDb` by turns) that load, solve, and save
+//! will each overwrite the other's records last-writer-wins. This
+//! module replaces it for every writing path. [`QorStore`] keeps the
+//! records in `SHARD_COUNT` independently-locked shards (readers and
+//! writers on different keys never contend) and persists every accepted
+//! mutation as one appended, fsync'd line — a crash can lose at most
+//! the append in flight, never a previously-acknowledged record.
+//!
+//! ## On-disk log layout
+//!
+//! Line 1 is a header, then one compact JSON object per line:
+//!
+//! ```text
+//! {"format_version":4,"layout":"qor-log"}
+//! {"key":"<canonical key>","record":{"design":{..},"latency_cycles":..,..}}
+//! {"key":"<canonical key>","record":null}
+//! ```
+//!
+//! An op with a `record` object is an upsert; `"record":null` is a
+//! tombstone (stale-design eviction). The record schema is exactly the
+//! [`QorRecord`] JSON of the legacy layout, so `FORMAT_VERSION`
+//! versioning carries over unchanged: the header's `format_version`
+//! gates the whole log, and a version bump evicts old logs wholesale
+//! the same way it evicts old whole-file databases.
+//!
+//! ## Replay rules (crash safety)
+//!
+//! [`QorStore::open`] replays the log in order: upserts apply the same
+//! never-worse merge as live inserts ([`QorDb::insert_canonical`]), so
+//! replay is insensitive to the order in which racing writers reached
+//! the log — accepting a worse-but-logged-later record is a no-op.
+//! Replay stops at the first line that does not parse as a complete op:
+//! a torn tail (the append in flight when the process died, cut at any
+//! byte) can never parse as valid JSON, because the parser rejects both
+//! truncated documents and trailing garbage. The intact prefix is kept;
+//! a writable open truncates the file back to it (and re-terminates a
+//! final line that parsed but lost only its newline) so the next append
+//! cannot concatenate onto debris. A corrupt *middle* line is treated
+//! the same way — everything from the first bad line on is dropped —
+//! which only loses data under external corruption, never under a torn
+//! append.
+//!
+//! ## Compaction invariants
+//!
+//! Superseded upserts and tombstones accumulate; when the log holds
+//! more than [`COMPACT_RATIO`]× the live record count (and at least
+//! [`COMPACT_MIN_OPS`] ops), the store rewrites it as header + one
+//! upsert per live record, atomically (temp sibling + fsync + rename),
+//! and keeps appending to the renamed file. Compaction runs with the
+//! log lock held (appends wait; reads do not) and changes nothing
+//! visible: the replayed state of the compacted log equals the live
+//! index at the moment of the snapshot.
+//!
+//! ## Locking
+//!
+//! Two lock families, with a strict order: an insert decides
+//! acceptance under its *shard* lock, releases it, then appends under
+//! the *log* lock — no thread ever waits on the log while holding a
+//! shard. Compaction takes the log lock first, then visits shards.
+//! One invariant the callers uphold: a tombstone for a key is never
+//! issued concurrently with an upsert of the same key (eviction happens
+//! on the submit path, before the re-solve that would write the key is
+//! enqueued), so log order and index order cannot disagree about
+//! whether a key exists.
+
+use super::qor_db::{sibling, DesignKey, QorDb, QorRecord, FORMAT_VERSION};
+use crate::dse::config::ExecutionModel;
+use anyhow::{Context, Result};
+use serde::{Deserialize, Serialize, Value};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Number of index shards. Requests hash to a shard by canonical key;
+/// 16 is comfortably past the worker counts the daemon runs with.
+const SHARD_COUNT: usize = 16;
+
+/// Auto-compaction floor: never compact a log with fewer total ops
+/// than this (tiny logs are cheap to replay and the rewrite would
+/// dominate).
+pub const COMPACT_MIN_OPS: u64 = 256;
+
+/// Auto-compaction trigger: compact when the log holds more than this
+/// many times the live record count (the excess is superseded upserts
+/// and tombstones that replay only to be overwritten or dropped).
+pub const COMPACT_RATIO: u64 = 4;
+
+/// The concurrent QoR store. Shared by reference across daemon workers
+/// and batch threads (`&QorStore` is `Sync`); all methods take `&self`.
+pub struct QorStore {
+    shards: Vec<Mutex<BTreeMap<String, QorRecord>>>,
+    log: Mutex<Option<LogWriter>>,
+    compactions: AtomicU64,
+}
+
+struct LogWriter {
+    path: PathBuf,
+    file: File,
+    /// Total ops (upserts + tombstones) in the log file right now.
+    /// Set to the replayed op count on open and to the live record
+    /// count after a compaction.
+    ops_in_log: u64,
+}
+
+impl QorStore {
+    /// An empty, memory-only store (no log; nothing survives drop).
+    /// The batch orchestrator uses this when no `--db` is given.
+    pub fn in_memory() -> QorStore {
+        QorStore::from_db(QorDb::new(), None)
+    }
+
+    /// Open (or create) the store at `path`.
+    ///
+    /// * A log-layout file is replayed (see module docs); a torn tail
+    ///   is truncated away.
+    /// * A legacy whole-file v`FORMAT_VERSION` JSON database is
+    ///   migrated in place to the log layout (atomic rewrite) — the
+    ///   one-way door off the lost-update-prone format.
+    /// * A corrupt or wrong-version file is moved aside to
+    ///   `<path>.bak` (never destroyed) and the store starts empty,
+    ///   matching [`QorDb::save`]'s philosophy.
+    pub fn open(path: &Path) -> Result<QorStore> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        match sniff(&bytes) {
+            Layout::Empty => QorStore::create_fresh(path, QorDb::new()),
+            Layout::Log(rep) => {
+                let mut file = OpenOptions::new()
+                    .write(true)
+                    .open(path)
+                    .with_context(|| format!("opening {} for append", path.display()))?;
+                let mut dirty = false;
+                if rep.intact_len < bytes.len() as u64 {
+                    file.set_len(rep.intact_len)
+                        .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+                    eprintln!(
+                        "warning: {}: dropped torn log tail ({} of {} bytes intact)",
+                        path.display(),
+                        rep.intact_len,
+                        bytes.len()
+                    );
+                    dirty = true;
+                }
+                file.seek(SeekFrom::End(0))
+                    .with_context(|| format!("seeking to end of {}", path.display()))?;
+                if !rep.terminated {
+                    // Final line parsed as a complete op but lost its
+                    // newline to the crash: re-terminate it so the next
+                    // append starts a fresh line.
+                    file.write_all(b"\n")
+                        .with_context(|| format!("re-terminating {}", path.display()))?;
+                    dirty = true;
+                }
+                if dirty {
+                    file.sync_data()
+                        .with_context(|| format!("syncing recovered {}", path.display()))?;
+                }
+                let writer =
+                    LogWriter { path: path.to_path_buf(), file, ops_in_log: rep.ops };
+                Ok(QorStore::from_db(rep.db, Some(writer)))
+            }
+            Layout::Legacy(db) => {
+                let n = db.len();
+                let store = QorStore::create_fresh(path, db)?;
+                eprintln!(
+                    "note: {}: migrated legacy whole-file QoR DB ({n} records) to the \
+                     append-only log layout",
+                    path.display()
+                );
+                Ok(store)
+            }
+            Layout::LogWrongVersion(v) => {
+                let bak = back_up(path, &format!("v{v} log"))?;
+                eprintln!(
+                    "warning: {} is a v{v} QoR log (expected v{FORMAT_VERSION}); moved to {} \
+                     and starting empty",
+                    path.display(),
+                    bak.display()
+                );
+                QorStore::create_fresh(path, QorDb::new())
+            }
+            Layout::Unreadable => {
+                let bak = back_up(path, "unreadable file")?;
+                eprintln!(
+                    "warning: {} was not a readable QoR store; moved to {} and starting empty",
+                    path.display(),
+                    bak.display()
+                );
+                QorStore::create_fresh(path, QorDb::new())
+            }
+        }
+    }
+
+    /// Build a store over `db`'s records with a freshly (re)written log
+    /// at `path` containing exactly those records.
+    fn create_fresh(path: &Path, db: QorDb) -> Result<QorStore> {
+        let records: Vec<(String, QorRecord)> =
+            db.iter().map(|(k, r)| (k.to_string(), r.clone())).collect();
+        let file = write_log_file(path, &records)?;
+        let writer =
+            LogWriter { path: path.to_path_buf(), file, ops_in_log: records.len() as u64 };
+        Ok(QorStore::from_db(db, Some(writer)))
+    }
+
+    fn from_db(db: QorDb, writer: Option<LogWriter>) -> QorStore {
+        let store = QorStore {
+            shards: (0..SHARD_COUNT).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            log: Mutex::new(writer),
+            compactions: AtomicU64::new(0),
+        };
+        for (k, r) in db.iter() {
+            store.shard(k).lock().unwrap().insert(k.to_string(), r.clone());
+        }
+        store
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<BTreeMap<String, QorRecord>> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARD_COUNT]
+    }
+
+    /// Whether the store is backed by a log file (false for
+    /// [`QorStore::in_memory`]).
+    pub fn is_persistent(&self) -> bool {
+        self.log.lock().unwrap().is_some()
+    }
+
+    /// Number of live records.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Whether the store holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+    }
+
+    /// Exact-hit lookup (cloned out of the shard; records are small
+    /// next to a solve).
+    pub fn get(&self, key: &DesignKey) -> Option<QorRecord> {
+        self.get_canonical(&key.canonical())
+    }
+
+    /// Exact-hit lookup by canonical string.
+    pub fn get_canonical(&self, key: &str) -> Option<QorRecord> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert `rec` under `key`, keeping the better (lower-latency)
+    /// record if one is already present — the same never-worse merge as
+    /// [`QorDb::insert_canonical`]. Returns `Ok(true)` if the store
+    /// changed; an accepted record is fsync'd to the log before the
+    /// call returns (durable once acknowledged).
+    pub fn insert(&self, key: &DesignKey, rec: QorRecord) -> Result<bool> {
+        self.insert_canonical(&key.canonical(), rec)
+    }
+
+    /// [`QorStore::insert`] under a pre-canonicalized key (the service
+    /// paths carry canonical strings across threads).
+    pub fn insert_canonical(&self, key: &str, rec: QorRecord) -> Result<bool> {
+        // Serialize before taking any lock: the append line is built
+        // outside both the shard and log critical sections.
+        let line = op_line(key, Some(&rec));
+        let accepted = {
+            let mut shard = self.shard(key).lock().unwrap();
+            match shard.get(key) {
+                Some(old) if old.latency_cycles <= rec.latency_cycles => false,
+                _ => {
+                    shard.insert(key.to_string(), rec);
+                    true
+                }
+            }
+        };
+        if accepted {
+            self.append(&line)?;
+            self.maybe_compact()?;
+        }
+        Ok(accepted)
+    }
+
+    /// Drop a record (stale-design eviction), logging a tombstone.
+    /// Returns `Ok(true)` if a record was present. Callers must not
+    /// race this against an insert of the same key (see module docs).
+    pub fn remove_canonical(&self, key: &str) -> Result<bool> {
+        let removed = self.shard(key).lock().unwrap().remove(key).is_some();
+        if removed {
+            self.append(&op_line(key, None))?;
+            self.maybe_compact()?;
+        }
+        Ok(removed)
+    }
+
+    /// Best stored design for warm-starting a request on `kernel` whose
+    /// fusion plan the caller's solve can use — the concurrent
+    /// counterpart of [`QorDb::incumbent_for_space`]. Scans all shards;
+    /// the snapshot is per-shard consistent, which is all warm-starting
+    /// needs (the solver's usability gate re-checks the winner anyway).
+    pub fn incumbent_for_space(
+        &self,
+        kernel: &str,
+        model: ExecutionModel,
+        overlap: bool,
+        usable_plan: impl Fn(&crate::analysis::fusion::FusionPlan) -> bool,
+    ) -> Option<QorRecord> {
+        let mut best: Option<QorRecord> = None;
+        for s in &self.shards {
+            let shard = s.lock().unwrap();
+            for r in shard.values() {
+                let matches = r.design.kernel == kernel
+                    && r.design.model == model
+                    && r.design.overlap == overlap
+                    && usable_plan(&r.design.fusion);
+                let better = match &best {
+                    None => true,
+                    Some(b) => r.latency_cycles < b.latency_cycles,
+                };
+                if matches && better {
+                    best = Some(r.clone());
+                }
+            }
+        }
+        best
+    }
+
+    /// A point-in-time copy of the live index as a legacy [`QorDb`]
+    /// (per-shard consistent). Read paths that want one coherent view —
+    /// reports, `db` listings — go through this.
+    pub fn snapshot(&self) -> QorDb {
+        let mut db = QorDb::new();
+        for s in &self.shards {
+            let shard = s.lock().unwrap();
+            for (k, r) in shard.iter() {
+                db.insert_canonical(k.clone(), r.clone());
+            }
+        }
+        db
+    }
+
+    /// Total ops currently in the log file, or `None` for an in-memory
+    /// store. Feeds the daemon metrics report.
+    pub fn log_ops(&self) -> Option<u64> {
+        self.log.lock().unwrap().as_ref().map(|w| w.ops_in_log)
+    }
+
+    /// Compactions performed since open.
+    pub fn compactions(&self) -> u64 {
+        self.compactions.load(Ordering::Relaxed)
+    }
+
+    /// Rewrite the log as header + one upsert per live record, atomic
+    /// via a temp sibling + rename. No-op for in-memory stores. The
+    /// replayed state of the compacted log equals the live index at the
+    /// snapshot (see module docs).
+    pub fn compact(&self) -> Result<()> {
+        self.compact_inner(false)
+    }
+
+    fn maybe_compact(&self) -> Result<()> {
+        self.compact_inner(true)
+    }
+
+    fn compact_inner(&self, only_if_due: bool) -> Result<()> {
+        // Lock order: log first, then shards (never the reverse).
+        let mut guard = self.log.lock().unwrap();
+        let Some(w) = guard.as_mut() else { return Ok(()) };
+        if only_if_due {
+            let live = self.len() as u64;
+            if w.ops_in_log < COMPACT_MIN_OPS || w.ops_in_log <= COMPACT_RATIO.saturating_mul(live)
+            {
+                return Ok(());
+            }
+        }
+        let mut records: Vec<(String, QorRecord)> = Vec::new();
+        for s in &self.shards {
+            let shard = s.lock().unwrap();
+            records.extend(shard.iter().map(|(k, r)| (k.clone(), r.clone())));
+        }
+        records.sort_by(|a, b| a.0.cmp(&b.0));
+        let file = write_log_file(&w.path, &records)
+            .with_context(|| format!("compacting {}", w.path.display()))?;
+        w.file = file;
+        w.ops_in_log = records.len() as u64;
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn append(&self, line: &str) -> Result<()> {
+        let mut guard = self.log.lock().unwrap();
+        let Some(w) = guard.as_mut() else { return Ok(()) };
+        w.file
+            .write_all(line.as_bytes())
+            .and_then(|()| w.file.sync_data())
+            .with_context(|| format!("appending to {}", w.path.display()))?;
+        w.ops_in_log += 1;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for QorStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QorStore")
+            .field("len", &self.len())
+            .field("persistent", &self.is_persistent())
+            .finish()
+    }
+}
+
+// ---- log lines ---------------------------------------------------------
+
+fn header_line() -> String {
+    let v = Value::Obj(vec![
+        ("format_version".to_string(), FORMAT_VERSION.serialize()),
+        ("layout".to_string(), Value::Str("qor-log".to_string())),
+    ]);
+    let mut s = serde::to_string(&v);
+    s.push('\n');
+    s
+}
+
+/// One op line, newline-terminated. `None` record = tombstone.
+fn op_line(key: &str, rec: Option<&QorRecord>) -> String {
+    let record = match rec {
+        Some(r) => r.serialize(),
+        None => Value::Null,
+    };
+    let v = Value::Obj(vec![
+        ("key".to_string(), Value::Str(key.to_string())),
+        ("record".to_string(), record),
+    ]);
+    let mut s = serde::to_string(&v);
+    s.push('\n');
+    s
+}
+
+fn parse_op(line: &str) -> Result<(String, Option<QorRecord>), serde::Error> {
+    let v = serde::parse(line)?;
+    let key = String::deserialize(v.field("key")?)?;
+    let rec = match v.field("record")? {
+        Value::Null => None,
+        other => Some(QorRecord::deserialize(other)?),
+    };
+    Ok((key, rec))
+}
+
+/// Write `records` as a complete log file at `path`, atomically, and
+/// return the file handle (positioned at end) for further appends.
+fn write_log_file(path: &Path, records: &[(String, QorRecord)]) -> Result<File> {
+    let tmp = sibling(path, ".compact");
+    let mut buf = header_line();
+    for (k, r) in records {
+        buf.push_str(&op_line(k, Some(r)));
+    }
+    let mut file =
+        File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    file.write_all(buf.as_bytes())
+        .and_then(|()| file.sync_all())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} to {}", tmp.display(), path.display()))?;
+    // Durability of the rename itself: fsync the directory, best-effort
+    // (not all platforms allow opening a directory for sync).
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            if let Ok(dir) = File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
+    }
+    Ok(file)
+}
+
+fn back_up(path: &Path, what: &str) -> Result<PathBuf> {
+    let bak = sibling(path, ".bak");
+    std::fs::rename(path, &bak)
+        .with_context(|| format!("backing up {what} to {}", bak.display()))?;
+    Ok(bak)
+}
+
+// ---- layout sniffing (shared with QorDb::load) -------------------------
+
+/// What a QoR file on disk turned out to be.
+enum Layout {
+    /// Current-version append-only log; carries the replayed state.
+    Log(Replay),
+    /// A log header with a different `format_version`.
+    LogWrongVersion(u64),
+    /// Legacy whole-file v`FORMAT_VERSION` JSON database.
+    Legacy(QorDb),
+    /// Missing, empty, or whitespace-only.
+    Empty,
+    /// Neither layout parses.
+    Unreadable,
+}
+
+/// Result of replaying a log's intact prefix.
+struct Replay {
+    /// State after applying every intact op in order.
+    db: QorDb,
+    /// Ops applied.
+    ops: u64,
+    /// Bytes of intact prefix (truncation target for a writable open).
+    intact_len: u64,
+    /// Whether the intact prefix ends with a newline.
+    terminated: bool,
+}
+
+fn sniff(bytes: &[u8]) -> Layout {
+    if bytes.iter().all(|b| b.is_ascii_whitespace()) {
+        return Layout::Empty;
+    }
+    let first_end = bytes.iter().position(|&b| b == b'\n').unwrap_or(bytes.len());
+    if let Ok(first) = std::str::from_utf8(&bytes[..first_end]) {
+        if let Ok(v) = serde::parse(first.trim()) {
+            if v.get("layout").and_then(Value::as_str) == Some("qor-log") {
+                let version =
+                    v.get("format_version").and_then(Value::as_int).unwrap_or(-1);
+                if version != FORMAT_VERSION as i128 {
+                    return Layout::LogWrongVersion(version.max(0) as u64);
+                }
+                return Layout::Log(replay(bytes, first_end));
+            }
+        }
+    }
+    if let Ok(text) = std::str::from_utf8(bytes) {
+        if let Ok(db) = serde::parse(text).and_then(|v| QorDb::from_value(&v)) {
+            return Layout::Legacy(db);
+        }
+    }
+    Layout::Unreadable
+}
+
+fn replay(bytes: &[u8], header_end: usize) -> Replay {
+    let mut db = QorDb::new();
+    let mut ops = 0u64;
+    let mut pos = (header_end + 1).min(bytes.len());
+    let mut intact = pos as u64;
+    let mut terminated = header_end < bytes.len();
+    while pos < bytes.len() {
+        let (slice, next, has_nl) = match bytes[pos..].iter().position(|&b| b == b'\n') {
+            Some(i) => (&bytes[pos..pos + i], pos + i + 1, true),
+            None => (&bytes[pos..], bytes.len(), false),
+        };
+        let Ok(text) = std::str::from_utf8(slice) else { break };
+        let trimmed = text.trim();
+        if !trimmed.is_empty() {
+            let Ok((key, rec)) = parse_op(trimmed) else { break };
+            match rec {
+                Some(r) => {
+                    db.insert_canonical(key, r);
+                }
+                None => {
+                    db.remove_canonical(&key);
+                }
+            }
+            ops += 1;
+        }
+        intact = next as u64;
+        terminated = has_nl;
+        pos = next;
+    }
+    Replay { db, ops, intact_len: intact, terminated }
+}
+
+/// Read a QoR file in *either* layout into a legacy [`QorDb`], without
+/// touching the file. `None` when neither layout parses (including a
+/// wrong-version log — same eviction semantics as the whole-file
+/// version check). [`QorDb::load`] delegates here so the `db`
+/// subcommand and every legacy read path understand log-layout stores.
+pub(crate) fn read_any_layout(bytes: &[u8]) -> Option<QorDb> {
+    match sniff(bytes) {
+        Layout::Log(rep) => Some(rep.db),
+        Layout::Legacy(db) => Some(db),
+        Layout::LogWrongVersion(_) | Layout::Empty | Layout::Unreadable => None,
+    }
+}
+
+/// Whether `bytes` carry a log-layout header (any version).
+/// [`QorDb::save`] refuses to overwrite such files — that would
+/// silently downgrade a concurrent-safe store to the lost-update-prone
+/// whole-file format.
+pub(crate) fn is_log_layout(bytes: &[u8]) -> bool {
+    matches!(sniff(bytes), Layout::Log(_) | Layout::LogWrongVersion(_))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::fusion::FusionPlan;
+    use crate::dse::config::{DesignConfig, TaskConfig, TransferPlan};
+
+    fn sample_record(kernel: &str, latency: u64) -> QorRecord {
+        let mut plans = BTreeMap::new();
+        plans.insert(
+            "A".to_string(),
+            TransferPlan { define_level: 0, transfer_level: 1, bitwidth: 256, buffers: 2 },
+        );
+        QorRecord {
+            design: DesignConfig {
+                kernel: kernel.to_string(),
+                model: ExecutionModel::Dataflow,
+                overlap: true,
+                fusion: FusionPlan::new(vec![vec![0]]),
+                tasks: vec![TaskConfig {
+                    task: 0,
+                    perm: vec![0, 1],
+                    padded_trip: vec![latency.max(2), 8],
+                    intra: vec![1, 2],
+                    ii: 3,
+                    plans,
+                    slr: 0,
+                }],
+            },
+            latency_cycles: latency,
+            gflops: 10.5,
+            solve_time_ms: 1.0,
+            explored: 100,
+            timed_out: false,
+            warm_started: false,
+            fusion_variants: 1,
+        }
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("prometheus_store_{}_{}.qordb", tag, std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn in_memory_never_worse_merge() {
+        let store = QorStore::in_memory();
+        assert!(store.insert_canonical("k", sample_record("gemm", 1000)).unwrap());
+        assert!(!store.insert_canonical("k", sample_record("gemm", 2000)).unwrap());
+        assert_eq!(store.get_canonical("k").unwrap().latency_cycles, 1000);
+        assert!(store.insert_canonical("k", sample_record("gemm", 500)).unwrap());
+        assert_eq!(store.len(), 1);
+        assert!(!store.is_persistent());
+        assert!(store.log_ops().is_none());
+    }
+
+    #[test]
+    fn open_insert_reopen_round_trips() {
+        let path = tmp_path("roundtrip");
+        {
+            let store = QorStore::open(&path).unwrap();
+            assert!(store.is_empty());
+            store.insert_canonical("a", sample_record("gemm", 100)).unwrap();
+            store.insert_canonical("b", sample_record("bicg", 200)).unwrap();
+            store.insert_canonical("a", sample_record("gemm", 50)).unwrap();
+            assert_eq!(store.log_ops(), Some(3));
+        }
+        let store = QorStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get_canonical("a").unwrap().latency_cycles, 50);
+        assert_eq!(store.get_canonical("b").unwrap().latency_cycles, 200);
+        assert_eq!(store.log_ops(), Some(3), "replay counts every logged op");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tombstones_survive_reopen() {
+        let path = tmp_path("tombstone");
+        {
+            let store = QorStore::open(&path).unwrap();
+            store.insert_canonical("a", sample_record("gemm", 100)).unwrap();
+            assert!(store.remove_canonical("a").unwrap());
+            assert!(!store.remove_canonical("a").unwrap(), "double-remove is a no-op");
+        }
+        let store = QorStore::open(&path).unwrap();
+        assert!(store.get_canonical("a").is_none(), "tombstone replays");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_preserves_visible_state_and_shrinks_log() {
+        let path = tmp_path("compact");
+        let store = QorStore::open(&path).unwrap();
+        for i in 0..20u64 {
+            store.insert_canonical("hot", sample_record("gemm", 1000 - i)).unwrap();
+        }
+        store.insert_canonical("cold", sample_record("bicg", 7)).unwrap();
+        store.remove_canonical("cold").unwrap();
+        let before = store.snapshot();
+        assert_eq!(store.log_ops(), Some(22));
+        store.compact().unwrap();
+        assert_eq!(store.compactions(), 1);
+        assert_eq!(store.log_ops(), Some(1), "one live record after compaction");
+        assert_eq!(store.snapshot(), before, "compaction changes nothing visible");
+        drop(store);
+        let store = QorStore::open(&path).unwrap();
+        assert_eq!(store.snapshot(), before, "compacted log replays to same state");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_whole_file_db_migrates_to_log() {
+        let path = tmp_path("migrate");
+        let mut db = QorDb::new();
+        db.insert_canonical("k1".to_string(), sample_record("gemm", 10));
+        db.insert_canonical("k2".to_string(), sample_record("bicg", 20));
+        db.save(&path).unwrap();
+        let store = QorStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get_canonical("k1").unwrap().latency_cycles, 10);
+        drop(store);
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(is_log_layout(&bytes), "migration rewrote the file as a log");
+        // and the legacy read path still understands the new layout
+        let db = QorDb::load(&path);
+        assert_eq!(db.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unreadable_files_are_moved_aside_not_destroyed() {
+        let path = tmp_path("unreadable");
+        std::fs::write(&path, "not json at all").unwrap();
+        let store = QorStore::open(&path).unwrap();
+        assert!(store.is_empty());
+        let bak = sibling(&path, ".bak");
+        assert_eq!(std::fs::read_to_string(&bak).unwrap(), "not json at all");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&bak);
+    }
+
+    #[test]
+    fn wrong_version_log_is_evicted_wholesale() {
+        let path = tmp_path("wrongver");
+        std::fs::write(
+            &path,
+            "{\"format_version\":3,\"layout\":\"qor-log\"}\n",
+        )
+        .unwrap();
+        let store = QorStore::open(&path).unwrap();
+        assert!(store.is_empty());
+        assert!(sibling(&path, ".bak").exists());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&sibling(&path, ".bak"));
+    }
+
+    #[test]
+    fn incumbent_for_space_matches_legacy_semantics() {
+        let store = QorStore::in_memory();
+        store.insert_canonical("a", sample_record("gemm", 1000)).unwrap();
+        store.insert_canonical("b", sample_record("gemm", 700)).unwrap();
+        store.insert_canonical("c", sample_record("bicg", 10)).unwrap();
+        let inc = store
+            .incumbent_for_space("gemm", ExecutionModel::Dataflow, true, |_| true)
+            .unwrap();
+        assert_eq!(inc.latency_cycles, 700);
+        assert!(store
+            .incumbent_for_space("gemm", ExecutionModel::Sequential, true, |_| true)
+            .is_none());
+    }
+}

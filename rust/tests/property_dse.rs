@@ -275,7 +275,7 @@ fn infeasible_budget_errors_cleanly() {
 #[test]
 fn infeasible_budget_errors_cleanly_through_batch() {
     use prometheus::service::batch::{run_batch, BatchOptions, BatchRequest};
-    use prometheus::service::QorDb;
+    use prometheus::service::QorStore;
     let dev = Device::u55c();
     let opts = BatchOptions {
         solver: SolverOptions {
@@ -288,11 +288,11 @@ fn infeasible_budget_errors_cleanly_through_batch() {
         jobs: 2,
     };
     let reqs = vec![BatchRequest::new("gemm", Scenario::OnBoard { slrs: 1, frac: 1e-6 })];
-    let mut db = QorDb::new();
+    let db = QorStore::in_memory();
     // a failed solve fails that request inside an `Ok` report (the
     // batch no longer errors wholesale), carrying the solver's message,
     // not a caught panic payload
-    let rep = run_batch(&reqs, &dev, &mut db, &opts).unwrap();
+    let rep = run_batch(&reqs, &dev, &db, &opts).unwrap();
     assert_eq!(rep.failed, 1);
     assert_eq!(rep.outcomes[0].source, prometheus::service::batch::Source::Failed);
     let msg = rep.outcomes[0].error.clone().unwrap_or_default();

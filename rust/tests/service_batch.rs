@@ -6,7 +6,7 @@
 use prometheus::dse::solver::{Scenario, SolverOptions};
 use prometheus::hw::Device;
 use prometheus::service::batch::{run_batch, BatchOptions, BatchRequest};
-use prometheus::service::QorDb;
+use prometheus::service::QorStore;
 use std::time::{Duration, Instant};
 
 fn small_solver() -> SolverOptions {
@@ -38,25 +38,25 @@ fn batch_of_eight_cold_then_warm_is_10x_faster() {
     let _ = std::fs::remove_file(&db_path);
     let opts = BatchOptions { solver: small_solver(), jobs: 4 };
 
-    // ---- cold invocation: load (empty) DB, solve all in parallel, persist
+    // ---- cold invocation: open (empty) store, solve all in parallel;
+    // workers persist each record as it completes (no save step)
     let t0 = Instant::now();
-    let mut db = QorDb::load(&db_path);
-    assert!(db.is_empty());
-    let cold = run_batch(&requests, &dev, &mut db, &opts).unwrap();
-    db.save(&db_path).unwrap();
+    let store = QorStore::open(&db_path).unwrap();
+    assert!(store.is_empty());
+    let cold = run_batch(&requests, &dev, &store, &opts).unwrap();
     let cold_elapsed = t0.elapsed();
     assert_eq!(cold.solved, requests.len());
     assert_eq!(cold.cache_hits, 0);
     assert_eq!(cold.deduped, 0);
-    assert_eq!(db.len(), requests.len());
+    assert_eq!(store.len(), requests.len());
     assert!(cold.outcomes.iter().all(|o| o.gflops > 0.0 && o.latency_cycles > 0));
+    drop(store);
 
     // ---- identical second invocation: answered entirely from disk
     let t1 = Instant::now();
-    let mut db2 = QorDb::load(&db_path);
-    assert_eq!(db2.len(), requests.len(), "DB must persist across invocations");
-    let warm = run_batch(&requests, &dev, &mut db2, &opts).unwrap();
-    db2.save(&db_path).unwrap();
+    let store2 = QorStore::open(&db_path).unwrap();
+    assert_eq!(store2.len(), requests.len(), "store must persist across invocations");
+    let warm = run_batch(&requests, &dev, &store2, &opts).unwrap();
     let warm_elapsed = t1.elapsed();
     assert_eq!(warm.cache_hits, requests.len());
     assert_eq!(warm.solved, 0);

@@ -1,0 +1,290 @@
+//! Concurrency suite for the `prometheus serve` daemon: in-flight
+//! dedup hands every waiter the bit-identical answer (property-pinned
+//! across jobs=1 and jobs=8), admission control sheds load with a
+//! structured error instead of blocking, and the ISSUE acceptance
+//! stream (32 requests, 8 duplicate keys) performs at most 24 solves
+//! with the dedup visible in the metrics — then replays ≥ 10× faster
+//! from the persistent store.
+
+use prometheus::dse::config::DesignConfig;
+use prometheus::dse::solver::{Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::service::batch::{BatchRequest, Source};
+use prometheus::service::serve::{Daemon, ServeOptions, SubmitError};
+use prometheus::service::QorStore;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn small_solver() -> SolverOptions {
+    SolverOptions {
+        beam: 4,
+        max_factor_per_loop: 8,
+        max_unroll: 64,
+        max_pad: 4,
+        timeout: Duration::from_secs(30),
+        ..SolverOptions::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("prom_serve_it_{}_{}.qordb", tag, std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// A burst of identical requests performs exactly one solve; every
+/// waiter — rider or primary — receives the bit-identical design. The
+/// whole property is pinned at jobs=1 and jobs=8: the designs must
+/// also agree *across* the two runs (the solver's thread-count
+/// determinism contract, observed through the daemon).
+#[test]
+fn deduped_waiters_all_receive_identical_results() {
+    let dev = Device::u55c();
+    let mut designs_by_jobs: Vec<DesignConfig> = Vec::new();
+    for jobs in [1usize, 8] {
+        let daemon = Daemon::new(
+            dev.clone(),
+            QorStore::in_memory(),
+            ServeOptions {
+                solver: small_solver(),
+                workers: 2,
+                jobs,
+                queue_capacity: 64,
+                metrics_every: 0,
+            },
+        );
+        // Submit the same key 8 times back-to-back: the first is the
+        // primary; the rest land while it is queued or solving (riders)
+        // or after it stored (cache hits). Never a second solve.
+        let tickets: Vec<_> = (0..8)
+            .map(|_| daemon.submit(BatchRequest::new("madd", Scenario::Rtl)).unwrap())
+            .collect();
+        let outcomes: Vec<_> = tickets.iter().map(|t| t.wait()).collect();
+        let key = tickets[0].key().to_string();
+        let m = daemon.shutdown();
+
+        assert_eq!(m.received, 8);
+        assert_eq!(m.solved, 1, "one solve for 8 identical requests (jobs={jobs})");
+        assert_eq!(m.failed, 0);
+        assert_eq!(
+            m.cache_hits + m.deduped,
+            7,
+            "every duplicate deduped or cache-answered (jobs={jobs})"
+        );
+        assert_eq!(
+            m.per_key_solves.get(&key).copied(),
+            Some(1),
+            "a key never solves twice concurrently (jobs={jobs})"
+        );
+
+        let first = outcomes[0].design.clone().expect("solved design");
+        for o in &outcomes {
+            assert!(o.error.is_none(), "no failures: {:?}", o.error);
+            assert_ne!(o.source, Source::Failed);
+            assert!(o.gflops > 0.0 && o.latency_cycles > 0);
+            assert_eq!(
+                o.design.as_ref(),
+                Some(&first),
+                "waiters receive the bit-identical design (jobs={jobs})"
+            );
+            assert_eq!(o.latency_cycles, outcomes[0].latency_cycles);
+        }
+        designs_by_jobs.push(first);
+    }
+    assert_eq!(
+        designs_by_jobs[0], designs_by_jobs[1],
+        "jobs=1 and jobs=8 produce bit-identical designs through the daemon"
+    );
+}
+
+/// With no workers draining the queue, capacity is reached after
+/// exactly `queue_capacity` distinct submissions; the next distinct one
+/// is rejected with a structured [`SubmitError::QueueFull`] — it never
+/// blocks. A duplicate of a queued request still dedups (riders consume
+/// no queue slots), and shutdown fails the jobs that never ran.
+#[test]
+fn full_queue_rejects_instead_of_blocking() {
+    let dev = Device::u55c();
+    let daemon = Daemon::new(
+        dev,
+        QorStore::in_memory(),
+        ServeOptions {
+            solver: small_solver(),
+            workers: 0, // nothing drains: deterministic queue fill
+            jobs: 1,
+            queue_capacity: 4,
+            metrics_every: 0,
+        },
+    );
+    let kernels = ["madd", "bicg", "atax", "mvt"];
+    let queued: Vec<_> = kernels
+        .iter()
+        .map(|k| daemon.submit(BatchRequest::new(k, Scenario::Rtl)).unwrap())
+        .collect();
+
+    // 5th distinct key: structured rejection, observable in metrics
+    let err = daemon.submit(BatchRequest::new("gesummv", Scenario::Rtl)).unwrap_err();
+    assert_eq!(err, SubmitError::QueueFull { capacity: 4, depth: 4 });
+
+    // duplicate of a queued request: dedup, not rejection — in-flight
+    // riders don't occupy queue slots
+    let rider = daemon
+        .submit(BatchRequest::new("madd", Scenario::Rtl))
+        .expect("duplicate joins the in-flight solve instead of being rejected");
+    assert_eq!(rider.key(), queued[0].key());
+
+    let m = daemon.metrics();
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.deduped, 1);
+    assert_eq!(m.queue_depth, 4);
+    assert!(m.per_key_solves.is_empty(), "no solve ever started");
+
+    // Shutdown with workers=0 fails the 4 never-run jobs; their waiters
+    // (the rider included) all unblock with the failure.
+    let m = daemon.shutdown();
+    assert_eq!(m.failed, 4);
+    for t in queued.iter().chain(std::iter::once(&rider)) {
+        let o = t.wait();
+        assert_eq!(o.source, Source::Failed);
+        assert!(o.error.as_deref().unwrap_or("").contains("shut down"));
+    }
+}
+
+/// The ISSUE acceptance stream: 32 requests of which 8 duplicate the
+/// first 8 keys — at most 24 solves, the 8 duplicates visible as
+/// dedup/cache answers in the metrics, and a second identical stream
+/// against the persisted store answers everything without solving,
+/// ≥ 10× faster.
+#[test]
+fn acceptance_32_request_stream_dedups_and_replays_fast() {
+    let dev = Device::u55c();
+    let path = tmp_path("accept32");
+    let kernels = ["madd", "bicg", "atax", "mvt", "gesummv", "gemm"];
+    let scenarios = [
+        Scenario::Rtl,
+        Scenario::OnBoard { slrs: 1, frac: 0.6 },
+        Scenario::OnBoard { slrs: 2, frac: 0.6 },
+        Scenario::OnBoard { slrs: 3, frac: 0.6 },
+    ];
+    let mut stream = Vec::new();
+    for k in kernels {
+        for s in scenarios {
+            stream.push(BatchRequest::new(k, s));
+        }
+    }
+    assert_eq!(stream.len(), 24, "24 unique kernel x scenario keys");
+    // 8 duplicates of the first 8 unique keys
+    stream.extend_from_within(..8);
+    assert_eq!(stream.len(), 32);
+    let serve_opts = || ServeOptions {
+        solver: small_solver(),
+        workers: 4,
+        jobs: 4,
+        queue_capacity: 64,
+        metrics_every: 0,
+    };
+
+    // ---- cold stream against a fresh persistent store
+    let t0 = Instant::now();
+    let daemon = Daemon::new(dev.clone(), QorStore::open(&path).unwrap(), serve_opts());
+    let tickets: Vec<_> = stream.iter().map(|r| daemon.submit(r.clone()).unwrap()).collect();
+    let outcomes: Vec<_> = tickets.iter().map(|t| t.wait()).collect();
+    let cold = daemon.shutdown();
+    let cold_elapsed = t0.elapsed();
+
+    assert_eq!(cold.received, 32);
+    assert_eq!(cold.failed, 0);
+    assert!(cold.solved <= 24, "at most 24 solves for 24 unique keys, got {}", cold.solved);
+    assert_eq!(
+        cold.cache_hits + cold.deduped,
+        8,
+        "all 8 duplicates answered without a solve (dedup observable in metrics)"
+    );
+    assert!(
+        cold.per_key_solves.values().all(|&n| n == 1),
+        "no key solved more than once: {:?}",
+        cold.per_key_solves
+    );
+    assert_eq!(cold.store_records, 24);
+    for o in &outcomes {
+        assert!(o.gflops > 0.0 && o.latency_cycles > 0, "all 32 answered: {:?}", o.error);
+    }
+    // duplicates agree bit-for-bit with their originals
+    for i in 0..8 {
+        assert_eq!(outcomes[24 + i].design, outcomes[i].design);
+        assert_eq!(outcomes[24 + i].latency_cycles, outcomes[i].latency_cycles);
+    }
+
+    // ---- identical stream, fresh daemon, same store: all cache hits
+    let t1 = Instant::now();
+    let daemon = Daemon::new(dev, QorStore::open(&path).unwrap(), serve_opts());
+    let tickets: Vec<_> = stream.iter().map(|r| daemon.submit(r.clone()).unwrap()).collect();
+    for t in &tickets {
+        let o = t.wait();
+        assert_eq!(o.source, Source::Cache);
+    }
+    let warm = daemon.shutdown();
+    let warm_elapsed = t1.elapsed();
+    assert_eq!(warm.cache_hits, 32);
+    assert_eq!(warm.solved, 0);
+
+    // Same guard as the batch acceptance test: wall-clock ratios are
+    // only meaningful when the cold run actually did solver work.
+    if cold_elapsed >= Duration::from_secs(1) {
+        assert!(
+            warm_elapsed * 10 <= cold_elapsed,
+            "warm stream must be >= 10x faster: cold {cold_elapsed:?} vs warm {warm_elapsed:?}"
+        );
+    } else {
+        eprintln!(
+            "note: cold stream took only {cold_elapsed:?}; speedup ratio not asserted \
+             (warm {warm_elapsed:?})"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The NDJSON transport end-to-end through the real binary: spawn
+/// `prometheus serve`, pipe a short request stream (a duplicate, a
+/// metrics command, an unknown kernel) through stdin, and check the
+/// response lines and exit status. This is the same smoke CI runs.
+#[test]
+fn serve_binary_smoke() {
+    use std::io::Write;
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_prometheus"))
+        .args(["serve", "--quick", "--workers", "2", "--jobs", "2"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning prometheus serve");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, "{}", r#"{"kernel":"madd"}"#).unwrap();
+        writeln!(stdin, "{}", r#"{"kernel":"madd"}"#).unwrap();
+        writeln!(stdin, "{}", r#"{"cmd":"metrics"}"#).unwrap();
+        writeln!(stdin, "{}", r#"{"cmd":"shutdown"}"#).unwrap();
+    }
+    let out = child.wait_with_output().expect("serve run");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "serve must exit cleanly: stdout={stdout} stderr={stderr}"
+    );
+    let mut ok_lines = 0;
+    let mut metrics_lines = 0;
+    for line in stdout.lines() {
+        if line.contains("\"status\":\"ok\"") {
+            ok_lines += 1;
+        }
+        if line.contains("\"solved\":") {
+            metrics_lines += 1;
+        }
+    }
+    assert_eq!(ok_lines, 2, "both requests answered: {stdout}");
+    assert_eq!(metrics_lines, 1, "metrics command answered inline: {stdout}");
+    assert!(stderr.contains("Serve metric"), "final metrics table on stderr: {stderr}");
+}

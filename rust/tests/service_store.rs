@@ -1,0 +1,275 @@
+//! Concurrency and crash-recovery suite for the QoR store
+//! (`service::store`): no lost updates under writer contention, clean
+//! replay after truncation at *every* byte boundary of the last
+//! record, compaction round-trips, and legacy-v4 migration — all
+//! through the public API, the way `prometheus serve`/`batch` use it.
+
+use prometheus::analysis::fusion::FusionPlan;
+use prometheus::dse::config::{DesignConfig, ExecutionModel, TaskConfig, TransferPlan};
+use prometheus::dse::solver::{Scenario, SolverOptions};
+use prometheus::hw::Device;
+use prometheus::service::batch::{run_batch, BatchOptions, BatchRequest};
+use prometheus::service::qor_db::QorRecord;
+use prometheus::service::{QorDb, QorStore};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn record(kernel: &str, latency: u64) -> QorRecord {
+    let mut plans = BTreeMap::new();
+    plans.insert(
+        "A".to_string(),
+        TransferPlan { define_level: 0, transfer_level: 1, bitwidth: 256, buffers: 2 },
+    );
+    QorRecord {
+        design: DesignConfig {
+            kernel: kernel.to_string(),
+            model: ExecutionModel::Dataflow,
+            overlap: true,
+            fusion: FusionPlan::new(vec![vec![0]]),
+            tasks: vec![TaskConfig {
+                task: 0,
+                perm: vec![0, 1],
+                padded_trip: vec![latency.max(2), 8],
+                intra: vec![1, 2],
+                ii: 3,
+                plans,
+                slr: 0,
+            }],
+        },
+        latency_cycles: latency,
+        gflops: 10.5,
+        solve_time_ms: 1.0,
+        explored: 100,
+        timed_out: false,
+        warm_started: false,
+        fusion_variants: 1,
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("prom_store_it_{}_{}.qordb", tag, std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// N writer threads hammering M shared keys (plus one private key
+/// each): after close and reopen, every shared key holds the global
+/// minimum latency any thread offered (never-worse merge, no lost
+/// updates) and every accepted private record is visible.
+#[test]
+fn concurrent_writers_lose_no_updates() {
+    const WRITERS: u64 = 8;
+    const SHARED_KEYS: u64 = 4;
+    const ROUNDS: u64 = 10;
+    let path = tmp_path("stress");
+    {
+        let store = QorStore::open(&path).unwrap();
+        std::thread::scope(|scope| {
+            for w in 0..WRITERS {
+                let store = &store;
+                scope.spawn(move || {
+                    for r in 0..ROUNDS {
+                        for k in 0..SHARED_KEYS {
+                            // deterministic but interleaving-dependent
+                            // latencies; the global min is 1000 + k + 1
+                            // (writer WRITERS-1 on its last round)
+                            let lat = 1000 + k + (WRITERS - w) * (ROUNDS - r);
+                            store
+                                .insert_canonical(&format!("shared-{k}"), record("gemm", lat))
+                                .unwrap();
+                        }
+                        store
+                            .insert_canonical(
+                                &format!("private-{w}-{r}"),
+                                record("bicg", 5000 + w * ROUNDS + r),
+                            )
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        // visible state before close...
+        for k in 0..SHARED_KEYS {
+            let rec = store.get_canonical(&format!("shared-{k}")).expect("shared key present");
+            assert_eq!(rec.latency_cycles, 1000 + k + 1, "shared-{k} must hold the global min");
+        }
+    }
+    // ...and after crash-free reopen: every fsync'd accept replays
+    let store = QorStore::open(&path).unwrap();
+    for k in 0..SHARED_KEYS {
+        let rec = store.get_canonical(&format!("shared-{k}")).expect("shared key survives reopen");
+        assert_eq!(rec.latency_cycles, 1000 + k + 1);
+    }
+    for w in 0..WRITERS {
+        for r in 0..ROUNDS {
+            let rec = store
+                .get_canonical(&format!("private-{w}-{r}"))
+                .expect("private key survives reopen");
+            assert_eq!(rec.latency_cycles, 5000 + w * ROUNDS + r);
+        }
+    }
+    assert_eq!(store.len() as u64, SHARED_KEYS + WRITERS * ROUNDS);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Truncate the log at every byte boundary of the last record and
+/// reopen: the intact prefix replays cleanly every time. A cut that
+/// only drops the final newline keeps the record (parseable tail); any
+/// deeper cut loses exactly the torn record, never more. Periodically
+/// also proves the recovered store accepts new appends that survive a
+/// further reopen (the torn tail was really truncated away, not left
+/// to concatenate).
+#[test]
+fn crash_recovery_at_every_byte_boundary() {
+    let path = tmp_path("crash_src");
+    {
+        let store = QorStore::open(&path).unwrap();
+        store.insert_canonical("keep-a", record("gemm", 11)).unwrap();
+        store.insert_canonical("keep-b", record("bicg", 22)).unwrap();
+        store.insert_canonical("torn", record("mvt", 33)).unwrap();
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(*bytes.last().unwrap(), b'\n');
+    // start of the last op line = byte after the second-to-last newline
+    let last_line_start = bytes[..bytes.len() - 1]
+        .iter()
+        .rposition(|&b| b == b'\n')
+        .map(|i| i + 1)
+        .expect("log has multiple lines");
+    let cut_path = tmp_path("crash_cut");
+    for cut in last_line_start..bytes.len() {
+        std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+        let store = QorStore::open(&cut_path).unwrap();
+        assert_eq!(
+            store.get_canonical("keep-a").expect("intact prefix replays").latency_cycles,
+            11,
+            "cut at byte {cut}"
+        );
+        assert_eq!(store.get_canonical("keep-b").unwrap().latency_cycles, 22);
+        if cut == bytes.len() - 1 {
+            // only the trailing newline is gone: the tail still parses
+            assert_eq!(store.get_canonical("torn").unwrap().latency_cycles, 33);
+            assert_eq!(store.len(), 3, "cut at byte {cut}");
+        } else {
+            assert!(store.get_canonical("torn").is_none(), "cut at byte {cut}");
+            assert_eq!(store.len(), 2, "cut at byte {cut}");
+        }
+        // every few cuts: recovery must leave a writable, append-clean
+        // log — insert, reopen, and find both old and new records
+        if cut % 7 == 0 {
+            store.insert_canonical("after-crash", record("atax", 44)).unwrap();
+            drop(store);
+            let reopened = QorStore::open(&cut_path).unwrap();
+            assert_eq!(reopened.get_canonical("keep-a").unwrap().latency_cycles, 11);
+            assert_eq!(reopened.get_canonical("after-crash").unwrap().latency_cycles, 44);
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&cut_path);
+}
+
+/// End-to-end durability with *real* solved records: solve through the
+/// batch path, crash mid-append (simulated by truncation), recover,
+/// compact — and `prometheus db FILE --verify` must re-audit the
+/// surviving records clean at every step.
+#[test]
+fn recovered_store_passes_db_verify() {
+    let path = tmp_path("verify");
+    let dev = Device::u55c();
+    let opts = BatchOptions {
+        solver: SolverOptions {
+            beam: 4,
+            max_factor_per_loop: 8,
+            max_unroll: 64,
+            timeout: Duration::from_secs(20),
+            ..SolverOptions::default()
+        },
+        jobs: 2,
+    };
+    let reqs = vec![
+        BatchRequest::new("madd", Scenario::Rtl),
+        BatchRequest::new("madd", Scenario::OnBoard { slrs: 1, frac: 0.6 }),
+    ];
+    {
+        let store = QorStore::open(&path).unwrap();
+        let report = run_batch(&reqs, &dev, &store, &opts).unwrap();
+        assert_eq!(report.solved, 2);
+        assert_eq!(store.len(), 2);
+    }
+    let db_verify = |ctx: &str| {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_prometheus"))
+            .args(["db", path.to_str().unwrap(), "--verify"])
+            .output()
+            .expect("running prometheus db --verify");
+        assert!(
+            out.status.success(),
+            "db --verify failed ({ctx}): stdout={} stderr={}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    assert!(db_verify("fresh").contains("0 illegal"));
+
+    // tear the last record mid-line, recover, verify again
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+    {
+        let store = QorStore::open(&path).unwrap();
+        assert_eq!(store.len(), 1, "torn record dropped, intact prefix kept");
+    }
+    assert!(db_verify("after crash recovery").contains("0 illegal"));
+
+    // compaction must preserve the visible state and stay verifiable
+    {
+        let store = QorStore::open(&path).unwrap();
+        let before = store.snapshot();
+        store.compact().unwrap();
+        assert_eq!(store.snapshot(), before);
+        assert_eq!(store.log_ops(), Some(1));
+    }
+    assert!(db_verify("after compaction").contains("0 illegal"));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Legacy v4 whole-file JSON migrates to the log layout on first open,
+/// keeps its records bit-for-bit, accepts new concurrent-safe appends,
+/// and stays readable through the read-only `QorDb::load` compat path.
+/// The legacy writer must refuse to clobber the migrated file.
+#[test]
+fn legacy_v4_migration_round_trips_and_is_protected() {
+    let path = tmp_path("legacy");
+    let mut db = QorDb::new();
+    db.insert_canonical("old-1".to_string(), record("gemm", 123));
+    db.insert_canonical("old-2".to_string(), record("bicg", 456));
+    db.save(&path).unwrap();
+
+    let store = QorStore::open(&path).unwrap();
+    assert_eq!(store.len(), 2);
+    assert_eq!(store.get_canonical("old-1").unwrap().latency_cycles, 123);
+    store.insert_canonical("new-1", record("mvt", 789)).unwrap();
+    // stale-eviction tombstone, as the serve/batch paths issue it
+    assert!(store.remove_canonical("old-2").unwrap());
+    drop(store);
+
+    let store = QorStore::open(&path).unwrap();
+    assert_eq!(store.len(), 2);
+    assert_eq!(store.get_canonical("new-1").unwrap().latency_cycles, 789);
+    assert!(store.get_canonical("old-2").is_none(), "tombstone survives reopen");
+    drop(store);
+
+    // read-only compat: the legacy loader reads the log layout...
+    let compat = QorDb::load(&path);
+    assert_eq!(compat.len(), 2);
+    assert_eq!(compat.get_canonical("old-1").unwrap().latency_cycles, 123);
+    // ...but the legacy whole-file writer must refuse to overwrite it
+    // (that write path is last-writer-wins and would downgrade the
+    // store's durability)
+    let mut clobber = QorDb::new();
+    clobber.insert_canonical("x".to_string(), record("atax", 1));
+    assert!(clobber.save(&path).is_err(), "legacy save must not clobber a log-layout store");
+    assert_eq!(QorDb::load(&path).len(), 2, "refused save left the store untouched");
+    let _ = std::fs::remove_file(&path);
+}
